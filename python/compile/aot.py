@@ -1,0 +1,85 @@
+"""AOT driver: lower every artifact in the registry to HLO *text*.
+
+HLO text (not ``.serialize()``) is the interchange format: jax ≥ 0.5 emits
+HloModuleProtos with 64-bit instruction ids which the rust side's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage: ``python -m compile.aot --out ../artifacts``  (from python/)
+The Makefile target ``artifacts`` invokes this once; python never runs on
+the request path.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+
+# int64 accumulators in the kernels require x64 mode (set before any trace).
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from compile.model import QF, artifact_registry  # noqa: E402
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument("--only", default=None, help="build a single artifact")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {"qf": QF, "artifacts": {}}
+    for name, (fn, specs, meta) in sorted(artifact_registry().items()):
+        if args.only and name != args.only:
+            continue
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": [{"shape": list(s.shape), "dtype": str(s.dtype)} for s in specs],
+            **meta,
+        }
+        print(f"wrote {path} ({len(text)} chars, {len(specs)} inputs)")
+
+    mpath = os.path.join(args.out, "manifest.json")
+    if args.only and os.path.exists(mpath):
+        with open(mpath) as f:
+            old = json.load(f)
+        old["artifacts"].update(manifest["artifacts"])
+        manifest = old
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {mpath}")
+
+    # Line-oriented manifest for the rust runtime (the offline crate set has
+    # no JSON parser): name|file|kind|k|simd|qf|shape,shape,...
+    tpath = os.path.join(args.out, "manifest.txt")
+    with open(tpath, "w") as f:
+        for name, meta in sorted(manifest["artifacts"].items()):
+            shapes = ";".join(
+                "x".join(str(d) for d in inp["shape"]) or "scalar"
+                for inp in meta["inputs"]
+            )
+            f.write(
+                f"{name}|{meta['file']}|{meta['kind']}|{meta['k']}|"
+                f"{meta['simd']}|{meta['qf']}|{shapes}\n"
+            )
+    print(f"wrote {tpath}")
+
+
+if __name__ == "__main__":
+    main()

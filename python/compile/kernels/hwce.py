@@ -1,0 +1,137 @@
+"""L1: Pallas kernel mirroring the Fulmine HWCE datapath (paper §II-C).
+
+Semantics contract (bit-exact with ``rust/src/hwce/golden.rs`` and
+``ref.py``):
+
+* pixels ``x`` and memory-resident partial sums ``y`` are int16 fixed-point
+  with ``qf`` fractional bits;
+* weights are int16 values constrained to the precision mode's range
+  (full int16 / [-128,127] / [-8,7] for the 16/8/4-bit modes);
+* one *pass* (one input channel) computes, per concurrent output map f:
+  ``y[f] = sat16(y[f] + round(sum_window(x * w[f]) >> qf))``
+  with exact wide accumulation, round-to-nearest normalization and int16
+  saturation — the "fractional part normalization and saturation" stage of
+  the HWCE second-level reduction tree (Fig. 5).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the HWCE line buffer
+becomes a VMEM-resident x block whose window reuse is expressed by the
+k*k shifted-slice accumulation below; the 1/2/4-outputs-per-pass precision
+scaling becomes the ``simd`` leading axis of the weight/output blocks; the
+input-channel accumulation that the silicon performs through the shared
+TCDM becomes grid-axis revisiting of the output block (the block persists
+across the ``cin`` grid axis and accumulates in place).
+
+``interpret=True`` everywhere: the CPU PJRT client cannot execute Mosaic
+custom-calls; interpret-mode lowering produces plain HLO that both jax and
+the rust runtime execute identically.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# int16 fixed-point bounds (HWCE write-back saturation).
+I16_MIN = -32768
+I16_MAX = 32767
+
+
+def _norm_round(acc, qf: int):
+    """Round-to-nearest arithmetic normalization: (acc + 2^(qf-1)) >> qf.
+
+    ``acc`` must be a signed integer array wide enough not to overflow
+    (int64 — products of int16 summed over k*k taps need ~37 bits).
+    """
+    if qf == 0:
+        return acc
+    half = jnp.int64(1 << (qf - 1))
+    return (acc + half) >> qf
+
+
+def _sat16(v):
+    return jnp.clip(v, I16_MIN, I16_MAX).astype(jnp.int16)
+
+
+def _conv_kernel(x_ref, w_ref, yin_ref, out_ref, *, k: int, qf: int, simd: int):
+    """One (batch, cof-group, cin) grid step.
+
+    Block shapes:
+      x_ref:   (1, 1, H, W)        int16 — input channel `cin` of batch b
+      w_ref:   (1, simd, 1, k, k)  int16 — taps for the simd concurrent maps
+      yin_ref: (1, simd, OH, OW)   int16 — initial partial sums (used once)
+      out_ref: (1, simd, OH, OW)   int16 — revisited across the cin axis
+    """
+    cin = pl.program_id(2)
+    n_cin = pl.num_programs(2)
+    del n_cin  # documented for clarity; accumulation is per-step
+
+    x = x_ref[0, 0].astype(jnp.int64)  # (H, W)
+    h, w = x.shape
+    oh, ow = h - k + 1, w - k + 1
+
+    # First cin step seeds the output block with y_in (the memory-resident
+    # partial sums of the silicon design).
+    @pl.when(cin == 0)
+    def _seed():
+        out_ref[...] = yin_ref[...]
+
+    # Sum-of-products via k*k shifted slices (line-buffer window reuse).
+    acc = jnp.zeros((simd, oh, ow), dtype=jnp.int64)
+    for f in range(simd):
+        wf = w_ref[0, f, 0].astype(jnp.int64)  # (k, k)
+        a = jnp.zeros((oh, ow), dtype=jnp.int64)
+        for ky in range(k):
+            for kx in range(k):
+                a = a + x[ky : ky + oh, kx : kx + ow] * wf[ky, kx]
+        acc = acc.at[f].set(a)
+
+    contrib = _norm_round(acc, qf)
+    prev = out_ref[0].astype(jnp.int64)
+    out_ref[0, ...] = _sat16(prev + contrib)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("k", "qf", "simd")
+)
+def hwce_layer(x, w, y_in, *, k: int, qf: int, simd: int):
+    """Full multi-channel HWCE layer: accumulate all input channels.
+
+    Args:
+      x:    (B, Cin, H, W) int16
+      w:    (Cout, Cin, k, k) int16, Cout % simd == 0, values within the
+            precision mode's range (validated at build/test time, not traced)
+      y_in: (B, Cout, OH, OW) int16 — usually the broadcast bias or zeros
+    Returns:
+      (B, Cout, OH, OW) int16
+    """
+    b, cin, h, ww = x.shape
+    cout = w.shape[0]
+    assert cout % simd == 0, "Cout must be a multiple of the simd factor"
+    assert w.shape[1] == cin and w.shape[2] == k and w.shape[3] == k
+    oh, ow = h - k + 1, ww - k + 1
+    assert y_in.shape == (b, cout, oh, ow)
+
+    grid = (b, cout // simd, cin)
+    return pl.pallas_call(
+        functools.partial(_conv_kernel, k=k, qf=qf, simd=simd),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, h, ww), lambda bb, co, ci: (bb, ci, 0, 0)),
+            pl.BlockSpec((1, simd, 1, k, k), lambda bb, co, ci: (0, co, ci, 0, 0)),
+            pl.BlockSpec((1, simd, oh, ow), lambda bb, co, ci: (bb, co, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, simd, oh, ow), lambda bb, co, ci: (bb, co, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, cout, oh, ow), jnp.int16),
+        interpret=True,
+    )(x, w.reshape(1, cout, cin, k, k), y_in)
+
+
+def sat_add_i16(a, b):
+    """Saturating int16 add (bias / residual), matching fixedpoint::add_sat."""
+    s = a.astype(jnp.int32) + b.astype(jnp.int32)
+    return jnp.clip(s, I16_MIN, I16_MAX).astype(jnp.int16)
+
+
+def relu_i16(a):
+    return jnp.maximum(a, jnp.int16(0))

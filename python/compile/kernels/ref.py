@@ -1,0 +1,68 @@
+"""Pure-numpy oracle for the HWCE kernel — the correctness reference.
+
+Implements exactly the semantics contract of ``hwce.py`` (and of the rust
+golden model) without Pallas: per input channel, a valid k*k correlation,
+round-to-nearest normalization by ``qf``, and saturating accumulation onto
+the int16 partial-sum array. Used by the pytest suite to validate the
+Pallas kernel over randomized shapes/values (hypothesis sweeps).
+"""
+
+import numpy as np
+
+I16_MIN = -32768
+I16_MAX = 32767
+
+
+def norm_round(acc: np.ndarray, qf: int) -> np.ndarray:
+    if qf == 0:
+        return acc
+    return (acc + (1 << (qf - 1))) >> qf
+
+
+def sat16(v: np.ndarray) -> np.ndarray:
+    return np.clip(v, I16_MIN, I16_MAX).astype(np.int16)
+
+
+def hwce_pass_ref(x, w, y, k: int, qf: int):
+    """One pass: x (H, W) i16, w (k, k) i16, y (OH, OW) i16 (updated copy)."""
+    x = x.astype(np.int64)
+    w = w.astype(np.int64)
+    oh, ow = x.shape[0] - k + 1, x.shape[1] - k + 1
+    acc = np.zeros((oh, ow), dtype=np.int64)
+    for ky in range(k):
+        for kx in range(k):
+            acc += x[ky : ky + oh, kx : kx + ow] * w[ky, kx]
+    contrib = norm_round(acc, qf)
+    return sat16(y.astype(np.int64) + contrib)
+
+
+def hwce_layer_ref(x, w, y_in, k: int, qf: int):
+    """Reference multi-channel layer.
+
+    x (B, Cin, H, W) i16, w (Cout, Cin, k, k) i16, y_in (B, Cout, OH, OW) i16.
+    Channel passes are applied sequentially (normalize/saturate per pass),
+    matching the HWCE's memory-resident accumulation order.
+    """
+    b, cin, _, _ = x.shape
+    cout = w.shape[0]
+    out = y_in.copy()
+    for bb in range(b):
+        for co in range(cout):
+            acc = out[bb, co]
+            for ci in range(cin):
+                acc = hwce_pass_ref(x[bb, ci], w[co, ci], acc, k, qf)
+            out[bb, co] = acc
+    return out
+
+
+def sat_add_i16_ref(a, b):
+    return sat16(a.astype(np.int64) + b.astype(np.int64))
+
+
+def relu_i16_ref(a):
+    return np.maximum(a, 0).astype(np.int16)
+
+
+def weight_range(simd: int):
+    """Weight value range per precision mode (simd factor 1/2/4)."""
+    return {1: (I16_MIN, I16_MAX), 2: (-128, 127), 4: (-8, 7)}[simd]

@@ -1,0 +1,285 @@
+"""L2: quantized CNN graphs built on the L1 HWCE Pallas kernel.
+
+Everything is int16 fixed point (Q-format with ``qf`` fractional bits),
+composed exclusively from the HWCE kernel plus the elementwise/reduction
+helpers whose semantics the rust side mirrors exactly:
+
+* ``conv_layer``   — HWCE multi-channel conv + optional stride (computed
+  densely and subsampled, as the HWCE has no native stride) + saturating
+  bias + ReLU + optional 2x2 max pooling;
+* ``resnet20``     — the CIFAR-style ResNet-20 of He et al. [10] used by the
+  secure-surveillance use case (§IV-A), with option-A (zero-padded identity)
+  shortcuts so every convolution is a native HWCE 3x3;
+* ``facedet_12net`` / ``facedet_24net`` — the first two stages of the Li et
+  al. [29] face-detection cascade used by §IV-B, batched over windows;
+* ``quickstart_conv`` — a small single-layer graph for the quickstart
+  example and smoke tests.
+
+The AOT driver (``aot.py``) lowers each entry of ``ARTIFACTS`` to HLO text.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.kernels.hwce import hwce_layer, relu_i16, sat_add_i16
+
+QF = 8  # Q8.8 fixed point everywhere
+
+
+def pad_same(x, k: int):
+    """Zero-pad H/W for 'same' valid convolution (the DMA writes zero
+    borders when staging tiles on the silicon; in the AOT graph the pad is
+    part of the HLO)."""
+    p = (k - 1) // 2
+    return jnp.pad(x, ((0, 0), (0, 0), (p, p), (p, p)))
+
+
+def maxpool2x2(x):
+    b, c, h, w = x.shape
+    x = x.reshape(b, c, h // 2, 2, w // 2, 2)
+    return x.max(axis=(3, 5))
+
+
+def avgpool_all(x, qf_shift: int):
+    """Global average pool with fixed-point rounding: sum >> log2(n)."""
+    b, c, h, w = x.shape
+    s = x.astype(jnp.int64).sum(axis=(2, 3))
+    half = jnp.int64(1 << (qf_shift - 1))
+    return jnp.clip((s + half) >> qf_shift, -32768, 32767).astype(jnp.int16)
+
+
+def dense_i16(x, w, b, qf: int = QF, relu: bool = True):
+    """Fixed-point dense layer: sat16(round((x @ w.T) >> qf) + b).
+
+    x (B, N) i16, w (M, N) i16, b (M) i16.
+    """
+    acc = jnp.matmul(x.astype(jnp.int64), w.astype(jnp.int64).T)
+    half = jnp.int64(1 << (qf - 1)) if qf > 0 else jnp.int64(0)
+    y = (acc + half) >> qf if qf > 0 else acc
+    y = jnp.clip(y + b.astype(jnp.int64)[None, :], -32768, 32767).astype(jnp.int16)
+    return relu_i16(y) if relu else y
+
+
+def conv_layer(x, w, bias, *, k: int, simd: int, stride: int = 1, relu: bool = True,
+               pool: bool = False, same: bool = True, qf: int = QF):
+    """One HWCE-mapped convolutional layer."""
+    if same:
+        x = pad_same(x, k)
+    b_, _, h, ww = x.shape
+    cout = w.shape[0]
+    oh, ow = h - k + 1, ww - k + 1
+    y_in = jnp.zeros((b_, cout, oh, ow), dtype=jnp.int16)
+    y = hwce_layer(x, w, y_in, k=k, qf=qf, simd=simd)
+    if stride > 1:
+        y = y[:, :, ::stride, ::stride]
+    y = sat_add_i16(y, bias[None, :, None, None])
+    if relu:
+        y = relu_i16(y)
+    if pool:
+        y = maxpool2x2(y)
+    return y
+
+
+# --------------------------------------------------------------------------
+# ResNet-20 (CIFAR topology, option-A shortcuts) — §IV-A workload
+# --------------------------------------------------------------------------
+
+RESNET20_STAGES = (16, 32, 64)
+RESNET20_BLOCKS_PER_STAGE = 3
+
+
+def resnet20_param_shapes():
+    """Ordered (name, shape) list of all parameters (documented contract
+    with the rust side, which generates/encrypts/feeds them)."""
+    shapes = [("conv1.w", (16, 3, 3, 3)), ("conv1.b", (16,))]
+    cin = 16
+    for s, cout in enumerate(RESNET20_STAGES):
+        for blk in range(RESNET20_BLOCKS_PER_STAGE):
+            pre = f"s{s}b{blk}"
+            shapes.append((f"{pre}.w1", (cout, cin, 3, 3)))
+            shapes.append((f"{pre}.b1", (cout,)))
+            shapes.append((f"{pre}.w2", (cout, cout, 3, 3)))
+            shapes.append((f"{pre}.b2", (cout,)))
+            cin = cout
+    shapes.append(("fc.w", (10, 64)))
+    shapes.append(("fc.b", (10,)))
+    return shapes
+
+
+def resnet20(x, *params, simd: int = 4):
+    """ResNet-20 forward. x (B, 3, 32, 32) i16; params flat in
+    ``resnet20_param_shapes`` order; returns (B, 10) i16 logits."""
+    it = iter(params)
+    nxt = lambda: next(it)
+
+    y = conv_layer(x, nxt(), nxt(), k=3, simd=simd)
+    cin = 16
+    for s, cout in enumerate(RESNET20_STAGES):
+        for blk in range(RESNET20_BLOCKS_PER_STAGE):
+            stride = 2 if (s > 0 and blk == 0) else 1
+            shortcut = y
+            h1 = conv_layer(y, nxt(), nxt(), k=3, simd=simd, stride=stride)
+            h2 = conv_layer(h1, nxt(), nxt(), k=3, simd=simd, relu=False)
+            if stride == 2:
+                # option-A shortcut: subsample and zero-pad channels
+                shortcut = shortcut[:, :, ::2, ::2]
+                padc = cout - cin
+                shortcut = jnp.pad(shortcut, ((0, 0), (0, padc), (0, 0), (0, 0)))
+            y = relu_i16(sat_add_i16(h2, shortcut))
+            cin = cout
+    feat = avgpool_all(y, qf_shift=6)  # 8x8 = 64 = 2^6
+    return dense_i16(feat, nxt(), nxt(), relu=False)
+
+
+# --------------------------------------------------------------------------
+# Face-detection cascade (Li et al. [29], stages 12-net and 24-net) — §IV-B
+# --------------------------------------------------------------------------
+
+def facedet_12net_param_shapes():
+    return [
+        ("conv.w", (16, 1, 3, 3)),
+        ("conv.b", (16,)),
+        ("fc1.w", (16, 16 * 5 * 5)),
+        ("fc1.b", (16,)),
+        ("fc2.w", (2, 16)),
+        ("fc2.b", (2,)),
+    ]
+
+
+def facedet_12net(x, cw, cb, f1w, f1b, f2w, f2b, *, simd: int = 4):
+    """12-net: x (B, 1, 12, 12) i16 → (B, 2) logits."""
+    y = conv_layer(x, cw, cb, k=3, simd=simd, same=False, pool=True)  # (B,16,5,5)
+    y = y.reshape(y.shape[0], -1)
+    y = dense_i16(y, f1w, f1b)
+    return dense_i16(y, f2w, f2b, relu=False)
+
+
+def facedet_24net_param_shapes():
+    # Sized so all 24-net parameters fit the 192 kB L2 alongside the 12-net
+    # (§IV-B: "the CNN does not use any external memory and can rely
+    # exclusively on the internal L2"): conv 3.2 kB + fc1 102.4 kB + fc2
+    # 128 B ≈ 106 kB.
+    return [
+        ("conv.w", (64, 1, 5, 5)),
+        ("conv.b", (64,)),
+        ("fc1.w", (32, 64 * 5 * 5)),
+        ("fc1.b", (32,)),
+        ("fc2.w", (2, 32)),
+        ("fc2.b", (2,)),
+    ]
+
+
+def facedet_24net(x, cw, cb, f1w, f1b, f2w, f2b, *, simd: int = 4):
+    """24-net: x (B, 1, 24, 24) i16 → (B, 2) logits."""
+    y = conv_layer(x, cw, cb, k=5, simd=simd, same=False, pool=True)  # (B,64,10,10)
+    y = maxpool2x2(y)  # (B,64,5,5)
+    y = y.reshape(y.shape[0], -1)
+    y = dense_i16(y, f1w, f1b)
+    return dense_i16(y, f2w, f2b, relu=False)
+
+
+# --------------------------------------------------------------------------
+# Quickstart: one small HWCE layer
+# --------------------------------------------------------------------------
+
+def quickstart_conv(x, w, b, *, simd: int = 4):
+    """x (1, 4, 16, 16), w (8, 4, 3, 3), b (8) → (1, 8, 16, 16)."""
+    return conv_layer(x, w, b, k=3, simd=simd)
+
+
+# --------------------------------------------------------------------------
+# Artifact registry: name -> (fn, example ShapeDtypeStructs, metadata)
+# --------------------------------------------------------------------------
+
+def _i16(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int16)
+
+
+def _specs(shapes):
+    return [_i16(s) for _, s in shapes]
+
+
+def artifact_registry():
+    """All AOT artifacts: name -> (jittable fn, example args, metadata)."""
+    reg = {}
+
+    # quickstart (w4 weights: range [-8, 7])
+    reg["quickstart_conv_w4"] = (
+        functools.partial(quickstart_conv, simd=4),
+        [_i16((1, 4, 16, 16)), _i16((8, 4, 3, 3)), _i16((8,))],
+        {"kind": "conv", "k": 3, "simd": 4, "qf": QF},
+    )
+
+    # single-layer artifacts used by the layer-level cross-check tests
+    reg["hwce_conv3_w16"] = (
+        functools.partial(lambda x, w, y: hwce_layer(x, w, y, k=3, qf=QF, simd=1)),
+        [_i16((1, 4, 18, 18)), _i16((8, 4, 3, 3)), _i16((1, 8, 16, 16))],
+        {"kind": "hwce_raw", "k": 3, "simd": 1, "qf": QF},
+    )
+    reg["hwce_conv5_w4"] = (
+        functools.partial(lambda x, w, y: hwce_layer(x, w, y, k=5, qf=QF, simd=4)),
+        [_i16((1, 2, 20, 20)), _i16((8, 2, 5, 5)), _i16((1, 8, 16, 16))],
+        {"kind": "hwce_raw", "k": 5, "simd": 4, "qf": QF},
+    )
+
+    # ResNet-20 (B=1), 4-bit weight mode (the §IV-A headline configuration)
+    rn_shapes = resnet20_param_shapes()
+    reg["resnet20_cifar_w4"] = (
+        functools.partial(resnet20, simd=4),
+        [_i16((1, 3, 32, 32))] + _specs(rn_shapes),
+        {"kind": "resnet20", "k": 3, "simd": 4, "qf": QF,
+         "params": [(n, list(s)) for n, s in rn_shapes]},
+    )
+
+    # Face-detection nets, batched over 16 windows
+    fd12 = facedet_12net_param_shapes()
+    reg["facedet_12net_w4"] = (
+        functools.partial(facedet_12net, simd=4),
+        [_i16((16, 1, 12, 12))] + _specs(fd12),
+        {"kind": "facedet12", "k": 3, "simd": 4, "qf": QF,
+         "params": [(n, list(s)) for n, s in fd12]},
+    )
+    fd24 = facedet_24net_param_shapes()
+    reg["facedet_24net_w4"] = (
+        functools.partial(facedet_24net, simd=4),
+        [_i16((16, 1, 24, 24))] + _specs(fd24),
+        {"kind": "facedet24", "k": 5, "simd": 4, "qf": QF,
+         "params": [(n, list(s)) for n, s in fd24]},
+    )
+
+    return reg
+
+
+# Deterministic parameter generation shared (by formula) with the rust side.
+
+def xorshift_i16(seed: int, n: int, lo: int, hi: int) -> np.ndarray:
+    """Deterministic xorshift64 stream mapped into [lo, hi] — the exact
+    algorithm is mirrored in rust/src/apps/params.rs; keep in sync."""
+    out = np.empty(n, dtype=np.int64)
+    x = np.uint64(seed | 1)
+    span = np.uint64(hi - lo + 1)
+    for i in range(n):
+        x ^= np.uint64((x << np.uint64(13)) & np.uint64(0xFFFFFFFFFFFFFFFF))
+        x ^= x >> np.uint64(7)
+        x ^= np.uint64((x << np.uint64(17)) & np.uint64(0xFFFFFFFFFFFFFFFF))
+        out[i] = int(x % span) + lo
+    return out.astype(np.int16)
+
+
+def gen_params(shapes, simd: int, seed: int = 1):
+    """Generate deterministic in-range parameters for the given shapes."""
+    lo_w, hi_w = {1: (-256, 255), 2: (-128, 127), 4: (-8, 7)}[simd]
+    params = []
+    for i, (name, shape) in enumerate(shapes):
+        n = int(np.prod(shape))
+        if name.endswith(".b"):
+            vals = xorshift_i16(seed + 1000 + i, n, -64, 64)
+        elif "fc" in name:
+            vals = xorshift_i16(seed + 1000 + i, n, -16, 16)
+        else:
+            vals = xorshift_i16(seed + 1000 + i, n, lo_w, hi_w)
+        params.append(vals.reshape(shape))
+    return params

@@ -1,0 +1,99 @@
+"""Pallas HWCE kernel vs. the pure-numpy oracle — the core L1 correctness
+signal. Includes hypothesis sweeps over shapes, precisions and Q-formats."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.hwce import hwce_layer, relu_i16, sat_add_i16
+
+
+def rnd_i16(rng, shape, lo, hi):
+    return rng.integers(lo, hi + 1, size=shape, dtype=np.int64).astype(np.int16)
+
+
+def run_both(rng, b, cin, cout, h, w, k, qf, simd, wlo, whi):
+    x = rnd_i16(rng, (b, cin, h, w), -2048, 2047)
+    wt = rnd_i16(rng, (cout, cin, k, k), wlo, whi)
+    yin = rnd_i16(rng, (b, cout, h - k + 1, w - k + 1), -1024, 1023)
+    got = np.asarray(hwce_layer(x, wt, yin, k=k, qf=qf, simd=simd))
+    want = ref.hwce_layer_ref(x, wt, yin, k=k, qf=qf)
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("k", [3, 5])
+@pytest.mark.parametrize("simd", [1, 2, 4])
+def test_kernel_matches_ref_basic(k, simd):
+    rng = np.random.default_rng(42 + k + simd)
+    wlo, whi = ref.weight_range(simd)
+    run_both(rng, b=1, cin=3, cout=simd * 2, h=12, w=10, k=k, qf=8,
+             simd=simd, wlo=wlo, whi=whi)
+
+
+def test_kernel_batched():
+    rng = np.random.default_rng(7)
+    run_both(rng, b=3, cin=2, cout=4, h=9, w=9, k=3, qf=8, simd=4, wlo=-8, whi=7)
+
+
+def test_kernel_qf_zero():
+    rng = np.random.default_rng(8)
+    run_both(rng, b=1, cin=1, cout=1, h=8, w=8, k=3, qf=0, simd=1,
+             wlo=-3, whi=3)
+
+
+def test_saturation_matches():
+    # drive accumulators into saturation on both paths
+    x = np.full((1, 1, 7, 7), 32767, dtype=np.int16)
+    wt = np.full((1, 1, 3, 3), 32767, dtype=np.int16)
+    yin = np.full((1, 1, 5, 5), 32000, dtype=np.int16)
+    got = np.asarray(hwce_layer(x, wt, yin, k=3, qf=0, simd=1))
+    want = ref.hwce_layer_ref(x, wt, yin, k=3, qf=0)
+    np.testing.assert_array_equal(got, want)
+    assert got.max() == 32767
+
+
+def test_negative_rounding_matches():
+    # values chosen to hit the round-half boundary on negatives
+    x = np.full((1, 1, 5, 5), -1, dtype=np.int16)
+    wt = np.ones((1, 1, 3, 3), dtype=np.int16)
+    yin = np.zeros((1, 1, 3, 3), dtype=np.int16)
+    got = np.asarray(hwce_layer(x, wt, yin, k=3, qf=4, simd=1))
+    want = ref.hwce_layer_ref(x, wt, yin, k=3, qf=4)
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    k=st.sampled_from([3, 5]),
+    simd=st.sampled_from([1, 2, 4]),
+    qf=st.integers(min_value=0, max_value=12),
+    cin=st.integers(min_value=1, max_value=4),
+    groups=st.integers(min_value=1, max_value=2),
+    h=st.integers(min_value=6, max_value=16),
+    w=st.integers(min_value=6, max_value=16),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_kernel_matches_ref_hypothesis(k, simd, qf, cin, groups, h, w, seed):
+    if h < k + 1 or w < k + 1:
+        return
+    rng = np.random.default_rng(seed)
+    wlo, whi = ref.weight_range(simd)
+    run_both(rng, b=1, cin=cin, cout=simd * groups, h=h, w=w, k=k, qf=qf,
+             simd=simd, wlo=wlo, whi=whi)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=2**31))
+def test_elementwise_helpers_match(seed):
+    rng = np.random.default_rng(seed)
+    a = rnd_i16(rng, (64,), -32768, 32767)
+    b = rnd_i16(rng, (64,), -32768, 32767)
+    np.testing.assert_array_equal(
+        np.asarray(sat_add_i16(a, b)), ref.sat_add_i16_ref(a, b))
+    np.testing.assert_array_equal(
+        np.asarray(relu_i16(a)), ref.relu_i16_ref(a))

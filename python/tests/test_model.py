@@ -1,0 +1,133 @@
+"""L2 model tests: shapes, fixed-point semantics, determinism, and a
+numpy re-implementation cross-check of the composite layers."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+
+def test_resnet20_param_shapes_contract():
+    shapes = model.resnet20_param_shapes()
+    # conv1(2) + 9 blocks × 4 + fc(2) = 40 parameter tensors
+    assert len(shapes) == 40
+    assert shapes[0] == ("conv1.w", (16, 3, 3, 3))
+    assert shapes[-1] == ("fc.b", (10,))
+    # total 16-bit weight footprint is in the expected regime (~0.27 MB for
+    # CIFAR ResNet-20; the paper's 8.9 MB is the 224x224 variant with more
+    # channels — checked in the rust apps module)
+    total = sum(int(np.prod(s)) for _, s in shapes)
+    assert 250_000 < total < 300_000
+
+
+def test_resnet20_forward_shape_and_determinism():
+    params = model.gen_params(model.resnet20_param_shapes(), simd=4, seed=3)
+    x = model.gen_params([("x", (1, 3, 32, 32))], simd=1, seed=9)[0]
+    y1 = np.asarray(model.resnet20(x, *params, simd=4))
+    y2 = np.asarray(model.resnet20(x, *params, simd=4))
+    assert y1.shape == (1, 10)
+    assert y1.dtype == np.int16
+    np.testing.assert_array_equal(y1, y2)
+    assert np.any(y1 != 0), "logits must not be all zero"
+
+
+def test_facedet_shapes():
+    p12 = model.gen_params(model.facedet_12net_param_shapes(), simd=4, seed=5)
+    x12 = model.gen_params([("x", (16, 1, 12, 12))], simd=1, seed=6)[0]
+    y = np.asarray(model.facedet_12net(x12, *p12, simd=4))
+    assert y.shape == (16, 2) and y.dtype == np.int16
+
+    p24 = model.gen_params(model.facedet_24net_param_shapes(), simd=4, seed=7)
+    x24 = model.gen_params([("x", (16, 1, 24, 24))], simd=1, seed=8)[0]
+    y = np.asarray(model.facedet_24net(x24, *p24, simd=4))
+    assert y.shape == (16, 2) and y.dtype == np.int16
+
+
+def test_conv_layer_matches_numpy_composition():
+    rng = np.random.default_rng(11)
+    x = rng.integers(-512, 512, size=(1, 2, 8, 8)).astype(np.int16)
+    w = rng.integers(-8, 8, size=(4, 2, 3, 3)).astype(np.int16)
+    b = rng.integers(-32, 32, size=(4,)).astype(np.int16)
+
+    got = np.asarray(model.conv_layer(x, w, b, k=3, simd=4))
+
+    xp = np.pad(x, ((0, 0), (0, 0), (1, 1), (1, 1)))
+    yin = np.zeros((1, 4, 8, 8), dtype=np.int16)
+    conv = ref.hwce_layer_ref(xp, w, yin, k=3, qf=model.QF)
+    want = ref.relu_i16_ref(ref.sat_add_i16_ref(conv, b[None, :, None, None]))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_conv_layer_stride2_is_dense_then_subsample():
+    rng = np.random.default_rng(12)
+    x = rng.integers(-512, 512, size=(1, 1, 10, 10)).astype(np.int16)
+    w = rng.integers(-8, 8, size=(4, 1, 3, 3)).astype(np.int16)
+    b = np.zeros(4, dtype=np.int16)
+    full = np.asarray(model.conv_layer(x, w, b, k=3, simd=4))
+    strided = np.asarray(model.conv_layer(x, w, b, k=3, simd=4, stride=2))
+    np.testing.assert_array_equal(strided, full[:, :, ::2, ::2])
+
+
+def test_maxpool_and_avgpool():
+    x = np.arange(16, dtype=np.int16).reshape(1, 1, 4, 4)
+    p = np.asarray(model.maxpool2x2(x))
+    np.testing.assert_array_equal(p[0, 0], [[5, 7], [13, 15]])
+    a = np.asarray(model.avgpool_all(x.astype(np.int16), qf_shift=4))
+    assert a.shape == (1, 1)
+    # sum = 120, (120 + 8) >> 4 = 8
+    assert a[0, 0] == 8
+
+
+def test_dense_i16_matches_numpy():
+    rng = np.random.default_rng(13)
+    x = rng.integers(-256, 256, size=(2, 8)).astype(np.int16)
+    w = rng.integers(-16, 16, size=(3, 8)).astype(np.int16)
+    b = rng.integers(-8, 8, size=(3,)).astype(np.int16)
+    got = np.asarray(model.dense_i16(x, w, b, qf=4, relu=False))
+    acc = x.astype(np.int64) @ w.astype(np.int64).T
+    want = ref.sat16(((acc + 8) >> 4) + b[None, :])
+    np.testing.assert_array_equal(got, want)
+
+
+def test_gen_params_respects_precision_ranges():
+    shapes = [("conv.w", (8, 2, 3, 3)), ("conv.b", (8,))]
+    for simd, (lo, hi) in [(4, (-8, 7)), (2, (-128, 127))]:
+        w, b = model.gen_params(shapes, simd=simd, seed=1)
+        assert w.min() >= lo and w.max() <= hi
+        assert b.dtype == np.int16
+
+
+def test_artifact_registry_complete():
+    reg = model.artifact_registry()
+    expected = {
+        "quickstart_conv_w4",
+        "hwce_conv3_w16",
+        "hwce_conv5_w4",
+        "resnet20_cifar_w4",
+        "facedet_12net_w4",
+        "facedet_24net_w4",
+    }
+    assert expected <= set(reg.keys())
+    for name, (fn, specs, meta) in reg.items():
+        assert callable(fn), name
+        assert all(s.dtype == np.int16 for s in specs), name
+        assert "qf" in meta, name
+
+
+def test_xorshift_contract_values():
+    """Pin the first few xorshift values — the rust side must generate the
+    identical stream (rust/src/apps/params.rs)."""
+    v = model.xorshift_i16(1, 4, -8, 7)
+    x = np.uint64(1)
+    expect = []
+    for _ in range(4):
+        x ^= np.uint64((x << np.uint64(13)) & np.uint64(0xFFFFFFFFFFFFFFFF))
+        x ^= x >> np.uint64(7)
+        x ^= np.uint64((x << np.uint64(17)) & np.uint64(0xFFFFFFFFFFFFFFFF))
+        expect.append(int(x % np.uint64(16)) - 8)
+    np.testing.assert_array_equal(v, expect)

@@ -1,0 +1,79 @@
+//! Bench: HWCE — regenerates §III-C and Fig. 8b, and measures the host cost
+//! of (a) the detailed streamer-level cycle simulation, (b) the VM software
+//! kernels, (c) the golden functional convolution, and (d) a PJRT artifact
+//! execution (the runtime hot path).
+
+use fulmine::apps::params::{gen_params, xorshift_i16};
+use fulmine::bench_support::{blackbox, measure, report_row};
+use fulmine::hwce::golden::{conv_multi, WeightPrec};
+use fulmine::hwce::{simulate_tile_cycles, HwceJob};
+use fulmine::isa::vm::Machine;
+use fulmine::kernels_sw::conv::{run_conv, stage_tile, ConvImpl, ConvJob};
+use fulmine::report;
+use fulmine::runtime::{default_artifact_dir, Runtime, TensorI16};
+
+fn main() {
+    println!("{}", report::sec3c());
+    println!("{}", report::fig8b());
+
+    println!("== host cost of the simulation/functional layers ==");
+
+    let job = HwceJob { w: 32, h: 32, k: 5, prec: WeightPrec::W4, qf: 8 };
+    let (m, lo, hi) = measure(2, 9, || {
+        blackbox(simulate_tile_cycles(job));
+    });
+    report_row("hwce detailed sim (32x32, w4)", m, lo, hi, None);
+
+    let cjob = ConvJob { w: 36, h: 36, k: 5, qf: 8, x_base: 0, w_base: 0x8000, y_base: 0x9000 };
+    let x: Vec<i16> = (0..cjob.w * cjob.h).map(|i| (i % 251) as i16).collect();
+    let wts: Vec<i16> = (0..25).map(|i| i as i16).collect();
+    let (m, lo, hi) = measure(1, 5, || {
+        let mut mach = Machine::new();
+        stage_tile(&mut mach, cjob, &x, &wts, ConvImpl::Simd);
+        blackbox(run_conv(&mut mach, cjob, ConvImpl::Simd, 4));
+    });
+    report_row("VM 4-core SIMD conv (36x36)", m, lo, hi, None);
+
+    // golden functional conv (the cross-check reference)
+    let gx: Vec<i16> = (0..64 * 64).map(|i| (i % 127) as i16).collect();
+    let w4: Vec<Vec<i16>> = (0..4).map(|f| vec![(f as i16) - 2; 25]).collect();
+    let wrefs: Vec<&[i16]> = w4.iter().map(|v| v.as_slice()).collect();
+    let (m, lo, hi) = measure(2, 9, || {
+        let mut y = vec![vec![0i16; 60 * 60]; 4];
+        conv_multi(WeightPrec::W4, 5, 64, 64, 8, &gx, &wrefs, &mut y);
+        blackbox(y);
+    });
+    report_row("golden conv_multi w4 (64x64)", m, lo, hi, None);
+
+    // PJRT artifact execution (compile once, execute many)
+    match Runtime::open(default_artifact_dir()) {
+        Ok(mut rt) => {
+            let meta = rt.meta("quickstart_conv_w4").unwrap().clone();
+            let xt = TensorI16::new(
+                meta.input_shapes[0].clone(),
+                xorshift_i16(1, meta.input_shapes[0].iter().product(), -1024, 1023),
+            );
+            let mut inputs = vec![xt];
+            inputs.extend(gen_params(&meta.input_shapes[1..], meta.simd, 1));
+            rt.compile("quickstart_conv_w4").unwrap();
+            let (m, lo, hi) = measure(3, 15, || {
+                blackbox(rt.execute("quickstart_conv_w4", &inputs).unwrap());
+            });
+            report_row("PJRT execute quickstart_conv_w4", m, lo, hi, None);
+
+            let meta = rt.meta("resnet20_cifar_w4").unwrap().clone();
+            let xt = TensorI16::new(
+                meta.input_shapes[0].clone(),
+                xorshift_i16(2, meta.input_shapes[0].iter().product(), -1024, 1023),
+            );
+            let mut inputs = vec![xt];
+            inputs.extend(gen_params(&meta.input_shapes[1..], 4, 1));
+            rt.compile("resnet20_cifar_w4").unwrap();
+            let (m, lo, hi) = measure(1, 5, || {
+                blackbox(rt.execute("resnet20_cifar_w4", &inputs).unwrap());
+            });
+            report_row("PJRT execute resnet20_cifar_w4", m, lo, hi, None);
+        }
+        Err(e) => println!("(PJRT rows skipped: {e})"),
+    }
+}

@@ -1,0 +1,41 @@
+//! Bench: the three §IV use cases — regenerates Fig. 10, Fig. 11, Fig. 12
+//! (ladders + breakdowns + feasibility numbers) and an ablation sweep over
+//! design choices (precision mode, crypto offload, supply voltage), plus
+//! host-side cost of the pipeline simulation itself.
+
+use fulmine::bench_support::{blackbox, measure, report_row};
+use fulmine::coordinator::surveillance;
+use fulmine::coordinator::ExecConfig;
+use fulmine::hwce::golden::WeightPrec;
+use fulmine::report;
+
+fn main() {
+    println!("{}", report::fig10());
+    println!("{}", report::fig11());
+    println!("{}", report::fig12());
+
+    println!("== ablations (secure surveillance, design-choice sweep) ==");
+    for (label, r) in report::surveillance_ablations() {
+        println!(
+            "{label:<18} time {:>8.4} s  energy {:>8.3} mJ  {:>6.2} pJ/op",
+            r.time_s, r.energy_mj, r.pj_per_op
+        );
+    }
+    // voltage sweep: energy/frame vs VDD for the best configuration
+    println!("\n== VDD sweep (HWCE 4b + HWCRYPT) ==");
+    for i in 0..=4 {
+        let vdd = 0.8 + 0.1 * i as f64;
+        let cfg = ExecConfig { vdd, ..ExecConfig::with_hwce(WeightPrec::W4) };
+        let r = surveillance::run_frame(cfg);
+        println!(
+            "VDD={vdd:.1}V  time {:>8.4} s  energy {:>8.3} mJ  {:>6.2} pJ/op",
+            r.time_s, r.energy_mj, r.pj_per_op
+        );
+    }
+
+    println!("\n== host cost of one full ladder simulation ==");
+    let (m, lo, hi) = measure(1, 5, || {
+        blackbox(surveillance::ladder());
+    });
+    report_row("surveillance ladder (5 configs)", m, lo, hi, None);
+}

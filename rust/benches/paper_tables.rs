@@ -1,0 +1,10 @@
+//! Bench: chip-level tables — regenerates Table I (power modes), Fig. 7
+//! (operating modes over VDD) and Table II (state-of-the-art comparison).
+
+use fulmine::report;
+
+fn main() {
+    println!("{}", report::table1());
+    println!("{}", report::fig7());
+    println!("{}", report::table2());
+}

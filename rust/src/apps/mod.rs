@@ -1,0 +1,13 @@
+//! Workload definitions for the three §IV use cases: layer tables, op
+//! counts, parameter generation, and the functional EEG pipeline.
+
+pub mod eeg;
+pub mod facedet;
+pub mod params;
+pub mod resnet;
+
+/// One OpenRISC-equivalent operation count, the normalization unit of the
+/// paper's `pJ/op` metric (footnote 4: "the number of OpenRISC instructions
+/// that are necessary to execute a given task, using only instructions of
+/// the original OpenRISC 1200 ISA").
+pub type EqOps = u64;

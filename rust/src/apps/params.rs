@@ -1,0 +1,84 @@
+//! Deterministic parameter generation — the exact xorshift64 stream of
+//! `python/compile/model.py::xorshift_i16` (pinned there by
+//! `test_xorshift_contract_values`; the runtime_artifacts integration test
+//! feeds these to the AOT graphs).
+
+use crate::runtime::TensorI16;
+
+/// xorshift64 stream mapped into [lo, hi], identical to the python side.
+pub fn xorshift_i16(seed: u64, n: usize, lo: i64, hi: i64) -> Vec<i16> {
+    let mut x = seed | 1;
+    let span = (hi - lo + 1) as u64;
+    (0..n)
+        .map(|_| {
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            ((x % span) as i64 + lo) as i16
+        })
+        .collect()
+}
+
+/// Mirror of `model.gen_params`: per-tensor seeds/ranges depend on position
+/// and role. Because the python side keys ranges off parameter *names*
+/// (bias / fc / conv weight), we reproduce the same classification from the
+/// shapes: rank-1 tensors are biases, rank-2 are fc weights, rank-4 are conv
+/// weights (this matches every registry artifact's parameter list).
+pub fn gen_params(shapes: &[Vec<usize>], simd: usize, seed: u64) -> Vec<TensorI16> {
+    let (lo_w, hi_w) = match simd {
+        1 => (-256, 255),
+        2 => (-128, 127),
+        4 => (-8, 7),
+        _ => panic!("bad simd {simd}"),
+    };
+    shapes
+        .iter()
+        .enumerate()
+        .map(|(i, shape)| {
+            let n: usize = shape.iter().product();
+            let data = match shape.len() {
+                1 => xorshift_i16(seed + 1000 + i as u64, n, -64, 64),
+                2 => xorshift_i16(seed + 1000 + i as u64, n, -16, 16),
+                _ => xorshift_i16(seed + 1000 + i as u64, n, lo_w, hi_w),
+            };
+            TensorI16::new(shape.clone(), data)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Pin the same first values as the python contract test.
+    #[test]
+    fn xorshift_contract_values() {
+        let v = xorshift_i16(1, 4, -8, 7);
+        let mut x: u64 = 1;
+        let expect: Vec<i16> = (0..4)
+            .map(|_| {
+                x ^= x << 13;
+                x ^= x >> 7;
+                x ^= x << 17;
+                (x % 16) as i16 - 8
+            })
+            .collect();
+        assert_eq!(v, expect);
+    }
+
+    #[test]
+    fn ranges_respected() {
+        let v = xorshift_i16(7, 1000, -8, 7);
+        assert!(v.iter().all(|&x| (-8..=7).contains(&x)));
+        assert!(v.iter().any(|&x| x < 0) && v.iter().any(|&x| x > 0));
+    }
+
+    #[test]
+    fn gen_params_shapes_and_classification() {
+        let shapes = vec![vec![8, 2, 3, 3], vec![8], vec![4, 16]];
+        let p = gen_params(&shapes, 4, 1);
+        assert!(p[0].data.iter().all(|&x| (-8..=7).contains(&x)), "conv w4 range");
+        assert!(p[1].data.iter().all(|&x| (-64..=64).contains(&x)), "bias range");
+        assert!(p[2].data.iter().all(|&x| (-16..=16).contains(&x)), "fc range");
+    }
+}

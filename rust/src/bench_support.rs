@@ -1,0 +1,41 @@
+//! Minimal benchmarking support for the `rust/benches/*` harnesses (the
+//! offline crate set has no criterion): warmup + median-of-N wall-clock
+//! measurement with spread, printed in a uniform format.
+
+use std::time::Instant;
+
+/// Measure `f`'s wall time: `warmup` unmeasured runs, then `n` measured
+/// runs; returns (median_s, min_s, max_s).
+pub fn measure<F: FnMut()>(warmup: usize, n: usize, mut f: F) -> (f64, f64, f64) {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times: Vec<f64> = (0..n)
+        .map(|_| {
+            let t = Instant::now();
+            f();
+            t.elapsed().as_secs_f64()
+        })
+        .collect();
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (times[n / 2], times[0], times[n - 1])
+}
+
+/// Print one bench row: name, median, spread and an optional throughput.
+pub fn report_row(name: &str, median_s: f64, min_s: f64, max_s: f64, throughput: Option<(f64, &str)>) {
+    let tp = throughput
+        .map(|(v, unit)| format!("  {v:>10.2} {unit}"))
+        .unwrap_or_default();
+    println!(
+        "{name:<44} {:>10.3} ms  [{:>8.3} .. {:>8.3}]{tp}",
+        median_s * 1e3,
+        min_s * 1e3,
+        max_s * 1e3
+    );
+}
+
+/// Optimization barrier (re-export of std's black_box).
+#[inline]
+pub fn blackbox<T>(x: T) -> T {
+    std::hint::black_box(x)
+}

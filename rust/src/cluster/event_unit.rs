@@ -1,0 +1,156 @@
+//! The cluster event unit (§II, §II-A): hardware-assisted synchronization and
+//! automatic clock-gating of idle cores.
+//!
+//! Cores execute an explicit *Wait For Event* and are clock-gated by the
+//! event unit until the awaited event (DMA completion, accelerator done,
+//! barrier release) arrives; the event unit also accelerates the OpenMP
+//! parallelization patterns: 2 cycles for a barrier, 8 cycles to open a
+//! critical section, 70 cycles to open a parallel section.
+
+use super::N_CORES;
+
+/// Synchronization primitive costs measured in cluster cycles (§II).
+pub const BARRIER_CYCLES: u64 = 2;
+pub const CRITICAL_OPEN_CYCLES: u64 = 8;
+pub const PARALLEL_OPEN_CYCLES: u64 = 70;
+
+/// Event lines routed by the event unit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Event {
+    DmaDone(u32),
+    HwceDone,
+    HwcryptDone,
+    Timer,
+    SwEvent(u32),
+}
+
+/// Core activity state tracked for clock-gating (idle cores consume only
+/// leakage — see [`crate::soc::power`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CoreState {
+    Active,
+    /// Clock-gated, waiting for an event; wakes at the recorded cycle.
+    Gated { since: u64 },
+}
+
+/// Tracks per-core busy/idle windows so the energy ledger can integrate
+/// active vs. clock-gated power, and provides barrier semantics.
+#[derive(Debug)]
+pub struct EventUnit {
+    state: [CoreState; N_CORES],
+    /// Accumulated active cycles per core.
+    active_cycles: [u64; N_CORES],
+    /// Accumulated gated cycles per core.
+    gated_cycles: [u64; N_CORES],
+    /// Pending events.
+    pending: Vec<Event>,
+}
+
+impl Default for EventUnit {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl EventUnit {
+    pub fn new() -> Self {
+        EventUnit {
+            state: [CoreState::Active; N_CORES],
+            active_cycles: [0; N_CORES],
+            gated_cycles: [0; N_CORES],
+            pending: Vec::new(),
+        }
+    }
+
+    /// Core `c` runs until cycle `until` (charged as active time).
+    pub fn run_until(&mut self, c: usize, from: u64, until: u64) {
+        debug_assert!(until >= from);
+        self.active_cycles[c] += until - from;
+        self.state[c] = CoreState::Active;
+    }
+
+    /// Core `c` executes WFE at `now`; it is clock-gated until `wake`.
+    /// Returns the wake cycle (== `wake`), charging gated time.
+    pub fn wait_for_event(&mut self, c: usize, now: u64, wake: u64) -> u64 {
+        debug_assert!(wake >= now);
+        self.state[c] = CoreState::Gated { since: now };
+        self.gated_cycles[c] += wake - now;
+        self.state[c] = CoreState::Active;
+        wake
+    }
+
+    /// Barrier across `n` cores whose local times are `t`: all cores align to
+    /// max(t) + BARRIER_CYCLES; early arrivals are clock-gated while waiting.
+    pub fn barrier(&mut self, t: &[u64]) -> u64 {
+        let n = t.len().min(N_CORES);
+        let release = t[..n].iter().copied().max().unwrap_or(0) + BARRIER_CYCLES;
+        for (c, &tc) in t[..n].iter().enumerate() {
+            self.gated_cycles[c] += release - BARRIER_CYCLES - tc;
+            self.active_cycles[c] += BARRIER_CYCLES;
+        }
+        release
+    }
+
+    pub fn post(&mut self, e: Event) {
+        self.pending.push(e);
+    }
+
+    pub fn take(&mut self, e: Event) -> bool {
+        if let Some(pos) = self.pending.iter().position(|&p| p == e) {
+            self.pending.remove(pos);
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn active_cycles(&self) -> &[u64; N_CORES] {
+        &self.active_cycles
+    }
+
+    pub fn gated_cycles(&self) -> &[u64; N_CORES] {
+        &self.gated_cycles
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn barrier_aligns_to_slowest_plus_two() {
+        let mut eu = EventUnit::new();
+        let release = eu.barrier(&[100, 250, 90, 180]);
+        assert_eq!(release, 252);
+        // core 2 (arrived at 90) waited 160 cycles gated
+        assert_eq!(eu.gated_cycles()[2], 160);
+        assert_eq!(eu.gated_cycles()[1], 0);
+    }
+
+    #[test]
+    fn wfe_charges_gated_time() {
+        let mut eu = EventUnit::new();
+        let wake = eu.wait_for_event(0, 1000, 5000);
+        assert_eq!(wake, 5000);
+        assert_eq!(eu.gated_cycles()[0], 4000);
+        assert_eq!(eu.active_cycles()[0], 0);
+    }
+
+    #[test]
+    fn events_post_and_take() {
+        let mut eu = EventUnit::new();
+        eu.post(Event::DmaDone(3));
+        eu.post(Event::HwceDone);
+        assert!(eu.take(Event::HwceDone));
+        assert!(!eu.take(Event::HwceDone));
+        assert!(eu.take(Event::DmaDone(3)));
+    }
+
+    #[test]
+    fn run_until_accumulates_active() {
+        let mut eu = EventUnit::new();
+        eu.run_until(1, 0, 500);
+        eu.run_until(1, 500, 700);
+        assert_eq!(eu.active_cycles()[1], 700);
+    }
+}

@@ -1,0 +1,30 @@
+//! Cycle-approximate model of the Fulmine CLUSTER domain (§II, Fig. 1).
+//!
+//! The cluster couples four OR10N cores (modelled by [`crate::isa`]), the
+//! HWCRYPT ([`crate::hwcrypt`]) and HWCE ([`crate::hwce`]) accelerators, 64 kB
+//! of TCDM in eight word-interleaved banks behind a single-cycle logarithmic
+//! interconnect ([`tcdm`]), a lightweight multi-channel DMA ([`dma`]) and the
+//! event unit ([`event_unit`]).
+//!
+//! Simulation strategy: *detailed* where contention matters (per-cycle bank
+//! arbitration for core/accelerator memory traffic on representative tiles),
+//! *analytic* where the paper itself composes measured kernels into full
+//! workloads (DMA bandwidth equations, per-phase cycle scaling). This mirrors
+//! how the paper's own evaluation is constructed (§III: "we measured average
+//! throughput by running a full-platform benchmark"; §IV composes kernels).
+
+pub mod dma;
+pub mod event_unit;
+pub mod tcdm;
+
+/// Number of general-purpose cores in the cluster.
+pub const N_CORES: usize = 4;
+/// TCDM size in bytes (64 kB).
+pub const TCDM_BYTES: usize = 64 * 1024;
+/// Number of word-interleaved TCDM banks.
+pub const TCDM_BANKS: usize = 8;
+/// L2 memory size in bytes (192 kB, SOC domain).
+pub const L2_BYTES: usize = 192 * 1024;
+/// Shared accelerator ports on the TCDM interconnect (§II: "the two
+/// accelerators share the same set of four physical ports").
+pub const ACCEL_PORTS: usize = 4;

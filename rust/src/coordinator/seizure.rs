@@ -1,0 +1,132 @@
+//! §IV-C: EEG seizure detection with secure long-term monitoring — PCA →
+//! DWT → energy coefficients → SVM every 0.5 s (256 Hz sampling, 50 %
+//! overlapped 256-sample windows), with AES-128-XTS encryption of the PCA
+//! components for collection.
+
+use super::{ExecConfig, Pipeline, UseCaseResult, OR1200_FACTOR};
+use crate::apps::eeg;
+use crate::kernels_sw::crypto_cost::SW_AES_XTS_CPB_1CORE;
+use crate::kernels_sw::eeg_cost;
+
+/// Seconds between windows (50 % overlap at 256 Hz).
+pub const WINDOW_PERIOD_S: f64 = 0.5;
+
+/// Run one detection window at the given configuration.
+pub fn run_window(cfg: ExecConfig) -> UseCaseResult {
+    let mut p = Pipeline::new(cfg);
+    p.ext_mem_present = false; // pacemaker-class node: no flash/FRAM
+    // acquire samples (ADC → L2 via uDMA; 23 ch × 128 new samples × 4 B)
+    p.dma(eeg_cost::N_CHANNELS * 128 * 4);
+    // the analytics pipeline runs on the cores (PCA diagonalization partly
+    // serial — Amdahl handled inside eeg_pipeline_cycles)
+    let cyc1 = eeg_cost::eeg_pipeline_cycles(1) as f64;
+    let cycn = eeg_cost::eeg_pipeline_cycles(cfg.n_cores) as f64;
+    p.sw(cycn, 0.0); // cycles already include the parallel split
+    let _ = cyc1;
+    // encrypt the PCA components for secure collection
+    p.xts(eeg::collected_bytes());
+    let ledger = p.finish();
+    UseCaseResult::from_ledger("seizure", ledger, eq_ops())
+}
+
+/// OR1200-equivalent ops for one window (baseline software).
+pub fn eq_ops() -> u64 {
+    let pipeline = eeg_cost::eeg_pipeline_cycles(1) as f64;
+    let crypto = eeg::collected_bytes() as f64 * SW_AES_XTS_CPB_1CORE;
+    ((pipeline + crypto) * OR1200_FACTOR) as u64
+}
+
+/// The Fig. 12 ladder: software scaling then accelerated encryption (the
+/// HWCE plays no role — there are no convolutions).
+pub fn ladder() -> Vec<UseCaseResult> {
+    let rungs = vec![
+        ("SW 1-core", ExecConfig::sw_1core()),
+        ("SW 4-core", ExecConfig { simd_sw: false, ..ExecConfig::sw_4core_simd() }),
+        ("4-core+HWCRYPT", ExecConfig { simd_sw: false, ..ExecConfig::with_hwcrypt() }),
+    ];
+    rungs
+        .into_iter()
+        .map(|(label, cfg)| {
+            let mut r = run_window(cfg);
+            r.label = label.to_string();
+            r
+        })
+        .collect()
+}
+
+/// §IV-C battery math: iterations on a 2 A·h @ 3.3 V pacemaker battery and
+/// continuous-use days (paper: >130 M iterations, >750 days continuous).
+pub fn pacemaker_endurance(r: &UseCaseResult) -> (f64, f64) {
+    let battery_j = 2.0 * 3.3 * 3600.0;
+    let iters = battery_j / (r.energy_mj / 1000.0);
+    // continuous use: one window each WINDOW_PERIOD_S; between windows the
+    // SoC deep-sleeps (Table I: 120 µW SOC, <0.01 µW power-gated cluster)
+    let sleep_mw = 0.12 + 0.00001;
+    let e_per_period = r.energy_mj + sleep_mw * (WINDOW_PERIOD_S - r.time_s).max(0.0);
+    let days = battery_j / (e_per_period / 1000.0) * WINDOW_PERIOD_S / 86400.0;
+    (iters, days)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Fig. 12 shape: combined parallelization + HWCRYPT ⇒ ≈4.3× speedup
+    /// and ≈2.1× energy reduction.
+    #[test]
+    fn fig12_speedup_and_energy_shape() {
+        let l = ladder();
+        assert_eq!(l.len(), 3);
+        let speedup = l[0].time_s / l[2].time_s;
+        let energy = l[0].energy_mj / l[2].energy_mj;
+        assert!(speedup > 2.0 && speedup < 8.0, "speedup {speedup} (paper 4.3×)");
+        assert!(energy > 1.3 && energy < 4.0, "energy ratio {energy} (paper 2.1×)");
+    }
+
+    /// Headline §IV-C numbers: ~0.18 mJ/window, ~12.7 pJ/op.
+    #[test]
+    fn fig12_absolute_bands() {
+        let best = &ladder()[2];
+        // Our EEG op-count model is leaner than the cited [30] implementation
+        // (≈2 M vs ≈14 M equivalent ops/window), so absolute energy scales
+        // down proportionally — the normalized pJ/op metric is the anchor.
+        assert!(
+            best.energy_mj > 0.005 && best.energy_mj < 0.8,
+            "window energy {} mJ (paper 0.18 at ≈7× our op count)",
+            best.energy_mj
+        );
+        assert!(
+            best.pj_per_op > 4.0 && best.pj_per_op < 30.0,
+            "pJ/op {} (paper 12.7)",
+            best.pj_per_op
+        );
+    }
+
+    /// §IV-C: encryption "essentially disappears" with the HWCRYPT.
+    #[test]
+    fn crypto_transparent_with_hwcrypt() {
+        use crate::energy::Category;
+        let l = ladder();
+        let share = |r: &UseCaseResult| r.ledger.energy_mj(Category::Crypto) / r.energy_mj;
+        assert!(share(&l[2]) < 0.10, "crypto share {} must be near zero", share(&l[2]));
+        assert!(share(&l[0]) > share(&l[2]) * 2.0);
+    }
+
+    /// §IV-C: pacemaker battery sustains >100 M iterations / >500 days.
+    #[test]
+    fn pacemaker_endurance_band() {
+        let best = &ladder()[2];
+        let (iters, days) = pacemaker_endurance(best);
+        assert!(iters > 5e7, "iterations {iters} (paper >130e6)");
+        assert!(days > 200.0, "continuous days {days} (paper >750)");
+    }
+
+    /// Real-time constraint: a window must complete well within its 0.5 s
+    /// period in every configuration.
+    #[test]
+    fn real_time_feasible_everywhere() {
+        for r in ladder() {
+            assert!(r.time_s < WINDOW_PERIOD_S, "{}: {} s", r.label, r.time_s);
+        }
+    }
+}

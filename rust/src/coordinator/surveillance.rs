@@ -1,0 +1,173 @@
+//! §IV-A: secure autonomous aerial surveillance — ResNet-20 on 224×224
+//! frames with AES-128-XTS protection of all weights (flash) and partial
+//! results (FRAM); the cluster is the only secure enclave.
+
+use super::{ExecConfig, Pipeline, UseCaseResult, NAIVE_CYC_PER_MAC_3, OR1200_FACTOR};
+use crate::apps::resnet::{self, ConvLayer};
+use crate::extmem::Device;
+use crate::hwce::golden::WeightPrec;
+use crate::kernels_sw::crypto_cost::SW_AES_XTS_CPB_1CORE;
+use crate::kernels_sw::dsp::{MAXPOOL_CYC_PER_OUT, RELU_CYC_PER_ELEM};
+
+/// Per-element software cost of the bias+ReLU epilogue (load, add-sat,
+/// relu, store — matches the VM dsp kernels).
+const EPILOGUE_CYC_PER_ELEM: f64 = RELU_CYC_PER_ELEM + 1.0;
+
+fn layer_epilogue_cycles(l: &ConvLayer) -> f64 {
+    let dense_out = (l.cout * l.h * l.w) as f64;
+    let mut c = dense_out * EPILOGUE_CYC_PER_ELEM;
+    if l.pool > 1 {
+        let (oh, ow) = l.out_dims();
+        c += (l.cout * oh * ow) as f64 * MAXPOOL_CYC_PER_OUT * (l.pool / 2) as f64;
+    }
+    c
+}
+
+/// Run one secure ResNet-20 frame at the given configuration.
+pub fn run_frame(cfg: ExecConfig) -> UseCaseResult {
+    let layers = resnet::resnet20_224();
+    // Storage precision follows the HWCE mode (W4 shrinks flash traffic, as
+    // §IV-A exploits); software rungs use the 16-bit baseline format.
+    let store_prec = cfg.hwce.unwrap_or(WeightPrec::W16);
+
+    let mut p = Pipeline::new(cfg);
+    for (i, l) in layers.iter().enumerate() {
+        let wb = l.weight_bytes(store_prec);
+        // weights: flash → L2 (uDMA, overlapped), then XTS decrypt
+        p.extmem(Device::Flash, wb);
+        // partial results of the previous layer return from FRAM (all but
+        // the first layer, whose input is the camera frame already in L2)
+        if i > 0 {
+            p.extmem(Device::Fram, l.in_bytes());
+            p.xts(l.in_bytes());
+        }
+        p.xts(wb);
+        // stage tiles L2 → TCDM
+        p.dma(l.in_bytes() + wb);
+        // convolution
+        p.conv(l.macs(), l.k);
+        // bias + ReLU (+ pooling) on the cores
+        p.sw(layer_epilogue_cycles(l), 1.0);
+        // results: encrypt, stage back, store to FRAM
+        p.xts(l.out_bytes());
+        p.dma(l.out_bytes());
+        p.extmem(Device::Fram, l.out_bytes());
+    }
+    // classifier head: global average pool + fc on the cores
+    p.sw(20_000.0, 1.0);
+
+    let ledger = p.finish();
+    UseCaseResult::from_ledger("surveillance", ledger, eq_ops())
+}
+
+/// OpenRISC-1200-equivalent operations of the §IV-A workload (definition
+/// footnote 4): baseline software instruction count for the full task at
+/// the 16-bit storage format.
+pub fn eq_ops() -> u64 {
+    let layers = resnet::resnet20_224();
+    let conv: f64 = layers
+        .iter()
+        .map(|l| l.macs() as f64 * NAIVE_CYC_PER_MAC_3)
+        .sum();
+    let crypto_bytes: f64 = layers
+        .iter()
+        .enumerate()
+        .map(|(i, l)| {
+            l.weight_bytes(WeightPrec::W16) as f64
+                + l.out_bytes() as f64
+                + if i > 0 { l.in_bytes() as f64 } else { 0.0 }
+        })
+        .sum();
+    let crypto = crypto_bytes * SW_AES_XTS_CPB_1CORE;
+    let other: f64 = layers.iter().map(layer_epilogue_cycles).sum::<f64>() + 20_000.0;
+    ((conv + crypto + other) * OR1200_FACTOR) as u64
+}
+
+/// Run the whole Fig. 10 ladder.
+pub fn ladder() -> Vec<UseCaseResult> {
+    ExecConfig::ladder()
+        .into_iter()
+        .map(|(label, cfg)| {
+            let mut r = run_frame(cfg);
+            r.label = label.to_string();
+            r
+        })
+        .collect()
+}
+
+/// §IV-A flight-time feasibility: iterations of the secure ResNet-20 over a
+/// 7-minute CrazyFlie flight, and the battery fraction consumed (2590 J).
+pub fn flight_feasibility(r: &UseCaseResult) -> (u64, f64) {
+    let flight_s = 7.0 * 60.0;
+    let iters = (flight_s / r.time_s).floor() as u64;
+    let energy_j = iters as f64 * r.energy_mj / 1000.0;
+    (iters, energy_j / 2590.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ladder_monotone_time_and_energy() {
+        let l = ladder();
+        assert_eq!(l.len(), 5);
+        for i in 1..l.len() {
+            assert!(
+                l[i].time_s < l[i - 1].time_s * 1.02,
+                "time not improving at rung {i}: {} vs {}",
+                l[i].time_s,
+                l[i - 1].time_s
+            );
+        }
+        assert!(l[4].energy_mj < l[0].energy_mj);
+    }
+
+    /// Fig. 10 shape: full acceleration is ≳50× faster and ≳20× more
+    /// efficient than the single-core software baseline (paper: 114×/45×).
+    #[test]
+    fn fig10_speedup_and_energy_shape() {
+        let l = ladder();
+        let speedup = l[0].time_s / l[4].time_s;
+        let energy_ratio = l[0].energy_mj / l[4].energy_mj;
+        assert!(speedup > 50.0, "speedup {speedup} (paper 114×)");
+        assert!(energy_ratio > 15.0, "energy ratio {energy_ratio} (paper 45×)");
+    }
+
+    /// Headline §IV-A numbers: ~27 mJ, ~3.16 pJ/op at the best rung.
+    #[test]
+    fn fig10_absolute_energy_band() {
+        let best = &ladder()[4];
+        assert!(
+            best.energy_mj > 8.0 && best.energy_mj < 80.0,
+            "frame energy {} mJ (paper 27 mJ)",
+            best.energy_mj
+        );
+        assert!(
+            best.pj_per_op > 1.0 && best.pj_per_op < 10.0,
+            "pJ/op {} (paper 3.16)",
+            best.pj_per_op
+        );
+    }
+
+    /// §IV-A: continuous execution over a 7-minute flight must consume a
+    /// negligible fraction of the 2590 J battery (paper: <0.25 %, 235 iters).
+    #[test]
+    fn flight_feasibility_negligible_battery() {
+        let best = &ladder()[4];
+        let (iters, frac) = flight_feasibility(best);
+        assert!(iters > 100, "iterations {iters} (paper 235)");
+        assert!(frac < 0.01, "battery fraction {frac} (paper <0.0025)");
+    }
+
+    /// In the best configuration the external memories are a large share —
+    /// §IV-A: FRAM alone >30 % of total energy, cluster ≈50 %.
+    #[test]
+    fn extmem_share_grows_with_acceleration() {
+        use crate::energy::Category;
+        let l = ladder();
+        let share = |r: &UseCaseResult| r.ledger.energy_mj(Category::ExtMem) / r.energy_mj;
+        assert!(share(&l[4]) > share(&l[0]), "ext-mem share must grow");
+        assert!(share(&l[4]) > 0.2, "ext-mem share at best rung {}", share(&l[4]));
+    }
+}

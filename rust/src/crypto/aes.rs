@@ -1,0 +1,415 @@
+//! AES-128 block cipher (FIPS-197), from scratch.
+//!
+//! The HWCRYPT AES engine is round-based: two cipher instances, each
+//! implementing two rounds per clock, with a shared on-the-fly round-key
+//! module. This module provides the *functional* cipher; the per-cycle
+//! behaviour (2 rounds/cycle × 2 instances) is modelled in
+//! [`crate::hwcrypt`].
+
+/// AES S-box (FIPS-197 Fig. 7).
+pub const SBOX: [u8; 256] = [
+    0x63, 0x7c, 0x77, 0x7b, 0xf2, 0x6b, 0x6f, 0xc5, 0x30, 0x01, 0x67, 0x2b, 0xfe, 0xd7, 0xab, 0x76,
+    0xca, 0x82, 0xc9, 0x7d, 0xfa, 0x59, 0x47, 0xf0, 0xad, 0xd4, 0xa2, 0xaf, 0x9c, 0xa4, 0x72, 0xc0,
+    0xb7, 0xfd, 0x93, 0x26, 0x36, 0x3f, 0xf7, 0xcc, 0x34, 0xa5, 0xe5, 0xf1, 0x71, 0xd8, 0x31, 0x15,
+    0x04, 0xc7, 0x23, 0xc3, 0x18, 0x96, 0x05, 0x9a, 0x07, 0x12, 0x80, 0xe2, 0xeb, 0x27, 0xb2, 0x75,
+    0x09, 0x83, 0x2c, 0x1a, 0x1b, 0x6e, 0x5a, 0xa0, 0x52, 0x3b, 0xd6, 0xb3, 0x29, 0xe3, 0x2f, 0x84,
+    0x53, 0xd1, 0x00, 0xed, 0x20, 0xfc, 0xb1, 0x5b, 0x6a, 0xcb, 0xbe, 0x39, 0x4a, 0x4c, 0x58, 0xcf,
+    0xd0, 0xef, 0xaa, 0xfb, 0x43, 0x4d, 0x33, 0x85, 0x45, 0xf9, 0x02, 0x7f, 0x50, 0x3c, 0x9f, 0xa8,
+    0x51, 0xa3, 0x40, 0x8f, 0x92, 0x9d, 0x38, 0xf5, 0xbc, 0xb6, 0xda, 0x21, 0x10, 0xff, 0xf3, 0xd2,
+    0xcd, 0x0c, 0x13, 0xec, 0x5f, 0x97, 0x44, 0x17, 0xc4, 0xa7, 0x7e, 0x3d, 0x64, 0x5d, 0x19, 0x73,
+    0x60, 0x81, 0x4f, 0xdc, 0x22, 0x2a, 0x90, 0x88, 0x46, 0xee, 0xb8, 0x14, 0xde, 0x5e, 0x0b, 0xdb,
+    0xe0, 0x32, 0x3a, 0x0a, 0x49, 0x06, 0x24, 0x5c, 0xc2, 0xd3, 0xac, 0x62, 0x91, 0x95, 0xe4, 0x79,
+    0xe7, 0xc8, 0x37, 0x6d, 0x8d, 0xd5, 0x4e, 0xa9, 0x6c, 0x56, 0xf4, 0xea, 0x65, 0x7a, 0xae, 0x08,
+    0xba, 0x78, 0x25, 0x2e, 0x1c, 0xa6, 0xb4, 0xc6, 0xe8, 0xdd, 0x74, 0x1f, 0x4b, 0xbd, 0x8b, 0x8a,
+    0x70, 0x3e, 0xb5, 0x66, 0x48, 0x03, 0xf6, 0x0e, 0x61, 0x35, 0x57, 0xb9, 0x86, 0xc1, 0x1d, 0x9e,
+    0xe1, 0xf8, 0x98, 0x11, 0x69, 0xd9, 0x8e, 0x94, 0x9b, 0x1e, 0x87, 0xe9, 0xce, 0x55, 0x28, 0xdf,
+    0x8c, 0xa1, 0x89, 0x0d, 0xbf, 0xe6, 0x42, 0x68, 0x41, 0x99, 0x2d, 0x0f, 0xb0, 0x54, 0xbb, 0x16,
+];
+
+/// Inverse S-box, derived from [`SBOX`] at first use.
+fn inv_sbox() -> &'static [u8; 256] {
+    use std::sync::OnceLock;
+    static INV: OnceLock<[u8; 256]> = OnceLock::new();
+    INV.get_or_init(|| {
+        let mut inv = [0u8; 256];
+        for (i, &s) in SBOX.iter().enumerate() {
+            inv[s as usize] = i as u8;
+        }
+        inv
+    })
+}
+
+/// Multiply in GF(2^8) modulo x^8 + x^4 + x^3 + x + 1 (0x11b).
+#[inline]
+pub fn gf_mul(mut a: u8, mut b: u8) -> u8 {
+    let mut p = 0u8;
+    for _ in 0..8 {
+        if b & 1 != 0 {
+            p ^= a;
+        }
+        let hi = a & 0x80;
+        a <<= 1;
+        if hi != 0 {
+            a ^= 0x1b;
+        }
+        b >>= 1;
+    }
+    p
+}
+
+/// Number of AES-128 rounds.
+pub const ROUNDS: usize = 10;
+
+/// Expanded key schedule: 11 round keys of 16 bytes each.
+#[derive(Clone)]
+pub struct KeySchedule {
+    pub round_keys: [[u8; 16]; ROUNDS + 1],
+}
+
+impl KeySchedule {
+    /// FIPS-197 §5.2 key expansion for a 128-bit key.
+    pub fn expand(key: &[u8; 16]) -> Self {
+        let mut w = [[0u8; 4]; 4 * (ROUNDS + 1)];
+        for i in 0..4 {
+            w[i].copy_from_slice(&key[4 * i..4 * i + 4]);
+        }
+        let mut rcon: u8 = 1;
+        for i in 4..4 * (ROUNDS + 1) {
+            let mut t = w[i - 1];
+            if i % 4 == 0 {
+                // RotWord + SubWord + Rcon
+                t = [
+                    SBOX[t[1] as usize] ^ rcon,
+                    SBOX[t[2] as usize],
+                    SBOX[t[3] as usize],
+                    SBOX[t[0] as usize],
+                ];
+                rcon = gf_mul(rcon, 2);
+            }
+            for j in 0..4 {
+                w[i][j] = w[i - 4][j] ^ t[j];
+            }
+        }
+        let mut round_keys = [[0u8; 16]; ROUNDS + 1];
+        for (r, rk) in round_keys.iter_mut().enumerate() {
+            for c in 0..4 {
+                rk[4 * c..4 * c + 4].copy_from_slice(&w[4 * r + c]);
+            }
+        }
+        KeySchedule { round_keys }
+    }
+
+    /// The last round key — the HWCRYPT round-key generator starts decryption
+    /// from here (§II-B: "keeps track of the last round-key during encryption,
+    /// which acts as the starting point to generate round-keys for a
+    /// decryption operation").
+    pub fn last_round_key(&self) -> [u8; 16] {
+        self.round_keys[ROUNDS]
+    }
+}
+
+#[inline]
+fn add_round_key(state: &mut [u8; 16], rk: &[u8; 16]) {
+    for i in 0..16 {
+        state[i] ^= rk[i];
+    }
+}
+
+#[inline]
+fn sub_bytes(state: &mut [u8; 16]) {
+    for b in state.iter_mut() {
+        *b = SBOX[*b as usize];
+    }
+}
+
+#[inline]
+fn inv_sub_bytes(state: &mut [u8; 16]) {
+    let inv = inv_sbox();
+    for b in state.iter_mut() {
+        *b = inv[*b as usize];
+    }
+}
+
+/// State layout: column-major as in FIPS-197 — `state[r + 4c]`.
+#[inline]
+fn shift_rows(s: &mut [u8; 16]) {
+    // row r shifted left by r
+    let t = *s;
+    for r in 1..4 {
+        for c in 0..4 {
+            s[r + 4 * c] = t[r + 4 * ((c + r) % 4)];
+        }
+    }
+}
+
+#[inline]
+fn inv_shift_rows(s: &mut [u8; 16]) {
+    let t = *s;
+    for r in 1..4 {
+        for c in 0..4 {
+            s[r + 4 * ((c + r) % 4)] = t[r + 4 * c];
+        }
+    }
+}
+
+#[inline]
+fn mix_columns(s: &mut [u8; 16]) {
+    for c in 0..4 {
+        let col = [s[4 * c], s[4 * c + 1], s[4 * c + 2], s[4 * c + 3]];
+        s[4 * c] = gf_mul(col[0], 2) ^ gf_mul(col[1], 3) ^ col[2] ^ col[3];
+        s[4 * c + 1] = col[0] ^ gf_mul(col[1], 2) ^ gf_mul(col[2], 3) ^ col[3];
+        s[4 * c + 2] = col[0] ^ col[1] ^ gf_mul(col[2], 2) ^ gf_mul(col[3], 3);
+        s[4 * c + 3] = gf_mul(col[0], 3) ^ col[1] ^ col[2] ^ gf_mul(col[3], 2);
+    }
+}
+
+#[inline]
+fn inv_mix_columns(s: &mut [u8; 16]) {
+    for c in 0..4 {
+        let col = [s[4 * c], s[4 * c + 1], s[4 * c + 2], s[4 * c + 3]];
+        s[4 * c] = gf_mul(col[0], 14) ^ gf_mul(col[1], 11) ^ gf_mul(col[2], 13) ^ gf_mul(col[3], 9);
+        s[4 * c + 1] =
+            gf_mul(col[0], 9) ^ gf_mul(col[1], 14) ^ gf_mul(col[2], 11) ^ gf_mul(col[3], 13);
+        s[4 * c + 2] =
+            gf_mul(col[0], 13) ^ gf_mul(col[1], 9) ^ gf_mul(col[2], 14) ^ gf_mul(col[3], 11);
+        s[4 * c + 3] =
+            gf_mul(col[0], 11) ^ gf_mul(col[1], 13) ^ gf_mul(col[2], 9) ^ gf_mul(col[3], 14);
+    }
+}
+
+/// One encryption round (SubBytes, ShiftRows, MixColumns, AddRoundKey) — the
+/// primitive the HWCRYPT exposes individually "similar to the Intel AES-NI
+/// instructions" for round-based algorithms like AEGIS/AEZ.
+pub fn encrypt_round(state: &mut [u8; 16], rk: &[u8; 16]) {
+    sub_bytes(state);
+    shift_rows(state);
+    mix_columns(state);
+    add_round_key(state, rk);
+}
+
+// --- T-table fast path (§Perf) -------------------------------------------
+//
+// The straightforward byte-wise rounds above are kept as the readable
+// reference (and for the exposed single-round primitive); the block
+// en/decryption hot path below uses the classic 4×256 u32 table formulation
+// (SubBytes+ShiftRows+MixColumns folded into four lookups per column).
+// Equivalence with the reference path is asserted in tests.
+
+struct Tables {
+    te: [[u32; 256]; 4],
+    /// InvMixColumns-only tables (for the equivalent inverse cipher).
+    um: [[u32; 256]; 4],
+}
+
+fn tables() -> &'static Tables {
+    use std::sync::OnceLock;
+    static T: OnceLock<Box<Tables>> = OnceLock::new();
+    T.get_or_init(|| {
+        let mut te = [[0u32; 256]; 4];
+        let mut um = [[0u32; 256]; 4];
+        for x in 0..256 {
+            let s = SBOX[x];
+            let s2 = gf_mul(s, 2);
+            let s3 = s2 ^ s;
+            // contribution of row-r input byte to the output column
+            te[0][x] = u32::from_le_bytes([s2, s, s, s3]);
+            te[1][x] = u32::from_le_bytes([s3, s2, s, s]);
+            te[2][x] = u32::from_le_bytes([s, s3, s2, s]);
+            te[3][x] = u32::from_le_bytes([s, s, s3, s2]);
+            let b = x as u8;
+            let (e, n, d, nn) = (gf_mul(b, 14), gf_mul(b, 9), gf_mul(b, 13), gf_mul(b, 11));
+            um[0][x] = u32::from_le_bytes([e, n, d, nn]);
+            um[1][x] = u32::from_le_bytes([nn, e, n, d]);
+            um[2][x] = u32::from_le_bytes([d, nn, e, n]);
+            um[3][x] = u32::from_le_bytes([n, d, nn, e]);
+        }
+        Box::new(Tables { te, um })
+    })
+}
+
+#[inline]
+fn col(s: &[u8; 16], c: usize) -> u32 {
+    u32::from_le_bytes([s[4 * c], s[4 * c + 1], s[4 * c + 2], s[4 * c + 3]])
+}
+
+/// Fast block encryption (T-tables). Bit-identical to [`encrypt_block`].
+pub fn encrypt_block_fast(ks: &KeySchedule, block: &[u8; 16]) -> [u8; 16] {
+    let t = tables();
+    let mut s = *block;
+    add_round_key(&mut s, &ks.round_keys[0]);
+    for r in 1..ROUNDS {
+        let rk = &ks.round_keys[r];
+        let mut out = [0u8; 16];
+        for c in 0..4 {
+            let v = t.te[0][s[4 * c] as usize]
+                ^ t.te[1][s[(4 * (c + 1) + 1) % 16] as usize]
+                ^ t.te[2][s[(4 * (c + 2) + 2) % 16] as usize]
+                ^ t.te[3][s[(4 * (c + 3) + 3) % 16] as usize]
+                ^ col(rk, c);
+            out[4 * c..4 * c + 4].copy_from_slice(&v.to_le_bytes());
+        }
+        s = out;
+    }
+    encrypt_round_last(&mut s, &ks.round_keys[ROUNDS]);
+    s
+}
+
+/// Fast block decryption. Bit-identical to [`decrypt_block`].
+pub fn decrypt_block_fast(ks: &KeySchedule, block: &[u8; 16]) -> [u8; 16] {
+    let t = tables();
+    let mut s = *block;
+    add_round_key(&mut s, &ks.round_keys[ROUNDS]);
+    for r in (1..ROUNDS).rev() {
+        inv_shift_rows(&mut s);
+        inv_sub_bytes(&mut s);
+        add_round_key(&mut s, &ks.round_keys[r]);
+        // InvMixColumns via tables
+        let mut out = [0u8; 16];
+        for c in 0..4 {
+            let v = t.um[0][s[4 * c] as usize]
+                ^ t.um[1][s[4 * c + 1] as usize]
+                ^ t.um[2][s[4 * c + 2] as usize]
+                ^ t.um[3][s[4 * c + 3] as usize];
+            out[4 * c..4 * c + 4].copy_from_slice(&v.to_le_bytes());
+        }
+        s = out;
+    }
+    inv_shift_rows(&mut s);
+    inv_sub_bytes(&mut s);
+    add_round_key(&mut s, &ks.round_keys[0]);
+    s
+}
+
+/// Final encryption round (no MixColumns).
+pub fn encrypt_round_last(state: &mut [u8; 16], rk: &[u8; 16]) {
+    sub_bytes(state);
+    shift_rows(state);
+    add_round_key(state, rk);
+}
+
+/// Encrypt one 16-byte block.
+pub fn encrypt_block(ks: &KeySchedule, block: &[u8; 16]) -> [u8; 16] {
+    let mut s = *block;
+    add_round_key(&mut s, &ks.round_keys[0]);
+    for r in 1..ROUNDS {
+        encrypt_round(&mut s, &ks.round_keys[r]);
+    }
+    encrypt_round_last(&mut s, &ks.round_keys[ROUNDS]);
+    s
+}
+
+/// Decrypt one 16-byte block (equivalent inverse cipher).
+pub fn decrypt_block(ks: &KeySchedule, block: &[u8; 16]) -> [u8; 16] {
+    let mut s = *block;
+    add_round_key(&mut s, &ks.round_keys[ROUNDS]);
+    for r in (1..ROUNDS).rev() {
+        inv_shift_rows(&mut s);
+        inv_sub_bytes(&mut s);
+        add_round_key(&mut s, &ks.round_keys[r]);
+        inv_mix_columns(&mut s);
+    }
+    inv_shift_rows(&mut s);
+    inv_sub_bytes(&mut s);
+    add_round_key(&mut s, &ks.round_keys[0]);
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hex16(s: &str) -> [u8; 16] {
+        let mut out = [0u8; 16];
+        for i in 0..16 {
+            out[i] = u8::from_str_radix(&s[2 * i..2 * i + 2], 16).unwrap();
+        }
+        out
+    }
+
+    /// FIPS-197 Appendix C.1 known-answer test.
+    #[test]
+    fn fips197_appendix_c1() {
+        let key = hex16("000102030405060708090a0b0c0d0e0f");
+        let pt = hex16("00112233445566778899aabbccddeeff");
+        let ct = hex16("69c4e0d86a7b0430d8cdb78070b4c55a");
+        let ks = KeySchedule::expand(&key);
+        assert_eq!(encrypt_block(&ks, &pt), ct);
+        assert_eq!(decrypt_block(&ks, &ct), pt);
+    }
+
+    /// FIPS-197 Appendix B example vector.
+    #[test]
+    fn fips197_appendix_b() {
+        let key = hex16("2b7e151628aed2a6abf7158809cf4f3c");
+        let pt = hex16("3243f6a8885a308d313198a2e0370734");
+        let ct = hex16("3925841d02dc09fbdc118597196a0b32");
+        let ks = KeySchedule::expand(&key);
+        assert_eq!(encrypt_block(&ks, &pt), ct);
+        assert_eq!(decrypt_block(&ks, &ct), pt);
+    }
+
+    /// Key expansion first/last round keys from FIPS-197 Appendix A.1.
+    #[test]
+    fn fips197_key_expansion() {
+        let key = hex16("2b7e151628aed2a6abf7158809cf4f3c");
+        let ks = KeySchedule::expand(&key);
+        assert_eq!(ks.round_keys[0], key);
+        // w[40..43] = d014f9a8 c9ee2589 e13f0cc8 b6630ca6
+        assert_eq!(ks.round_keys[10], hex16("d014f9a8c9ee2589e13f0cc8b6630ca6"));
+        assert_eq!(ks.last_round_key(), ks.round_keys[10]);
+    }
+
+    #[test]
+    fn roundtrip_random() {
+        // deterministic xorshift "random" data
+        let mut x: u64 = 0x123456789abcdef;
+        let mut next = || {
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            x
+        };
+        for _ in 0..50 {
+            let mut key = [0u8; 16];
+            let mut pt = [0u8; 16];
+            for b in key.iter_mut().chain(pt.iter_mut()) {
+                *b = next() as u8;
+            }
+            let ks = KeySchedule::expand(&key);
+            assert_eq!(decrypt_block(&ks, &encrypt_block(&ks, &pt)), pt);
+        }
+    }
+
+    /// The T-table fast path must be bit-identical to the reference rounds
+    /// over random keys/blocks.
+    #[test]
+    fn fast_path_equivalent_to_reference() {
+        let mut x: u64 = 0xfeedface;
+        let mut next = || {
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            x
+        };
+        for _ in 0..200 {
+            let mut key = [0u8; 16];
+            let mut pt = [0u8; 16];
+            for b in key.iter_mut().chain(pt.iter_mut()) {
+                *b = next() as u8;
+            }
+            let ks = KeySchedule::expand(&key);
+            let ct_ref = encrypt_block(&ks, &pt);
+            assert_eq!(encrypt_block_fast(&ks, &pt), ct_ref);
+            assert_eq!(decrypt_block_fast(&ks, &ct_ref), pt);
+            assert_eq!(decrypt_block_fast(&ks, &ct_ref), decrypt_block(&ks, &ct_ref));
+        }
+    }
+
+    #[test]
+    fn gf_mul_basics() {
+        assert_eq!(gf_mul(0x57, 0x83), 0xc1); // FIPS-197 §4.2 example
+        assert_eq!(gf_mul(0x57, 0x13), 0xfe);
+        assert_eq!(gf_mul(1, 0xab), 0xab);
+        assert_eq!(gf_mul(0, 0xff), 0);
+    }
+}

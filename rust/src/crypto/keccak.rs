@@ -1,0 +1,239 @@
+//! The KECCAK-f[400] permutation (16-bit lanes, 5×5 state, 20 rounds) used by
+//! the HWCRYPT sponge engine — "a smaller version of the SHA-3 permutation"
+//! (§II-B). Round count is configurable as the hardware allows: any multiple
+//! of three (the datapath executes three rounds per clock) or the full 20
+//! rounds of the KECCAK-f[400] specification.
+
+/// Lane width in bits (w = 16 for KECCAK-f[400]; b = 25·w = 400).
+pub const LANE_BITS: u32 = 16;
+/// Specified number of rounds: 12 + 2·log2(w) = 20.
+pub const FULL_ROUNDS: usize = 20;
+/// State size in bytes (400 bits / 8 = 50).
+pub const STATE_BYTES: usize = 50;
+
+/// Round constants: the standard KECCAK RC table truncated to the 16-bit lane
+/// width (the RC generation LFSR only sets bits at positions 2^j − 1, so for
+/// w = 16 the bits at 0, 1, 3, 7, 15 survive).
+pub const RC: [u16; FULL_ROUNDS] = [
+    0x0001, 0x8082, 0x808a, 0x8000, 0x808b, 0x0001, 0x8081, 0x8009, 0x008a, 0x0088, 0x8009, 0x000a,
+    0x808b, 0x008b, 0x8089, 0x8003, 0x8002, 0x0080, 0x800a, 0x000a,
+];
+
+/// Rho rotation offsets (mod 16), indexed `[x][y]` as in the KECCAK spec.
+const RHO: [[u32; 5]; 5] = [
+    [0, 36 % 16, 3, 41 % 16, 18 % 16],
+    [1, 44 % 16, 10, 45 % 16, 2],
+    [62 % 16, 6, 43 % 16, 15, 61 % 16],
+    [28 % 16, 55 % 16, 25 % 16, 21 % 16, 56 % 16],
+    [27 % 16, 20 % 16, 39 % 16, 8, 14],
+];
+
+/// The 5×5 lane state. Lane `(x, y)` is `lanes[x + 5*y]`, matching the
+/// spec's A[x, y] indexing; byte serialization is lane-ordered little-endian
+/// (lane (0,0) first), as in the Keccak reference code.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub struct State {
+    pub lanes: [u16; 25],
+}
+
+impl State {
+    pub fn zero() -> Self {
+        State { lanes: [0; 25] }
+    }
+
+    pub fn from_bytes(bytes: &[u8; STATE_BYTES]) -> Self {
+        let mut lanes = [0u16; 25];
+        for (i, lane) in lanes.iter_mut().enumerate() {
+            *lane = u16::from_le_bytes([bytes[2 * i], bytes[2 * i + 1]]);
+        }
+        State { lanes }
+    }
+
+    pub fn to_bytes(&self) -> [u8; STATE_BYTES] {
+        let mut out = [0u8; STATE_BYTES];
+        for (i, lane) in self.lanes.iter().enumerate() {
+            out[2 * i..2 * i + 2].copy_from_slice(&lane.to_le_bytes());
+        }
+        out
+    }
+
+    /// XOR `data` into the first `data.len()` bytes of the state (absorb).
+    /// Lane-wise (no full-state serialization) — hot in the sponge AE path.
+    pub fn xor_bytes(&mut self, data: &[u8]) {
+        assert!(data.len() <= STATE_BYTES);
+        for (i, d) in data.iter().enumerate() {
+            self.lanes[i / 2] ^= (*d as u16) << (8 * (i % 2));
+        }
+    }
+
+    /// Read the first `n` bytes of the state (squeeze), lane-wise.
+    pub fn extract(&self, n: usize) -> Vec<u8> {
+        (0..n)
+            .map(|i| (self.lanes[i / 2] >> (8 * (i % 2))) as u8)
+            .collect()
+    }
+}
+
+#[inline]
+fn theta(a: &mut [u16; 25]) {
+    let mut c = [0u16; 5];
+    for x in 0..5 {
+        c[x] = a[x] ^ a[x + 5] ^ a[x + 10] ^ a[x + 15] ^ a[x + 20];
+    }
+    for x in 0..5 {
+        let d = c[(x + 4) % 5] ^ c[(x + 1) % 5].rotate_left(1);
+        for y in 0..5 {
+            a[x + 5 * y] ^= d;
+        }
+    }
+}
+
+#[inline]
+fn rho_pi(a: &[u16; 25]) -> [u16; 25] {
+    let mut b = [0u16; 25];
+    for x in 0..5 {
+        for y in 0..5 {
+            // pi: B[y, 2x+3y] = rot(A[x, y], rho[x][y])
+            let nx = y;
+            let ny = (2 * x + 3 * y) % 5;
+            b[nx + 5 * ny] = a[x + 5 * y].rotate_left(RHO[x][y]);
+        }
+    }
+    b
+}
+
+#[inline]
+fn chi(b: &[u16; 25]) -> [u16; 25] {
+    let mut a = [0u16; 25];
+    for y in 0..5 {
+        for x in 0..5 {
+            a[x + 5 * y] =
+                b[x + 5 * y] ^ ((!b[(x + 1) % 5 + 5 * y]) & b[(x + 2) % 5 + 5 * y]);
+        }
+    }
+    a
+}
+
+/// One KECCAK-f[400] round with round constant index `ir`.
+pub fn round(state: &mut State, ir: usize) {
+    theta(&mut state.lanes);
+    let b = rho_pi(&state.lanes);
+    state.lanes = chi(&b);
+    state.lanes[0] ^= RC[ir];
+}
+
+/// Apply `nrounds` rounds of KECCAK-f[400] starting from round index 0.
+/// The HWCRYPT permits `nrounds` as any multiple of 3, or 20 (the full
+/// permutation, which is the security-relevant configuration used by all
+/// benchmarks in §III-B).
+pub fn permute_rounds(state: &mut State, nrounds: usize) {
+    assert!(
+        nrounds == FULL_ROUNDS || (nrounds > 0 && nrounds % 3 == 0 && nrounds <= FULL_ROUNDS),
+        "HWCRYPT supports multiples of 3 rounds or the full 20"
+    );
+    for ir in 0..nrounds {
+        round(state, ir);
+    }
+}
+
+/// The full 20-round KECCAK-f[400] permutation.
+pub fn permute(state: &mut State) {
+    for ir in 0..FULL_ROUNDS {
+        round(state, ir);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_state_changes_and_is_deterministic() {
+        let mut s1 = State::zero();
+        let mut s2 = State::zero();
+        permute(&mut s1);
+        permute(&mut s2);
+        assert_ne!(s1, State::zero());
+        assert_eq!(s1, s2);
+    }
+
+    #[test]
+    fn iota_only_touches_lane00() {
+        // With a zero state, the first round's theta/rho/pi/chi are all zero
+        // preserving, so only iota contributes: state = RC[0] in lane (0,0).
+        let mut s = State::zero();
+        round(&mut s, 0);
+        assert_eq!(s.lanes[0], RC[0]);
+        assert!(s.lanes[1..].iter().all(|&l| l == 0));
+    }
+
+    #[test]
+    fn rho_preserves_lane_popcount() {
+        let mut lanes = [0u16; 25];
+        for (i, l) in lanes.iter_mut().enumerate() {
+            *l = (i as u16).wrapping_mul(0x9e37) ^ 0x5a5a;
+        }
+        let before: u32 = lanes.iter().map(|l| l.count_ones()).sum();
+        let b = rho_pi(&lanes);
+        let after: u32 = b.iter().map(|l| l.count_ones()).sum();
+        assert_eq!(before, after);
+    }
+
+    #[test]
+    fn pi_is_a_lane_permutation() {
+        // With all rotations applied, the multiset of lane popcounts must be
+        // preserved (rho rotates, pi permutes).
+        let mut lanes = [0u16; 25];
+        for (i, l) in lanes.iter_mut().enumerate() {
+            *l = 1u16 << (i % 16);
+        }
+        let b = rho_pi(&lanes);
+        let mut pb: Vec<u32> = b.iter().map(|l| l.count_ones()).collect();
+        let mut pa: Vec<u32> = lanes.iter().map(|l| l.count_ones()).collect();
+        pa.sort_unstable();
+        pb.sort_unstable();
+        assert_eq!(pa, pb);
+    }
+
+    #[test]
+    fn byte_roundtrip() {
+        let mut s = State::zero();
+        s.lanes[3] = 0xbeef;
+        s.lanes[24] = 0x1234;
+        assert_eq!(State::from_bytes(&s.to_bytes()), s);
+    }
+
+    #[test]
+    fn permutation_diffuses() {
+        // single-bit input difference should diffuse to ~half the state
+        let mut a = State::zero();
+        let mut b = State::zero();
+        b.lanes[7] = 1;
+        permute(&mut a);
+        permute(&mut b);
+        let diff: u32 = a
+            .lanes
+            .iter()
+            .zip(&b.lanes)
+            .map(|(x, y)| (x ^ y).count_ones())
+            .sum();
+        assert!(diff > 120 && diff < 280, "diffusion out of range: {diff}");
+    }
+
+    #[test]
+    fn partial_rounds_supported() {
+        let mut s = State::zero();
+        permute_rounds(&mut s, 3);
+        let mut t = State::zero();
+        for ir in 0..3 {
+            round(&mut t, ir);
+        }
+        assert_eq!(s, t);
+    }
+
+    #[test]
+    #[should_panic]
+    fn invalid_round_count_rejected() {
+        permute_rounds(&mut State::zero(), 4);
+    }
+}

@@ -1,0 +1,28 @@
+//! Functional models of the HWCRYPT cryptographic primitives (§II-B).
+//!
+//! Everything is implemented from scratch (no external crypto crates), as the
+//! paper's HWCRYPT engine is itself a from-scratch silicon datapath:
+//!
+//! * [`aes`] — AES-128 block cipher (FIPS-197): S-boxes, key expansion,
+//!   encryption and decryption rounds. The HWCRYPT round-key generator
+//!   "keeps track of the last round-key during encryption" to seed
+//!   decryption; we model the same by deriving the decryption schedule from
+//!   the final round key.
+//! * [`modes`] — ECB and XTS (IEEE P1619 / NIST SP 800-38E) with the
+//!   sequential ⊗2 tweak chain of Eq. (2) and ciphertext stealing; XEX as the
+//!   single-key degenerate case.
+//! * [`keccak`] — the KECCAK-f[400] permutation (16-bit lanes, 20 rounds,
+//!   configurable round count as the HWCRYPT datapath allows multiples of 3
+//!   or the full 20).
+//! * [`sponge`] — the sponge-based encryption pad and the dual-permutation
+//!   authenticated-encryption scheme of Fig. 4b (configurable rate 8..128
+//!   bits in powers of two).
+//!
+//! The *timing* of the hardware engine lives in [`crate::hwcrypt`]; this
+//! module is pure data transformation and is shared by the device model, the
+//! software-implementation cost models and the use-case pipelines.
+
+pub mod aes;
+pub mod keccak;
+pub mod modes;
+pub mod sponge;

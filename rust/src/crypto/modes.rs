@@ -1,0 +1,296 @@
+//! Block-cipher modes of operation implemented by the HWCRYPT AES engine:
+//! ECB and XTS (with the sequential ⊗2 tweak chain of Eq. (2) in the paper,
+//! and ciphertext stealing for non-block-aligned tails). Using the same key
+//! for the tweak and data instances degrades XTS to XEX "without implications
+//! to the overall security" (§II-B).
+
+use super::aes::{decrypt_block_fast as decrypt_block, encrypt_block_fast as encrypt_block, KeySchedule};
+
+/// Encrypt data in ECB mode. `data.len()` must be a multiple of 16.
+///
+/// The paper notes ECB "is not recommended to encrypt larger blocks of data"
+/// (equal plaintext blocks leak); it is provided because the silicon
+/// implements it and §III-B benchmarks it.
+pub fn ecb_encrypt(key: &[u8; 16], data: &[u8]) -> Vec<u8> {
+    assert!(data.len() % 16 == 0, "ECB requires whole blocks");
+    let ks = KeySchedule::expand(key);
+    let mut out = Vec::with_capacity(data.len());
+    for chunk in data.chunks_exact(16) {
+        let mut b = [0u8; 16];
+        b.copy_from_slice(chunk);
+        out.extend_from_slice(&encrypt_block(&ks, &b));
+    }
+    out
+}
+
+/// Decrypt data in ECB mode.
+pub fn ecb_decrypt(key: &[u8; 16], data: &[u8]) -> Vec<u8> {
+    assert!(data.len() % 16 == 0, "ECB requires whole blocks");
+    let ks = KeySchedule::expand(key);
+    let mut out = Vec::with_capacity(data.len());
+    for chunk in data.chunks_exact(16) {
+        let mut b = [0u8; 16];
+        b.copy_from_slice(chunk);
+        out.extend_from_slice(&decrypt_block(&ks, &b));
+    }
+    out
+}
+
+/// Multiply a 128-bit value by α=2 in GF(2^128) mod x^128 + x^7 + x^2 + x + 1
+/// — Eq. (2): a left shift with a conditional XOR of the reduction
+/// polynomial. XTS convention: the 16 bytes are little-endian, i.e. bit 0 of
+/// byte 0 is the least significant coefficient.
+#[inline]
+pub fn gf128_mul_alpha(t: &[u8; 16]) -> [u8; 16] {
+    let mut out = [0u8; 16];
+    let mut carry = 0u8;
+    for i in 0..16 {
+        let b = t[i];
+        out[i] = (b << 1) | carry;
+        carry = b >> 7;
+    }
+    if carry != 0 {
+        out[0] ^= 0x87; // x^7 + x^2 + x + 1
+    }
+    out
+}
+
+/// XTS dual-key pair. `k1` derives the tweak (encrypts the sector number),
+/// `k2` encrypts the data — the paper's Eq. (1) naming (note: IEEE P1619
+/// swaps the roles of key1/key2 relative to the paper; we follow P1619's
+/// convention key1 = data key, key2 = tweak key so standard test vectors
+/// apply, and expose the paper's naming through [`XtsKey::new`]).
+#[derive(Clone)]
+pub struct XtsKey {
+    data_ks: KeySchedule,
+    tweak_ks: KeySchedule,
+}
+
+impl XtsKey {
+    /// `data_key` encrypts blocks, `tweak_key` encrypts the sector number.
+    pub fn new(data_key: &[u8; 16], tweak_key: &[u8; 16]) -> Self {
+        XtsKey {
+            data_ks: KeySchedule::expand(data_key),
+            tweak_ks: KeySchedule::expand(tweak_key),
+        }
+    }
+
+    /// XEX degenerate case: same key for tweak and data (§II-B).
+    pub fn xex(key: &[u8; 16]) -> Self {
+        Self::new(key, key)
+    }
+
+    /// Initial tweak T0 = E_tweak(sector_number), sector number encoded
+    /// little-endian as in IEEE P1619.
+    pub fn initial_tweak(&self, sector: u128) -> [u8; 16] {
+        let sn = sector.to_le_bytes();
+        encrypt_block(&self.tweak_ks, &sn)
+    }
+}
+
+fn xor16(a: &[u8; 16], b: &[u8; 16]) -> [u8; 16] {
+    let mut out = [0u8; 16];
+    for i in 0..16 {
+        out[i] = a[i] ^ b[i];
+    }
+    out
+}
+
+/// XTS-AES-128 encryption of one sector (IEEE P1619). `data.len() >= 16`;
+/// a non-multiple-of-16 tail is handled with ciphertext stealing.
+pub fn xts_encrypt(key: &XtsKey, sector: u128, data: &[u8]) -> Vec<u8> {
+    assert!(data.len() >= 16, "XTS requires at least one block");
+    let mut t = key.initial_tweak(sector);
+    let nfull = data.len() / 16;
+    let tail = data.len() % 16;
+    let mut out = vec![0u8; data.len()];
+
+    let whole = if tail == 0 { nfull } else { nfull - 1 };
+    for i in 0..whole {
+        let mut b = [0u8; 16];
+        b.copy_from_slice(&data[16 * i..16 * i + 16]);
+        let c = xor16(&encrypt_block(&key.data_ks, &xor16(&b, &t)), &t);
+        out[16 * i..16 * i + 16].copy_from_slice(&c);
+        t = gf128_mul_alpha(&t);
+    }
+    if tail != 0 {
+        // ciphertext stealing over the last full block + partial block
+        let m = whole; // index of last full block
+        let mut pm = [0u8; 16];
+        pm.copy_from_slice(&data[16 * m..16 * m + 16]);
+        let cm = xor16(&encrypt_block(&key.data_ks, &xor16(&pm, &t)), &t);
+        let t_next = gf128_mul_alpha(&t);
+        // last partial plaintext padded with tail of cm
+        let mut plast = [0u8; 16];
+        plast[..tail].copy_from_slice(&data[16 * (m + 1)..]);
+        plast[tail..].copy_from_slice(&cm[tail..]);
+        let clast = xor16(&encrypt_block(&key.data_ks, &xor16(&plast, &t_next)), &t_next);
+        out[16 * m..16 * m + 16].copy_from_slice(&clast);
+        out[16 * (m + 1)..].copy_from_slice(&cm[..tail]);
+    }
+    out
+}
+
+/// XTS-AES-128 decryption of one sector.
+pub fn xts_decrypt(key: &XtsKey, sector: u128, data: &[u8]) -> Vec<u8> {
+    assert!(data.len() >= 16, "XTS requires at least one block");
+    let mut t = key.initial_tweak(sector);
+    let nfull = data.len() / 16;
+    let tail = data.len() % 16;
+    let mut out = vec![0u8; data.len()];
+
+    let whole = if tail == 0 { nfull } else { nfull - 1 };
+    for i in 0..whole {
+        let mut b = [0u8; 16];
+        b.copy_from_slice(&data[16 * i..16 * i + 16]);
+        let p = xor16(&decrypt_block(&key.data_ks, &xor16(&b, &t)), &t);
+        out[16 * i..16 * i + 16].copy_from_slice(&p);
+        t = gf128_mul_alpha(&t);
+    }
+    if tail != 0 {
+        let m = whole;
+        let t_next = gf128_mul_alpha(&t);
+        // Ciphertext block m holds E(P_last‖stolen) under t_next; the partial
+        // tail holds the head of E(P_m) under t.
+        let mut clast = [0u8; 16];
+        clast.copy_from_slice(&data[16 * m..16 * m + 16]);
+        let plast_full = xor16(&decrypt_block(&key.data_ks, &xor16(&clast, &t_next)), &t_next);
+        let mut cfull = [0u8; 16];
+        cfull[..tail].copy_from_slice(&data[16 * (m + 1)..]);
+        cfull[tail..].copy_from_slice(&plast_full[tail..]);
+        let pm = xor16(&decrypt_block(&key.data_ks, &xor16(&cfull, &t)), &t);
+        out[16 * m..16 * m + 16].copy_from_slice(&pm);
+        out[16 * (m + 1)..].copy_from_slice(&plast_full[..tail]);
+    }
+    out
+}
+
+/// Encrypt a large buffer as a sequence of sectors of `sector_size` bytes
+/// (the paper derives the XTS sector number "from the address of the data").
+/// This is how the use cases protect weights / partial results in external
+/// memory: each `sector_size`-byte chunk at byte offset `off` uses sector
+/// number `base_sector + off / sector_size`.
+pub fn xts_encrypt_region(key: &XtsKey, base_sector: u128, sector_size: usize, data: &[u8]) -> Vec<u8> {
+    assert!(sector_size % 16 == 0 && sector_size > 0);
+    let mut out = Vec::with_capacity(data.len());
+    for (i, chunk) in data.chunks(sector_size).enumerate() {
+        out.extend_from_slice(&xts_encrypt(key, base_sector + i as u128, chunk));
+    }
+    out
+}
+
+/// Inverse of [`xts_encrypt_region`].
+pub fn xts_decrypt_region(key: &XtsKey, base_sector: u128, sector_size: usize, data: &[u8]) -> Vec<u8> {
+    assert!(sector_size % 16 == 0 && sector_size > 0);
+    let mut out = Vec::with_capacity(data.len());
+    for (i, chunk) in data.chunks(sector_size).enumerate() {
+        out.extend_from_slice(&xts_decrypt(key, base_sector + i as u128, chunk));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hex(s: &str) -> Vec<u8> {
+        (0..s.len() / 2)
+            .map(|i| u8::from_str_radix(&s[2 * i..2 * i + 2], 16).unwrap())
+            .collect()
+    }
+
+    /// IEEE P1619 XTS-AES-128 Vector 1: all-zero keys, sector 0, 32 zero bytes.
+    #[test]
+    fn p1619_vector1() {
+        let key = XtsKey::new(&[0u8; 16], &[0u8; 16]);
+        let pt = vec![0u8; 32];
+        let ct = xts_encrypt(&key, 0, &pt);
+        assert_eq!(
+            ct,
+            hex("917cf69ebd68b2ec9b9fe9a3eadda692cd43d2f59598ed858c02c2652fbf922e")
+        );
+        assert_eq!(xts_decrypt(&key, 0, &ct), pt);
+    }
+
+    /// IEEE P1619 Vector 2: key1=11.., key2=22.., sector 0x3333333333,
+    /// plaintext 44*32.
+    #[test]
+    fn p1619_vector2() {
+        let key = XtsKey::new(&[0x11u8; 16], &[0x22u8; 16]);
+        let pt = vec![0x44u8; 32];
+        let ct = xts_encrypt(&key, 0x3333333333, &pt);
+        assert_eq!(
+            ct,
+            hex("c454185e6a16936e39334038acef838bfb186fff7480adc4289382ecd6d394f0")
+        );
+        assert_eq!(xts_decrypt(&key, 0x3333333333, &ct), pt);
+    }
+
+    #[test]
+    fn xts_roundtrip_with_ciphertext_stealing() {
+        let key = XtsKey::new(&[7u8; 16], &[9u8; 16]);
+        for len in [16, 17, 31, 32, 33, 48, 100, 255, 256, 8192] {
+            let pt: Vec<u8> = (0..len).map(|i| (i * 31 + 7) as u8).collect();
+            let ct = xts_encrypt(&key, 42, &pt);
+            assert_eq!(ct.len(), pt.len());
+            assert_eq!(xts_decrypt(&key, 42, &ct), pt, "len={len}");
+        }
+    }
+
+    #[test]
+    fn xts_different_sectors_differ() {
+        let key = XtsKey::new(&[7u8; 16], &[9u8; 16]);
+        let pt = vec![0xabu8; 64];
+        assert_ne!(xts_encrypt(&key, 0, &pt), xts_encrypt(&key, 1, &pt));
+    }
+
+    #[test]
+    fn xex_is_xts_with_equal_keys() {
+        let key = XtsKey::xex(&[5u8; 16]);
+        let key2 = XtsKey::new(&[5u8; 16], &[5u8; 16]);
+        let pt = vec![1u8; 48];
+        assert_eq!(xts_encrypt(&key, 3, &pt), xts_encrypt(&key2, 3, &pt));
+    }
+
+    #[test]
+    fn ecb_leaks_patterns_xts_does_not() {
+        // The §II-B motivation for XTS: equal plaintext blocks map to equal
+        // ciphertext blocks in ECB but not in XTS.
+        let k = [3u8; 16];
+        let pt = [[0x5au8; 16], [0x5au8; 16]].concat();
+        let ecb = ecb_encrypt(&k, &pt);
+        assert_eq!(ecb[..16], ecb[16..32]);
+        let xts = xts_encrypt(&XtsKey::xex(&k), 0, &pt);
+        assert_ne!(xts[..16], xts[16..32]);
+    }
+
+    #[test]
+    fn ecb_roundtrip() {
+        let k = [0x42u8; 16];
+        let pt: Vec<u8> = (0..256u32).map(|i| i as u8).collect();
+        assert_eq!(ecb_decrypt(&k, &ecb_encrypt(&k, &pt)), pt);
+    }
+
+    #[test]
+    fn gf128_known_doubling() {
+        // 1 << 1 == 2 (no reduction)
+        let mut one = [0u8; 16];
+        one[0] = 1;
+        let two = gf128_mul_alpha(&one);
+        assert_eq!(two[0], 2);
+        // value with MSB set reduces with 0x87
+        let mut hi = [0u8; 16];
+        hi[15] = 0x80;
+        let red = gf128_mul_alpha(&hi);
+        assert_eq!(red[0], 0x87);
+        assert_eq!(red[15], 0);
+    }
+
+    #[test]
+    fn region_roundtrip() {
+        let key = XtsKey::new(&[1u8; 16], &[2u8; 16]);
+        let data: Vec<u8> = (0..10_000).map(|i| (i % 251) as u8).collect();
+        let ct = xts_encrypt_region(&key, 100, 512, &data);
+        assert_eq!(xts_decrypt_region(&key, 100, 512, &ct), data);
+    }
+}

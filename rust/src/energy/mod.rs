@@ -1,0 +1,168 @@
+//! Energy bookkeeping: integrates per-component power over simulated activity
+//! windows and produces the breakdown reports of Fig. 10/11/12.
+
+use crate::soc::power::{Component, PowerModel};
+use crate::soc::OperatingPoint;
+use std::collections::BTreeMap;
+
+/// Breakdown categories used by the paper's use-case figures.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Category {
+    /// Convolution kernels (SW or HWCE).
+    Conv,
+    /// Encryption/decryption (SW or HWCRYPT).
+    Crypto,
+    /// Other CNN / algorithm components run in software (pooling, activation,
+    /// dense layers, PCA, DWT, SVM, ...).
+    OtherSw,
+    /// Cluster DMA transfers (L2 ↔ TCDM).
+    Dma,
+    /// External memories (flash + FRAM traffic) and uDMA I/O.
+    ExtMem,
+    /// Idle/leakage and power-management overheads.
+    Idle,
+}
+
+impl Category {
+    pub fn name(self) -> &'static str {
+        match self {
+            Category::Conv => "conv",
+            Category::Crypto => "crypto",
+            Category::OtherSw => "other-sw",
+            Category::Dma => "dma",
+            Category::ExtMem => "ext-mem",
+            Category::Idle => "idle",
+        }
+    }
+
+    pub fn all() -> [Category; 6] {
+        [
+            Category::Conv,
+            Category::Crypto,
+            Category::OtherSw,
+            Category::Dma,
+            Category::ExtMem,
+            Category::Idle,
+        ]
+    }
+}
+
+/// Accumulates energy (mJ) per category and wall-clock time (s) per phase.
+#[derive(Debug, Default, Clone)]
+pub struct EnergyLedger {
+    energy_mj: BTreeMap<Category, f64>,
+    /// Total pipeline time in seconds (phases may overlap; the coordinator
+    /// adds only the critical path).
+    pub elapsed_s: f64,
+}
+
+impl EnergyLedger {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Charge `seconds` of `component` activity at `op` to `category`.
+    pub fn charge(&mut self, category: Category, component: Component, op: OperatingPoint, seconds: f64) {
+        let mw = PowerModel::active_mw(component, op);
+        *self.energy_mj.entry(category).or_insert(0.0) += mw * seconds;
+    }
+
+    /// Charge a raw energy amount in mJ.
+    pub fn charge_mj(&mut self, category: Category, mj: f64) {
+        *self.energy_mj.entry(category).or_insert(0.0) += mj;
+    }
+
+    /// Advance wall-clock time by `seconds` (critical path only).
+    pub fn advance(&mut self, seconds: f64) {
+        self.elapsed_s += seconds;
+    }
+
+    pub fn energy_mj(&self, category: Category) -> f64 {
+        *self.energy_mj.get(&category).unwrap_or(&0.0)
+    }
+
+    pub fn total_mj(&self) -> f64 {
+        self.energy_mj.values().sum()
+    }
+
+    /// Merge another ledger (e.g. per-layer ledgers into a pipeline total).
+    pub fn merge(&mut self, other: &EnergyLedger) {
+        for (k, v) in &other.energy_mj {
+            *self.energy_mj.entry(*k).or_insert(0.0) += v;
+        }
+        self.elapsed_s += other.elapsed_s;
+    }
+
+    /// Scale all energies and time by a constant (used when a measured tile
+    /// is replicated `n` times across a layer, as the paper's own evaluation
+    /// does when composing kernels).
+    pub fn scaled(&self, factor: f64) -> EnergyLedger {
+        let mut out = self.clone();
+        for v in out.energy_mj.values_mut() {
+            *v *= factor;
+        }
+        out.elapsed_s *= factor;
+        out
+    }
+
+    /// Render the Fig. 10/11/12-style breakdown as table rows.
+    pub fn breakdown(&self) -> Vec<(Category, f64)> {
+        Category::all()
+            .iter()
+            .map(|&c| (c, self.energy_mj(c)))
+            .collect()
+    }
+
+    pub fn report(&self, label: &str) -> String {
+        let mut s = format!(
+            "{label:<28} time {:>9.4} s   energy {:>9.4} mJ  | ",
+            self.elapsed_s,
+            self.total_mj()
+        );
+        for (c, e) in self.breakdown() {
+            if e > 0.0 {
+                s.push_str(&format!("{}={:.3}mJ ", c.name(), e));
+            }
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::soc::opmodes::OperatingMode;
+
+    #[test]
+    fn charge_integrates_power_over_time() {
+        let mut l = EnergyLedger::new();
+        let op = OperatingPoint::nominal(OperatingMode::Sw);
+        // one core for one second
+        l.charge(Category::OtherSw, Component::Core, op, 1.0);
+        let expected = PowerModel::active_mw(Component::Core, op);
+        assert!((l.energy_mj(Category::OtherSw) - expected).abs() < 1e-12);
+    }
+
+    #[test]
+    fn merge_and_scale() {
+        let mut a = EnergyLedger::new();
+        a.charge_mj(Category::Conv, 2.0);
+        a.advance(0.5);
+        let mut b = EnergyLedger::new();
+        b.charge_mj(Category::Crypto, 1.0);
+        b.advance(0.25);
+        a.merge(&b);
+        assert!((a.total_mj() - 3.0).abs() < 1e-12);
+        assert!((a.elapsed_s - 0.75).abs() < 1e-12);
+        let s = a.scaled(4.0);
+        assert!((s.total_mj() - 12.0).abs() < 1e-12);
+        assert!((s.elapsed_s - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn breakdown_covers_all_categories() {
+        let l = EnergyLedger::new();
+        assert_eq!(l.breakdown().len(), 6);
+        assert_eq!(l.total_mj(), 0.0);
+    }
+}

@@ -1,0 +1,182 @@
+//! External memory device models (§IV, Fig. 9): two banks (16 MB) of
+//! Microchip SST26VF064 quad-SPI flash holding CNN weights, and 2 MB of
+//! Cypress CY15B104Q ferroelectric RAM (four banks, bit-interleaved to reach
+//! quad-SPI bandwidth) holding partial results.
+//!
+//! Both are *untrusted* in the paper's threat model: everything stored there
+//! is AES-128-XTS encrypted, the Fulmine cluster being "the only secure
+//! enclave in which decrypted data can reside" (§IV-A). The models provide
+//! functional storage plus transfer-time/energy accounting.
+
+use crate::crypto::modes::{self, XtsKey};
+use crate::energy::{Category, EnergyLedger};
+use crate::soc::power::{FLASH_ACTIVE_MW, FLASH_BW_BPS, FRAM_ACTIVE_MW, FRAM_BW_BPS};
+
+/// XTS sector size used for external-memory protection. The paper derives
+/// the sector number "from the address of the data"; 512 B sectors keep
+/// random access to tiles cheap.
+pub const SECTOR_BYTES: usize = 512;
+
+/// Flash capacity: 2 × 8 MB banks.
+pub const FLASH_BYTES: usize = 16 << 20;
+/// FRAM capacity: 4 × 512 kB banks.
+pub const FRAM_BYTES: usize = 2 << 20;
+
+/// Device kind, selecting bandwidth/power constants.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Device {
+    Flash,
+    Fram,
+}
+
+impl Device {
+    pub fn bandwidth_bps(self) -> f64 {
+        match self {
+            Device::Flash => FLASH_BW_BPS,
+            Device::Fram => FRAM_BW_BPS,
+        }
+    }
+
+    pub fn active_mw(self) -> f64 {
+        match self {
+            Device::Flash => FLASH_ACTIVE_MW,
+            Device::Fram => FRAM_ACTIVE_MW,
+        }
+    }
+
+    pub fn capacity(self) -> usize {
+        match self {
+            Device::Flash => FLASH_BYTES,
+            Device::Fram => FRAM_BYTES,
+        }
+    }
+}
+
+/// An external memory holding ciphertext, addressed by byte offset.
+/// Writes must be sector-aligned multiples (as XTS sectors are the
+/// en/decryption unit).
+pub struct ExtMem {
+    pub device: Device,
+    data: Vec<u8>,
+}
+
+impl ExtMem {
+    pub fn new(device: Device) -> Self {
+        ExtMem { device, data: vec![0xff; device.capacity()] }
+    }
+
+    /// Store `plaintext` XTS-encrypted at byte offset `off` (sector-aligned).
+    /// Charges transfer time/energy to `ledger` if provided.
+    pub fn store_encrypted(
+        &mut self,
+        key: &XtsKey,
+        off: usize,
+        plaintext: &[u8],
+        ledger: Option<&mut EnergyLedger>,
+    ) {
+        assert!(off % SECTOR_BYTES == 0, "unaligned external store");
+        assert!(off + plaintext.len() <= self.data.len(), "ext mem overflow");
+        let base_sector = (off / SECTOR_BYTES) as u128;
+        let ct = modes::xts_encrypt_region(key, base_sector, SECTOR_BYTES, plaintext);
+        self.data[off..off + ct.len()].copy_from_slice(&ct);
+        if let Some(l) = ledger {
+            self.charge_transfer(l, plaintext.len());
+        }
+    }
+
+    /// Load and XTS-decrypt `len` bytes from offset `off`.
+    pub fn load_decrypted(
+        &self,
+        key: &XtsKey,
+        off: usize,
+        len: usize,
+        ledger: Option<&mut EnergyLedger>,
+    ) -> Vec<u8> {
+        assert!(off % SECTOR_BYTES == 0, "unaligned external load");
+        let base_sector = (off / SECTOR_BYTES) as u128;
+        let pt = modes::xts_decrypt_region(key, base_sector, SECTOR_BYTES, &self.data[off..off + len]);
+        if let Some(l) = ledger {
+            self.charge_transfer(l, len);
+        }
+        pt
+    }
+
+    /// Raw ciphertext access (what an attacker probing the SPI bus sees).
+    pub fn raw(&self, off: usize, len: usize) -> &[u8] {
+        &self.data[off..off + len]
+    }
+
+    /// Tamper with stored ciphertext (fault-injection tests).
+    pub fn corrupt(&mut self, off: usize, xor: u8) {
+        self.data[off] ^= xor;
+    }
+
+    /// Transfer time in seconds for `bytes` over this device's interface.
+    pub fn transfer_s(&self, bytes: usize) -> f64 {
+        bytes as f64 / self.device.bandwidth_bps()
+    }
+
+    fn charge_transfer(&self, ledger: &mut EnergyLedger, bytes: usize) {
+        let t = self.transfer_s(bytes);
+        ledger.charge_mj(Category::ExtMem, self.device.active_mw() * t);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key() -> XtsKey {
+        XtsKey::new(&[0xaa; 16], &[0x55; 16])
+    }
+
+    #[test]
+    fn encrypted_roundtrip() {
+        let mut m = ExtMem::new(Device::Fram);
+        let data: Vec<u8> = (0..4096).map(|i| (i % 253) as u8).collect();
+        m.store_encrypted(&key(), 1024, &data, None);
+        let back = m.load_decrypted(&key(), 1024, data.len(), None);
+        assert_eq!(back, data);
+    }
+
+    #[test]
+    fn ciphertext_differs_from_plaintext() {
+        let mut m = ExtMem::new(Device::Flash);
+        let data = vec![0u8; SECTOR_BYTES];
+        m.store_encrypted(&key(), 0, &data, None);
+        assert_ne!(m.raw(0, SECTOR_BYTES), &data[..]);
+        // equal sectors at different offsets yield different ciphertext (XTS)
+        m.store_encrypted(&key(), SECTOR_BYTES, &data, None);
+        assert_ne!(m.raw(0, SECTOR_BYTES), m.raw(SECTOR_BYTES, SECTOR_BYTES));
+    }
+
+    #[test]
+    fn corruption_scrambles_decryption() {
+        let mut m = ExtMem::new(Device::Fram);
+        let data = vec![7u8; SECTOR_BYTES];
+        m.store_encrypted(&key(), 0, &data, None);
+        m.corrupt(100, 0x01);
+        let back = m.load_decrypted(&key(), 0, SECTOR_BYTES, None);
+        assert_ne!(back, data, "XTS must not silently absorb tampering");
+    }
+
+    #[test]
+    fn transfer_energy_charged() {
+        let mut m = ExtMem::new(Device::Flash);
+        let mut ledger = EnergyLedger::new();
+        let data = vec![1u8; 1 << 20];
+        m.store_encrypted(&key(), 0, &data, Some(&mut ledger));
+        // 1 MB at 40 MB/s = 26.2 ms at 54 mW ≈ 1.41 mJ
+        let e = ledger.energy_mj(Category::ExtMem);
+        assert!((e - 1.41).abs() < 0.1, "flash energy {e} mJ");
+    }
+
+    #[test]
+    fn wrong_key_fails_roundtrip() {
+        let mut m = ExtMem::new(Device::Fram);
+        let data = vec![42u8; SECTOR_BYTES];
+        m.store_encrypted(&key(), 0, &data, None);
+        let other = XtsKey::new(&[1; 16], &[2; 16]);
+        assert_ne!(m.load_decrypted(&other, 0, SECTOR_BYTES, None), data);
+    }
+}

@@ -1,0 +1,181 @@
+//! Fixed-point arithmetic exactly as implemented by the HWCE datapath and the
+//! OR10N fixed-point ISA extensions (§II of the paper).
+//!
+//! Pixels (feature-map activations) are Q-format 16-bit signed values with a
+//! run-time-configurable number of fractional bits `qf`. Weights are 16, 8 or
+//! 4-bit signed values sharing the same fractional interpretation. Products
+//! are accumulated in 32 bits; before write-back the accumulator is
+//! *normalized* (arithmetic shift right by `qf` with round-to-nearest) and
+//! *saturated* to the i16 range — mirroring the "fractional part
+//! normalization and saturation" stage of the HWCE second-stage reduction
+//! tree (Fig. 5) and the core's `addN/mulN/clip` extensions.
+//!
+//! All three convolution implementations in this repo (rust golden model,
+//! pure-jnp oracle, Pallas kernel) follow these exact semantics, so results
+//! are bit-exact across layers.
+
+/// A Q-format descriptor: 16-bit signed container with `frac` fractional bits.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QFormat {
+    /// Number of fractional bits (0..=15).
+    pub frac: u8,
+}
+
+impl QFormat {
+    pub const fn new(frac: u8) -> Self {
+        assert!(frac <= 15);
+        QFormat { frac }
+    }
+
+    /// Quantize an `f32` to this Q-format (round-to-nearest, saturating).
+    pub fn from_f32(self, v: f32) -> i16 {
+        let scaled = (v * (1i32 << self.frac) as f32).round();
+        sat16(scaled as i64)
+    }
+
+    /// Convert a fixed-point value back to `f32`.
+    pub fn to_f32(self, v: i16) -> f32 {
+        v as f32 / (1i32 << self.frac) as f32
+    }
+}
+
+/// Saturate a wide value to the i16 range (HWCE write-back saturation).
+#[inline]
+pub fn sat16(v: i64) -> i16 {
+    v.clamp(i16::MIN as i64, i16::MAX as i64) as i16
+}
+
+/// Saturate to the i8 range (8-bit weight quantization).
+#[inline]
+pub fn sat8(v: i64) -> i8 {
+    v.clamp(i8::MIN as i64, i8::MAX as i64) as i8
+}
+
+/// Saturate to the signed 4-bit range [-8, 7] (4-bit weight quantization).
+#[inline]
+pub fn sat4(v: i64) -> i8 {
+    v.clamp(-8, 7) as i8
+}
+
+/// Normalize a 32-bit accumulator by `frac` bits with round-to-nearest
+/// (adding half an LSB before the arithmetic shift), as the HWCE
+/// normalization stage and the OR10N `mulN.r` instruction do.
+#[inline]
+pub fn norm_round(acc: i64, frac: u8) -> i64 {
+    if frac == 0 {
+        acc
+    } else {
+        (acc + (1i64 << (frac - 1))) >> frac
+    }
+}
+
+/// Full HWCE write-back: normalize then saturate to 16 bits.
+#[inline]
+pub fn writeback(acc: i64, frac: u8) -> i16 {
+    sat16(norm_round(acc, frac))
+}
+
+/// Saturating fixed-point addition (OR10N `add` + `clip` fusion).
+#[inline]
+pub fn add_sat(a: i16, b: i16) -> i16 {
+    sat16(a as i64 + b as i64)
+}
+
+/// Fixed-point multiply with normalization and rounding
+/// (OR10N `mulN.r` single-cycle instruction).
+#[inline]
+pub fn mul_norm(a: i16, b: i16, frac: u8) -> i16 {
+    writeback(a as i64 * b as i64, frac)
+}
+
+/// Clip to a symmetric power-of-two range (OR10N `clip` instruction).
+#[inline]
+pub fn clip(v: i32, bits: u8) -> i32 {
+    debug_assert!(bits >= 1 && bits <= 31);
+    let hi = (1i32 << (bits - 1)) - 1;
+    let lo = -(1i32 << (bits - 1));
+    v.clamp(lo, hi)
+}
+
+/// Quantize an f32 slice into Q-format i16s.
+pub fn quantize_vec(q: QFormat, v: &[f32]) -> Vec<i16> {
+    v.iter().map(|&x| q.from_f32(x)).collect()
+}
+
+/// Dequantize an i16 slice.
+pub fn dequantize_vec(q: QFormat, v: &[i16]) -> Vec<f32> {
+    v.iter().map(|&x| q.to_f32(x)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qformat_roundtrip_exact_values() {
+        let q = QFormat::new(8);
+        for v in [-1.0f32, -0.5, 0.0, 0.25, 1.5, 100.0] {
+            let fx = q.from_f32(v);
+            assert_eq!(q.to_f32(fx), v, "value {v} should be exact in Q8.8");
+        }
+    }
+
+    #[test]
+    fn qformat_saturates() {
+        let q = QFormat::new(8);
+        assert_eq!(q.from_f32(1e9), i16::MAX);
+        assert_eq!(q.from_f32(-1e9), i16::MIN);
+    }
+
+    #[test]
+    fn norm_round_rounds_to_nearest() {
+        // 3/2 rounds to 2 (round-half-up on positives)
+        assert_eq!(norm_round(3, 1), 2);
+        assert_eq!(norm_round(2, 1), 1);
+        assert_eq!(norm_round(1, 1), 1);
+        assert_eq!(norm_round(-1, 1), 0); // (-1 + 1) >> 1
+        assert_eq!(norm_round(-3, 1), -1);
+        assert_eq!(norm_round(5, 0), 5);
+    }
+
+    #[test]
+    fn writeback_saturates_both_ends() {
+        assert_eq!(writeback(i64::from(i16::MAX) << 4, 0), i16::MAX);
+        assert_eq!(writeback((i64::from(i16::MAX) + 10) << 4, 4), i16::MAX);
+        assert_eq!(writeback((i64::from(i16::MIN) - 10) << 4, 4), i16::MIN);
+    }
+
+    #[test]
+    fn mul_norm_matches_float_within_lsb() {
+        let q = QFormat::new(10);
+        let a = q.from_f32(1.25);
+        let b = q.from_f32(-2.5);
+        let r = mul_norm(a, b, q.frac);
+        assert!((q.to_f32(r) - (-3.125)).abs() < 1.0 / 1024.0);
+    }
+
+    #[test]
+    fn clip_bounds() {
+        assert_eq!(clip(1000, 8), 127);
+        assert_eq!(clip(-1000, 8), -128);
+        assert_eq!(clip(5, 8), 5);
+        assert_eq!(clip(7, 4), 7);
+        assert_eq!(clip(8, 4), 7);
+        assert_eq!(clip(-9, 4), -8);
+    }
+
+    #[test]
+    fn sat4_range() {
+        assert_eq!(sat4(100), 7);
+        assert_eq!(sat4(-100), -8);
+        assert_eq!(sat4(-8), -8);
+        assert_eq!(sat4(7), 7);
+    }
+
+    #[test]
+    fn add_sat_saturates() {
+        assert_eq!(add_sat(i16::MAX, 1), i16::MAX);
+        assert_eq!(add_sat(i16::MIN, -1), i16::MIN);
+        assert_eq!(add_sat(100, 23), 123);
+    }
+}

@@ -1,0 +1,295 @@
+//! Bit-exact functional model of the HWCE datapath (§II-C, Fig. 5).
+//!
+//! Semantics contract (shared with the Pallas kernel and jnp oracle):
+//!
+//! * pixels `x` and partial sums `y_in` are i16 in Q-format with `qf`
+//!   fractional bits;
+//! * weights are i16 values constrained to the mode's range (full i16 for
+//!   16-bit; [-128,127] for 8-bit; [-8,7] for 4-bit);
+//! * one pass computes, for each of the `simd()` concurrent output maps `f`:
+//!   `y_out[f] = sat16( y_in[f] + round(Σ_window x·w[f] >> qf) )`
+//!   — the sum-of-products is exact in 32+ bits, normalization is
+//!   round-to-nearest (add half LSB, arithmetic shift), then the normalized
+//!   contribution accumulates onto the memory-resident partial sum with
+//!   i16 saturation (the "fractional part normalization and saturation"
+//!   stage of the second-level reduction tree).
+//!
+//! Multi-channel convolutional layers chain passes: the `y` array stays in
+//! TCDM and each input channel's pass accumulates onto it ("the accelerator
+//! needs no internal memory to perform the feature map accumulation ... but
+//! uses directly the shared memory of the cluster").
+
+use crate::fixedpoint::{norm_round, sat16};
+
+/// Weight precision modes (§II-C): scaling weights to 8/4 bits computes 2/4
+/// output feature maps per pass from interleaved weight-buffer entries.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum WeightPrec {
+    W16,
+    W8,
+    W4,
+}
+
+impl WeightPrec {
+    /// Concurrent output feature maps per pass.
+    pub fn simd(self) -> usize {
+        match self {
+            WeightPrec::W16 => 1,
+            WeightPrec::W8 => 2,
+            WeightPrec::W4 => 4,
+        }
+    }
+
+    /// Weight bits.
+    pub fn bits(self) -> u8 {
+        match self {
+            WeightPrec::W16 => 16,
+            WeightPrec::W8 => 8,
+            WeightPrec::W4 => 4,
+        }
+    }
+
+    /// Inclusive weight range for this mode.
+    pub fn range(self) -> (i16, i16) {
+        match self {
+            WeightPrec::W16 => (i16::MIN, i16::MAX),
+            WeightPrec::W8 => (-128, 127),
+            WeightPrec::W4 => (-8, 7),
+        }
+    }
+
+    /// Quantize an f32 weight into this mode's range at `qf` fractional bits.
+    pub fn quantize(self, v: f32, qf: u8) -> i16 {
+        let scaled = (v * (1i32 << qf) as f32).round() as i64;
+        let (lo, hi) = self.range();
+        scaled.clamp(lo as i64, hi as i64) as i16
+    }
+}
+
+/// One HWCE pass: convolve `x` (w×h) with `simd` filters (each k×k), and
+/// accumulate onto the corresponding `y` maps ((w-k+1)×(h-k+1), updated in
+/// place). Weight values must lie within the precision mode's range.
+pub fn conv_multi(
+    prec: WeightPrec,
+    k: usize,
+    w: usize,
+    h: usize,
+    qf: u8,
+    x: &[i16],
+    weights: &[&[i16]],
+    y: &mut [Vec<i16>],
+) {
+    assert!(k == 3 || k == 5, "HWCE supports 3x3 and 5x5 natively");
+    assert_eq!(x.len(), w * h);
+    assert_eq!(weights.len(), prec.simd());
+    assert_eq!(y.len(), prec.simd());
+    let (lo, hi) = prec.range();
+    for wf in weights {
+        assert_eq!(wf.len(), k * k);
+        assert!(
+            wf.iter().all(|&v| v >= lo && v <= hi),
+            "weight out of range for {prec:?}"
+        );
+    }
+    let (ow, oh) = (w - k + 1, h - k + 1);
+    for (f, wf) in weights.iter().enumerate() {
+        assert_eq!(y[f].len(), ow * oh);
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut acc: i64 = 0;
+                for ky in 0..k {
+                    for kx in 0..k {
+                        acc += x[(oy + ky) * w + ox + kx] as i64 * wf[ky * k + kx] as i64;
+                    }
+                }
+                let idx = oy * ow + ox;
+                let contrib = norm_round(acc, qf);
+                y[f][idx] = sat16(y[f][idx] as i64 + contrib);
+            }
+        }
+    }
+}
+
+/// Interleaved weight-buffer encoding (§II-C): in scaled-precision modes a
+/// 16-bit weight-buffer location holds 2×8-bit or 4×4-bit weights of the
+/// *same tap* across the concurrent filters. Returns the packed buffer
+/// (k×k u16 words); used to model the storage footprint and by tests of the
+/// encode/decode roundtrip.
+pub fn pack_interleaved(prec: WeightPrec, k: usize, weights: &[&[i16]]) -> Vec<u16> {
+    assert_eq!(weights.len(), prec.simd());
+    let mut out = vec![0u16; k * k];
+    for (tap, slot) in out.iter_mut().enumerate() {
+        match prec {
+            WeightPrec::W16 => *slot = weights[0][tap] as u16,
+            WeightPrec::W8 => {
+                let a = (weights[0][tap] as i8) as u8 as u16;
+                let b = (weights[1][tap] as i8) as u8 as u16;
+                *slot = a | (b << 8);
+            }
+            WeightPrec::W4 => {
+                let mut v = 0u16;
+                for (f, wf) in weights.iter().enumerate() {
+                    v |= ((wf[tap] as u16) & 0xf) << (4 * f);
+                }
+                *slot = v;
+            }
+        }
+    }
+    out
+}
+
+/// Decode an interleaved weight buffer back to per-filter taps.
+pub fn unpack_interleaved(prec: WeightPrec, k: usize, packed: &[u16]) -> Vec<Vec<i16>> {
+    assert_eq!(packed.len(), k * k);
+    let mut out = vec![vec![0i16; k * k]; prec.simd()];
+    for (tap, &v) in packed.iter().enumerate() {
+        match prec {
+            WeightPrec::W16 => out[0][tap] = v as i16,
+            WeightPrec::W8 => {
+                out[0][tap] = (v as u8) as i8 as i16;
+                out[1][tap] = ((v >> 8) as u8) as i8 as i16;
+            }
+            WeightPrec::W4 => {
+                for f in 0..4 {
+                    let nib = ((v >> (4 * f)) & 0xf) as i16;
+                    out[f][tap] = if nib >= 8 { nib - 16 } else { nib };
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Weight storage bytes for a layer of `n_if × n_of` k×k filters in this
+/// precision (drives the flash footprint of §IV-A: 8.9 MB at 16 bit for
+/// ResNet-20 shrinks proportionally at 8/4 bit).
+pub fn weight_bytes(prec: WeightPrec, k: usize, n_if: usize, n_of: usize) -> usize {
+    n_if * n_of * k * k * prec.bits() as usize / 8
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rnd(n: usize, seed: u64, range: i16) -> Vec<i16> {
+        let mut x = seed | 1;
+        (0..n)
+            .map(|_| {
+                x ^= x << 13;
+                x ^= x >> 7;
+                x ^= x << 17;
+                ((x % (2 * range as u64 + 1)) as i64 - range as i64) as i16
+            })
+            .collect()
+    }
+
+    #[test]
+    fn single_pass_matches_direct_computation() {
+        let (w, h, k, qf) = (8, 8, 3, 4);
+        let x = rnd(w * h, 11, 1000);
+        let wt = rnd(k * k, 22, 1000);
+        let mut y = vec![vec![0i16; (w - k + 1) * (h - k + 1)]];
+        conv_multi(WeightPrec::W16, k, w, h, qf, &x, &[&wt], &mut y);
+        // spot check one pixel
+        let mut acc = 0i64;
+        for ky in 0..k {
+            for kx in 0..k {
+                acc += x[(2 + ky) * w + 3 + kx] as i64 * wt[ky * k + kx] as i64;
+            }
+        }
+        assert_eq!(y[0][2 * (w - k + 1) + 3], sat16(norm_round(acc, qf)));
+    }
+
+    #[test]
+    fn accumulation_chains_passes() {
+        // two input channels accumulated = one pass on sum of contributions
+        let (w, h, k, qf) = (7, 7, 3, 0);
+        let x1 = rnd(w * h, 1, 100);
+        let x2 = rnd(w * h, 2, 100);
+        let wt = rnd(k * k, 3, 50);
+        let n_out = (w - k + 1) * (h - k + 1);
+
+        let mut y = vec![vec![0i16; n_out]];
+        conv_multi(WeightPrec::W16, k, w, h, qf, &x1, &[&wt], &mut y);
+        conv_multi(WeightPrec::W16, k, w, h, qf, &x2, &[&wt], &mut y);
+
+        let xsum: Vec<i16> = x1.iter().zip(&x2).map(|(a, b)| a + b).collect();
+        let mut y2 = vec![vec![0i16; n_out]];
+        conv_multi(WeightPrec::W16, k, w, h, qf, &xsum, &[&wt], &mut y2);
+        // with qf = 0 no rounding error: distributivity holds exactly
+        assert_eq!(y, y2);
+    }
+
+    #[test]
+    fn w4_mode_computes_four_maps() {
+        let (w, h, k, qf) = (9, 9, 5, 2);
+        let x = rnd(w * h, 5, 500);
+        let wts: Vec<Vec<i16>> = (0..4).map(|i| rnd(k * k, 100 + i, 7)).collect();
+        let refs: Vec<&[i16]> = wts.iter().map(|v| v.as_slice()).collect();
+        let n_out = (w - k + 1) * (h - k + 1);
+        let mut y = vec![vec![0i16; n_out]; 4];
+        conv_multi(WeightPrec::W4, k, w, h, qf, &x, &refs, &mut y);
+        // each map equals an independent W16 pass with the same weights
+        for f in 0..4 {
+            let mut yref = vec![vec![0i16; n_out]];
+            conv_multi(WeightPrec::W16, k, w, h, qf, &x, &[&wts[f]], &mut yref);
+            assert_eq!(y[f], yref[0], "map {f}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "weight out of range")]
+    fn w4_rejects_out_of_range_weights() {
+        let x = vec![0i16; 25];
+        let wt = vec![8i16; 9]; // 8 > max 7
+        let mut y = vec![vec![0i16; 9]; 4];
+        let w4 = vec![0i16; 9];
+        conv_multi(WeightPrec::W4, 3, 5, 5, 0, &x, &[&wt, &w4, &w4, &w4], &mut y);
+    }
+
+    #[test]
+    fn interleaved_pack_roundtrip() {
+        for prec in [WeightPrec::W16, WeightPrec::W8, WeightPrec::W4] {
+            let k = 5;
+            let (lo, hi) = prec.range();
+            let wts: Vec<Vec<i16>> = (0..prec.simd())
+                .map(|i| {
+                    rnd(k * k, 7 + i as u64, 1000)
+                        .into_iter()
+                        .map(|v| v.clamp(lo, hi))
+                        .collect()
+                })
+                .collect();
+            let refs: Vec<&[i16]> = wts.iter().map(|v| v.as_slice()).collect();
+            let packed = pack_interleaved(prec, k, &refs);
+            assert_eq!(unpack_interleaved(prec, k, &packed), wts, "{prec:?}");
+        }
+    }
+
+    #[test]
+    fn quantize_respects_ranges() {
+        assert_eq!(WeightPrec::W4.quantize(100.0, 0), 7);
+        assert_eq!(WeightPrec::W4.quantize(-100.0, 0), -8);
+        assert_eq!(WeightPrec::W8.quantize(0.5, 2), 2);
+        assert_eq!(WeightPrec::W16.quantize(1.0, 8), 256);
+    }
+
+    #[test]
+    fn weight_footprint_scales_with_precision() {
+        // ResNet-20-ish check: 4-bit weights are 4× smaller than 16-bit
+        let b16 = weight_bytes(WeightPrec::W16, 3, 64, 64);
+        let b4 = weight_bytes(WeightPrec::W4, 3, 64, 64);
+        assert_eq!(b16, 4 * b4);
+    }
+
+    #[test]
+    fn saturation_on_accumulate() {
+        let (w, h, k) = (5, 5, 3);
+        let x = vec![i16::MAX; w * h];
+        let wt = vec![7i16; k * k];
+        let n_out = (w - k + 1) * (h - k + 1);
+        let mut y = vec![vec![i16::MAX - 1; n_out]];
+        conv_multi(WeightPrec::W16, k, w, h, 0, &x, &[&wt], &mut y);
+        assert!(y[0].iter().all(|&v| v == i16::MAX));
+    }
+}

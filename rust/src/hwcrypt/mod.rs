@@ -1,0 +1,217 @@
+//! The Hardware Encryption Engine (HWCRYPT) device model (§II-B, Fig. 3).
+//!
+//! Functional behaviour comes from [`crate::crypto`]; this module adds the
+//! device-level cycle/throughput model, the four-deep command queue, and the
+//! event interface.
+//!
+//! ## Throughput derivation (§II-B/§III-B)
+//!
+//! * **AES-128**: two instances × two rounds per cycle with a shared
+//!   on-the-fly key schedule. A block takes 5 datapath cycles; with two
+//!   instances and the 2×32-bit TCDM ports feeding 8 bytes/cycle, the
+//!   engine sustains the measured **0.38 cycles/byte** (≈3100 cycles for
+//!   8 kB including configuration). XTS matches ECB because the ⊗2 tweak
+//!   chain is computed in parallel with encryption.
+//! * **KECCAK-f[400] sponge**: two permutation instances × three rounds per
+//!   cycle ⇒ ⌈20/3⌉ = 7 cycles per permutation call. At the maximum rate of
+//!   128 bits, one instance encrypts 16 bytes per call while the second
+//!   computes the MAC in parallel ⇒ ≈0.44 cpb datapath, **0.51 cpb**
+//!   measured with state (re)initialization and port sharing.
+//! * Round/rate reconfiguration scales cost linearly: `rounds/3` datapath
+//!   cycles per call over `rate/8` bytes.
+
+use crate::cluster::event_unit::{Event, EventUnit};
+use crate::crypto::sponge::SpongeConfig;
+
+/// Measured engine throughputs, cycles per byte (§III-B).
+pub const AES_ECB_CPB: f64 = 0.38;
+pub const AES_XTS_CPB: f64 = 0.38;
+pub const SPONGE_AE_CPB: f64 = 0.51;
+
+/// Configuration cycles per job (register writes through the peripheral
+/// interconnect; part of the ~3100-cycle 8 kB ECB figure).
+pub const JOB_CONFIG_CYCLES: u64 = 24;
+
+/// Command-queue depth ("a command queue that supports up to four pending
+/// operations").
+pub const QUEUE_DEPTH: usize = 4;
+
+/// Cipher selection for a job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CipherOp {
+    AesEcb,
+    AesXts,
+    /// Sponge authenticated encryption at the given configuration.
+    SpongeAe(SpongeConfig),
+    /// Sponge keystream-only encryption.
+    SpongeEnc(SpongeConfig),
+    /// Raw permutation calls (software acceleration of KECCAK-based
+    /// algorithms), `n` invocations.
+    RawPermute(usize),
+}
+
+impl CipherOp {
+    /// Engine cycles to process `bytes` (excluding configuration).
+    pub fn cycles(&self, bytes: usize) -> u64 {
+        match self {
+            CipherOp::AesEcb => (AES_ECB_CPB * bytes as f64).ceil() as u64,
+            CipherOp::AesXts => (AES_XTS_CPB * bytes as f64).ceil() as u64,
+            CipherOp::SpongeAe(cfg) => Self::sponge_cycles(*cfg, bytes, true),
+            CipherOp::SpongeEnc(cfg) => Self::sponge_cycles(*cfg, bytes, false),
+            CipherOp::RawPermute(n) => (*n as u64) * 7,
+        }
+    }
+
+    /// Structural sponge cost: ⌈rounds/3⌉ cycles per permutation call plus
+    /// rate-sized I/O on the shared ports; the dual instance hides the MAC
+    /// permutation entirely. Calibrated so the max-rate 20-round AE
+    /// configuration hits the measured 0.51 cpb.
+    fn sponge_cycles(cfg: SpongeConfig, bytes: usize, _auth: bool) -> u64 {
+        let calls = bytes.div_ceil(cfg.rate_bytes()) as u64 + 1; // +1 init permute
+        let perm = (cfg.rounds as u64).div_ceil(3);
+        // I/O: rate bytes over 8 B/cycle, overlapped with the permutation.
+        let io = (cfg.rate_bytes() as u64).div_ceil(8);
+        calls * perm.max(io) + (0.06 * bytes as f64) as u64 // port-sharing overhead
+    }
+
+    /// Whether this op needs the full CRY-CNN-SW mode (AES datapath).
+    pub fn needs_aes_mode(&self) -> bool {
+        matches!(self, CipherOp::AesEcb | CipherOp::AesXts)
+    }
+}
+
+/// The HWCRYPT device: busy-tracking with a four-deep command queue.
+#[derive(Debug, Default)]
+pub struct Hwcrypt {
+    busy_until: u64,
+    queue: Vec<u64>, // completion times of queued ops
+    pub active_cycles: u64,
+    pub bytes_processed: u64,
+    pub jobs_done: u64,
+}
+
+impl Hwcrypt {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Enqueue an operation over `bytes` at time `now`; returns completion
+    /// cycle. If the queue is full, the issuing core blocks until a slot
+    /// frees (reflected in the returned completion time).
+    pub fn offload(
+        &mut self,
+        now: u64,
+        op: CipherOp,
+        bytes: usize,
+        eu: Option<&mut EventUnit>,
+    ) -> u64 {
+        self.queue.retain(|&d| d > now);
+        let queue_ready = if self.queue.len() >= QUEUE_DEPTH {
+            let mut v = self.queue.clone();
+            v.sort_unstable();
+            v[self.queue.len() - QUEUE_DEPTH]
+        } else {
+            now
+        };
+        let cycles = op.cycles(bytes);
+        let start = self.busy_until.max(queue_ready).max(now);
+        let done = start + JOB_CONFIG_CYCLES + cycles;
+        self.busy_until = done;
+        self.queue.push(done);
+        self.active_cycles += cycles;
+        self.bytes_processed += bytes as u64;
+        self.jobs_done += 1;
+        if let Some(eu) = eu {
+            eu.post(Event::HwcryptDone);
+        }
+        done
+    }
+
+    pub fn idle_at(&self) -> u64 {
+        self.busy_until
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// §III-B: "To encrypt one 8 kB block of data using the AES-128-ECB
+    /// mode, HWCRYPT requires ∼3100 clock cycles including the initial
+    /// configuration".
+    #[test]
+    fn ecb_8kb_about_3100_cycles() {
+        let mut hw = Hwcrypt::new();
+        let done = hw.offload(0, CipherOp::AesEcb, 8192, None);
+        assert!((done as f64 - 3100.0).abs() < 120.0, "8 kB ECB = {done} cycles");
+    }
+
+    /// §III-B: XTS performance equals ECB (parallel tweak computation).
+    #[test]
+    fn xts_matches_ecb() {
+        assert_eq!(
+            CipherOp::AesXts.cycles(4096),
+            CipherOp::AesEcb.cycles(4096)
+        );
+    }
+
+    /// §III-B: sponge AE at max rate = 0.51 cpb.
+    #[test]
+    fn sponge_ae_max_rate_cpb() {
+        let bytes = 65536;
+        let c = CipherOp::SpongeAe(SpongeConfig::MAX_RATE).cycles(bytes);
+        let cpb = c as f64 / bytes as f64;
+        assert!((cpb - 0.51).abs() < 0.03, "sponge cpb {cpb}");
+    }
+
+    /// Reducing the rate decreases throughput (increases cpb).
+    #[test]
+    fn lower_rate_costs_more() {
+        let full = CipherOp::SpongeAe(SpongeConfig { rate_bits: 128, rounds: 20 }).cycles(4096);
+        let half = CipherOp::SpongeAe(SpongeConfig { rate_bits: 64, rounds: 20 }).cycles(4096);
+        assert!(half > full);
+    }
+
+    /// More rounds per call cost proportionally (multiples of 3).
+    #[test]
+    fn more_rounds_cost_more() {
+        let r20 = CipherOp::SpongeAe(SpongeConfig { rate_bits: 128, rounds: 20 }).cycles(4096);
+        let r6 = CipherOp::SpongeAe(SpongeConfig { rate_bits: 128, rounds: 6 }).cycles(4096);
+        assert!(r6 < r20);
+    }
+
+    #[test]
+    fn queue_serializes_and_blocks_at_depth() {
+        let mut hw = Hwcrypt::new();
+        let mut last = 0;
+        for _ in 0..6 {
+            last = hw.offload(0, CipherOp::AesEcb, 1024, None);
+        }
+        // six jobs of ~390+24 cycles must serialize
+        assert!(last >= 6 * (CipherOp::AesEcb.cycles(1024) + JOB_CONFIG_CYCLES) - 1);
+        assert_eq!(hw.jobs_done, 6);
+    }
+
+    #[test]
+    fn event_posted_on_offload() {
+        let mut hw = Hwcrypt::new();
+        let mut eu = EventUnit::new();
+        hw.offload(0, CipherOp::AesXts, 512, Some(&mut eu));
+        assert!(eu.take(Event::HwcryptDone));
+    }
+
+    /// Speedup ladder of §III-B: HW vs SW 1-core / 4-core.
+    #[test]
+    fn speedups_vs_software_match_paper() {
+        use crate::kernels_sw::crypto_cost::*;
+        let hw_cpb = AES_ECB_CPB;
+        let s1 = SW_AES_ECB_CPB_1CORE / hw_cpb;
+        let s4 = SW_AES_ECB_CPB_4CORE / hw_cpb;
+        assert!((s1 - 450.0).abs() < 1.0);
+        assert!((s4 - 120.0).abs() < 1.0);
+        let x1 = SW_AES_XTS_CPB_1CORE / AES_XTS_CPB;
+        let x4 = sw_xts_cpb(4) / AES_XTS_CPB;
+        assert!((x1 - 495.0).abs() < 1.0);
+        assert!((x4 - 287.0).abs() < 1.0);
+    }
+}

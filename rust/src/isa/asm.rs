@@ -1,0 +1,223 @@
+//! Instruction set and assembler DSL for the OR10N-like micro-ISA.
+
+/// A register index r0..r31. r0 is a normal register (no hardwired zero —
+/// OpenRISC convention differs from RISC-V; kernels simply avoid assuming 0).
+pub type Reg = u8;
+
+/// Branch conditions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Cond {
+    Eq,
+    Ne,
+    Lt,
+    Ge,
+}
+
+/// The instruction set. Arithmetic is 32-bit two's complement, wrapping
+/// (as the hardware ALU); explicit saturation goes through `Clip`/`AddNr`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Op {
+    // --- ALU ---
+    /// rd = ra + rb
+    Add(Reg, Reg, Reg),
+    /// rd = ra - rb
+    Sub(Reg, Reg, Reg),
+    /// rd = ra * rb (low 32 bits)
+    Mul(Reg, Reg, Reg),
+    /// rd += ra * rb (multiply-accumulate, single cycle)
+    Mac(Reg, Reg, Reg),
+    And(Reg, Reg, Reg),
+    Or(Reg, Reg, Reg),
+    Xor(Reg, Reg, Reg),
+    /// rd = ra << (rb & 31)
+    Sll(Reg, Reg, Reg),
+    /// rd = (ra as u32) >> (rb & 31)
+    Srl(Reg, Reg, Reg),
+    /// rd = ra >> (rb & 31) arithmetic
+    Sra(Reg, Reg, Reg),
+    /// rd = ra + imm
+    Addi(Reg, Reg, i32),
+    /// rd = imm
+    Li(Reg, i32),
+    /// rd = ra (register move)
+    Mv(Reg, Reg),
+
+    // --- DSP extensions (§II: SIMD over 32-bit registers) ---
+    /// rd += dot(ra, rb) over 2 × 16-bit signed lanes (pv.sdotsp.h)
+    SdotpH(Reg, Reg, Reg),
+    /// rd += dot(ra, rb) over 4 × 8-bit signed lanes (pv.sdotsp.b)
+    SdotpB(Reg, Reg, Reg),
+    /// rd = (ra + 2^(n-1)) >> n — rounded normalization (p.addN-style)
+    AddNr(Reg, Reg, u8),
+    /// rd = clip(ra) to signed `bits` range (p.clip)
+    Clip(Reg, Reg, u8),
+    /// rd = max(ra, 0) — single-cycle ReLU via p.max with zero operand
+    Relu(Reg, Reg),
+    /// rd = max(ra, rb) (p.max)
+    Max(Reg, Reg, Reg),
+    /// rd = [ra.lane1, rb.lane0] — 16-bit lane pack (pv.pack.h), used to
+    /// realign SIMD windows when convolving at odd offsets
+    PackH(Reg, Reg, Reg),
+
+    // --- memory (TCDM), with embedded pointer arithmetic ---
+    /// rd = mem32[ra + off]; then ra += post (post-increment addressing)
+    Lw { rd: Reg, ra: Reg, off: i32, post: i32 },
+    /// mem32[ra + off] = rs; then ra += post
+    Sw { rs: Reg, ra: Reg, off: i32, post: i32 },
+    /// rd = sign-extended mem16[ra + off]; then ra += post
+    Lh { rd: Reg, ra: Reg, off: i32, post: i32 },
+    /// mem16[ra + off] = rs; then ra += post
+    Sh { rs: Reg, ra: Reg, off: i32, post: i32 },
+    /// rd = sign-extended mem8[ra + off]; then ra += post
+    Lb { rd: Reg, ra: Reg, off: i32, post: i32 },
+    /// mem8[ra + off] = rs; then ra += post
+    Sb { rs: Reg, ra: Reg, off: i32, post: i32 },
+
+    // --- control ---
+    /// branch to absolute instruction index if cond(ra, rb)
+    Branch(Cond, Reg, Reg, usize),
+    /// unconditional jump to absolute instruction index
+    Jump(usize),
+    /// Zero-overhead hardware loop: repeat the next `body` instructions
+    /// `count` times (lp.setup). Nesting up to 2 levels as in the hardware.
+    HwLoop { count: Reg, body: usize },
+    /// Hardware loop with immediate trip count.
+    HwLoopI { count: u32, body: usize },
+    /// Stop this core.
+    Halt,
+    Nop,
+}
+
+/// Two-pass assembler with string labels for branch targets.
+pub struct Asm {
+    ops: Vec<Op>,
+    labels: std::collections::HashMap<String, usize>,
+    fixups: Vec<(usize, String)>,
+    /// Open hardware-loop bodies: (index of HwLoop op awaiting body length).
+    open_loops: Vec<usize>,
+}
+
+impl Default for Asm {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Asm {
+    pub fn new() -> Self {
+        Asm {
+            ops: Vec::new(),
+            labels: Default::default(),
+            fixups: Vec::new(),
+            open_loops: Vec::new(),
+        }
+    }
+
+    pub fn op(&mut self, op: Op) -> &mut Self {
+        self.ops.push(op);
+        self
+    }
+
+    pub fn label(&mut self, name: &str) -> &mut Self {
+        self.labels.insert(name.to_string(), self.ops.len());
+        self
+    }
+
+    pub fn branch(&mut self, cond: Cond, ra: Reg, rb: Reg, label: &str) -> &mut Self {
+        self.fixups.push((self.ops.len(), label.to_string()));
+        self.ops.push(Op::Branch(cond, ra, rb, usize::MAX));
+        self
+    }
+
+    pub fn jump(&mut self, label: &str) -> &mut Self {
+        self.fixups.push((self.ops.len(), label.to_string()));
+        self.ops.push(Op::Jump(usize::MAX));
+        self
+    }
+
+    /// Open a hardware loop with immediate trip count; close with
+    /// [`Asm::end_loop`]. The body length is patched automatically.
+    pub fn hw_loop_i(&mut self, count: u32) -> &mut Self {
+        self.open_loops.push(self.ops.len());
+        self.ops.push(Op::HwLoopI { count, body: 0 });
+        self
+    }
+
+    /// Open a register-count hardware loop.
+    pub fn hw_loop(&mut self, count: Reg) -> &mut Self {
+        self.open_loops.push(self.ops.len());
+        self.ops.push(Op::HwLoop { count, body: 0 });
+        self
+    }
+
+    pub fn end_loop(&mut self) -> &mut Self {
+        let start = self.open_loops.pop().expect("end_loop without open loop");
+        let body = self.ops.len() - start - 1;
+        assert!(body > 0, "empty hardware loop");
+        match &mut self.ops[start] {
+            Op::HwLoop { body: b, .. } | Op::HwLoopI { body: b, .. } => *b = body,
+            _ => unreachable!(),
+        }
+        self
+    }
+
+    pub fn finish(mut self) -> Vec<Op> {
+        assert!(self.open_loops.is_empty(), "unclosed hardware loop");
+        for (idx, label) in self.fixups {
+            let target = *self
+                .labels
+                .get(&label)
+                .unwrap_or_else(|| panic!("undefined label {label}"));
+            match &mut self.ops[idx] {
+                Op::Branch(_, _, _, t) | Op::Jump(t) => *t = target,
+                _ => unreachable!(),
+            }
+        }
+        self.ops
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn labels_resolve() {
+        let mut a = Asm::new();
+        a.label("top");
+        a.op(Op::Addi(1, 1, -1));
+        a.branch(Cond::Ne, 1, 0, "top");
+        a.op(Op::Halt);
+        let prog = a.finish();
+        assert_eq!(prog[1], Op::Branch(Cond::Ne, 1, 0, 0));
+    }
+
+    #[test]
+    fn hw_loop_body_patched() {
+        let mut a = Asm::new();
+        a.hw_loop_i(10);
+        a.op(Op::Nop);
+        a.op(Op::Nop);
+        a.end_loop();
+        a.op(Op::Halt);
+        let prog = a.finish();
+        assert_eq!(prog[0], Op::HwLoopI { count: 10, body: 2 });
+    }
+
+    #[test]
+    #[should_panic]
+    fn undefined_label_panics() {
+        let mut a = Asm::new();
+        a.jump("nowhere");
+        a.finish();
+    }
+
+    #[test]
+    #[should_panic]
+    fn unclosed_loop_panics() {
+        let mut a = Asm::new();
+        a.hw_loop_i(3);
+        a.op(Op::Nop);
+        a.finish();
+    }
+}

@@ -1,0 +1,22 @@
+//! A micro-ISA virtual machine standing in for the OR10N cores (§II).
+//!
+//! The paper's software baselines run on in-order, single-issue, 4-stage
+//! OpenRISC cores extended with (a) zero-overhead hardware loops, (b) load
+//! and store with embedded pointer arithmetic (post-increment), (c) 8/16-bit
+//! SIMD instructions over the 32-bit registers including a single-cycle
+//! dot-product (`pv.sdotsp.h/.b`), and (d) single-cycle fixed-point ops
+//! (rounded normalization, clipping) [15].
+//!
+//! This VM executes real kernels written against that ISA and *counts
+//! cycles structurally*: 1 cycle per issued instruction, +1 bubble on taken
+//! branches (4-stage pipeline), zero overhead for hardware loops, and memory
+//! stalls from per-cycle TCDM bank arbitration shared with the accelerator
+//! and DMA masters ([`crate::cluster::tcdm`]). The paper's §III-C software
+//! numbers (94 / 24 / 13 cycles/px) are *reproduced by execution*, not
+//! asserted — see [`crate::kernels_sw`].
+
+pub mod asm;
+pub mod vm;
+
+pub use asm::{Asm, Cond, Op, Reg};
+pub use vm::{Machine, RunResult};

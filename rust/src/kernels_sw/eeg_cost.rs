@@ -1,0 +1,103 @@
+//! Cycle model for the EEG seizure-detection pipeline of §IV-C
+//! ([30], [34]): PCA over a 23-channel × 256-sample window → 9 principal
+//! components → digital wavelet transform → energy coefficients → SVM
+//! classification.
+//!
+//! The functional computation is implemented in [`crate::apps::eeg`] (rust,
+//! fixed point); this module provides the *cycle* model from operation
+//! counts at the measured per-op throughput of the VM kernels, with the
+//! parallel-fraction structure the paper reports: "several components of
+//! PCA, like diagonalization, are not amenable to parallelization.
+//! Nonetheless, we observe a 2.6× speedup with four cores excluding AES".
+
+/// EEG window parameters (§IV-C).
+pub const N_CHANNELS: usize = 23;
+pub const N_SAMPLES: usize = 256;
+pub const N_COMPONENTS: usize = 9;
+/// DWT decomposition levels used for the energy coefficients.
+pub const DWT_LEVELS: usize = 4;
+
+/// Operation counts (MAC-dominated, counted as OpenRISC-equivalent ops).
+pub struct EegOpCounts {
+    /// Covariance matrix accumulation: ch² × samples MACs (symmetric half).
+    pub covariance: u64,
+    /// Jacobi eigendecomposition of the 23×23 covariance (serial).
+    pub diagonalization: u64,
+    /// Projection of samples onto 9 components: ch × comp × samples.
+    pub projection: u64,
+    /// DWT: 4-tap filters over 9 components × samples, all levels ≈ 2n.
+    pub dwt: u64,
+    /// Energy coefficients + SVM dot products.
+    pub svm: u64,
+}
+
+impl EegOpCounts {
+    pub fn standard() -> Self {
+        let ch = N_CHANNELS as u64;
+        let n = N_SAMPLES as u64;
+        let comp = N_COMPONENTS as u64;
+        EegOpCounts {
+            covariance: ch * (ch + 1) / 2 * n,
+            // Jacobi sweeps: ~6 sweeps × 4·ch³/... use 8·ch³ rotations cost
+            diagonalization: 8 * ch * ch * ch,
+            projection: ch * comp * n,
+            dwt: 2 * comp * n * 4 * 2, // 4-tap lo+hi filters, geometric levels ≈ 2n
+            svm: comp * (DWT_LEVELS as u64 + 1) * 64, // features × support-vector dim
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.covariance + self.diagonalization + self.projection + self.dwt + self.svm
+    }
+
+    /// Serial ops: the Jacobi rotation search + angle computation (~1/4 of
+    /// the diagonalization work; the row/column updates parallelize) and the
+    /// final SVM reduction.
+    pub fn serial(&self) -> u64 {
+        self.diagonalization / 4 + self.svm
+    }
+}
+
+/// Cycles per MAC-equivalent op in optimized software (SIMD dot products
+/// where the data layout allows, scalar in the Jacobi rotations) — measured
+/// from the VM dense/conv kernels: between [`crate::kernels_sw::dsp::DENSE_CYC_PER_MAC`]
+/// and scalar ~3 cycles/op.
+pub const CYC_PER_OP_PARALLEL: f64 = 1.8;
+pub const CYC_PER_OP_SERIAL: f64 = 3.0;
+
+/// Cycles for the seizure-detection pipeline (excluding encryption) on
+/// `n_cores` cores.
+pub fn eeg_pipeline_cycles(n_cores: usize) -> u64 {
+    let ops = EegOpCounts::standard();
+    let parallel = (ops.total() - ops.serial()) as f64 * CYC_PER_OP_PARALLEL;
+    let serial = ops.serial() as f64 * CYC_PER_OP_SERIAL;
+    (serial + parallel / n_cores as f64).ceil() as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn four_core_speedup_matches_paper_band() {
+        // §IV-C: "a 2.6× speedup with four cores excluding AES"
+        let s = eeg_pipeline_cycles(1) as f64 / eeg_pipeline_cycles(4) as f64;
+        assert!(s > 2.2 && s < 3.0, "EEG 4-core speedup {s}");
+    }
+
+    #[test]
+    fn op_counts_sane() {
+        let ops = EegOpCounts::standard();
+        // total workload must be well under a second at 85 MHz (0.5 s budget)
+        let t = eeg_pipeline_cycles(4) as f64 / 85e6;
+        assert!(t < 0.1, "pipeline time {t} s");
+        assert!(ops.total() > 100_000);
+    }
+
+    #[test]
+    fn serial_fraction_dominated_by_diagonalization() {
+        let ops = EegOpCounts::standard();
+        assert!(ops.diagonalization > ops.svm);
+        assert!(ops.serial() < ops.total() / 2);
+    }
+}

@@ -1,0 +1,21 @@
+//! Software kernels for the OR10N-like cores (§III-B/§III-C baselines).
+//!
+//! * [`conv`] — 5×5 and 3×3 convolutions, naive scalar and SIMD-optimized,
+//!   single- and multi-core, *executed on the VM* so cycle counts (the
+//!   94 / 24 / 13 cycles-per-pixel ladder of §III-C) come out of the
+//!   simulation rather than being asserted.
+//! * [`dsp`] — ReLU, 2×2 max pooling and dense (fully-connected) kernels
+//!   used by the CNN pipelines for the parts the paper runs in software.
+//! * [`crypto_cost`] — analytic cycle model for *software* AES-128-ECB/XTS
+//!   and KECCAK-f[400], derived from the paper's published speedup ratios
+//!   and cross-checked against the FELICS/SharkSSL Cortex-M3 figures it
+//!   cites; the functional result always comes from [`crate::crypto`].
+//! * [`eeg_cost`] — operation-count-based cycle model for the seizure
+//!   detection pipeline (PCA, DWT, energy coefficients, SVM) of §IV-C,
+//!   with the paper's parallel-fraction structure (PCA diagonalization is
+//!   serial, the rest parallelizes).
+
+pub mod conv;
+pub mod crypto_cost;
+pub mod dsp;
+pub mod eeg_cost;

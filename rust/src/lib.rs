@@ -1,0 +1,40 @@
+//! # fulmine — a full-system software reproduction of the Fulmine SoC
+//!
+//! This crate reproduces *“An IoT Endpoint System-on-Chip for Secure and
+//! Energy-Efficient Near-Sensor Analytics”* (Conti et al., IEEE TCSI 2017) as a
+//! three-layer rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the coordinator and every hardware substrate the
+//!   paper depends on, rebuilt in software: a cycle-approximate cluster
+//!   simulator (TCDM banking, logarithmic interconnect, DMA, event unit), the
+//!   HWCRYPT crypto engine (functional AES-128-ECB/XTS + KECCAK-f[400] sponge
+//!   plus a datapath-derived cycle model), the HWCE convolution engine (golden
+//!   fixed-point model + cycle model), a micro-ISA VM standing in for the
+//!   OR10N cores, external flash/FRAM device models, and the SoC power
+//!   manager with the paper's operating modes.
+//! * **L2 (python/compile/model.py, build time only)** — quantized CNN graphs
+//!   (ResNet-20, the 12-net/24-net face cascade) built on the L1 kernel and
+//!   AOT-lowered to HLO text artifacts.
+//! * **L1 (python/compile/kernels/hwce.py, build time only)** — a Pallas
+//!   kernel mirroring the HWCE multi-precision fixed-point datapath.
+//!
+//! At runtime the rust binary loads `artifacts/*.hlo.txt` through the PJRT C
+//! API ([`runtime`]) and drives the simulated SoC through [`coordinator`];
+//! python never executes on the request path.
+
+pub mod apps;
+#[doc(hidden)]
+pub mod bench_support;
+pub mod cluster;
+pub mod coordinator;
+pub mod crypto;
+pub mod energy;
+pub mod extmem;
+pub mod fixedpoint;
+pub mod hwce;
+pub mod hwcrypt;
+pub mod isa;
+pub mod kernels_sw;
+pub mod report;
+pub mod runtime;
+pub mod soc;

@@ -1,0 +1,260 @@
+//! PJRT runtime: loads the AOT artifacts produced by `python/compile/aot.py`
+//! (HLO *text* — see aot_recipe and /opt/xla-example) and executes them on
+//! the CPU PJRT client from the L3 hot path. Python never runs here.
+//!
+//! The [`Runtime`] keeps a lazy compile cache: each artifact is compiled at
+//! most once per process and re-executed for every tile/inference. All
+//! tensors are int16 fixed point (the HWCE data format).
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Metadata for one AOT artifact, parsed from `artifacts/manifest.txt`
+/// (line format: `name|file|kind|k|simd|qf|shape;shape;...`).
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub kind: String,
+    pub k: usize,
+    pub simd: usize,
+    pub qf: u8,
+    /// Input tensor shapes, in call order.
+    pub input_shapes: Vec<Vec<usize>>,
+}
+
+impl ArtifactMeta {
+    fn parse(line: &str) -> Result<Self> {
+        let parts: Vec<&str> = line.trim().split('|').collect();
+        if parts.len() != 7 {
+            bail!("malformed manifest line: {line}");
+        }
+        let input_shapes = parts[6]
+            .split(';')
+            .map(|s| {
+                if s == "scalar" {
+                    Ok(vec![])
+                } else {
+                    s.split('x').map(|d| d.parse::<usize>().map_err(|e| anyhow!("{e}"))).collect()
+                }
+            })
+            .collect::<Result<Vec<Vec<usize>>>>()?;
+        Ok(ArtifactMeta {
+            name: parts[0].to_string(),
+            file: parts[1].to_string(),
+            kind: parts[2].to_string(),
+            k: parts[3].parse()?,
+            simd: parts[4].parse()?,
+            qf: parts[5].parse()?,
+            input_shapes,
+        })
+    }
+}
+
+/// An int16 host tensor (shape + row-major data), the interchange type
+/// between the simulator/coordinator and the PJRT executables.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorI16 {
+    pub shape: Vec<usize>,
+    pub data: Vec<i16>,
+}
+
+impl TensorI16 {
+    pub fn new(shape: Vec<usize>, data: Vec<i16>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        TensorI16 { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        TensorI16 { shape, data: vec![0; n] }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Byte size (2 bytes/element) — what the DMA/crypto actually move.
+    pub fn bytes(&self) -> usize {
+        self.data.len() * 2
+    }
+
+    /// Serialize to little-endian bytes (for encryption / external storage).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        self.data.iter().flat_map(|v| v.to_le_bytes()).collect()
+    }
+
+    /// Deserialize from little-endian bytes.
+    pub fn from_bytes(shape: Vec<usize>, bytes: &[u8]) -> Self {
+        assert_eq!(bytes.len() % 2, 0);
+        let data: Vec<i16> = bytes
+            .chunks_exact(2)
+            .map(|c| i16::from_le_bytes([c[0], c[1]]))
+            .collect();
+        TensorI16::new(shape, data)
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let bytes = self.to_bytes();
+        xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::S16,
+            &self.shape,
+            &bytes,
+        )
+        .map_err(|e| anyhow!("literal creation failed: {e:?}"))
+    }
+}
+
+/// The PJRT runtime with its artifact registry and compile cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: HashMap<String, ArtifactMeta>,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+    /// Executions performed (stats).
+    pub executions: u64,
+}
+
+impl Runtime {
+    /// Open the artifact directory (usually `artifacts/`) and parse the
+    /// manifest. Artifacts are compiled lazily on first use.
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.txt")).with_context(|| {
+            format!("reading {}/manifest.txt — run `make artifacts`", dir.display())
+        })?;
+        let mut manifest = HashMap::new();
+        for line in text.lines().filter(|l| !l.trim().is_empty()) {
+            let meta = ArtifactMeta::parse(line)?;
+            manifest.insert(meta.name.clone(), meta);
+        }
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e:?}"))?;
+        Ok(Runtime { client, dir, manifest, cache: HashMap::new(), executions: 0 })
+    }
+
+    pub fn meta(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.manifest.get(name)
+    }
+
+    pub fn artifact_names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.manifest.keys().map(|s| s.as_str()).collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Compile (or fetch from cache) an artifact.
+    pub fn compile(&mut self, name: &str) -> Result<()> {
+        if self.cache.contains_key(name) {
+            return Ok(());
+        }
+        let meta = self
+            .manifest
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name}"))?;
+        let path = self.dir.join(&meta.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        self.cache.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute an artifact with int16 inputs; returns the int16 outputs
+    /// (the lowered computations return a tuple — usually of one tensor).
+    pub fn execute(&mut self, name: &str, inputs: &[TensorI16]) -> Result<Vec<TensorI16>> {
+        self.compile(name)?;
+        let meta = &self.manifest[name];
+        if inputs.len() != meta.input_shapes.len() {
+            bail!(
+                "{name}: expected {} inputs, got {}",
+                meta.input_shapes.len(),
+                inputs.len()
+            );
+        }
+        for (i, (t, s)) in inputs.iter().zip(&meta.input_shapes).enumerate() {
+            if &t.shape != s {
+                bail!("{name}: input {i} shape {:?} != manifest {:?}", t.shape, s);
+            }
+        }
+        let literals = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<Vec<_>>>()?;
+        let exe = &self.cache[name];
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        self.executions += 1;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        let parts = tuple.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        parts
+            .into_iter()
+            .map(|lit| {
+                let shape = lit.array_shape().map_err(|e| anyhow!("shape: {e:?}"))?;
+                let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+                let data = lit.to_vec::<i16>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+                Ok(TensorI16::new(dims, data))
+            })
+            .collect()
+    }
+}
+
+/// Locate the artifact directory relative to the crate root (tests,
+/// examples and the CLI all use this).
+pub fn default_artifact_dir() -> PathBuf {
+    let mut p = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    p.push("artifacts");
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn manifest_line_parses() {
+        let m = ArtifactMeta::parse(
+            "hwce_conv3_w16|hwce_conv3_w16.hlo.txt|hwce_raw|3|1|8|1x4x18x18;8x4x3x3;1x8x16x16",
+        )
+        .unwrap();
+        assert_eq!(m.name, "hwce_conv3_w16");
+        assert_eq!(m.k, 3);
+        assert_eq!(m.simd, 1);
+        assert_eq!(m.input_shapes.len(), 3);
+        assert_eq!(m.input_shapes[0], vec![1, 4, 18, 18]);
+    }
+
+    #[test]
+    fn malformed_manifest_rejected() {
+        assert!(ArtifactMeta::parse("only|three|fields").is_err());
+    }
+
+    #[test]
+    fn tensor_shape_checks() {
+        let t = TensorI16::zeros(vec![2, 3]);
+        assert_eq!(t.numel(), 6);
+        assert_eq!(t.bytes(), 12);
+    }
+
+    #[test]
+    fn tensor_byte_roundtrip() {
+        let t = TensorI16::new(vec![3], vec![-1, 0, 12345]);
+        let b = t.to_bytes();
+        assert_eq!(TensorI16::from_bytes(vec![3], &b), t);
+    }
+
+    #[test]
+    #[should_panic]
+    fn tensor_shape_mismatch_panics() {
+        TensorI16::new(vec![2, 2], vec![0; 5]);
+    }
+}

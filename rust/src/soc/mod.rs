@@ -1,0 +1,11 @@
+//! The SOC domain and chip-level services (§II, §II-A, §III-A):
+//! operating modes and DVFS tables ([`opmodes`]), the power-mode state
+//! machine of Table I and per-component power model ([`power`]), and the
+//! FLL/uDMA models ([`udma`]).
+
+pub mod opmodes;
+pub mod power;
+pub mod udma;
+
+pub use opmodes::{OperatingMode, OperatingPoint};
+pub use power::{Component, PowerModel};

@@ -1,0 +1,183 @@
+//! Operating modes and voltage/frequency scaling (§III-A, Fig. 7).
+//!
+//! Fulmine defines three multi-corner operating modes:
+//!
+//! * **CRY-CNN-SW** — everything available; the HWCRYPT AES datapath (two
+//!   unpipelined AES rounds per cycle) limits the clock.
+//! * **KEC-CNN-SW** — cores + HWCE + KECCAK-f[400] primitives only; the
+//!   relaxed AES path allows a higher clock.
+//! * **SW** — cores only; maximum frequency.
+//!
+//! ## Calibration
+//!
+//! The anchor points published in the paper (Table II and §IV) are:
+//!
+//! | mode       | VDD   | fmax    |
+//! |------------|-------|---------|
+//! | CRY-CNN-SW | 0.8 V | 85 MHz  |
+//! | KEC-CNN-SW | 0.8 V | 104 MHz |
+//! | SW         | 0.8 V | 120 MHz |
+//!
+//! and Fig. 7 shows that at 1.2 V all modes draw ≈120 mW under full load
+//! (≈100 mA design target). Frequency over VDD follows the alpha-power law
+//! `f ∝ (VDD − VTH)^α / VDD` with VTH = 0.45 V, α = 1.6 — which reproduces
+//! both the 0.8 V anchors and a ≈2.25× frequency lift at 1.2 V, consistent
+//! with the shape of Fig. 7a. A test asserts the anchors exactly and the
+//! 1.2 V full-load power within tolerance (see [`super::power`]).
+
+/// Threshold voltage used by the alpha-power frequency law (65 nm LL).
+pub const VTH: f64 = 0.45;
+/// Alpha-power exponent (velocity-saturated short-channel 65 nm).
+pub const ALPHA: f64 = 1.6;
+/// Calibration voltage for all anchors.
+pub const V_NOM: f64 = 0.8;
+
+/// The three multi-corner operating modes of §III-A.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OperatingMode {
+    /// All accelerators and cores available @ 85 MHz (0.8 V).
+    CryCnnSw,
+    /// Cores + HWCE + KECCAK primitives @ 104 MHz (0.8 V).
+    KecCnnSw,
+    /// Cores only @ 120 MHz (0.8 V).
+    Sw,
+}
+
+impl OperatingMode {
+    /// Maximum cluster frequency at the nominal 0.8 V point, in MHz
+    /// (paper Table II / §IV).
+    pub fn fmax_nominal_mhz(self) -> f64 {
+        match self {
+            OperatingMode::CryCnnSw => 85.0,
+            OperatingMode::KecCnnSw => 104.0,
+            OperatingMode::Sw => 120.0,
+        }
+    }
+
+    /// Maximum cluster frequency at `vdd` volts, in MHz (alpha-power law
+    /// anchored at 0.8 V — Fig. 7a).
+    pub fn fmax_mhz(self, vdd: f64) -> f64 {
+        assert!((0.6..=1.3).contains(&vdd), "VDD {vdd} outside modelled range");
+        let scale = |v: f64| (v - VTH).powf(ALPHA) / v;
+        self.fmax_nominal_mhz() * scale(vdd) / scale(V_NOM)
+    }
+
+    /// Whether the HWCRYPT AES datapath is usable in this mode.
+    pub fn aes_available(self) -> bool {
+        matches!(self, OperatingMode::CryCnnSw)
+    }
+
+    /// Whether the HWCRYPT KECCAK sponge engine is usable in this mode.
+    pub fn keccak_available(self) -> bool {
+        matches!(self, OperatingMode::CryCnnSw | OperatingMode::KecCnnSw)
+    }
+
+    /// Whether the HWCE is usable in this mode.
+    pub fn hwce_available(self) -> bool {
+        matches!(self, OperatingMode::CryCnnSw | OperatingMode::KecCnnSw)
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            OperatingMode::CryCnnSw => "CRY-CNN-SW",
+            OperatingMode::KecCnnSw => "KEC-CNN-SW",
+            OperatingMode::Sw => "SW",
+        }
+    }
+}
+
+/// A concrete cluster operating point: mode + supply voltage, running at the
+/// mode's fmax for that voltage (the paper always benchmarks at fmax).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OperatingPoint {
+    pub mode: OperatingMode,
+    pub vdd: f64,
+}
+
+impl OperatingPoint {
+    pub fn new(mode: OperatingMode, vdd: f64) -> Self {
+        OperatingPoint { mode, vdd }
+    }
+
+    /// The paper's headline 0.8 V points.
+    pub fn nominal(mode: OperatingMode) -> Self {
+        OperatingPoint { mode, vdd: V_NOM }
+    }
+
+    pub fn freq_mhz(&self) -> f64 {
+        self.mode.fmax_mhz(self.vdd)
+    }
+
+    pub fn freq_hz(&self) -> f64 {
+        self.freq_mhz() * 1e6
+    }
+
+    /// Convert cycles to seconds at this operating point.
+    pub fn cycles_to_s(&self, cycles: u64) -> f64 {
+        cycles as f64 / self.freq_hz()
+    }
+}
+
+/// FLL mode-switch latency (§II-A): the cluster sleeps while the FLL locks;
+/// "the frequency switch can be performed in as little as 10 µs". Used when
+/// use cases alternate CRY-CNN-SW and KEC-CNN-SW phases (§IV-A).
+pub const MODE_SWITCH_S: f64 = 10e-6;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nominal_anchors_exact() {
+        assert_eq!(OperatingMode::CryCnnSw.fmax_mhz(0.8).round(), 85.0);
+        assert_eq!(OperatingMode::KecCnnSw.fmax_mhz(0.8).round(), 104.0);
+        assert_eq!(OperatingMode::Sw.fmax_mhz(0.8).round(), 120.0);
+    }
+
+    #[test]
+    fn frequency_monotone_in_vdd() {
+        for mode in [OperatingMode::CryCnnSw, OperatingMode::KecCnnSw, OperatingMode::Sw] {
+            let mut prev = 0.0;
+            for i in 0..=8 {
+                let v = 0.8 + 0.05 * i as f64;
+                let f = mode.fmax_mhz(v);
+                assert!(f > prev, "f not monotone at {v}");
+                prev = f;
+            }
+        }
+    }
+
+    #[test]
+    fn lift_at_1v2_is_about_2x25() {
+        let r = OperatingMode::Sw.fmax_mhz(1.2) / OperatingMode::Sw.fmax_mhz(0.8);
+        assert!(r > 2.0 && r < 2.5, "lift {r}");
+    }
+
+    #[test]
+    fn mode_capabilities() {
+        assert!(OperatingMode::CryCnnSw.aes_available());
+        assert!(!OperatingMode::KecCnnSw.aes_available());
+        assert!(OperatingMode::KecCnnSw.keccak_available());
+        assert!(OperatingMode::KecCnnSw.hwce_available());
+        assert!(!OperatingMode::Sw.hwce_available());
+        assert!(!OperatingMode::Sw.keccak_available());
+    }
+
+    #[test]
+    fn mode_frequency_ordering_preserved_across_vdd() {
+        for i in 0..=8 {
+            let v = 0.8 + 0.05 * i as f64;
+            assert!(
+                OperatingMode::Sw.fmax_mhz(v) > OperatingMode::KecCnnSw.fmax_mhz(v)
+                    && OperatingMode::KecCnnSw.fmax_mhz(v) > OperatingMode::CryCnnSw.fmax_mhz(v)
+            );
+        }
+    }
+
+    #[test]
+    fn cycles_to_time() {
+        let op = OperatingPoint::nominal(OperatingMode::Sw);
+        let t = op.cycles_to_s(120_000_000);
+        assert!((t - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,57 @@
+//! The I/O DMA subsystem (uDMA) of the SOC domain (§II): autonomously copies
+//! data between L2 and the external interfaces (quad-SPI flash/FRAM, camera,
+//! ADC) "even when the cluster is in sleep mode", enabling full overlap of
+//! I/O transfers, L2↔TCDM transfers and computation (double buffering).
+
+use crate::soc::power::{FLASH_BW_BPS, FRAM_BW_BPS};
+
+/// External interfaces served by the uDMA.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Interface {
+    /// Quad-SPI flash (weight storage), QPI mode.
+    FlashQpi,
+    /// 4× bit-interleaved FRAM (partial results).
+    Fram,
+    /// Camera parallel interface (input frames).
+    Camera,
+    /// ADC via I2S/SPI (EEG and other biosignals).
+    Adc,
+}
+
+impl Interface {
+    /// Sustained bandwidth in bytes/s (datasheet-derived; see
+    /// [`crate::soc::power`] for flash/FRAM, camera/ADC are not the
+    /// bottleneck in any use case and get nominal rates).
+    pub fn bandwidth_bps(self) -> f64 {
+        match self {
+            Interface::FlashQpi => FLASH_BW_BPS,
+            Interface::Fram => FRAM_BW_BPS,
+            Interface::Camera => 10e6,
+            Interface::Adc => 1e6,
+        }
+    }
+}
+
+/// A uDMA channel transfer: seconds to move `bytes` over `iface`.
+pub fn transfer_s(iface: Interface, bytes: usize) -> f64 {
+    bytes as f64 / iface.bandwidth_bps()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flash_40mbps() {
+        // 4 MB in ~0.1 s
+        let t = transfer_s(Interface::FlashQpi, 4 << 20);
+        assert!((t - 0.1049).abs() < 0.01, "t={t}");
+    }
+
+    #[test]
+    fn fram_half_flash_bandwidth() {
+        let tf = transfer_s(Interface::Fram, 1 << 20);
+        let tq = transfer_s(Interface::FlashQpi, 1 << 20);
+        assert!((tf / tq - 2.0).abs() < 1e-9);
+    }
+}

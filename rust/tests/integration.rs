@@ -1,0 +1,177 @@
+//! Cross-module integration tests: VM kernels vs HWCE golden model, crypto
+//! through external-memory devices, pipeline composition, report generation,
+//! and failure injection across module boundaries.
+
+use fulmine::apps::eeg;
+use fulmine::cluster::dma::{Dma, Transfer};
+use fulmine::cluster::event_unit::EventUnit;
+use fulmine::coordinator::{surveillance, ExecConfig, Pipeline};
+use fulmine::crypto::modes::XtsKey;
+use fulmine::crypto::sponge::{ae_decrypt, ae_encrypt, SpongeConfig};
+use fulmine::energy::Category;
+use fulmine::extmem::{Device, ExtMem};
+use fulmine::hwce::golden::{conv_multi, WeightPrec};
+use fulmine::hwce::{Hwce, HwceJob};
+use fulmine::hwcrypt::{CipherOp, Hwcrypt};
+use fulmine::isa::vm::Machine;
+use fulmine::kernels_sw::conv::{read_output, run_conv, stage_tile, ConvImpl, ConvJob};
+
+fn rnd(n: usize, seed: u64, range: i16) -> Vec<i16> {
+    let mut x = seed | 1;
+    (0..n)
+        .map(|_| {
+            x ^= x << 13;
+            x ^= x >> 7;
+            x ^= x << 17;
+            ((x % (2 * range as u64 + 1)) as i64 - range as i64) as i16
+        })
+        .collect()
+}
+
+/// The VM software kernels and the HWCE golden model implement the same
+/// fixed-point semantics — outputs must be bit-identical.
+#[test]
+fn vm_conv_matches_hwce_golden() {
+    let job = ConvJob { w: 24, h: 16, k: 5, qf: 8, x_base: 0, w_base: 0x8000, y_base: 0x9000 };
+    let x = rnd(job.w * job.h, 3, 800);
+    let wts = rnd(25, 4, 800);
+
+    for imp in [ConvImpl::Naive, ConvImpl::Simd] {
+        let mut m = Machine::new();
+        stage_tile(&mut m, job, &x, &wts, imp);
+        run_conv(&mut m, job, imp, 4);
+        let vm_out = read_output(&m, job);
+
+        let mut y = vec![vec![0i16; job.ow() * job.oh()]];
+        conv_multi(WeightPrec::W16, 5, job.w, job.h, job.qf, &x, &[&wts], &mut y);
+        assert_eq!(vm_out, y[0], "{imp:?} disagrees with golden");
+    }
+}
+
+/// Full secure round trip through the external-memory device model:
+/// tensor -> XTS sectors in FRAM -> decrypt -> bit-identical tensor; energy
+/// is charged for the traffic.
+#[test]
+fn secure_extmem_roundtrip_with_energy() {
+    let key = XtsKey::new(&[7; 16], &[8; 16]);
+    let mut fram = ExtMem::new(Device::Fram);
+    let mut ledger = fulmine::energy::EnergyLedger::new();
+    let tensor: Vec<u8> = (0..8192).map(|i| (i * 13 % 251) as u8).collect();
+    fram.store_encrypted(&key, 512, &tensor, Some(&mut ledger));
+    let back = fram.load_decrypted(&key, 512, tensor.len(), Some(&mut ledger));
+    assert_eq!(back, tensor);
+    assert!(ledger.energy_mj(Category::ExtMem) > 0.0);
+}
+
+/// Accelerator device models cooperate through the event unit.
+#[test]
+fn accelerators_post_events() {
+    let mut eu = EventUnit::new();
+    let mut hwce = Hwce::new();
+    let mut hwcrypt = Hwcrypt::new();
+    let t1 = hwce.offload(
+        0,
+        HwceJob { w: 16, h: 16, k: 3, prec: WeightPrec::W4, qf: 8 },
+        Some(&mut eu),
+    );
+    let t2 = hwcrypt.offload(t1, CipherOp::AesXts, 4096, Some(&mut eu));
+    assert!(t2 > t1);
+    assert!(eu.take(fulmine::cluster::event_unit::Event::HwceDone));
+    assert!(eu.take(fulmine::cluster::event_unit::Event::HwcryptDone));
+}
+
+/// DMA double-buffering: a staged pipeline where transfers overlap compute
+/// finishes sooner than a strictly serial one.
+#[test]
+fn dma_overlap_beats_serial() {
+    let mut dma = Dma::new();
+    let tile = Transfer::d2(256, 16);
+    let compute_per_tile = 6000u64;
+    let mut t_overlap = 0u64;
+    let (_, mut ready) = dma.issue(0, tile);
+    for _ in 0..8 {
+        let start = t_overlap.max(ready);
+        let (_, r) = dma.issue(start, tile); // prefetch next
+        ready = r;
+        t_overlap = start + compute_per_tile;
+    }
+    let mut dma2 = Dma::new();
+    let mut t_serial = 0u64;
+    for _ in 0..8 {
+        let (_, done) = dma2.issue(t_serial, tile);
+        t_serial = done + compute_per_tile;
+    }
+    assert!(t_overlap < t_serial, "{t_overlap} !< {t_serial}");
+}
+
+/// End-to-end EEG: detection plus authenticated collection, with MAC
+/// failure injection.
+#[test]
+fn eeg_detect_and_secure_collect() {
+    let win = eeg::synth_window(77, true);
+    let (seizure, comps) = eeg::detect(&win, 4);
+    assert!(seizure);
+    let payload: Vec<u8> = comps
+        .iter()
+        .flat_map(|c| c.iter().map(|&v| (v.clamp(-32768, 32767) as i16)))
+        .flat_map(|v| v.to_le_bytes())
+        .collect();
+    let (ct, tag) = ae_encrypt(SpongeConfig::MAX_RATE, &[1; 16], &[2; 16], &payload);
+    assert_eq!(
+        ae_decrypt(SpongeConfig::MAX_RATE, &[1; 16], &[2; 16], &ct, &tag),
+        Some(payload)
+    );
+    let mut bad_tag = tag;
+    bad_tag[5] ^= 2;
+    assert!(ae_decrypt(SpongeConfig::MAX_RATE, &[1; 16], &[2; 16], &ct, &bad_tag).is_none());
+}
+
+/// The pipeline must respect mode capabilities: XTS in a KEC-only phase
+/// forces a switch to CRY-CNN-SW (counted), and the SW config never
+/// switches at all.
+#[test]
+fn pipeline_mode_discipline() {
+    let mut hw = Pipeline::new(ExecConfig::with_hwce(WeightPrec::W16));
+    hw.conv(1_000_000, 3);
+    hw.xts(1024);
+    hw.conv(1_000_000, 3);
+    hw.xts(1024);
+    assert_eq!(hw.mode_switches, 3);
+
+    let mut sw = Pipeline::new(ExecConfig::sw_1core());
+    sw.conv(1_000_000, 3);
+    sw.xts(1024);
+    sw.sw(1000.0, 1.0);
+    assert_eq!(sw.mode_switches, 0);
+}
+
+/// Sanity of the full surveillance ladder at a second voltage: the ordering
+/// survives DVFS.
+#[test]
+fn surveillance_ladder_holds_at_1v0() {
+    let mut results = Vec::new();
+    for (label, mut cfg) in ExecConfig::ladder() {
+        cfg.vdd = 1.0;
+        let mut r = surveillance::run_frame(cfg);
+        r.label = label.to_string();
+        results.push(r);
+    }
+    for i in 1..results.len() {
+        assert!(
+            results[i].time_s <= results[i - 1].time_s * 1.02,
+            "ordering broken at 1.0V rung {i}"
+        );
+    }
+    // higher VDD must be faster but less efficient than 0.8V
+    let best08 = surveillance::ladder().pop().unwrap();
+    let best10 = results.pop().unwrap();
+    assert!(best10.time_s < best08.time_s);
+    assert!(best10.energy_mj > best08.energy_mj);
+}
+
+/// Report generation end-to-end (every paper artifact renders).
+#[test]
+fn all_reports_render() {
+    let r = fulmine::report::all_reports();
+    assert!(r.len() > 4000);
+}

@@ -1,0 +1,175 @@
+//! End-to-end artifact validation: every AOT artifact is loaded through the
+//! PJRT runtime and its numerics are cross-checked against the rust golden
+//! model — the three-layer bit-exactness contract (Pallas ≡ jnp oracle is
+//! checked in pytest; golden ≡ artifact is checked here; transitively all
+//! four implementations agree).
+
+use fulmine::apps::params::{gen_params, xorshift_i16};
+use fulmine::hwce::golden::{conv_multi, WeightPrec};
+use fulmine::runtime::{default_artifact_dir, Runtime, TensorI16};
+
+fn runtime() -> Runtime {
+    Runtime::open(default_artifact_dir()).expect("run `make artifacts` first")
+}
+
+/// Golden-model replica of the hwce_raw artifacts: multi-channel layer with
+/// per-pass normalize/saturate accumulation.
+fn golden_layer(
+    prec: WeightPrec,
+    k: usize,
+    qf: u8,
+    x: &TensorI16,   // (B, Cin, H, W)
+    w: &TensorI16,   // (Cout, Cin, k, k)
+    yin: &TensorI16, // (B, Cout, OH, OW)
+) -> TensorI16 {
+    let (b, cin, h, ww) = (x.shape[0], x.shape[1], x.shape[2], x.shape[3]);
+    let cout = w.shape[0];
+    let (oh, ow) = (h - k + 1, ww - k + 1);
+    let mut out = yin.clone();
+    let simd = prec.simd();
+    for bb in 0..b {
+        for cg in 0..cout / simd {
+            for ci in 0..cin {
+                let xs = &x.data[(bb * cin + ci) * h * ww..][..h * ww];
+                let wslices: Vec<&[i16]> = (0..simd)
+                    .map(|f| {
+                        let co = cg * simd + f;
+                        &w.data[(co * cin + ci) * k * k..][..k * k]
+                    })
+                    .collect();
+                let mut ys: Vec<Vec<i16>> = (0..simd)
+                    .map(|f| {
+                        let co = cg * simd + f;
+                        out.data[(bb * cout + co) * oh * ow..][..oh * ow].to_vec()
+                    })
+                    .collect();
+                conv_multi(prec, k, ww, h, qf, xs, &wslices, &mut ys);
+                for (f, y) in ys.into_iter().enumerate() {
+                    let co = cg * simd + f;
+                    out.data[(bb * cout + co) * oh * ow..][..oh * ow].copy_from_slice(&y);
+                }
+            }
+        }
+    }
+    out
+}
+
+fn rnd_tensor(shape: Vec<usize>, seed: u64, lo: i64, hi: i64) -> TensorI16 {
+    let n = shape.iter().product();
+    TensorI16::new(shape, xorshift_i16(seed, n, lo, hi))
+}
+
+#[test]
+fn hwce_conv3_w16_matches_golden() {
+    let mut rt = runtime();
+    let meta = rt.meta("hwce_conv3_w16").expect("artifact missing").clone();
+    let x = rnd_tensor(meta.input_shapes[0].clone(), 11, -2048, 2047);
+    let w = rnd_tensor(meta.input_shapes[1].clone(), 12, -256, 255);
+    let yin = rnd_tensor(meta.input_shapes[2].clone(), 13, -1024, 1023);
+    let got = rt.execute("hwce_conv3_w16", &[x.clone(), w.clone(), yin.clone()]).unwrap();
+    let want = golden_layer(WeightPrec::W16, 3, meta.qf, &x, &w, &yin);
+    assert_eq!(got.len(), 1);
+    assert_eq!(got[0], want, "artifact != golden for conv3 w16");
+}
+
+#[test]
+fn hwce_conv5_w4_matches_golden() {
+    let mut rt = runtime();
+    let meta = rt.meta("hwce_conv5_w4").expect("artifact missing").clone();
+    let x = rnd_tensor(meta.input_shapes[0].clone(), 21, -2048, 2047);
+    let w = rnd_tensor(meta.input_shapes[1].clone(), 22, -8, 7);
+    let yin = rnd_tensor(meta.input_shapes[2].clone(), 23, -1024, 1023);
+    let got = rt.execute("hwce_conv5_w4", &[x.clone(), w.clone(), yin.clone()]).unwrap();
+    let want = golden_layer(WeightPrec::W4, 5, meta.qf, &x, &w, &yin);
+    assert_eq!(got[0], want, "artifact != golden for conv5 w4");
+}
+
+/// Randomized sweep: several seeds through the w4 artifact vs golden.
+#[test]
+fn hwce_conv5_w4_randomized_sweep() {
+    let mut rt = runtime();
+    let meta = rt.meta("hwce_conv5_w4").unwrap().clone();
+    for seed in 0..5u64 {
+        let x = rnd_tensor(meta.input_shapes[0].clone(), 100 + seed, -4096, 4095);
+        let w = rnd_tensor(meta.input_shapes[1].clone(), 200 + seed, -8, 7);
+        let yin = rnd_tensor(meta.input_shapes[2].clone(), 300 + seed, -8192, 8191);
+        let got = rt.execute("hwce_conv5_w4", &[x.clone(), w.clone(), yin.clone()]).unwrap();
+        let want = golden_layer(WeightPrec::W4, 5, meta.qf, &x, &w, &yin);
+        assert_eq!(got[0], want, "seed {seed}");
+    }
+}
+
+#[test]
+fn quickstart_artifact_runs_and_is_deterministic() {
+    let mut rt = runtime();
+    let meta = rt.meta("quickstart_conv_w4").unwrap().clone();
+    let inputs: Vec<TensorI16> = meta
+        .input_shapes
+        .iter()
+        .enumerate()
+        .map(|(i, s)| rnd_tensor(s.clone(), 31 + i as u64, -8, 7))
+        .collect();
+    let a = rt.execute("quickstart_conv_w4", &inputs).unwrap();
+    let b = rt.execute("quickstart_conv_w4", &inputs).unwrap();
+    assert_eq!(a, b);
+    assert_eq!(a[0].shape, vec![1, 8, 16, 16]);
+}
+
+#[test]
+fn resnet20_artifact_executes_with_generated_params() {
+    let mut rt = runtime();
+    let meta = rt.meta("resnet20_cifar_w4").unwrap().clone();
+    let x = rnd_tensor(meta.input_shapes[0].clone(), 9, -2048, 2047);
+    let mut inputs = vec![x];
+    inputs.extend(gen_params(&meta.input_shapes[1..], 4, 1));
+    let out = rt.execute("resnet20_cifar_w4", &inputs).unwrap();
+    assert_eq!(out[0].shape, vec![1, 10]);
+    assert!(out[0].data.iter().any(|&v| v != 0), "logits all zero");
+    let out2 = rt.execute("resnet20_cifar_w4", &inputs).unwrap();
+    assert_eq!(out, out2);
+}
+
+/// Different inputs produce different logits (the network is not constant).
+#[test]
+fn resnet20_sensitive_to_input() {
+    let mut rt = runtime();
+    let meta = rt.meta("resnet20_cifar_w4").unwrap().clone();
+    let params = gen_params(&meta.input_shapes[1..], 4, 1);
+    let mut run = |seed: u64| {
+        let x = rnd_tensor(meta.input_shapes[0].clone(), seed, -2048, 2047);
+        let mut inputs = vec![x];
+        inputs.extend(params.clone());
+        rt.execute("resnet20_cifar_w4", &inputs).unwrap()[0].clone()
+    };
+    assert_ne!(run(1), run(2));
+}
+
+#[test]
+fn facedet_artifacts_execute() {
+    let mut rt = runtime();
+    for name in ["facedet_12net_w4", "facedet_24net_w4"] {
+        let meta = rt.meta(name).unwrap().clone();
+        let x = rnd_tensor(meta.input_shapes[0].clone(), 51, -2048, 2047);
+        let mut inputs = vec![x];
+        inputs.extend(gen_params(&meta.input_shapes[1..], 4, 2));
+        let out = rt.execute(name, &inputs).unwrap();
+        assert_eq!(out[0].shape, vec![16, 2], "{name}");
+    }
+}
+
+#[test]
+fn shape_validation_rejects_bad_inputs() {
+    let mut rt = runtime();
+    let bad = vec![TensorI16::zeros(vec![1, 1, 4, 4])];
+    assert!(rt.execute("hwce_conv3_w16", &bad).is_err());
+}
+
+#[test]
+fn all_manifest_artifacts_compile() {
+    let mut rt = runtime();
+    let names: Vec<String> = rt.artifact_names().iter().map(|s| s.to_string()).collect();
+    assert!(names.len() >= 6, "expected ≥6 artifacts, got {names:?}");
+    for n in names {
+        rt.compile(&n).unwrap_or_else(|e| panic!("compile {n}: {e}"));
+    }
+}
