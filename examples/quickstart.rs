@@ -11,8 +11,9 @@
 
 use anyhow::Result;
 use fulmine::apps::params::{gen_params, xorshift_i16};
-use fulmine::coordinator::{ExecConfig, Pipeline};
+use fulmine::coordinator::{ExecConfig, GraphBuilder};
 use fulmine::crypto::modes::XtsKey;
+use fulmine::soc::sched::Scheduler;
 use fulmine::hwce::golden::WeightPrec;
 use fulmine::runtime::{default_artifact_dir, Runtime, TensorI16};
 
@@ -47,15 +48,17 @@ fn main() -> Result<()> {
     println!("XTS roundtrip of {} output bytes OK", ct.len());
 
     // --- 4. what would this cost on the Fulmine SoC? --------------------
-    let mut p = Pipeline::new(ExecConfig::with_hwce(WeightPrec::W4));
+    // Emit a two-job graph (convolve, then encrypt the result) and run it
+    // through the event-driven SoC scheduler.
+    let mut b = GraphBuilder::new(ExecConfig::with_hwce(WeightPrec::W4));
     let macs = 8 * 4 * 9 * 16 * 16; // cout·cin·k²·positions
-    p.conv(macs as u64, 3);
-    p.xts(out[0].bytes());
-    let ledger = p.finish();
+    let conv = b.conv(macs as u64, 3, &[]);
+    b.xts(out[0].bytes(), &[conv]);
+    let res = Scheduler::run(&b.build());
     println!(
         "simulated on-SoC: {:.1} µs, {:.3} µJ ({})",
-        ledger.elapsed_s * 1e6,
-        ledger.total_mj() * 1e3,
+        res.makespan_s * 1e6,
+        res.ledger.total_mj() * 1e3,
         "HWCE 4-bit + HWCRYPT @ 0.8 V"
     );
     Ok(())

@@ -1,0 +1,80 @@
+//! Bench: the event-driven SoC scheduler — streamed frames/s and pJ/op for
+//! the three §IV use cases at increasing stream depths (the multi-frame
+//! throughput the analytic model could not express), plus the host cost of
+//! scheduling itself (the simulator's own hot path).
+//!
+//! Uses `fulmine::bench_support` (the offline crate set has no criterion).
+
+use fulmine::bench_support::{blackbox, measure, report_row};
+use fulmine::coordinator::{facedet, seizure, surveillance, ExecConfig, StreamResult};
+use fulmine::hwce::golden::WeightPrec;
+use fulmine::report;
+use fulmine::soc::sched::{Engine, Scheduler};
+
+fn stream_rows(usecase: &str, run: impl Fn(usize) -> StreamResult) {
+    println!("== stream throughput: {usecase} (best rung) ==");
+    println!(
+        "{:>7} {:>12} {:>12} {:>10} {:>10} {:>10}",
+        "frames", "time [s]", "frames/s", "speedup", "mJ/frame", "pJ/op"
+    );
+    for frames in [1usize, 2, 4, 8] {
+        let r = run(frames);
+        println!(
+            "{frames:>7} {:>12.4} {:>12.3} {:>9.2}x {:>10.4} {:>10.2}",
+            r.time_s,
+            r.fps,
+            r.speedup,
+            r.energy_mj / frames as f64,
+            r.pj_per_op
+        );
+    }
+}
+
+fn main() {
+    let best = ExecConfig::with_hwce(WeightPrec::W4);
+    let seizure_best = *seizure::rung_configs().last().map(|(_, c)| c).unwrap();
+
+    stream_rows("surveillance", |n| surveillance::run_stream(best, n));
+    stream_rows("facedet", |n| facedet::run_stream(best, n));
+    stream_rows("seizure", |n| seizure::run_stream(seizure_best, n));
+
+    println!("\n== engine utilization, surveillance x8 ==");
+    let r = surveillance::run_stream(best, 8);
+    for e in Engine::ALL {
+        let busy = r.busy_s[e.index()];
+        if busy > 0.0 {
+            let pct = busy / r.time_s * 100.0;
+            println!("{:<14} {pct:>7.1}% busy ({busy:.4} s of {:.4} s)", e.name(), r.time_s);
+        }
+    }
+
+    println!("\n{}", report::stream_report("surveillance", 8, None).unwrap());
+
+    println!("== host cost of scheduling ==");
+    let g1 = surveillance::frame_graph(best);
+    let g8 = g1.repeat(8);
+    let (m, lo, hi) = measure(2, 9, || {
+        blackbox(Scheduler::run(&g1));
+    });
+    report_row(
+        "schedule surveillance frame",
+        m,
+        lo,
+        hi,
+        Some((g1.len() as f64 / m / 1e3, "kjobs/s")),
+    );
+    let (m, lo, hi) = measure(2, 9, || {
+        blackbox(Scheduler::run(&g8));
+    });
+    report_row(
+        "schedule surveillance x8 stream",
+        m,
+        lo,
+        hi,
+        Some((g8.len() as f64 / m / 1e3, "kjobs/s")),
+    );
+    let (m, lo, hi) = measure(2, 9, || {
+        blackbox(g1.analytic());
+    });
+    report_row("analytic replay (reference)", m, lo, hi, None);
+}

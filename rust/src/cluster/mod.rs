@@ -28,3 +28,19 @@ pub const L2_BYTES: usize = 192 * 1024;
 /// Shared accelerator ports on the TCDM interconnect (§II: "the two
 /// accelerators share the same set of four physical ports").
 pub const ACCEL_PORTS: usize = 4;
+
+/// Shared command-queue semantics of the cluster accelerators (HWCE and
+/// HWCRYPT both front a fixed-depth queue of job descriptors): drain
+/// completed entries at `now`, then return the cycle at which a queue slot
+/// is free for a new job — `now` when below capacity, otherwise the
+/// completion of the job whose retirement brings occupancy under `depth`.
+/// `queue` holds completion cycles in ascending order (each accelerator's
+/// completions are monotone) and is drained in place.
+pub fn accel_queue_issue_at(queue: &mut Vec<u64>, depth: usize, now: u64) -> u64 {
+    queue.retain(|&d| d > now);
+    if queue.len() >= depth {
+        queue[queue.len() - depth]
+    } else {
+        now
+    }
+}

@@ -2,11 +2,20 @@
 //! 12-net/24-net cascade on a 224×224 frame, entirely within L2 (no
 //! external memories), plus full-frame AES-128-XTS encryption when a face
 //! candidate is found (for transmission to the paired device).
+//!
+//! The frame graph is a two-stage chain (12-net conv + dense, then 24-net
+//! on the surviving candidates) with DMA window staging ahead of each
+//! stage and the encryption epilogue at the end. In streaming mode the
+//! next frame's window staging (cluster DMA, mode-agnostic) overlaps the
+//! current frame's encryption, and same-mode phases of adjacent frames
+//! share the cluster's mode windows; conv (KEC-CNN-SW) and XTS
+//! (CRY-CNN-SW) phases still serialize on the shared cluster clock.
 
-use super::{ExecConfig, Pipeline, UseCaseResult, OR1200_FACTOR};
+use super::{stream_graph, ExecConfig, GraphBuilder, StreamResult, UseCaseResult, OR1200_FACTOR};
 use crate::apps::facedet::*;
 use crate::kernels_sw::crypto_cost::SW_AES_XTS_CPB_1CORE;
 use crate::kernels_sw::dsp::DENSE_CYC_PER_MAC;
+use crate::soc::sched::{JobGraph, Scheduler};
 
 /// Naive scalar dense cost (no SIMD dot product): load-load-mac per element
 /// plus loop overhead.
@@ -17,30 +26,47 @@ fn dense_cycles(macs: u64, cfg: &ExecConfig) -> f64 {
     macs as f64 * per_mac / cfg.n_cores as f64
 }
 
-/// Run one frame of the detection pipeline.
-pub fn run_frame(cfg: ExecConfig) -> UseCaseResult {
-    let mut p = Pipeline::new(cfg);
+/// Emit the job graph of one detection frame.
+pub fn frame_graph(cfg: ExecConfig) -> JobGraph {
+    let mut b = GraphBuilder::new(cfg);
 
     // Stage 1: 12-net over all windows. Conv on HWCE (or SW); window
     // extraction + dense layers on the cores.
     let c12 = conv_12net();
     let conv_macs_12 = n_windows_12() as u64 * c12.macs();
-    p.dma(n_windows_12() * 12 * 12 * 2);
-    p.conv(conv_macs_12, c12.k);
-    p.sw(dense_cycles(n_windows_12() as u64 * dense_macs_12(), &cfg), 1.0);
+    let stage1 = b.dma(n_windows_12() * 12 * 12 * 2, &[]);
+    let conv1 = b.conv(conv_macs_12, c12.k, &[stage1]);
+    let dense1 = b.sw(dense_cycles(n_windows_12() as u64 * dense_macs_12(), &cfg), 1.0, &[conv1]);
 
-    // Stage 2: 24-net on the 10 % candidate windows.
+    // Stage 2: 24-net on the 10 % candidate windows (known only once the
+    // 12-net dense layers have scored stage 1).
     let c24 = conv_24net();
     let conv_macs_24 = n_windows_24() as u64 * c24.macs();
-    p.dma(n_windows_24() * 24 * 24 * 2);
-    p.conv(conv_macs_24, c24.k);
-    p.sw(dense_cycles(n_windows_24() as u64 * dense_macs_24(), &cfg), 1.0);
+    let stage2 = b.dma(n_windows_24() * 24 * 24 * 2, &[dense1]);
+    let conv2 = b.conv(conv_macs_24, c24.k, &[stage2]);
+    let dense2 = b.sw(dense_cycles(n_windows_24() as u64 * dense_macs_24(), &cfg), 1.0, &[conv2]);
 
     // Detection epilogue: encrypt the full frame for remote recognition.
-    p.xts(encrypted_image_bytes());
+    b.xts(encrypted_image_bytes(), &[dense2]);
 
-    let ledger = p.finish();
-    UseCaseResult::from_ledger("facedet", ledger, eq_ops())
+    b.build()
+}
+
+/// Run one frame of the detection pipeline through the scheduler.
+pub fn run_frame(cfg: ExecConfig) -> UseCaseResult {
+    let res = Scheduler::run(&frame_graph(cfg));
+    UseCaseResult::from_ledger("facedet", res.ledger, eq_ops())
+}
+
+/// The pre-scheduler analytic reference of the same graph.
+pub fn run_frame_analytic(cfg: ExecConfig) -> UseCaseResult {
+    let res = frame_graph(cfg).analytic();
+    UseCaseResult::from_ledger("facedet (analytic)", res.ledger, eq_ops())
+}
+
+/// Stream `frames` camera frames through the cascade.
+pub fn run_stream(cfg: ExecConfig, frames: usize) -> StreamResult {
+    stream_graph("facedet", &frame_graph(cfg), frames, eq_ops())
 }
 
 /// OR1200-equivalent ops for the §IV-B workload (baseline software).
@@ -142,4 +168,8 @@ mod tests {
         let ext = r.ledger.energy_mj(Category::ExtMem);
         assert!(ext < 0.15 * r.energy_mj, "ext-mem standby share {ext}");
     }
+
+    // The scheduled-vs-analytic 5 % calibration and the streaming
+    // never-slower contracts are asserted centrally, across all use cases
+    // and rungs, in rust/tests/scheduler.rs.
 }

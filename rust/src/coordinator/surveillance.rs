@@ -1,17 +1,34 @@
 //! §IV-A: secure autonomous aerial surveillance — ResNet-20 on 224×224
 //! frames with AES-128-XTS protection of all weights (flash) and partial
 //! results (FRAM); the cluster is the only secure enclave.
+//!
+//! The frame is emitted as a job graph: per layer, the weight fetch
+//! (flash uDMA channel, prefetchable from frame start), the partial-result
+//! round trip through FRAM (store of layer *i−1*'s output, fetch as layer
+//! *i*'s input), the XTS decrypt/encrypt on the HWCRYPT, the L2→TCDM DMA
+//! stage, the convolution (HWCE or cores) and the bias/ReLU/pool epilogue
+//! on the cores. The scheduler overlaps whatever the dependencies allow —
+//! weight fetches and decrypts of later layers run under the current
+//! layer's convolution, and in streaming mode the next frame fills the
+//! FRAM round-trip stalls of the current one.
 
-use super::{ExecConfig, Pipeline, UseCaseResult, NAIVE_CYC_PER_MAC_3, OR1200_FACTOR};
+use super::{
+    stream_graph, ExecConfig, GraphBuilder, StreamResult, UseCaseResult, NAIVE_CYC_PER_MAC_3,
+    OR1200_FACTOR,
+};
 use crate::apps::resnet::{self, ConvLayer};
 use crate::extmem::Device;
 use crate::hwce::golden::WeightPrec;
 use crate::kernels_sw::crypto_cost::SW_AES_XTS_CPB_1CORE;
 use crate::kernels_sw::dsp::{MAXPOOL_CYC_PER_OUT, RELU_CYC_PER_ELEM};
+use crate::soc::sched::{JobGraph, JobId, Scheduler};
 
 /// Per-element software cost of the bias+ReLU epilogue (load, add-sat,
 /// relu, store — matches the VM dsp kernels).
 const EPILOGUE_CYC_PER_ELEM: f64 = RELU_CYC_PER_ELEM + 1.0;
+
+/// Cycles of the classifier head (global average pool + fc on the cores).
+const HEAD_CYCLES: f64 = 20_000.0;
 
 fn layer_epilogue_cycles(l: &ConvLayer) -> f64 {
     let dense_out = (l.cout * l.h * l.w) as f64;
@@ -23,41 +40,70 @@ fn layer_epilogue_cycles(l: &ConvLayer) -> f64 {
     c
 }
 
-/// Run one secure ResNet-20 frame at the given configuration.
-pub fn run_frame(cfg: ExecConfig) -> UseCaseResult {
+/// Emit the job graph of one secure ResNet-20 frame.
+pub fn frame_graph(cfg: ExecConfig) -> JobGraph {
     let layers = resnet::resnet20_224();
     // Storage precision follows the HWCE mode (W4 shrinks flash traffic, as
     // §IV-A exploits); software rungs use the 16-bit baseline format.
     let store_prec = cfg.hwce.unwrap_or(WeightPrec::W16);
 
-    let mut p = Pipeline::new(cfg);
+    let mut b = GraphBuilder::new(cfg);
+    // FRAM store of the previous layer's output — the next layer's input
+    // fetch must wait for it (the partial-result round trip).
+    let mut prev_store: Option<JobId> = None;
+    let mut prev_epi: Option<JobId> = None;
     for (i, l) in layers.iter().enumerate() {
         let wb = l.weight_bytes(store_prec);
-        // weights: flash → L2 (uDMA, overlapped), then XTS decrypt
-        p.extmem(Device::Flash, wb);
+        // weights: flash → L2 on the flash uDMA channel (prefetchable)
+        let w_fetch = b.extmem(Device::Flash, wb, &[]);
         // partial results of the previous layer return from FRAM (all but
         // the first layer, whose input is the camera frame already in L2)
-        if i > 0 {
-            p.extmem(Device::Fram, l.in_bytes());
-            p.xts(l.in_bytes());
-        }
-        p.xts(wb);
-        // stage tiles L2 → TCDM
-        p.dma(l.in_bytes() + wb);
+        let in_dec = if i > 0 {
+            let deps: Vec<JobId> = prev_store.into_iter().collect();
+            let in_fetch = b.extmem(Device::Fram, l.in_bytes(), &deps);
+            Some(b.xts(l.in_bytes(), &[in_fetch]))
+        } else {
+            None
+        };
+        let w_dec = b.xts(wb, &[w_fetch]);
+        // stage tiles L2 → TCDM once both operands are decrypted
+        let mut stage_deps = vec![w_dec];
+        stage_deps.extend(in_dec);
+        let stage = b.dma(l.in_bytes() + wb, &stage_deps);
         // convolution
-        p.conv(l.macs(), l.k);
+        let conv = b.conv(l.macs(), l.k, &[stage]);
         // bias + ReLU (+ pooling) on the cores
-        p.sw(layer_epilogue_cycles(l), 1.0);
+        let epi = b.sw(layer_epilogue_cycles(l), 1.0, &[conv]);
         // results: encrypt, stage back, store to FRAM
-        p.xts(l.out_bytes());
-        p.dma(l.out_bytes());
-        p.extmem(Device::Fram, l.out_bytes());
+        let enc = b.xts(l.out_bytes(), &[epi]);
+        let out_dma = b.dma(l.out_bytes(), &[enc]);
+        prev_store = Some(b.extmem(Device::Fram, l.out_bytes(), &[out_dma]));
+        prev_epi = Some(epi);
     }
-    // classifier head: global average pool + fc on the cores
-    p.sw(20_000.0, 1.0);
+    // classifier head on the last layer's activations (still in the cluster)
+    let head_deps: Vec<JobId> = prev_epi.into_iter().collect();
+    b.sw(HEAD_CYCLES, 1.0, &head_deps);
+    b.build()
+}
 
-    let ledger = p.finish();
-    UseCaseResult::from_ledger("surveillance", ledger, eq_ops())
+/// Run one secure ResNet-20 frame at the given configuration through the
+/// event-driven scheduler.
+pub fn run_frame(cfg: ExecConfig) -> UseCaseResult {
+    let res = Scheduler::run(&frame_graph(cfg));
+    UseCaseResult::from_ledger("surveillance", res.ledger, eq_ops())
+}
+
+/// The pre-scheduler analytic reference (phase summation + I/O backlog) of
+/// the same graph — the model the Fig. 10 bands were calibrated against.
+pub fn run_frame_analytic(cfg: ExecConfig) -> UseCaseResult {
+    let res = frame_graph(cfg).analytic();
+    UseCaseResult::from_ledger("surveillance (analytic)", res.ledger, eq_ops())
+}
+
+/// Stream `frames` successive frames through the scheduler (§IV-A run
+/// continuously over a flight).
+pub fn run_stream(cfg: ExecConfig, frames: usize) -> StreamResult {
+    stream_graph("surveillance", &frame_graph(cfg), frames, eq_ops())
 }
 
 /// OpenRISC-1200-equivalent operations of the §IV-A workload (definition
@@ -79,7 +125,7 @@ pub fn eq_ops() -> u64 {
         })
         .sum();
     let crypto = crypto_bytes * SW_AES_XTS_CPB_1CORE;
-    let other: f64 = layers.iter().map(layer_epilogue_cycles).sum::<f64>() + 20_000.0;
+    let other: f64 = layers.iter().map(layer_epilogue_cycles).sum::<f64>() + HEAD_CYCLES;
     ((conv + crypto + other) * OR1200_FACTOR) as u64
 }
 
@@ -170,4 +216,8 @@ mod tests {
         assert!(share(&l[4]) > share(&l[0]), "ext-mem share must grow");
         assert!(share(&l[4]) > 0.2, "ext-mem share at best rung {}", share(&l[4]));
     }
+
+    // The scheduled-vs-analytic 5 % calibration and the streaming
+    // speedup/never-slower contracts are asserted centrally, across all
+    // use cases and rungs, in rust/tests/scheduler.rs.
 }

@@ -59,14 +59,26 @@ impl HwceJob {
 /// lower-priority peripheral path).
 pub const JOB_CONFIG_CYCLES: u64 = 16;
 
-/// The HWCE device model: job queue of two, busy-until tracking.
+/// Job-queue depth (the controller register file "can host a queue of two
+/// jobs").
+pub const QUEUE_DEPTH: usize = 2;
+
+/// The HWCE device model: job queue of two, busy-until tracking, and
+/// issuing-core stall accounting.
 #[derive(Debug, Default)]
 pub struct Hwce {
     busy_until: u64,
-    queued: usize,
+    /// Completion times of queued jobs, ascending by construction; entries
+    /// drain as `now` passes them, so queue pressure only exists while both
+    /// slots genuinely hold unfinished jobs. `now` is the issuing core's
+    /// clock and is expected to be non-decreasing across offloads.
+    queue: Vec<u64>,
     /// Total cycles spent active (for energy integration).
     pub active_cycles: u64,
     pub jobs_done: u64,
+    /// Cycles the issuing core spent blocked on a full job queue (it must
+    /// hold the descriptor until a register-file slot frees).
+    pub stall_cycles: u64,
 }
 
 impl Hwce {
@@ -75,14 +87,19 @@ impl Hwce {
     }
 
     /// Offload `job` at time `now`; returns the completion cycle. If both
-    /// queue slots are full the caller (controller core) blocks until one
-    /// frees — reflected in the returned start time.
+    /// queue slots hold unfinished jobs the issuing core blocks until one
+    /// frees — accounted in [`Hwce::stall_cycles`]. (The engine itself
+    /// serializes on `busy_until` regardless; the queue models when the
+    /// *core* is released, which the saturating counter this replaces
+    /// never did, as it counted completed jobs as occupants forever.)
     pub fn offload(&mut self, now: u64, job: HwceJob, eu: Option<&mut EventUnit>) -> u64 {
         let cycles = simulate_tile_cycles(job);
-        let start = if self.queued >= 2 { self.busy_until } else { now.max(self.busy_until) };
-        let done = start.max(now) + JOB_CONFIG_CYCLES + cycles;
+        let issue_at = crate::cluster::accel_queue_issue_at(&mut self.queue, QUEUE_DEPTH, now);
+        self.stall_cycles += issue_at - now;
+        let start = self.busy_until.max(issue_at).max(now);
+        let done = start + JOB_CONFIG_CYCLES + cycles;
         self.busy_until = done;
-        self.queued = (self.queued + 1).min(2);
+        self.queue.push(done);
         self.active_cycles += cycles;
         self.jobs_done += 1;
         if let Some(eu) = eu {
@@ -117,6 +134,48 @@ mod tests {
         let d1 = hwce.offload(0, job, None);
         let d2 = hwce.offload(0, job, None);
         assert!(d2 > d1);
+    }
+
+    /// Regression for the saturating-counter bug: the queue must drain as
+    /// jobs complete. After two offloads have long finished, a third must
+    /// issue immediately at `now` with no core stall (the old counter
+    /// stayed at 2 forever, claiming permanent queue pressure).
+    #[test]
+    fn queue_drains_after_jobs_complete() {
+        let mut hwce = Hwce::new();
+        let job = HwceJob { w: 16, h: 16, k: 3, prec: WeightPrec::W16, qf: 8 };
+        let d1 = hwce.offload(0, job, None);
+        let d2 = hwce.offload(0, job, None);
+        assert!(d2 > d1);
+        let stall_after_two = hwce.stall_cycles;
+        // Far in the future, both queue slots are free again.
+        let now = d2 + 1_000_000;
+        let d3 = hwce.offload(now, job, None);
+        assert_eq!(
+            d3,
+            now + JOB_CONFIG_CYCLES + simulate_tile_cycles(job),
+            "a free queue must not delay the job"
+        );
+        assert_eq!(hwce.stall_cycles, stall_after_two, "no stall on a drained queue");
+    }
+
+    /// With more than two back-to-back offloads at the same `now`, the
+    /// third and later block the issuing core on queue slots (depth 2):
+    /// completions serialize and the core-stall time is accounted.
+    #[test]
+    fn queue_depth_two_blocks_third_job() {
+        let mut hwce = Hwce::new();
+        let job = HwceJob { w: 16, h: 16, k: 3, prec: WeightPrec::W16, qf: 8 };
+        let per_job = JOB_CONFIG_CYCLES + simulate_tile_cycles(job);
+        let mut last = 0;
+        for _ in 0..4 {
+            last = hwce.offload(0, job, None);
+        }
+        assert_eq!(last, 4 * per_job);
+        assert_eq!(hwce.jobs_done, 4);
+        // jobs 1+2 issue at 0; job 3 waits for job 1 (1·per_job), job 4
+        // waits for job 2 (2·per_job).
+        assert_eq!(hwce.stall_cycles, 3 * per_job, "core must stall on full queue");
     }
 
     #[test]

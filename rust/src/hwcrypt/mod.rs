@@ -105,14 +105,7 @@ impl Hwcrypt {
         bytes: usize,
         eu: Option<&mut EventUnit>,
     ) -> u64 {
-        self.queue.retain(|&d| d > now);
-        let queue_ready = if self.queue.len() >= QUEUE_DEPTH {
-            let mut v = self.queue.clone();
-            v.sort_unstable();
-            v[self.queue.len() - QUEUE_DEPTH]
-        } else {
-            now
-        };
+        let queue_ready = crate::cluster::accel_queue_issue_at(&mut self.queue, QUEUE_DEPTH, now);
         let cycles = op.cycles(bytes);
         let start = self.busy_until.max(queue_ready).max(now);
         let done = start + JOB_CONFIG_CYCLES + cycles;

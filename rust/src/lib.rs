@@ -18,9 +18,40 @@
 //! * **L1 (python/compile/kernels/hwce.py, build time only)** — a Pallas
 //!   kernel mirroring the HWCE multi-precision fixed-point datapath.
 //!
+//! ## Execution model: job graphs on an event-driven scheduler
+//!
+//! The secure-analytics use cases of §IV ([`coordinator`]) do not sum phase
+//! times analytically; they *emit job graphs*. A
+//! [`coordinator::GraphBuilder`] turns each pipeline phase (convolution,
+//! XTS/sponge cipher run, software kernel, cluster-DMA stage, external
+//! flash/FRAM transfer) into a typed [`soc::sched::Job`] bound to one of
+//! the SoC's engines — cores, HWCE, the two HWCRYPT datapaths, the cluster
+//! DMA, and per-interface uDMA channels — with explicit data dependencies.
+//! [`soc::sched::Scheduler`] then advances simulated time through a
+//! binary-heap event queue: engines execute one job at a time, cluster
+//! engines share the operating mode of §III-A (with the 10 µs FLL relock
+//! charged on every switch), and the [`energy::EnergyLedger`] integrates
+//! per-component power over each busy interval. Cross-engine concurrency —
+//! double-buffered DMA, I/O prefetch under compute, next-layer weight
+//! decryption under the current convolution — *emerges from the schedule*;
+//! the paper's per-phase cycle measurements (§III) survive as each
+//! engine's service-time model, and [`soc::sched::JobGraph::analytic`]
+//! keeps the old phase-summation model as the calibration reference
+//! (scheduled results stay within 5 % of it; see `rust/tests/scheduler.rs`).
+//!
+//! Streaming: [`soc::sched::JobGraph::repeat`] concatenates N frames of a
+//! use case, and the scheduler pipelines them through the shared engines —
+//! frame *f+1* fills the I/O stalls of frame *f*. The `fulmine stream`
+//! subcommand and `bench_scheduler` report the resulting frames/s, pJ/op
+//! and engine utilization.
+//!
 //! At runtime the rust binary loads `artifacts/*.hlo.txt` through the PJRT C
-//! API ([`runtime`]) and drives the simulated SoC through [`coordinator`];
-//! python never executes on the request path.
+//! API ([`runtime`]; gated behind the `pjrt` feature, with an explanatory
+//! stub in offline builds) and drives the simulated SoC through
+//! [`coordinator`]; python never executes on the request path.
+//!
+//! See `ARCHITECTURE.md` at the repository root for the layer map and the
+//! job-graph/scheduler design notes.
 
 pub mod apps;
 #[doc(hidden)]

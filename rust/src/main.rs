@@ -12,6 +12,10 @@
 //!   artifacts     — list and compile the AOT artifacts (PJRT smoke test)
 //!   infer <name>  — execute one artifact with generated inputs, print a digest
 //!   ablations     — run the surveillance ablation sweep
+//!   stream <usecase> [--frames N] [--config RUNG]
+//!                 — pipeline N frames through the event-driven SoC
+//!                   scheduler (usecase: surveillance|facedet|seizure;
+//!                   RUNG: ladder index or label substring, default best)
 
 use anyhow::{bail, Result};
 use fulmine::apps::params::{gen_params, xorshift_i16};
@@ -20,9 +24,32 @@ use fulmine::runtime::{default_artifact_dir, Runtime, TensorI16};
 
 fn usage() -> ! {
     eprintln!(
-        "usage: fulmine <table1|fig7|sec3b|fig8a|sec3c|fig8b|fig10|fig11|fig12|table2|all|artifacts|infer <name>|ablations>"
+        "usage: fulmine <table1|fig7|sec3b|fig8a|sec3c|fig8b|fig10|fig11|fig12|table2|all|artifacts|infer <name>|ablations|stream <usecase> [--frames N] [--config RUNG]>"
     );
     std::process::exit(2);
+}
+
+/// Parse the `stream` subcommand's flags: `<usecase> [--frames N]
+/// [--config RUNG]`.
+fn parse_stream_args(args: &[String]) -> Result<(String, usize, Option<String>)> {
+    let usecase = args.first().cloned().unwrap_or_else(|| usage());
+    let mut frames = 8usize;
+    let mut config: Option<String> = None;
+    let mut it = args[1..].iter();
+    while let Some(flag) = it.next() {
+        match flag.as_str() {
+            "--frames" => {
+                let v = it.next().ok_or_else(|| anyhow::anyhow!("--frames needs a value"))?;
+                frames = v.parse().map_err(|_| anyhow::anyhow!("bad --frames value {v:?}"))?;
+            }
+            "--config" => {
+                let v = it.next().ok_or_else(|| anyhow::anyhow!("--config needs a value"))?;
+                config = Some(v.clone());
+            }
+            other => bail!("unknown stream flag {other:?}"),
+        }
+    }
+    Ok((usecase, frames, config))
 }
 
 fn main() -> Result<()> {
@@ -40,6 +67,13 @@ fn main() -> Result<()> {
         "fig12" => print!("{}", report::fig12()),
         "table2" => print!("{}", report::table2()),
         "all" => print!("{}", report::all_reports()),
+        "stream" => {
+            let (usecase, frames, config) = parse_stream_args(&args[1..])?;
+            match report::stream_report(&usecase, frames, config.as_deref()) {
+                Ok(s) => print!("{s}"),
+                Err(e) => bail!("{e}"),
+            }
+        }
         "ablations" => {
             for (label, r) in report::surveillance_ablations() {
                 println!(
@@ -71,9 +105,15 @@ fn main() -> Result<()> {
             let Some(meta) = rt.meta(name).cloned() else {
                 bail!("unknown artifact {name}; try `fulmine artifacts`");
             };
+            let Some(x_shape) = meta.input_shapes.first() else {
+                bail!(
+                    "artifact {name} declares no input shapes in its manifest; \
+                     cannot generate inputs (regenerate it with `make artifacts`)"
+                );
+            };
             let x = TensorI16::new(
-                meta.input_shapes[0].clone(),
-                xorshift_i16(7, meta.input_shapes[0].iter().product(), -2048, 2047),
+                x_shape.clone(),
+                xorshift_i16(7, x_shape.iter().product(), -2048, 2047),
             );
             let mut inputs = vec![x];
             inputs.extend(gen_params(&meta.input_shapes[1..], meta.simd, 1));

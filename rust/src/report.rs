@@ -3,7 +3,8 @@
 //! the `fulmine` CLI and the bench harness print them, and integration
 //! tests assert the comparative shape (who wins, by roughly what factor).
 
-use crate::coordinator::{facedet, seizure, surveillance, ExecConfig, UseCaseResult};
+use crate::coordinator::{facedet, seizure, surveillance, ExecConfig, StreamResult, UseCaseResult};
+use crate::soc::sched::Engine;
 use crate::crypto::sponge::SpongeConfig;
 use crate::energy::Category;
 use crate::hwce::golden::WeightPrec;
@@ -395,6 +396,84 @@ pub fn table2() -> String {
     s
 }
 
+/// A streamable use case: its configuration rungs and streaming entrypoint.
+type StreamFn = fn(ExecConfig, usize) -> StreamResult;
+
+fn usecase_entry(usecase: &str) -> Option<(Vec<(&'static str, ExecConfig)>, StreamFn)> {
+    match usecase {
+        "surveillance" => Some((ExecConfig::ladder(), surveillance::run_stream as StreamFn)),
+        "facedet" => Some((ExecConfig::ladder(), facedet::run_stream as StreamFn)),
+        "seizure" => Some((seizure::rung_configs(), seizure::run_stream as StreamFn)),
+        _ => None,
+    }
+}
+
+/// Resolve a `--config` selector (rung index or case-insensitive label
+/// substring) against a use case's rungs; defaults to the best rung.
+fn select_rung(
+    rungs: Vec<(&'static str, ExecConfig)>,
+    selector: Option<&str>,
+) -> Result<(&'static str, ExecConfig), String> {
+    let Some(sel) = selector else {
+        return Ok(*rungs.last().expect("every use case has rungs"));
+    };
+    if let Ok(i) = sel.parse::<usize>() {
+        return rungs
+            .get(i)
+            .copied()
+            .ok_or_else(|| format!("rung index {i} out of range (0..{})", rungs.len()));
+    }
+    let needle = sel.to_lowercase();
+    rungs
+        .iter()
+        .find(|(label, _)| label.to_lowercase().contains(&needle))
+        .copied()
+        .ok_or_else(|| {
+            let names: Vec<&str> = rungs.iter().map(|(l, _)| *l).collect();
+            format!("no rung matches {sel:?}; available: {names:?} or an index")
+        })
+}
+
+/// The `fulmine stream` report: pipeline `frames` frames of a use case
+/// through the event-driven scheduler and compare against back-to-back
+/// single-frame runs.
+pub fn stream_report(usecase: &str, frames: usize, rung: Option<&str>) -> Result<String, String> {
+    let (rungs, run_stream) = usecase_entry(usecase)
+        .ok_or_else(|| format!("unknown use case {usecase:?}; try surveillance|facedet|seizure"))?;
+    if frames == 0 {
+        return Err("--frames must be at least 1".to_string());
+    }
+    let (label, cfg) = select_rung(rungs, rung)?;
+    let r = run_stream(cfg, frames);
+    let mut s = String::new();
+    writeln!(s, "== stream: {usecase} @ {label}, {frames} frames ==").unwrap();
+    writeln!(
+        s,
+        "single frame {:>9.4} s | {frames} streamed {:>9.4} s  ({:.3} frames/s, {:.2}x vs back-to-back)",
+        r.single_frame_s, r.time_s, r.fps, r.speedup
+    )
+    .unwrap();
+    writeln!(
+        s,
+        "energy {:>9.4} mJ total, {:>8.4} mJ/frame, {:>7.2} pJ/op | {} mode switches",
+        r.energy_mj,
+        r.energy_mj / frames as f64,
+        r.pj_per_op,
+        r.mode_switches
+    )
+    .unwrap();
+    write!(s, "engine utilization:").unwrap();
+    for e in Engine::ALL {
+        let busy = r.busy_s[e.index()];
+        if busy > 0.0 {
+            write!(s, "  {}={:.0}%", e.name(), busy / r.time_s * 100.0).unwrap();
+        }
+    }
+    writeln!(s).unwrap();
+    writeln!(s, "{}", r.ledger.report(&format!("{usecase} x{frames}"))).unwrap();
+    Ok(s)
+}
+
 /// Everything, in paper order.
 pub fn all_reports() -> String {
     [
@@ -458,6 +537,21 @@ mod tests {
         // the model-derived Fulmine rows must be present
         assert!(t.contains("Fulmine CRY-CNN-SW"));
         assert!(t.contains("Fulmine SW"));
+    }
+
+    #[test]
+    fn stream_report_renders_and_selects_rungs() {
+        // default rung (best)
+        let s = stream_report("seizure", 2, None).unwrap();
+        assert!(s.contains("2 frames"));
+        // by index and by label substring
+        assert!(stream_report("surveillance", 1, Some("0")).is_ok());
+        assert!(stream_report("facedet", 1, Some("hwcrypt")).is_ok());
+        // errors
+        assert!(stream_report("surveillance", 1, Some("99")).is_err());
+        assert!(stream_report("surveillance", 1, Some("nope")).is_err());
+        assert!(stream_report("surveillance", 0, None).is_err());
+        assert!(stream_report("bogus", 1, None).is_err());
     }
 
     #[test]

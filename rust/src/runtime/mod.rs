@@ -10,6 +10,24 @@ use anyhow::{anyhow, bail, Context, Result};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
+// The real PJRT bindings need the XLA C library, which the offline build
+// environment does not provide. Default builds use a stub with the same
+// surface that fails at client creation with a clear message; enabling the
+// `pjrt` feature (plus adding the `xla` bindings crate to Cargo.toml)
+// switches to the real path without touching this module's code.
+#[cfg(not(feature = "pjrt"))]
+use self::pjrt_stub as xla;
+
+// The offline registry does not carry the `xla` bindings, so the feature
+// cannot declare the dependency itself. Turn the otherwise-cryptic
+// unresolved-crate errors into one actionable message.
+#[cfg(feature = "pjrt")]
+compile_error!(
+    "the `pjrt` feature needs the `xla` bindings crate (and the XLA C library): \
+     add `xla` to [dependencies] in Cargo.toml, then delete this compile_error! \
+     in rust/src/runtime/mod.rs"
+);
+
 /// Metadata for one AOT artifact, parsed from `artifacts/manifest.txt`
 /// (line format: `name|file|kind|k|simd|qf|shape;shape;...`).
 #[derive(Debug, Clone)]
@@ -214,6 +232,107 @@ pub fn default_artifact_dir() -> PathBuf {
     let mut p = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
     p.push("artifacts");
     p
+}
+
+/// Stand-in for the `xla` bindings in offline builds (no `pjrt` feature):
+/// the same types and signatures the runtime uses, all failing at
+/// [`pjrt_stub::PjRtClient::cpu`] so [`Runtime::open`] reports the missing
+/// feature instead of the build breaking on an unavailable native library.
+#[cfg(not(feature = "pjrt"))]
+mod pjrt_stub {
+    #[derive(Debug)]
+    pub struct Error(pub &'static str);
+
+    impl std::fmt::Display for Error {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            f.write_str(self.0)
+        }
+    }
+
+    impl std::error::Error for Error {}
+
+    const NO_PJRT: &str =
+        "fulmine was built without the `pjrt` feature; the PJRT runtime is unavailable";
+
+    pub enum ElementType {
+        S16,
+    }
+
+    pub struct Literal;
+
+    impl Literal {
+        pub fn create_from_shape_and_untyped_data(
+            _ty: ElementType,
+            _shape: &[usize],
+            _data: &[u8],
+        ) -> Result<Self, Error> {
+            Err(Error(NO_PJRT))
+        }
+
+        pub fn to_tuple(self) -> Result<Vec<Literal>, Error> {
+            Err(Error(NO_PJRT))
+        }
+
+        pub fn array_shape(&self) -> Result<ArrayShape, Error> {
+            Err(Error(NO_PJRT))
+        }
+
+        pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
+            Err(Error(NO_PJRT))
+        }
+    }
+
+    pub struct ArrayShape;
+
+    impl ArrayShape {
+        pub fn dims(&self) -> &[i64] {
+            &[]
+        }
+    }
+
+    pub struct PjRtClient;
+
+    impl PjRtClient {
+        pub fn cpu() -> Result<Self, Error> {
+            Err(Error(NO_PJRT))
+        }
+
+        pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+            Err(Error(NO_PJRT))
+        }
+    }
+
+    pub struct PjRtLoadedExecutable;
+
+    impl PjRtLoadedExecutable {
+        pub fn execute<L>(&self, _inputs: &[L]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+            Err(Error(NO_PJRT))
+        }
+    }
+
+    pub struct PjRtBuffer;
+
+    impl PjRtBuffer {
+        pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+            Err(Error(NO_PJRT))
+        }
+    }
+
+    pub struct HloModuleProto;
+
+    impl HloModuleProto {
+        pub fn from_text_file(_path: &str) -> Result<Self, Error> {
+            Err(Error(NO_PJRT))
+        }
+    }
+
+    pub struct XlaComputation;
+
+    impl XlaComputation {
+        pub fn from_proto(_proto: &HloModuleProto) -> Self {
+            XlaComputation
+        }
+    }
 }
 
 #[cfg(test)]

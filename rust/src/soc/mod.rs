@@ -1,11 +1,14 @@
 //! The SOC domain and chip-level services (§II, §II-A, §III-A):
 //! operating modes and DVFS tables ([`opmodes`]), the power-mode state
-//! machine of Table I and per-component power model ([`power`]), and the
-//! FLL/uDMA models ([`udma`]).
+//! machine of Table I and per-component power model ([`power`]), the
+//! FLL/uDMA models ([`udma`]), and the event-driven whole-SoC scheduler
+//! ([`sched`]) that the coordinator use cases run on.
 
 pub mod opmodes;
 pub mod power;
+pub mod sched;
 pub mod udma;
 
 pub use opmodes::{OperatingMode, OperatingPoint};
 pub use power::{Component, PowerModel};
+pub use sched::{Engine, Job, JobGraph, JobId, SchedResult, Scheduler};

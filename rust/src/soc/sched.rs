@@ -1,0 +1,625 @@
+//! Event-driven SoC scheduler: the whole chip as a set of [`Engine`]
+//! resources consuming typed [`Job`]s from a dependency graph.
+//!
+//! The coordinator use cases (§IV) *emit* a [`JobGraph`] — convolutions,
+//! cipher runs, software phases, DMA and external-memory transfers with
+//! their data dependencies — and [`Scheduler::run`] advances simulated time
+//! through a binary-heap event queue, dispatching each job as soon as its
+//! dependencies have completed, its engine is free, and the cluster
+//! operating mode allows it. Cross-engine concurrency (double-buffered DMA,
+//! uDMA I/O under compute, HWCRYPT decrypting the next layer's weights
+//! while the HWCE convolves the current one) falls out of the schedule
+//! instead of being approximated by an analytic overlap term.
+//!
+//! ## Engines
+//!
+//! One entry per serially-busy resource of the Fulmine SoC: the core
+//! complex (software jobs run on all configured cores at once, so the
+//! complex is one resource), the HWCE, the two HWCRYPT datapaths, the
+//! cluster DMA, and one uDMA channel per external interface (the uDMA
+//! serves its peripherals on independent channels, §II).
+//!
+//! ## Operating modes
+//!
+//! The cluster-domain engines (cores + accelerators) share one clock and
+//! one operating mode (§III-A). Jobs carry the [`OperatingPoint`] they run
+//! at; the scheduler serializes cluster jobs of *different* modes and
+//! charges the 10 µs FLL relock ([`MODE_SWITCH_S`]) on every switch. A
+//! switch is only granted to the lowest-id ready cluster job, which keeps
+//! the mode sequence faithful to program order and prevents later frames
+//! of a stream from starving earlier ones. SOC-domain engines (cluster
+//! DMA, uDMA) run in any mode — the uDMA works "even when the cluster is
+//! in sleep mode" (§II).
+//!
+//! ## Energy
+//!
+//! Each job lists per-component charges; the busy interval is integrated
+//! on the [`EnergyLedger`] at the job's operating point. Leakage and
+//! external-memory standby are charged over the makespan. Active energy is
+//! therefore schedule-independent; only the Idle/standby terms (≈1.5 mW)
+//! vary with the schedule — which keeps scheduled results within a few
+//! percent of [`JobGraph::analytic`], the phase-summation model the
+//! figures of the paper were calibrated against.
+//!
+//! ## Streaming
+//!
+//! [`JobGraph::repeat`] concatenates N copies of a frame graph (dependency
+//! edges stay within each frame). Scheduling the combined graph pipelines
+//! successive frames through the engines: frame *f+1*'s I/O and
+//! accelerator phases fill the stalls of frame *f*, which is where the
+//! multi-frame throughput of `fulmine stream` comes from.
+
+use crate::energy::{Category, EnergyLedger};
+use crate::soc::opmodes::{OperatingMode, OperatingPoint, MODE_SWITCH_S, V_NOM};
+use crate::soc::power::{Component, FLASH_STANDBY_MW, FRAM_STANDBY_MW};
+use std::cmp::Ordering;
+use std::collections::{BTreeSet, BinaryHeap};
+
+/// A serially-busy hardware resource of the SoC.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Engine {
+    /// The OR10N core complex (a software job occupies all its cores).
+    Cores,
+    /// HWCE convolution engine.
+    Hwce,
+    /// HWCRYPT AES datapath.
+    HwcryptAes,
+    /// HWCRYPT KECCAK sponge datapath.
+    HwcryptKec,
+    /// Cluster DMA (L2 ↔ TCDM).
+    ClusterDma,
+    /// uDMA channel serving the quad-SPI flash.
+    UdmaFlash,
+    /// uDMA channel serving the FRAM.
+    UdmaFram,
+}
+
+/// Number of scheduled engines.
+pub const N_ENGINES: usize = Engine::ALL.len();
+
+impl Engine {
+    /// Every engine, in declaration (= discriminant) order.
+    pub const ALL: [Engine; 7] = [
+        Engine::Cores,
+        Engine::Hwce,
+        Engine::HwcryptAes,
+        Engine::HwcryptKec,
+        Engine::ClusterDma,
+        Engine::UdmaFlash,
+        Engine::UdmaFram,
+    ];
+
+    /// Dense index for per-engine arrays (the enum discriminant, which by
+    /// construction matches the position in [`Engine::ALL`]).
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    /// Cluster-domain engines share the cluster clock and therefore the
+    /// operating mode; SOC-domain movers do not.
+    pub fn mode_locked(self) -> bool {
+        matches!(self, Engine::Cores | Engine::Hwce | Engine::HwcryptAes | Engine::HwcryptKec)
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Engine::Cores => "cores",
+            Engine::Hwce => "hwce",
+            Engine::HwcryptAes => "hwcrypt-aes",
+            Engine::HwcryptKec => "hwcrypt-kec",
+            Engine::ClusterDma => "cluster-dma",
+            Engine::UdmaFlash => "udma-flash",
+            Engine::UdmaFram => "udma-fram",
+        }
+    }
+}
+
+/// Identifier of a job within its [`JobGraph`] (its insertion index).
+pub type JobId = usize;
+
+/// One unit of work bound to an engine: a service time at an operating
+/// point, dependencies on earlier jobs, and the energy charges to integrate
+/// over the busy interval (`(category, component, multiplicity)` — e.g. a
+/// 4-core software phase charges `Component::Core` with multiplicity 4).
+#[derive(Debug, Clone)]
+pub struct Job {
+    pub label: &'static str,
+    pub engine: Engine,
+    pub op: OperatingPoint,
+    pub duration_s: f64,
+    pub deps: Vec<JobId>,
+    pub charges: Vec<(Category, Component, f64)>,
+}
+
+/// A dependency graph of jobs. Acyclic by construction: dependencies must
+/// point at already-pushed jobs.
+#[derive(Debug, Clone)]
+pub struct JobGraph {
+    pub jobs: Vec<Job>,
+    /// Whether external flash/FRAM are attached (their standby power is
+    /// charged over the whole run); the pacemaker-class seizure platform
+    /// has none (§IV-C).
+    pub ext_mem_present: bool,
+}
+
+impl Default for JobGraph {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl JobGraph {
+    pub fn new() -> Self {
+        JobGraph { jobs: Vec::new(), ext_mem_present: true }
+    }
+
+    /// Append a job; its dependencies must reference earlier jobs, and all
+    /// jobs of a graph must share one supply voltage (leakage is charged
+    /// graph-wide at the first job's VDD).
+    pub fn push(&mut self, job: Job) -> JobId {
+        let id = self.jobs.len();
+        for &d in &job.deps {
+            assert!(d < id, "job {id} depends on not-yet-pushed job {d}");
+        }
+        if let Some(first) = self.jobs.first() {
+            debug_assert!(
+                job.op.vdd == first.op.vdd,
+                "job {id} at {} V in a {} V graph — one graph, one supply",
+                job.op.vdd,
+                first.op.vdd
+            );
+        }
+        self.jobs.push(job);
+        id
+    }
+
+    pub fn len(&self) -> usize {
+        self.jobs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.jobs.is_empty()
+    }
+
+    /// Concatenate `frames` copies of this graph (streaming): dependency
+    /// edges stay within each copy; pipelining across copies comes from the
+    /// shared engines at schedule time.
+    pub fn repeat(&self, frames: usize) -> JobGraph {
+        let n = self.jobs.len();
+        let mut out = JobGraph {
+            jobs: Vec::with_capacity(n * frames),
+            ext_mem_present: self.ext_mem_present,
+        };
+        for f in 0..frames {
+            let off = f * n;
+            for job in &self.jobs {
+                let mut j = job.clone();
+                for d in &mut j.deps {
+                    *d += off;
+                }
+                out.jobs.push(j);
+            }
+        }
+        out
+    }
+
+    /// The supply voltage the graph runs at (jobs all share the builder's
+    /// `ExecConfig`); nominal when the graph is empty.
+    fn vdd(&self) -> f64 {
+        self.jobs.first().map(|j| j.op.vdd).unwrap_or(V_NOM)
+    }
+
+    /// Integrate every job's charges plus makespan-proportional leakage and
+    /// external-memory standby into a ledger whose elapsed time is
+    /// `makespan_s`.
+    fn finish_ledger(&self, makespan_s: f64) -> EnergyLedger {
+        let mut ledger = EnergyLedger::new();
+        for job in &self.jobs {
+            for &(cat, comp, mult) in &job.charges {
+                ledger.charge(cat, comp, job.op, job.duration_s * mult);
+            }
+        }
+        // Leakage is mode-independent (it scales only with VDD), so one
+        // charge over the makespan equals the per-phase charges of the
+        // analytic model.
+        let leak_op = OperatingPoint::new(OperatingMode::Sw, self.vdd());
+        ledger.charge(Category::Idle, Component::ClusterLeak, leak_op, makespan_s);
+        ledger.charge(Category::Idle, Component::SocLeak, leak_op, makespan_s);
+        if self.ext_mem_present {
+            ledger.charge_mj(Category::ExtMem, (FLASH_STANDBY_MW + FRAM_STANDBY_MW) * makespan_s);
+        }
+        ledger.advance(makespan_s);
+        ledger
+    }
+
+    /// Per-engine total service time (schedule-independent).
+    fn busy_totals(&self) -> [f64; N_ENGINES] {
+        let mut busy = [0.0; N_ENGINES];
+        for job in &self.jobs {
+            busy[job.engine.index()] += job.duration_s;
+        }
+        busy
+    }
+
+    /// The phase-summation reference model (the pre-scheduler coordinator):
+    /// cluster jobs serialize in emission order with FLL relock on every
+    /// mode change, while DMA/uDMA time accumulates in an I/O backlog that
+    /// the cluster phases drain (double buffering); whatever backlog
+    /// survives lands on the critical path at the end. This reproduces the
+    /// analytic `Pipeline` numbers the Fig. 10/11/12 bands were calibrated
+    /// against, and serves as the correctness reference for
+    /// [`Scheduler::run`] (see `rust/tests/scheduler.rs`).
+    pub fn analytic(&self) -> SchedResult {
+        let mut elapsed = 0.0f64;
+        let mut backlog = 0.0f64;
+        let mut last_mode: Option<OperatingMode> = None;
+        let mut switches = 0u64;
+        for job in &self.jobs {
+            if job.engine.mode_locked() {
+                if last_mode != Some(job.op.mode) {
+                    if last_mode.is_some() {
+                        switches += 1;
+                        elapsed += MODE_SWITCH_S;
+                        backlog = (backlog - MODE_SWITCH_S).max(0.0);
+                    }
+                    last_mode = Some(job.op.mode);
+                }
+                elapsed += job.duration_s;
+                backlog = (backlog - job.duration_s).max(0.0);
+            } else {
+                backlog += job.duration_s;
+            }
+        }
+        elapsed += backlog;
+        SchedResult {
+            ledger: self.finish_ledger(elapsed),
+            makespan_s: elapsed,
+            mode_switches: switches,
+            busy_s: self.busy_totals(),
+            n_jobs: self.jobs.len(),
+        }
+    }
+}
+
+/// Outcome of scheduling a [`JobGraph`].
+#[derive(Debug, Clone)]
+pub struct SchedResult {
+    pub ledger: EnergyLedger,
+    /// Completion time of the last job (simulated seconds).
+    pub makespan_s: f64,
+    /// FLL relocks performed.
+    pub mode_switches: u64,
+    /// Total busy time per engine, indexed by [`Engine::index`].
+    pub busy_s: [f64; N_ENGINES],
+    pub n_jobs: usize,
+}
+
+/// Completion event: min-heap by time (ties broken by job id) on top of
+/// `std`'s max-heap.
+struct Ev {
+    t: f64,
+    job: JobId,
+}
+
+impl PartialEq for Ev {
+    fn eq(&self, other: &Self) -> bool {
+        self.t == other.t && self.job == other.job
+    }
+}
+
+impl Eq for Ev {}
+
+impl Ord for Ev {
+    fn cmp(&self, other: &Self) -> Ordering {
+        other.t.total_cmp(&self.t).then_with(|| other.job.cmp(&self.job))
+    }
+}
+
+impl PartialOrd for Ev {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// The event-driven scheduler. Stateless: all state lives on the run.
+pub struct Scheduler;
+
+impl Scheduler {
+    /// Schedule `graph` to completion and return makespan, energy and
+    /// per-engine statistics. Deterministic: dispatch prefers the
+    /// lowest-id ready job, completion ties resolve by job id.
+    pub fn run(graph: &JobGraph) -> SchedResult {
+        let n = graph.jobs.len();
+        let mut indeg: Vec<usize> = Vec::with_capacity(n);
+        let mut children: Vec<Vec<JobId>> = vec![Vec::new(); n];
+        for (id, job) in graph.jobs.iter().enumerate() {
+            indeg.push(job.deps.len());
+            for &d in &job.deps {
+                children[d].push(id);
+            }
+        }
+        let mut ready: BTreeSet<JobId> = (0..n).filter(|&i| indeg[i] == 0).collect();
+        let mut heap: BinaryHeap<Ev> = BinaryHeap::new();
+        let mut engine_busy = [false; N_ENGINES];
+        let mut current_mode: Option<OperatingMode> = None;
+        let mut mode_ready_at = 0.0f64;
+        let mut mode_locked_running = 0usize;
+        let mut switches = 0u64;
+        let mut n_done = 0usize;
+        let mut t = 0.0f64;
+        let mut makespan = 0.0f64;
+
+        loop {
+            // Dispatch everything startable at time t, lowest job id first.
+            loop {
+                let lowest_ml_ready =
+                    ready.iter().copied().find(|&j| graph.jobs[j].engine.mode_locked());
+                let mut pick: Option<(JobId, bool)> = None; // (job, switches mode)
+                for &j in ready.iter() {
+                    let job = &graph.jobs[j];
+                    if engine_busy[job.engine.index()] {
+                        continue;
+                    }
+                    if job.engine.mode_locked() {
+                        if current_mode == Some(job.op.mode) {
+                            pick = Some((j, false));
+                            break;
+                        }
+                        // A mode switch is granted only to the lowest-id
+                        // ready cluster job, and only once the cluster
+                        // engines have drained.
+                        if mode_locked_running == 0 && Some(j) == lowest_ml_ready {
+                            pick = Some((j, true));
+                            break;
+                        }
+                        continue;
+                    }
+                    pick = Some((j, false));
+                    break;
+                }
+                let Some((j, switch)) = pick else { break };
+                ready.remove(&j);
+                let job = &graph.jobs[j];
+                let mut start = t;
+                if job.engine.mode_locked() {
+                    if switch {
+                        if current_mode.is_some() {
+                            switches += 1;
+                            mode_ready_at = t + MODE_SWITCH_S;
+                        }
+                        current_mode = Some(job.op.mode);
+                    }
+                    // The cluster sleeps while the FLL relocks.
+                    start = start.max(mode_ready_at);
+                    mode_locked_running += 1;
+                }
+                engine_busy[job.engine.index()] = true;
+                heap.push(Ev { t: start + job.duration_s, job: j });
+            }
+
+            // Advance simulated time to the next completion.
+            let Some(ev) = heap.pop() else { break };
+            t = ev.t;
+            makespan = makespan.max(t);
+            let job = &graph.jobs[ev.job];
+            engine_busy[job.engine.index()] = false;
+            if job.engine.mode_locked() {
+                mode_locked_running -= 1;
+            }
+            n_done += 1;
+            for &c in &children[ev.job] {
+                indeg[c] -= 1;
+                if indeg[c] == 0 {
+                    ready.insert(c);
+                }
+            }
+        }
+        assert_eq!(n_done, n, "scheduler stalled: {n_done} of {n} jobs completed");
+
+        SchedResult {
+            ledger: graph.finish_ledger(makespan),
+            makespan_s: makespan,
+            mode_switches: switches,
+            busy_s: graph.busy_totals(),
+            n_jobs: n,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job(engine: Engine, mode: OperatingMode, duration_s: f64, deps: &[JobId]) -> Job {
+        Job {
+            label: "test",
+            engine,
+            op: OperatingPoint::new(mode, 0.8),
+            duration_s,
+            deps: deps.to_vec(),
+            charges: vec![(Category::OtherSw, Component::Core, 1.0)],
+        }
+    }
+
+    #[test]
+    fn serial_chain_sums_durations() {
+        let mut g = JobGraph::new();
+        let a = g.push(job(Engine::Cores, OperatingMode::Sw, 1.0, &[]));
+        let b = g.push(job(Engine::Cores, OperatingMode::Sw, 2.0, &[a]));
+        g.push(job(Engine::Cores, OperatingMode::Sw, 3.0, &[b]));
+        let r = Scheduler::run(&g);
+        assert!((r.makespan_s - 6.0).abs() < 1e-12);
+        assert_eq!(r.mode_switches, 0);
+        assert!((r.busy_s[Engine::Cores.index()] - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn independent_engines_overlap() {
+        let mut g = JobGraph::new();
+        g.push(job(Engine::Cores, OperatingMode::Sw, 2.0, &[]));
+        g.push(job(Engine::UdmaFlash, OperatingMode::Sw, 1.5, &[]));
+        g.push(job(Engine::UdmaFram, OperatingMode::Sw, 1.0, &[]));
+        let r = Scheduler::run(&g);
+        assert!((r.makespan_s - 2.0).abs() < 1e-12, "I/O must hide under compute");
+    }
+
+    #[test]
+    fn same_engine_serializes() {
+        let mut g = JobGraph::new();
+        g.push(job(Engine::UdmaFram, OperatingMode::Sw, 1.0, &[]));
+        g.push(job(Engine::UdmaFram, OperatingMode::Sw, 1.0, &[]));
+        let r = Scheduler::run(&g);
+        assert!((r.makespan_s - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mode_switch_costs_relock() {
+        let mut g = JobGraph::new();
+        let a = g.push(job(Engine::Hwce, OperatingMode::KecCnnSw, 1.0, &[]));
+        let b = g.push(job(Engine::HwcryptAes, OperatingMode::CryCnnSw, 1.0, &[a]));
+        g.push(job(Engine::Hwce, OperatingMode::KecCnnSw, 1.0, &[b]));
+        let r = Scheduler::run(&g);
+        assert_eq!(r.mode_switches, 2);
+        assert!((r.makespan_s - (3.0 + 2.0 * MODE_SWITCH_S)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn different_mode_jobs_serialize_without_deps() {
+        // No dependency between them, but the shared cluster clock
+        // serializes a KEC-mode and a CRY-mode job.
+        let mut g = JobGraph::new();
+        g.push(job(Engine::Hwce, OperatingMode::KecCnnSw, 1.0, &[]));
+        g.push(job(Engine::HwcryptAes, OperatingMode::CryCnnSw, 1.0, &[]));
+        let r = Scheduler::run(&g);
+        assert!(r.makespan_s >= 2.0, "mode exclusivity violated: {}", r.makespan_s);
+        assert_eq!(r.mode_switches, 1);
+    }
+
+    #[test]
+    fn same_mode_engines_do_overlap() {
+        let mut g = JobGraph::new();
+        g.push(job(Engine::Hwce, OperatingMode::KecCnnSw, 2.0, &[]));
+        g.push(job(Engine::HwcryptKec, OperatingMode::KecCnnSw, 2.0, &[]));
+        let r = Scheduler::run(&g);
+        assert!((r.makespan_s - 2.0).abs() < 1e-12);
+        assert_eq!(r.mode_switches, 0);
+    }
+
+    #[test]
+    fn first_mode_entry_is_free() {
+        let mut g = JobGraph::new();
+        g.push(job(Engine::Hwce, OperatingMode::KecCnnSw, 1.0, &[]));
+        let r = Scheduler::run(&g);
+        assert_eq!(r.mode_switches, 0);
+        assert!((r.makespan_s - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn analytic_matches_run_on_serial_cluster_graph() {
+        let mut g = JobGraph::new();
+        let mut prev: Option<JobId> = None;
+        for i in 0..6 {
+            let mode = if i % 2 == 0 { OperatingMode::KecCnnSw } else { OperatingMode::CryCnnSw };
+            let engine = if i % 2 == 0 { Engine::Hwce } else { Engine::HwcryptAes };
+            let deps: Vec<JobId> = prev.into_iter().collect();
+            prev = Some(g.push(job(engine, mode, 0.5, &deps)));
+        }
+        let run = Scheduler::run(&g);
+        let ana = g.analytic();
+        assert!((run.makespan_s - ana.makespan_s).abs() < 1e-9);
+        assert_eq!(run.mode_switches, ana.mode_switches);
+        assert!((run.ledger.total_mj() - ana.ledger.total_mj()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn analytic_hides_io_behind_compute() {
+        let mut g = JobGraph::new();
+        g.push(job(Engine::UdmaFram, OperatingMode::Sw, 1.0, &[]));
+        g.push(job(Engine::Cores, OperatingMode::Sw, 3.0, &[]));
+        let ana = g.analytic();
+        assert!((ana.makespan_s - 3.0).abs() < 1e-12);
+        // I/O-dominated: the surplus lands on the critical path.
+        let mut g2 = JobGraph::new();
+        g2.push(job(Engine::UdmaFram, OperatingMode::Sw, 5.0, &[]));
+        g2.push(job(Engine::Cores, OperatingMode::Sw, 3.0, &[]));
+        let ana2 = g2.analytic();
+        assert!((ana2.makespan_s - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn repeat_streams_through_shared_engines() {
+        // frame: long compute + short store that depends on it
+        let mut g = JobGraph::new();
+        let c = g.push(job(Engine::Cores, OperatingMode::Sw, 2.0, &[]));
+        g.push(job(Engine::UdmaFram, OperatingMode::Sw, 1.0, &[c]));
+        let single = Scheduler::run(&g);
+        assert!((single.makespan_s - 3.0).abs() < 1e-12);
+        let four = Scheduler::run(&g.repeat(4));
+        // stores of frame f overlap compute of frame f+1: 4×2 + trailing 1
+        assert!((four.makespan_s - 9.0).abs() < 1e-12, "stream {}", four.makespan_s);
+        assert!(four.makespan_s < 4.0 * single.makespan_s);
+    }
+
+    #[test]
+    fn streaming_never_slower_than_serial_frames() {
+        let mut g = JobGraph::new();
+        let a = g.push(job(Engine::Hwce, OperatingMode::KecCnnSw, 0.3, &[]));
+        let b = g.push(job(Engine::HwcryptAes, OperatingMode::CryCnnSw, 0.2, &[a]));
+        g.push(job(Engine::UdmaFram, OperatingMode::Sw, 0.4, &[b]));
+        let single = Scheduler::run(&g).makespan_s;
+        for frames in [2usize, 5] {
+            let stream = Scheduler::run(&g.repeat(frames)).makespan_s;
+            assert!(
+                stream <= frames as f64 * single + 1e-9,
+                "{frames} frames: {stream} > {}",
+                frames as f64 * single
+            );
+        }
+    }
+
+    #[test]
+    fn busy_never_exceeds_makespan() {
+        let mut g = JobGraph::new();
+        let mut prev = Vec::new();
+        for i in 0..20 {
+            let e = Engine::ALL[i % N_ENGINES];
+            let deps: Vec<JobId> = prev.clone();
+            prev = vec![g.push(job(e, OperatingMode::Sw, 0.01 * (i + 1) as f64, &deps))];
+        }
+        let r = Scheduler::run(&g);
+        for e in Engine::ALL {
+            assert!(r.busy_s[e.index()] <= r.makespan_s + 1e-9, "{}", e.name());
+        }
+        let total: f64 = r.busy_s.iter().sum();
+        assert!(total <= r.makespan_s * N_ENGINES as f64 + 1e-9);
+    }
+
+    #[test]
+    fn empty_graph_is_trivial() {
+        let g = JobGraph::new();
+        let r = Scheduler::run(&g);
+        assert_eq!(r.makespan_s, 0.0);
+        assert_eq!(r.n_jobs, 0);
+        assert_eq!(r.ledger.total_mj(), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "not-yet-pushed")]
+    fn forward_dependency_rejected() {
+        let mut g = JobGraph::new();
+        g.push(job(Engine::Cores, OperatingMode::Sw, 1.0, &[3]));
+    }
+
+    #[test]
+    fn energy_charges_integrate_at_op() {
+        use crate::soc::power::PowerModel;
+        let mut g = JobGraph::new();
+        g.push(job(Engine::Cores, OperatingMode::Sw, 2.0, &[]));
+        let r = Scheduler::run(&g);
+        let op = OperatingPoint::new(OperatingMode::Sw, 0.8);
+        let expect = PowerModel::active_mw(Component::Core, op) * 2.0;
+        assert!((r.ledger.energy_mj(Category::OtherSw) - expect).abs() < 1e-9);
+        // leakage charged over the makespan
+        assert!(r.ledger.energy_mj(Category::Idle) > 0.0);
+    }
+}

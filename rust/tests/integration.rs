@@ -5,7 +5,8 @@
 use fulmine::apps::eeg;
 use fulmine::cluster::dma::{Dma, Transfer};
 use fulmine::cluster::event_unit::EventUnit;
-use fulmine::coordinator::{surveillance, ExecConfig, Pipeline};
+use fulmine::coordinator::{surveillance, ExecConfig, GraphBuilder};
+use fulmine::soc::sched::Scheduler;
 use fulmine::crypto::modes::XtsKey;
 use fulmine::crypto::sponge::{ae_decrypt, ae_encrypt, SpongeConfig};
 use fulmine::energy::Category;
@@ -126,23 +127,23 @@ fn eeg_detect_and_secure_collect() {
     assert!(ae_decrypt(SpongeConfig::MAX_RATE, &[1; 16], &[2; 16], &ct, &bad_tag).is_none());
 }
 
-/// The pipeline must respect mode capabilities: XTS in a KEC-only phase
+/// The scheduler must respect mode capabilities: XTS in a KEC-only phase
 /// forces a switch to CRY-CNN-SW (counted), and the SW config never
 /// switches at all.
 #[test]
-fn pipeline_mode_discipline() {
-    let mut hw = Pipeline::new(ExecConfig::with_hwce(WeightPrec::W16));
-    hw.conv(1_000_000, 3);
-    hw.xts(1024);
-    hw.conv(1_000_000, 3);
-    hw.xts(1024);
-    assert_eq!(hw.mode_switches, 3);
+fn scheduler_mode_discipline() {
+    let mut hw = GraphBuilder::new(ExecConfig::with_hwce(WeightPrec::W16));
+    let c1 = hw.conv(1_000_000, 3, &[]);
+    let x1 = hw.xts(1024, &[c1]);
+    let c2 = hw.conv(1_000_000, 3, &[x1]);
+    hw.xts(1024, &[c2]);
+    assert_eq!(Scheduler::run(&hw.build()).mode_switches, 3);
 
-    let mut sw = Pipeline::new(ExecConfig::sw_1core());
-    sw.conv(1_000_000, 3);
-    sw.xts(1024);
-    sw.sw(1000.0, 1.0);
-    assert_eq!(sw.mode_switches, 0);
+    let mut sw = GraphBuilder::new(ExecConfig::sw_1core());
+    let c = sw.conv(1_000_000, 3, &[]);
+    let x = sw.xts(1024, &[c]);
+    sw.sw(1000.0, 1.0, &[x]);
+    assert_eq!(Scheduler::run(&sw.build()).mode_switches, 0);
 }
 
 /// Sanity of the full surveillance ladder at a second voltage: the ordering
@@ -174,4 +175,16 @@ fn surveillance_ladder_holds_at_1v0() {
 fn all_reports_render() {
     let r = fulmine::report::all_reports();
     assert!(r.len() > 4000);
+}
+
+/// The streaming report renders for every use case and shows a ≥1×
+/// cross-frame speedup.
+#[test]
+fn stream_reports_render() {
+    for usecase in ["surveillance", "facedet", "seizure"] {
+        let s = fulmine::report::stream_report(usecase, 4, None)
+            .unwrap_or_else(|e| panic!("{usecase}: {e}"));
+        assert!(s.contains("frames"), "{usecase}: {s}");
+    }
+    assert!(fulmine::report::stream_report("nonsense", 4, None).is_err());
 }
