@@ -6,6 +6,9 @@
 //! 3. Cross-check one output pixel against the rust golden model.
 //! 4. Protect the result with the HWCRYPT functional model (AES-128-XTS),
 //!    and show what the simulated SoC says this costs in time and energy.
+//! 5. Do the same through the first-class workload API: resolve a
+//!    registered scenario by name, stream frames through the `SocSystem`
+//!    façade, and render the structured report as text and JSON.
 //!
 //! Run: `cargo run --release --example quickstart` (after `make artifacts`).
 
@@ -16,6 +19,7 @@ use fulmine::crypto::modes::XtsKey;
 use fulmine::soc::sched::Scheduler;
 use fulmine::hwce::golden::WeightPrec;
 use fulmine::runtime::{default_artifact_dir, Runtime, TensorI16};
+use fulmine::system::{RunSpec, RungSel, SocSystem};
 
 fn main() -> Result<()> {
     // --- 1. the AOT artifact --------------------------------------------
@@ -61,5 +65,14 @@ fn main() -> Result<()> {
         res.ledger.total_mj() * 1e3,
         "HWCE 4-bit + HWCRYPT @ 0.8 V"
     );
+
+    // --- 5. the workload API: registered scenarios via the façade -------
+    // Any registered workload streams by name; `mixed` interleaves one
+    // frame of each paper use case per round on the same SoC, with
+    // per-tenant energy attribution in the report.
+    let sys = SocSystem::new();
+    let run = sys.run(&RunSpec::new("mixed").frames(4).rung(RungSel::Best))?;
+    print!("\n{}", run.render_text());
+    println!("as JSON: {}", run.to_json().render());
     Ok(())
 }

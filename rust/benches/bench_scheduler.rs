@@ -1,45 +1,43 @@
 //! Bench: the event-driven SoC scheduler — streamed frames/s and pJ/op for
-//! the three §IV use cases at increasing stream depths (the multi-frame
-//! throughput the analytic model could not express), plus the host cost of
-//! scheduling itself (the simulator's own hot path).
+//! every registered workload at increasing stream depths (including the
+//! `mixed` multi-tenant stream, which the analytic model could not even
+//! express), plus the host cost of scheduling itself (the simulator's own
+//! hot path). Workloads resolve through the [`fulmine::workload::Registry`]
+//! via the [`SocSystem`] façade.
 //!
 //! Uses `fulmine::bench_support` (the offline crate set has no criterion).
 
 use fulmine::bench_support::{blackbox, measure, report_row};
-use fulmine::coordinator::{facedet, seizure, surveillance, ExecConfig, StreamResult};
+use fulmine::coordinator::{surveillance, ExecConfig};
 use fulmine::hwce::golden::WeightPrec;
 use fulmine::report;
 use fulmine::soc::sched::{Engine, Scheduler};
-
-fn stream_rows(usecase: &str, run: impl Fn(usize) -> StreamResult) {
-    println!("== stream throughput: {usecase} (best rung) ==");
-    println!(
-        "{:>7} {:>12} {:>12} {:>10} {:>10} {:>10}",
-        "frames", "time [s]", "frames/s", "speedup", "mJ/frame", "pJ/op"
-    );
-    for frames in [1usize, 2, 4, 8] {
-        let r = run(frames);
-        println!(
-            "{frames:>7} {:>12.4} {:>12.3} {:>9.2}x {:>10.4} {:>10.2}",
-            r.time_s,
-            r.fps,
-            r.speedup,
-            r.energy_mj / frames as f64,
-            r.pj_per_op
-        );
-    }
-}
+use fulmine::system::{RunSpec, SocSystem};
 
 fn main() {
-    let best = ExecConfig::with_hwce(WeightPrec::W4);
-    let seizure_best = *seizure::rung_configs().last().map(|(_, c)| c).unwrap();
+    let sys = SocSystem::new();
 
-    stream_rows("surveillance", |n| surveillance::run_stream(best, n));
-    stream_rows("facedet", |n| facedet::run_stream(best, n));
-    stream_rows("seizure", |n| seizure::run_stream(seizure_best, n));
+    for name in sys.registry().names() {
+        println!("== stream throughput: {name} (best rung) ==");
+        println!(
+            "{:>7} {:>12} {:>12} {:>10} {:>10} {:>10}",
+            "frames", "time [s]", "frames/s", "speedup", "mJ/frame", "pJ/op"
+        );
+        for frames in [1usize, 2, 4, 8] {
+            let r = sys.run(&RunSpec::new(name).frames(frames)).unwrap().result;
+            println!(
+                "{frames:>7} {:>12.4} {:>12.3} {:>9.2}x {:>10.4} {:>10.2}",
+                r.time_s,
+                r.fps,
+                r.speedup,
+                r.energy_mj / frames as f64,
+                r.pj_per_op
+            );
+        }
+    }
 
     println!("\n== engine utilization, surveillance x8 ==");
-    let r = surveillance::run_stream(best, 8);
+    let r = sys.run(&RunSpec::new("surveillance").frames(8)).unwrap().result;
     for e in Engine::ALL {
         let busy = r.busy_s[e.index()];
         if busy > 0.0 {
@@ -48,9 +46,14 @@ fn main() {
         }
     }
 
-    println!("\n{}", report::stream_report("surveillance", 8, None).unwrap());
+    println!("\n== per-tenant attribution, mixed x8 ==");
+    let mixed = sys.run(&RunSpec::new("mixed").frames(8)).unwrap();
+    print!("{}", mixed.render_text());
+
+    println!("{}", report::stream_report("surveillance", 8, None).unwrap());
 
     println!("== host cost of scheduling ==");
+    let best = ExecConfig::with_hwce(WeightPrec::W4);
     let g1 = surveillance::frame_graph(best);
     let g8 = g1.repeat(8);
     let (m, lo, hi) = measure(2, 9, || {

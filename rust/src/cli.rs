@@ -1,0 +1,293 @@
+//! Command-line parsing and dispatch for the `fulmine` binary.
+//!
+//! Parsing is a pure function ([`parse`]) from argument slices to a typed
+//! [`Command`] — it returns `Err` instead of exiting, so every flag path
+//! is unit-testable — and [`dispatch`] executes the command against the
+//! [`SocSystem`] façade. `main.rs` is the thin shell gluing the two to
+//! the process boundary (usage on stderr, exit codes).
+
+use crate::apps::params::{gen_params, xorshift_i16};
+use crate::report::{self, PAPER_ARTIFACTS};
+use crate::runtime::{default_artifact_dir, Runtime, TensorI16};
+use crate::system::{RunSpec, RungSel, SocSystem};
+use anyhow::{anyhow, bail, Result};
+
+pub const USAGE: &str = "usage: fulmine <command>
+
+commands:
+  table1|fig7|sec3b|fig8a|sec3c|fig8b|fig10|fig11|fig12|table2
+                print the corresponding paper table/figure from the model
+  all           print every paper artifact in order
+  workloads     list the registered workloads
+  ladder <workload> [--json]
+                run every ladder rung of a workload (one frame each)
+  stream <workload> [--frames N] [--config RUNG] [--json]
+                pipeline N frames through the event-driven SoC scheduler
+                (RUNG: ladder index or label substring, default best)
+  ablations [--json]
+                run the surveillance design-choice sweep
+  artifacts     list and compile the AOT artifacts (PJRT smoke test)
+  infer <name>  execute one artifact with generated inputs, print a digest";
+
+/// A parsed `fulmine` invocation.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Command {
+    /// One of the paper tables/figures (or `all`).
+    Paper(&'static str),
+    /// List the registered workloads.
+    Workloads,
+    /// Run a workload's full ladder.
+    Ladder { workload: String, json: bool },
+    /// Stream frames through the scheduler.
+    Stream { workload: String, frames: usize, rung: Option<String>, json: bool },
+    /// The surveillance ablation sweep.
+    Ablations { json: bool },
+    /// PJRT artifact listing/compilation.
+    Artifacts,
+    /// Execute one AOT artifact.
+    Infer { name: String },
+}
+
+/// Parse the argument list (without the program name).
+pub fn parse(args: &[String]) -> Result<Command> {
+    let cmd = args.first().map(String::as_str).ok_or_else(|| anyhow!("missing command"))?;
+    let rest = &args[1..];
+    if let Some(name) = PAPER_ARTIFACTS.iter().copied().find(|&n| n == cmd) {
+        expect_no_args(cmd, rest)?;
+        return Ok(Command::Paper(name));
+    }
+    match cmd {
+        "workloads" => {
+            expect_no_args(cmd, rest)?;
+            Ok(Command::Workloads)
+        }
+        "ladder" => parse_ladder(rest),
+        "stream" => parse_stream(rest),
+        "ablations" => {
+            let json = parse_json_flag(cmd, rest)?;
+            Ok(Command::Ablations { json })
+        }
+        "artifacts" => {
+            expect_no_args(cmd, rest)?;
+            Ok(Command::Artifacts)
+        }
+        "infer" => {
+            let name =
+                rest.first().cloned().ok_or_else(|| anyhow!("infer needs an artifact name"))?;
+            expect_no_args(cmd, &rest[1..])?;
+            Ok(Command::Infer { name })
+        }
+        other => bail!("unknown command {other:?}"),
+    }
+}
+
+fn expect_no_args(cmd: &str, rest: &[String]) -> Result<()> {
+    if let Some(extra) = rest.first() {
+        bail!("{cmd} takes no further arguments (got {extra:?})");
+    }
+    Ok(())
+}
+
+/// Accept an optional trailing `--json`, nothing else.
+fn parse_json_flag(cmd: &str, rest: &[String]) -> Result<bool> {
+    match rest {
+        [] => Ok(false),
+        [flag] if flag == "--json" => Ok(true),
+        [other, ..] => bail!("unknown {cmd} flag {other:?}"),
+    }
+}
+
+fn parse_ladder(args: &[String]) -> Result<Command> {
+    let workload = args
+        .first()
+        .cloned()
+        .ok_or_else(|| anyhow!("ladder needs a workload; try `fulmine workloads`"))?;
+    let json = parse_json_flag("ladder", &args[1..])?;
+    Ok(Command::Ladder { workload, json })
+}
+
+/// Parse the `stream` subcommand's flags: `<workload> [--frames N]
+/// [--config RUNG] [--json]`.
+fn parse_stream(args: &[String]) -> Result<Command> {
+    let workload = args
+        .first()
+        .cloned()
+        .ok_or_else(|| anyhow!("stream needs a workload; try `fulmine workloads`"))?;
+    let mut frames = 8usize;
+    let mut rung: Option<String> = None;
+    let mut json = false;
+    let mut it = args[1..].iter();
+    while let Some(flag) = it.next() {
+        match flag.as_str() {
+            "--frames" => {
+                let v = it.next().ok_or_else(|| anyhow!("--frames needs a value"))?;
+                frames = v.parse().map_err(|_| anyhow!("bad --frames value {v:?}"))?;
+            }
+            "--config" => {
+                let v = it.next().ok_or_else(|| anyhow!("--config needs a value"))?;
+                rung = Some(v.clone());
+            }
+            "--json" => json = true,
+            other => bail!("unknown stream flag {other:?}"),
+        }
+    }
+    Ok(Command::Stream { workload, frames, rung, json })
+}
+
+/// Execute a parsed command, printing its output to stdout.
+pub fn dispatch(cmd: &Command) -> Result<()> {
+    match cmd {
+        Command::Paper(name) => {
+            let text = report::paper_artifact(name)
+                .ok_or_else(|| anyhow!("unknown paper artifact {name:?}"))?;
+            print!("{text}");
+        }
+        Command::Workloads => {
+            let sys = SocSystem::new();
+            for w in sys.registry().iter() {
+                println!("{:<14} {}", w.name(), w.describe());
+            }
+        }
+        Command::Ladder { workload, json } => {
+            let ladder = SocSystem::new().ladder(workload)?;
+            if *json {
+                println!("{}", ladder.to_json().render());
+            } else {
+                print!("{}", ladder.render_text());
+            }
+        }
+        Command::Stream { workload, frames, rung, json } => {
+            let spec =
+                RunSpec::new(workload).frames(*frames).rung(RungSel::parse(rung.as_deref()));
+            let run = SocSystem::new().run(&spec)?;
+            if *json {
+                println!("{}", run.to_json().render());
+            } else {
+                print!("{}", run.render_text());
+            }
+        }
+        Command::Ablations { json } => {
+            let ablations = SocSystem::new().surveillance_ablations()?;
+            if *json {
+                println!("{}", ablations.to_json().render());
+            } else {
+                print!("{}", ablations.render_text());
+            }
+        }
+        Command::Artifacts => {
+            let mut rt = Runtime::open(default_artifact_dir())?;
+            let names: Vec<String> = rt.artifact_names().iter().map(|s| s.to_string()).collect();
+            for n in names {
+                let t = std::time::Instant::now();
+                rt.compile(&n)?;
+                let meta = rt.meta(&n).unwrap();
+                println!(
+                    "{n:<22} compiled in {:>7.1} ms   kind={} k={} simd={} inputs={}",
+                    t.elapsed().as_secs_f64() * 1e3,
+                    meta.kind,
+                    meta.k,
+                    meta.simd,
+                    meta.input_shapes.len()
+                );
+            }
+        }
+        Command::Infer { name } => {
+            let mut rt = Runtime::open(default_artifact_dir())?;
+            let Some(meta) = rt.meta(name).cloned() else {
+                bail!("unknown artifact {name}; try `fulmine artifacts`");
+            };
+            let Some(x_shape) = meta.input_shapes.first() else {
+                bail!(
+                    "artifact {name} declares no input shapes in its manifest; \
+                     cannot generate inputs (regenerate it with `make artifacts`)"
+                );
+            };
+            let x = TensorI16::new(
+                x_shape.clone(),
+                xorshift_i16(7, x_shape.iter().product(), -2048, 2047),
+            );
+            let mut inputs = vec![x];
+            inputs.extend(gen_params(&meta.input_shapes[1..], meta.simd, 1));
+            let t = std::time::Instant::now();
+            let out = rt.execute(name, &inputs)?;
+            println!(
+                "{name}: executed in {:.2} ms; output shape {:?}, first values {:?}",
+                t.elapsed().as_secs_f64() * 1e3,
+                out[0].shape,
+                &out[0].data[..out[0].data.len().min(10)]
+            );
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_paper_artifacts_and_all() {
+        assert_eq!(parse(&argv(&["fig10"])).unwrap(), Command::Paper("fig10"));
+        assert_eq!(parse(&argv(&["all"])).unwrap(), Command::Paper("all"));
+        assert!(parse(&argv(&["fig10", "extra"])).is_err());
+    }
+
+    #[test]
+    fn parses_stream_flags() {
+        assert_eq!(
+            parse(&argv(&["stream", "surveillance"])).unwrap(),
+            Command::Stream { workload: "surveillance".into(), frames: 8, rung: None, json: false }
+        );
+        assert_eq!(
+            parse(&argv(&["stream", "mixed", "--frames", "4", "--config", "hwce", "--json"]))
+                .unwrap(),
+            Command::Stream {
+                workload: "mixed".into(),
+                frames: 4,
+                rung: Some("hwce".into()),
+                json: true
+            }
+        );
+    }
+
+    /// The former `parse_stream_args` called `usage()` (process exit) on a
+    /// missing workload; parsing now returns `Err` on every bad input.
+    #[test]
+    fn stream_parse_errors_instead_of_exiting() {
+        assert!(parse(&argv(&["stream"])).is_err());
+        assert!(parse(&argv(&["stream", "surveillance", "--frames"])).is_err());
+        assert!(parse(&argv(&["stream", "surveillance", "--frames", "abc"])).is_err());
+        assert!(parse(&argv(&["stream", "surveillance", "--bogus"])).is_err());
+    }
+
+    #[test]
+    fn parses_workload_commands() {
+        assert_eq!(parse(&argv(&["workloads"])).unwrap(), Command::Workloads);
+        assert_eq!(
+            parse(&argv(&["ladder", "seizure", "--json"])).unwrap(),
+            Command::Ladder { workload: "seizure".into(), json: true }
+        );
+        assert_eq!(
+            parse(&argv(&["ablations"])).unwrap(),
+            Command::Ablations { json: false }
+        );
+        assert!(parse(&argv(&["ladder"])).is_err());
+        assert!(parse(&argv(&["ablations", "--verbose"])).is_err());
+    }
+
+    #[test]
+    fn parses_runtime_commands_and_rejects_unknown() {
+        assert_eq!(parse(&argv(&["artifacts"])).unwrap(), Command::Artifacts);
+        assert_eq!(
+            parse(&argv(&["infer", "quickstart_conv_w4"])).unwrap(),
+            Command::Infer { name: "quickstart_conv_w4".into() }
+        );
+        assert!(parse(&argv(&["infer"])).is_err());
+        assert!(parse(&argv(&[])).is_err());
+        assert!(parse(&argv(&["frobnicate"])).is_err());
+    }
+}

@@ -26,9 +26,11 @@ fn dense_cycles(macs: u64, cfg: &ExecConfig) -> f64 {
     macs as f64 * per_mac / cfg.n_cores as f64
 }
 
-/// Emit the job graph of one detection frame.
-pub fn frame_graph(cfg: ExecConfig) -> JobGraph {
-    let mut b = GraphBuilder::new(cfg);
+/// Emit one detection frame into an existing builder (the
+/// [`crate::workload::Workload`] entry point; the configuration is the
+/// builder's).
+pub fn emit(b: &mut GraphBuilder) {
+    let cfg = b.cfg;
 
     // Stage 1: 12-net over all windows. Conv on HWCE (or SW); window
     // extraction + dense layers on the cores.
@@ -48,7 +50,12 @@ pub fn frame_graph(cfg: ExecConfig) -> JobGraph {
 
     // Detection epilogue: encrypt the full frame for remote recognition.
     b.xts(encrypted_image_bytes(), &[dense2]);
+}
 
+/// Emit the job graph of one detection frame.
+pub fn frame_graph(cfg: ExecConfig) -> JobGraph {
+    let mut b = GraphBuilder::new(cfg);
+    emit(&mut b);
     b.build()
 }
 
@@ -82,9 +89,9 @@ pub fn eq_ops() -> u64 {
 pub fn ladder() -> Vec<UseCaseResult> {
     ExecConfig::ladder()
         .into_iter()
-        .map(|(label, cfg)| {
-            let mut r = run_frame(cfg);
-            r.label = label.to_string();
+        .map(|rung| {
+            let mut r = run_frame(rung.cfg);
+            r.label = rung.label.to_string();
             r
         })
         .collect()

@@ -41,6 +41,41 @@ use crate::soc::opmodes::{OperatingMode, OperatingPoint};
 use crate::soc::power::Component;
 use crate::soc::sched::{Engine, Job, JobGraph, JobId, Scheduler};
 
+/// One labeled rung of a workload's configuration ladder (Fig. 10/11/12):
+/// the typed replacement for the former `(&'static str, ExecConfig)` tuples.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Rung {
+    pub label: &'static str,
+    pub cfg: ExecConfig,
+}
+
+/// Optional per-run overrides on top of a selected [`Rung`]'s
+/// [`ExecConfig`] — how a [`crate::system::RunSpec`] expresses ablations
+/// (swap the HWCE precision, drop the HWCRYPT, raise VDD) without
+/// inventing new rungs.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ModeOverrides {
+    pub n_cores: Option<usize>,
+    pub simd_sw: Option<bool>,
+    pub hwcrypt: Option<bool>,
+    /// `Some(None)` forces software convolution; `Some(Some(prec))` forces
+    /// the HWCE at that precision.
+    pub hwce: Option<Option<WeightPrec>>,
+    pub vdd: Option<f64>,
+}
+
+impl ModeOverrides {
+    pub fn apply(&self, cfg: ExecConfig) -> ExecConfig {
+        ExecConfig {
+            n_cores: self.n_cores.unwrap_or(cfg.n_cores),
+            simd_sw: self.simd_sw.unwrap_or(cfg.simd_sw),
+            hwcrypt: self.hwcrypt.unwrap_or(cfg.hwcrypt),
+            hwce: self.hwce.unwrap_or(cfg.hwce),
+            vdd: self.vdd.unwrap_or(cfg.vdd),
+        }
+    }
+}
+
 /// Execution configuration — one rung of the Fig. 10/11/12 ladder.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ExecConfig {
@@ -71,13 +106,13 @@ impl ExecConfig {
     }
 
     /// The Fig. 10-style ladder.
-    pub fn ladder() -> Vec<(&'static str, ExecConfig)> {
+    pub fn ladder() -> Vec<Rung> {
         vec![
-            ("SW 1-core", Self::sw_1core()),
-            ("SW 4-core+SIMD", Self::sw_4core_simd()),
-            ("+HWCRYPT", Self::with_hwcrypt()),
-            ("+HWCE 16b", Self::with_hwce(WeightPrec::W16)),
-            ("+HWCE 4b", Self::with_hwce(WeightPrec::W4)),
+            Rung { label: "SW 1-core", cfg: Self::sw_1core() },
+            Rung { label: "SW 4-core+SIMD", cfg: Self::sw_4core_simd() },
+            Rung { label: "+HWCRYPT", cfg: Self::with_hwcrypt() },
+            Rung { label: "+HWCE 16b", cfg: Self::with_hwce(WeightPrec::W16) },
+            Rung { label: "+HWCE 4b", cfg: Self::with_hwce(WeightPrec::W4) },
         ]
     }
 
@@ -225,6 +260,26 @@ impl GraphBuilder {
     /// Detach the external flash/FRAM (no standby charge) — §IV-C.
     pub fn set_ext_mem_present(&mut self, present: bool) {
         self.graph.ext_mem_present = present;
+    }
+
+    /// Whether the external memories are currently attached.
+    pub fn ext_mem_present(&self) -> bool {
+        self.graph.ext_mem_present
+    }
+
+    /// Jobs emitted so far.
+    pub fn len(&self) -> usize {
+        self.graph.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.graph.is_empty()
+    }
+
+    /// Open a named segment (e.g. one tenant of a mixed multi-tenant
+    /// workload) — see [`JobGraph::mark_segment`].
+    pub fn begin_segment(&mut self, label: &str) {
+        self.graph.mark_segment(label);
     }
 
     pub fn build(self) -> JobGraph {
@@ -401,8 +456,22 @@ mod tests {
     fn ladder_has_five_rungs() {
         let l = ExecConfig::ladder();
         assert_eq!(l.len(), 5);
-        assert_eq!(l[0].1.n_cores, 1);
-        assert!(l[4].1.hwce == Some(WeightPrec::W4));
+        assert_eq!(l[0].cfg.n_cores, 1);
+        assert!(l[4].cfg.hwce == Some(WeightPrec::W4));
+    }
+
+    #[test]
+    fn overrides_apply_field_by_field() {
+        let base = ExecConfig::with_hwce(WeightPrec::W4);
+        assert_eq!(ModeOverrides::default().apply(base), base);
+        let o = ModeOverrides { hwcrypt: Some(false), vdd: Some(1.2), ..Default::default() };
+        let cfg = o.apply(base);
+        assert!(!cfg.hwcrypt);
+        assert_eq!(cfg.vdd, 1.2);
+        assert_eq!(cfg.hwce, base.hwce);
+        assert_eq!(cfg.n_cores, base.n_cores);
+        let sw = ModeOverrides { hwce: Some(None), ..Default::default() }.apply(base);
+        assert_eq!(sw.hwce, None);
     }
 
     #[test]

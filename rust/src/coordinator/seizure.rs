@@ -8,7 +8,7 @@
 //! mode the next window's acquisition overlaps the current analytics, as
 //! the real device does between its 0.5 s deadlines.
 
-use super::{stream_graph, ExecConfig, GraphBuilder, StreamResult, UseCaseResult, OR1200_FACTOR};
+use super::{stream_graph, ExecConfig, GraphBuilder, Rung, StreamResult, UseCaseResult, OR1200_FACTOR};
 use crate::apps::eeg;
 use crate::kernels_sw::crypto_cost::SW_AES_XTS_CPB_1CORE;
 use crate::kernels_sw::eeg_cost;
@@ -17,9 +17,10 @@ use crate::soc::sched::{JobGraph, Scheduler};
 /// Seconds between windows (50 % overlap at 256 Hz).
 pub const WINDOW_PERIOD_S: f64 = 0.5;
 
-/// Emit the job graph of one detection window.
-pub fn window_graph(cfg: ExecConfig) -> JobGraph {
-    let mut b = GraphBuilder::new(cfg);
+/// Emit one detection window into an existing builder (the
+/// [`crate::workload::Workload`] entry point; the configuration is the
+/// builder's).
+pub fn emit(b: &mut GraphBuilder) {
     b.set_ext_mem_present(false); // pacemaker-class node: no flash/FRAM
     // acquire samples (23 ch × 128 new samples × 4 B). Modeled as a
     // cluster-DMA staging job at AXI bandwidth — the convention the
@@ -28,10 +29,16 @@ pub fn window_graph(cfg: ExecConfig) -> JobGraph {
     let acq = b.dma(eeg_cost::N_CHANNELS * 128 * 4, &[]);
     // the analytics pipeline runs on the cores (PCA diagonalization partly
     // serial — Amdahl handled inside eeg_pipeline_cycles)
-    let cycn = eeg_cost::eeg_pipeline_cycles(cfg.n_cores) as f64;
+    let cycn = eeg_cost::eeg_pipeline_cycles(b.cfg.n_cores) as f64;
     let analytics = b.sw(cycn, 0.0, &[acq]); // cycles already include the parallel split
     // encrypt the PCA components for secure collection
     b.xts(eeg::collected_bytes(), &[analytics]);
+}
+
+/// Emit the job graph of one detection window.
+pub fn window_graph(cfg: ExecConfig) -> JobGraph {
+    let mut b = GraphBuilder::new(cfg);
+    emit(&mut b);
     b.build()
 }
 
@@ -62,11 +69,17 @@ pub fn eq_ops() -> u64 {
 
 /// The Fig. 12 rungs: software scaling then accelerated encryption (the
 /// HWCE plays no role — there are no convolutions).
-pub fn rung_configs() -> Vec<(&'static str, ExecConfig)> {
+pub fn rung_configs() -> Vec<Rung> {
     vec![
-        ("SW 1-core", ExecConfig::sw_1core()),
-        ("SW 4-core", ExecConfig { simd_sw: false, ..ExecConfig::sw_4core_simd() }),
-        ("4-core+HWCRYPT", ExecConfig { simd_sw: false, ..ExecConfig::with_hwcrypt() }),
+        Rung { label: "SW 1-core", cfg: ExecConfig::sw_1core() },
+        Rung {
+            label: "SW 4-core",
+            cfg: ExecConfig { simd_sw: false, ..ExecConfig::sw_4core_simd() },
+        },
+        Rung {
+            label: "4-core+HWCRYPT",
+            cfg: ExecConfig { simd_sw: false, ..ExecConfig::with_hwcrypt() },
+        },
     ]
 }
 
@@ -74,9 +87,9 @@ pub fn rung_configs() -> Vec<(&'static str, ExecConfig)> {
 pub fn ladder() -> Vec<UseCaseResult> {
     rung_configs()
         .into_iter()
-        .map(|(label, cfg)| {
-            let mut r = run_window(cfg);
-            r.label = label.to_string();
+        .map(|rung| {
+            let mut r = run_window(rung.cfg);
+            r.label = rung.label.to_string();
             r
         })
         .collect()
@@ -163,7 +176,7 @@ mod tests {
     /// rust/tests/scheduler.rs, as is the 5 % analytic calibration).
     #[test]
     fn streaming_windows_real_time() {
-        let (_, cfg) = rung_configs().pop().unwrap();
+        let cfg = rung_configs().pop().unwrap().cfg;
         let r = run_stream(cfg, 16);
         assert!(r.time_s / 16.0 < WINDOW_PERIOD_S, "streamed window period {}", r.time_s / 16.0);
     }

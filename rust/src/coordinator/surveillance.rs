@@ -40,14 +40,15 @@ fn layer_epilogue_cycles(l: &ConvLayer) -> f64 {
     c
 }
 
-/// Emit the job graph of one secure ResNet-20 frame.
-pub fn frame_graph(cfg: ExecConfig) -> JobGraph {
+/// Emit one secure ResNet-20 frame into an existing builder (the
+/// [`crate::workload::Workload`] entry point; the configuration is the
+/// builder's).
+pub fn emit(b: &mut GraphBuilder) {
     let layers = resnet::resnet20_224();
     // Storage precision follows the HWCE mode (W4 shrinks flash traffic, as
     // §IV-A exploits); software rungs use the 16-bit baseline format.
-    let store_prec = cfg.hwce.unwrap_or(WeightPrec::W16);
+    let store_prec = b.cfg.hwce.unwrap_or(WeightPrec::W16);
 
-    let mut b = GraphBuilder::new(cfg);
     // FRAM store of the previous layer's output — the next layer's input
     // fetch must wait for it (the partial-result round trip).
     let mut prev_store: Option<JobId> = None;
@@ -83,6 +84,12 @@ pub fn frame_graph(cfg: ExecConfig) -> JobGraph {
     // classifier head on the last layer's activations (still in the cluster)
     let head_deps: Vec<JobId> = prev_epi.into_iter().collect();
     b.sw(HEAD_CYCLES, 1.0, &head_deps);
+}
+
+/// Emit the job graph of one secure ResNet-20 frame.
+pub fn frame_graph(cfg: ExecConfig) -> JobGraph {
+    let mut b = GraphBuilder::new(cfg);
+    emit(&mut b);
     b.build()
 }
 
@@ -133,9 +140,9 @@ pub fn eq_ops() -> u64 {
 pub fn ladder() -> Vec<UseCaseResult> {
     ExecConfig::ladder()
         .into_iter()
-        .map(|(label, cfg)| {
-            let mut r = run_frame(cfg);
-            r.label = label.to_string();
+        .map(|rung| {
+            let mut r = run_frame(rung.cfg);
+            r.label = rung.label.to_string();
             r
         })
         .collect()

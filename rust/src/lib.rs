@@ -45,6 +45,22 @@
 //! subcommand and `bench_scheduler` report the resulting frames/s, pJ/op
 //! and engine utilization.
 //!
+//! ## Public surface: workloads and the `SocSystem` façade
+//!
+//! Scenarios are first-class: anything the SoC can run implements
+//! [`workload::Workload`] (name, description, graph emission, equivalent
+//! op count, configuration ladder) and is resolved by name through a
+//! [`workload::Registry`] — the three §IV use cases are registered
+//! implementations, and `mixed` is a [`workload::MixedStream`] that
+//! interleaves frames of all three on one SoC (per-tenant energy
+//! attribution via graph segments). [`system::SocSystem`] executes a
+//! typed [`system::RunSpec`] (workload, frames, ladder rung, mode
+//! overrides) and returns structured reports ([`system::RunReport`],
+//! [`system::LadderReport`], [`system::AblationReport`]) that render to
+//! the paper's text tables and to JSON ([`json`], hand-rolled — the crate
+//! stays anyhow-only). The [`cli`] module is a thin, testable command
+//! layer over the façade.
+//!
 //! At runtime the rust binary loads `artifacts/*.hlo.txt` through the PJRT C
 //! API ([`runtime`]; gated behind the `pjrt` feature, with an explanatory
 //! stub in offline builds) and drives the simulated SoC through
@@ -56,6 +72,7 @@
 pub mod apps;
 #[doc(hidden)]
 pub mod bench_support;
+pub mod cli;
 pub mod cluster;
 pub mod coordinator;
 pub mod crypto;
@@ -65,7 +82,10 @@ pub mod fixedpoint;
 pub mod hwce;
 pub mod hwcrypt;
 pub mod isa;
+pub mod json;
 pub mod kernels_sw;
 pub mod report;
 pub mod runtime;
 pub mod soc;
+pub mod system;
+pub mod workload;

@@ -1,132 +1,20 @@
-//! `fulmine` CLI — the leader entrypoint: regenerate any paper artifact,
-//! run the secure-analytics use cases, or execute AOT artifacts through the
-//! PJRT runtime.
-//!
-//! Usage:
-//!   fulmine <command>
-//!
-//! Commands:
-//!   table1 | fig7 | sec3b | fig8a | sec3c | fig8b | fig10 | fig11 | fig12 | table2
-//!                 — print the corresponding paper table/figure from the model
-//!   all           — print every paper artifact in order
-//!   artifacts     — list and compile the AOT artifacts (PJRT smoke test)
-//!   infer <name>  — execute one artifact with generated inputs, print a digest
-//!   ablations     — run the surveillance ablation sweep
-//!   stream <usecase> [--frames N] [--config RUNG]
-//!                 — pipeline N frames through the event-driven SoC
-//!                   scheduler (usecase: surveillance|facedet|seizure;
-//!                   RUNG: ladder index or label substring, default best)
+//! `fulmine` CLI — a thin shell over [`fulmine::cli`]: parse the argument
+//! list into a typed [`fulmine::cli::Command`], dispatch it against the
+//! [`fulmine::system::SocSystem`] façade, and map errors to the process
+//! boundary (usage + exit 2 for bad invocations, exit 1 for runtime
+//! failures). Run `fulmine` with no arguments for the command list.
 
-use anyhow::{bail, Result};
-use fulmine::apps::params::{gen_params, xorshift_i16};
-use fulmine::report;
-use fulmine::runtime::{default_artifact_dir, Runtime, TensorI16};
-
-fn usage() -> ! {
-    eprintln!(
-        "usage: fulmine <table1|fig7|sec3b|fig8a|sec3c|fig8b|fig10|fig11|fig12|table2|all|artifacts|infer <name>|ablations|stream <usecase> [--frames N] [--config RUNG]>"
-    );
-    std::process::exit(2);
-}
-
-/// Parse the `stream` subcommand's flags: `<usecase> [--frames N]
-/// [--config RUNG]`.
-fn parse_stream_args(args: &[String]) -> Result<(String, usize, Option<String>)> {
-    let usecase = args.first().cloned().unwrap_or_else(|| usage());
-    let mut frames = 8usize;
-    let mut config: Option<String> = None;
-    let mut it = args[1..].iter();
-    while let Some(flag) = it.next() {
-        match flag.as_str() {
-            "--frames" => {
-                let v = it.next().ok_or_else(|| anyhow::anyhow!("--frames needs a value"))?;
-                frames = v.parse().map_err(|_| anyhow::anyhow!("bad --frames value {v:?}"))?;
-            }
-            "--config" => {
-                let v = it.next().ok_or_else(|| anyhow::anyhow!("--config needs a value"))?;
-                config = Some(v.clone());
-            }
-            other => bail!("unknown stream flag {other:?}"),
-        }
-    }
-    Ok((usecase, frames, config))
-}
-
-fn main() -> Result<()> {
+fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
-    let cmd = args.first().map(String::as_str).unwrap_or_else(|| usage());
-    match cmd {
-        "table1" => print!("{}", report::table1()),
-        "fig7" => print!("{}", report::fig7()),
-        "sec3b" => print!("{}", report::sec3b()),
-        "fig8a" => print!("{}", report::fig8a()),
-        "sec3c" => print!("{}", report::sec3c()),
-        "fig8b" => print!("{}", report::fig8b()),
-        "fig10" => print!("{}", report::fig10()),
-        "fig11" => print!("{}", report::fig11()),
-        "fig12" => print!("{}", report::fig12()),
-        "table2" => print!("{}", report::table2()),
-        "all" => print!("{}", report::all_reports()),
-        "stream" => {
-            let (usecase, frames, config) = parse_stream_args(&args[1..])?;
-            match report::stream_report(&usecase, frames, config.as_deref()) {
-                Ok(s) => print!("{s}"),
-                Err(e) => bail!("{e}"),
-            }
+    let cmd = match fulmine::cli::parse(&args) {
+        Ok(cmd) => cmd,
+        Err(e) => {
+            eprintln!("error: {e}\n\n{}", fulmine::cli::USAGE);
+            std::process::exit(2);
         }
-        "ablations" => {
-            for (label, r) in report::surveillance_ablations() {
-                println!(
-                    "{label:<18} time {:>8.4} s  energy {:>8.3} mJ  {:>6.2} pJ/op",
-                    r.time_s, r.energy_mj, r.pj_per_op
-                );
-            }
-        }
-        "artifacts" => {
-            let mut rt = Runtime::open(default_artifact_dir())?;
-            let names: Vec<String> = rt.artifact_names().iter().map(|s| s.to_string()).collect();
-            for n in names {
-                let t = std::time::Instant::now();
-                rt.compile(&n)?;
-                let meta = rt.meta(&n).unwrap();
-                println!(
-                    "{n:<22} compiled in {:>7.1} ms   kind={} k={} simd={} inputs={}",
-                    t.elapsed().as_secs_f64() * 1e3,
-                    meta.kind,
-                    meta.k,
-                    meta.simd,
-                    meta.input_shapes.len()
-                );
-            }
-        }
-        "infer" => {
-            let name = args.get(1).map(String::as_str).unwrap_or_else(|| usage());
-            let mut rt = Runtime::open(default_artifact_dir())?;
-            let Some(meta) = rt.meta(name).cloned() else {
-                bail!("unknown artifact {name}; try `fulmine artifacts`");
-            };
-            let Some(x_shape) = meta.input_shapes.first() else {
-                bail!(
-                    "artifact {name} declares no input shapes in its manifest; \
-                     cannot generate inputs (regenerate it with `make artifacts`)"
-                );
-            };
-            let x = TensorI16::new(
-                x_shape.clone(),
-                xorshift_i16(7, x_shape.iter().product(), -2048, 2047),
-            );
-            let mut inputs = vec![x];
-            inputs.extend(gen_params(&meta.input_shapes[1..], meta.simd, 1));
-            let t = std::time::Instant::now();
-            let out = rt.execute(name, &inputs)?;
-            println!(
-                "{name}: executed in {:.2} ms; output shape {:?}, first values {:?}",
-                t.elapsed().as_secs_f64() * 1e3,
-                out[0].shape,
-                &out[0].data[..out[0].data.len().min(10)]
-            );
-        }
-        _ => usage(),
+    };
+    if let Err(e) = fulmine::cli::dispatch(&cmd) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
     }
-    Ok(())
 }

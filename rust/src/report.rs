@@ -2,11 +2,14 @@
 //! evaluation (§III, §IV, Table I/II). Each returns a printable table;
 //! the `fulmine` CLI and the bench harness print them, and integration
 //! tests assert the comparative shape (who wins, by roughly what factor).
+//!
+//! The §IV figures (10/11/12) and the streaming/ablation reports resolve
+//! their use cases through the [`crate::system::SocSystem`] façade — the
+//! paper presentation (titles, published-number notes, feasibility
+//! footers) is this module's only remaining job.
 
-use crate::coordinator::{facedet, seizure, surveillance, ExecConfig, StreamResult, UseCaseResult};
-use crate::soc::sched::Engine;
+use crate::coordinator::{facedet, seizure, surveillance, UseCaseResult};
 use crate::crypto::sponge::SpongeConfig;
-use crate::energy::Category;
 use crate::hwce::golden::WeightPrec;
 use crate::hwce::timing::{analytic_cycles_per_px, simulate_tile_cycles};
 use crate::hwce::HwceJob;
@@ -16,6 +19,8 @@ use crate::kernels_sw::conv::{run_conv, stage_tile, ConvImpl, ConvJob};
 use crate::kernels_sw::crypto_cost;
 use crate::soc::opmodes::{OperatingMode, OperatingPoint};
 use crate::soc::power::{PowerMode, PowerModel, SOC_ACTIVE_MW, SOC_LEAK_MW};
+use crate::system::{LadderReport, RunSpec, RungSel, SocSystem};
+use anyhow::Result;
 use std::fmt::Write as _;
 
 const MODES: [OperatingMode; 3] =
@@ -221,40 +226,20 @@ pub fn fig8b() -> String {
     s
 }
 
-fn ladder_table(title: &str, rows: &[UseCaseResult], paper_note: &str) -> String {
-    let mut s = String::new();
-    writeln!(s, "== {title} ==").unwrap();
-    writeln!(
-        s,
-        "{:<16} {:>9} {:>10} {:>8} | {:>8} {:>8} {:>8} {:>8} {:>8} {:>8}",
-        "config", "time [s]", "E [mJ]", "pJ/op", "conv", "crypto", "o-sw", "dma", "extmem", "idle"
-    )
-    .unwrap();
-    for r in rows {
-        write!(
-            s,
-            "{:<16} {:>9.4} {:>10.4} {:>8.2} |",
-            r.label, r.time_s, r.energy_mj, r.pj_per_op
-        )
-        .unwrap();
-        for c in Category::all() {
-            write!(s, " {:>8.3}", r.ledger.energy_mj(c)).unwrap();
-        }
-        writeln!(s).unwrap();
-    }
-    writeln!(s, "{paper_note}").unwrap();
-    s
+/// Run a workload's ladder through the façade (the registry is the single
+/// resolution point for every report).
+fn system_ladder(workload: &str) -> LadderReport {
+    SocSystem::new().ladder(workload).expect("built-in workload")
 }
 
 /// Fig. 10: secure autonomous aerial surveillance ladder.
 pub fn fig10() -> String {
-    let rows = surveillance::ladder();
-    let mut s = ladder_table(
+    let ladder = system_ladder("surveillance");
+    let mut s = ladder.render_table(
         "Fig. 10: ResNet-20 secure surveillance (224x224, XTS on all ext. data)",
-        &rows,
-        "(paper: 114x time, 45x energy vs SW-1c; best 27 mJ, 3.16 pJ/op)",
+        Some("(paper: 114x time, 45x energy vs SW-1c; best 27 mJ, 3.16 pJ/op)"),
     );
-    let best = rows.last().unwrap();
+    let best = ladder.rows.last().unwrap();
     let (iters, frac) = surveillance::flight_feasibility(best);
     writeln!(
         s,
@@ -267,16 +252,15 @@ pub fn fig10() -> String {
 
 /// Fig. 11: face-detection ladder.
 pub fn fig11() -> String {
-    let rows = facedet::ladder();
-    let mut s = ladder_table(
+    let ladder = system_ladder("facedet");
+    let mut s = ladder.render_table(
         "Fig. 11: local face detection + secured remote recognition (224x224)",
-        &rows,
-        "(paper: 24x speedup, 13x energy; best 0.57 mJ, 5.74 pJ/op)",
+        Some("(paper: 24x speedup, 13x energy; best 0.57 mJ, 5.74 pJ/op)"),
     );
     writeln!(
         s,
         "battery: {:.2} days continuous on 4 V 150 mAh (paper: ~1.6 days)",
-        facedet::battery_days(rows.last().unwrap())
+        facedet::battery_days(ladder.rows.last().unwrap())
     )
     .unwrap();
     s
@@ -284,13 +268,12 @@ pub fn fig11() -> String {
 
 /// Fig. 12: seizure-detection ladder.
 pub fn fig12() -> String {
-    let rows = seizure::ladder();
-    let mut s = ladder_table(
+    let ladder = system_ladder("seizure");
+    let mut s = ladder.render_table(
         "Fig. 12: EEG seizure detection + secure collection (23ch x 256)",
-        &rows,
-        "(paper: 4.3x speedup, 2.1x energy; best 0.18 mJ, 12.7 pJ/op)",
+        Some("(paper: 4.3x speedup, 2.1x energy; best 0.18 mJ, 12.7 pJ/op)"),
     );
-    let (iters, days) = seizure::pacemaker_endurance(rows.last().unwrap());
+    let (iters, days) = seizure::pacemaker_endurance(ladder.rows.last().unwrap());
     writeln!(
         s,
         "endurance: {:.1e} iterations, {days:.0} days continuous on a 2 Ah@3.3V battery (paper: >130e6, >750 days)",
@@ -376,7 +359,7 @@ pub fn table2() -> String {
         .unwrap();
     }
     // equivalent-efficiency comparison on the §IV-B workload
-    let fd = facedet::ladder();
+    let fd = system_ladder("facedet").rows;
     let best = fd.last().unwrap();
     let eq_ops = best.eq_ops as f64;
     let sleepwalker_time = eq_ops / 25e6; // 25 MIPS
@@ -396,82 +379,13 @@ pub fn table2() -> String {
     s
 }
 
-/// A streamable use case: its configuration rungs and streaming entrypoint.
-type StreamFn = fn(ExecConfig, usize) -> StreamResult;
-
-fn usecase_entry(usecase: &str) -> Option<(Vec<(&'static str, ExecConfig)>, StreamFn)> {
-    match usecase {
-        "surveillance" => Some((ExecConfig::ladder(), surveillance::run_stream as StreamFn)),
-        "facedet" => Some((ExecConfig::ladder(), facedet::run_stream as StreamFn)),
-        "seizure" => Some((seizure::rung_configs(), seizure::run_stream as StreamFn)),
-        _ => None,
-    }
-}
-
-/// Resolve a `--config` selector (rung index or case-insensitive label
-/// substring) against a use case's rungs; defaults to the best rung.
-fn select_rung(
-    rungs: Vec<(&'static str, ExecConfig)>,
-    selector: Option<&str>,
-) -> Result<(&'static str, ExecConfig), String> {
-    let Some(sel) = selector else {
-        return Ok(*rungs.last().expect("every use case has rungs"));
-    };
-    if let Ok(i) = sel.parse::<usize>() {
-        return rungs
-            .get(i)
-            .copied()
-            .ok_or_else(|| format!("rung index {i} out of range (0..{})", rungs.len()));
-    }
-    let needle = sel.to_lowercase();
-    rungs
-        .iter()
-        .find(|(label, _)| label.to_lowercase().contains(&needle))
-        .copied()
-        .ok_or_else(|| {
-            let names: Vec<&str> = rungs.iter().map(|(l, _)| *l).collect();
-            format!("no rung matches {sel:?}; available: {names:?} or an index")
-        })
-}
-
-/// The `fulmine stream` report: pipeline `frames` frames of a use case
-/// through the event-driven scheduler and compare against back-to-back
-/// single-frame runs.
-pub fn stream_report(usecase: &str, frames: usize, rung: Option<&str>) -> Result<String, String> {
-    let (rungs, run_stream) = usecase_entry(usecase)
-        .ok_or_else(|| format!("unknown use case {usecase:?}; try surveillance|facedet|seizure"))?;
-    if frames == 0 {
-        return Err("--frames must be at least 1".to_string());
-    }
-    let (label, cfg) = select_rung(rungs, rung)?;
-    let r = run_stream(cfg, frames);
-    let mut s = String::new();
-    writeln!(s, "== stream: {usecase} @ {label}, {frames} frames ==").unwrap();
-    writeln!(
-        s,
-        "single frame {:>9.4} s | {frames} streamed {:>9.4} s  ({:.3} frames/s, {:.2}x vs back-to-back)",
-        r.single_frame_s, r.time_s, r.fps, r.speedup
-    )
-    .unwrap();
-    writeln!(
-        s,
-        "energy {:>9.4} mJ total, {:>8.4} mJ/frame, {:>7.2} pJ/op | {} mode switches",
-        r.energy_mj,
-        r.energy_mj / frames as f64,
-        r.pj_per_op,
-        r.mode_switches
-    )
-    .unwrap();
-    write!(s, "engine utilization:").unwrap();
-    for e in Engine::ALL {
-        let busy = r.busy_s[e.index()];
-        if busy > 0.0 {
-            write!(s, "  {}={:.0}%", e.name(), busy / r.time_s * 100.0).unwrap();
-        }
-    }
-    writeln!(s).unwrap();
-    writeln!(s, "{}", r.ledger.report(&format!("{usecase} x{frames}"))).unwrap();
-    Ok(s)
+/// The `fulmine stream` report: pipeline `frames` frames of a registered
+/// workload through the event-driven scheduler and compare against
+/// back-to-back single-frame runs. Thin wrapper over the
+/// [`SocSystem`] façade, kept for callers that want the text in one call.
+pub fn stream_report(usecase: &str, frames: usize, rung: Option<&str>) -> Result<String> {
+    let spec = RunSpec::new(usecase).frames(frames).rung(RungSel::parse(rung));
+    Ok(SocSystem::new().run(&spec)?.render_text())
 }
 
 /// Everything, in paper order.
@@ -491,20 +405,41 @@ pub fn all_reports() -> String {
     .join("\n")
 }
 
+/// The artifact names [`paper_artifact`] resolves, in paper order — the
+/// single list the CLI parser admits.
+pub const PAPER_ARTIFACTS: [&str; 11] = [
+    "table1", "fig7", "sec3b", "fig8a", "sec3c", "fig8b", "fig10", "fig11", "fig12", "table2",
+    "all",
+];
+
+/// Regenerate one named paper artifact (`fulmine <name>`); `None` if the
+/// name is not a paper table/figure.
+pub fn paper_artifact(name: &str) -> Option<String> {
+    Some(match name {
+        "table1" => table1(),
+        "fig7" => fig7(),
+        "sec3b" => sec3b(),
+        "fig8a" => fig8a(),
+        "sec3c" => sec3c(),
+        "fig8b" => fig8b(),
+        "fig10" => fig10(),
+        "fig11" => fig11(),
+        "fig12" => fig12(),
+        "table2" => table2(),
+        "all" => all_reports(),
+        _ => return None,
+    })
+}
+
 /// The Fig. 10 ladder but sweeping ablations (used by `bench_usecases` and
 /// the ablation study): returns (label, result) including intermediate
-/// configurations not in the main ladder.
+/// configurations not in the main ladder. Runs as [`RunSpec`] mode
+/// overrides on the best rung via the façade.
 pub fn surveillance_ablations() -> Vec<(String, UseCaseResult)> {
-    let mut out = Vec::new();
-    for (label, cfg) in [
-        ("hwce4+swcrypto", ExecConfig { hwcrypt: false, ..ExecConfig::with_hwce(WeightPrec::W4) }),
-        ("hwce8+hwcrypt", ExecConfig::with_hwce(WeightPrec::W8)),
-        ("hwce4@1.0V", ExecConfig { vdd: 1.0, ..ExecConfig::with_hwce(WeightPrec::W4) }),
-        ("hwce4@1.2V", ExecConfig { vdd: 1.2, ..ExecConfig::with_hwce(WeightPrec::W4) }),
-    ] {
-        out.push((label.to_string(), surveillance::run_frame(cfg)));
-    }
-    out
+    SocSystem::new()
+        .surveillance_ablations()
+        .expect("surveillance is a built-in workload")
+        .rows
 }
 
 #[cfg(test)]
@@ -552,6 +487,15 @@ mod tests {
         assert!(stream_report("surveillance", 1, Some("nope")).is_err());
         assert!(stream_report("surveillance", 0, None).is_err());
         assert!(stream_report("bogus", 1, None).is_err());
+    }
+
+    /// The advertised name list and the dispatch match must not drift.
+    #[test]
+    fn paper_artifact_resolves_every_name() {
+        for name in PAPER_ARTIFACTS {
+            assert!(paper_artifact(name).is_some(), "{name}");
+        }
+        assert!(paper_artifact("fig99").is_none());
     }
 
     #[test]

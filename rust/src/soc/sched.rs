@@ -51,7 +51,7 @@
 
 use crate::energy::{Category, EnergyLedger};
 use crate::soc::opmodes::{OperatingMode, OperatingPoint, MODE_SWITCH_S, V_NOM};
-use crate::soc::power::{Component, FLASH_STANDBY_MW, FRAM_STANDBY_MW};
+use crate::soc::power::{Component, PowerModel, FLASH_STANDBY_MW, FRAM_STANDBY_MW};
 use std::cmp::Ordering;
 use std::collections::{BTreeSet, BinaryHeap};
 
@@ -140,6 +140,9 @@ pub struct JobGraph {
     /// charged over the whole run); the pacemaker-class seizure platform
     /// has none (§IV-C).
     pub ext_mem_present: bool,
+    /// Named segment markers `(label, first job id)` — see
+    /// [`JobGraph::mark_segment`]. Empty for single-tenant graphs.
+    pub segments: Vec<(String, JobId)>,
 }
 
 impl Default for JobGraph {
@@ -150,7 +153,16 @@ impl Default for JobGraph {
 
 impl JobGraph {
     pub fn new() -> Self {
-        JobGraph { jobs: Vec::new(), ext_mem_present: true }
+        JobGraph { jobs: Vec::new(), ext_mem_present: true, segments: Vec::new() }
+    }
+
+    /// Open a named segment at the current end of the graph: jobs pushed
+    /// from here until the next marker belong to `label`. Multi-tenant
+    /// workloads use this to attribute active energy per tenant
+    /// ([`JobGraph::segment_active_mj`]); repeating the same label
+    /// aggregates (each streamed frame re-marks its tenants).
+    pub fn mark_segment(&mut self, label: &str) {
+        self.segments.push((label.to_string(), self.jobs.len()));
     }
 
     /// Append a job; its dependencies must reference earlier jobs, and all
@@ -189,6 +201,7 @@ impl JobGraph {
         let mut out = JobGraph {
             jobs: Vec::with_capacity(n * frames),
             ext_mem_present: self.ext_mem_present,
+            segments: Vec::with_capacity(self.segments.len() * frames),
         };
         for f in 0..frames {
             let off = f * n;
@@ -199,6 +212,59 @@ impl JobGraph {
                 }
                 out.jobs.push(j);
             }
+            for (label, start) in &self.segments {
+                out.segments.push((label.clone(), start + off));
+            }
+        }
+        out
+    }
+
+    /// Active energy (mJ) of one job: its per-component charges integrated
+    /// over its busy interval at its operating point — the same arithmetic
+    /// [`JobGraph::finish_ledger`] feeds the [`EnergyLedger`], without the
+    /// makespan-proportional leakage/standby terms.
+    fn job_active_mj(job: &Job) -> f64 {
+        job.charges
+            .iter()
+            .map(|&(_, comp, mult)| PowerModel::active_mw(comp, job.op) * job.duration_s * mult)
+            .sum()
+    }
+
+    /// Total active energy of the graph (mJ), schedule-independent.
+    pub fn active_mj(&self) -> f64 {
+        self.jobs.iter().map(Self::job_active_mj).sum()
+    }
+
+    /// Active energy per segment label, in first-appearance order; jobs
+    /// pushed before the first marker are unattributed. Labels repeated
+    /// across markers (e.g. one per streamed frame) aggregate into one row,
+    /// and a segment whose marker is followed by no jobs still reports a
+    /// zero row (its tenant must not vanish from attribution).
+    pub fn segment_active_mj(&self) -> Vec<(String, f64)> {
+        let mut out: Vec<(String, f64)> = Vec::new();
+        let row_of = |out: &mut Vec<(String, f64)>, label: &str| -> usize {
+            match out.iter().position(|(l, _)| l == label) {
+                Some(i) => i,
+                None => {
+                    out.push((label.to_string(), 0.0));
+                    out.len() - 1
+                }
+            }
+        };
+        let mut next = 0usize; // next marker to cross
+        let mut current: Option<usize> = None; // index into `out`
+        for (id, job) in self.jobs.iter().enumerate() {
+            while next < self.segments.len() && self.segments[next].1 <= id {
+                current = Some(row_of(&mut out, self.segments[next].0.as_str()));
+                next += 1;
+            }
+            if let Some(cur) = current {
+                out[cur].1 += Self::job_active_mj(job);
+            }
+        }
+        // trailing markers past the last job
+        for (label, _) in &self.segments[next..] {
+            row_of(&mut out, label);
         }
         out
     }
@@ -592,6 +658,30 @@ mod tests {
         }
         let total: f64 = r.busy_s.iter().sum();
         assert!(total <= r.makespan_s * N_ENGINES as f64 + 1e-9);
+    }
+
+    #[test]
+    fn segments_attribute_active_energy() {
+        let mut g = JobGraph::new();
+        g.mark_segment("a");
+        g.push(job(Engine::Cores, OperatingMode::Sw, 2.0, &[]));
+        g.mark_segment("b");
+        g.push(job(Engine::Cores, OperatingMode::Sw, 1.0, &[]));
+        g.mark_segment("empty"); // trailing marker with no jobs
+        let seg = g.segment_active_mj();
+        assert_eq!(seg.len(), 3);
+        assert_eq!(seg[0].0, "a");
+        assert_eq!(seg[1].0, "b");
+        assert_eq!(seg[2], ("empty".to_string(), 0.0), "empty tenants keep a zero row");
+        assert!((seg[0].1 - 2.0 * seg[1].1).abs() < 1e-12, "a charges 2x b's interval");
+        let total: f64 = seg.iter().map(|(_, mj)| mj).sum();
+        assert!((total - g.active_mj()).abs() < 1e-12);
+        // streaming re-marks each frame's segments and aggregates by label
+        let g4 = g.repeat(4);
+        assert_eq!(g4.segments.len(), 12);
+        let seg4 = g4.segment_active_mj();
+        assert_eq!(seg4.len(), 3, "labels aggregate across frames");
+        assert!((seg4[0].1 - 4.0 * seg[0].1).abs() < 1e-12);
     }
 
     #[test]

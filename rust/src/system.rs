@@ -1,0 +1,565 @@
+//! The `SocSystem` façade: typed run specifications in, structured —
+//! machine-readable — reports out.
+//!
+//! Everything the CLI and benches used to do through stringly-typed free
+//! functions (`stream_report(&str, usize, Option<&str>)`, ladder tuples,
+//! inline `println!` rows) goes through three types here:
+//!
+//! * [`RunSpec`] — which [`crate::workload::Workload`], how many frames,
+//!   which ladder [`Rung`] (by index, label substring, or best), and
+//!   optional [`ModeOverrides`] on top (the ablation mechanism);
+//! * [`SocSystem`] — resolves the spec against its workload [`Registry`],
+//!   builds the frame graph, schedules it, and attributes the result
+//!   (including per-tenant rows for multi-tenant workloads);
+//! * [`RunReport`] / [`LadderReport`] / [`AblationReport`] — structured
+//!   values that render to the exact text tables the CLI always printed
+//!   *and* to JSON ([`crate::json`], hand-rolled — the crate stays
+//!   anyhow-only).
+//!
+//! The multi-SoC sharding item on the ROADMAP plugs in here: a sharded
+//! system is another implementor of the same spec-in/report-out surface.
+
+use crate::coordinator::{
+    stream_graph, ExecConfig, ModeOverrides, Rung, StreamResult, UseCaseResult,
+};
+use crate::energy::Category;
+use crate::hwce::golden::WeightPrec;
+use crate::json::Json;
+use crate::soc::sched::{Engine, Scheduler};
+use crate::workload::{frame_graph, Registry, Workload};
+use anyhow::{anyhow, bail, Result};
+use std::fmt::Write as _;
+
+/// How a [`RunSpec`] selects a ladder rung.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RungSel {
+    /// The last (most accelerated) rung — the default.
+    Best,
+    /// By position on the workload's ladder.
+    Index(usize),
+    /// By case-insensitive label substring.
+    Label(String),
+}
+
+impl RungSel {
+    /// Parse a CLI `--config` selector: absent → best, an integer → index,
+    /// anything else → label substring.
+    pub fn parse(selector: Option<&str>) -> RungSel {
+        match selector {
+            None => RungSel::Best,
+            Some(s) => match s.parse::<usize>() {
+                Ok(i) => RungSel::Index(i),
+                Err(_) => RungSel::Label(s.to_string()),
+            },
+        }
+    }
+}
+
+/// A typed run request: the replacement for the stringly-typed
+/// `stream_report` arguments.
+#[derive(Debug, Clone)]
+pub struct RunSpec {
+    /// Registry name of the workload.
+    pub workload: String,
+    /// Frames to stream (1 = a single-frame run).
+    pub frames: usize,
+    pub rung: RungSel,
+    /// Applied on top of the selected rung's configuration.
+    pub overrides: ModeOverrides,
+}
+
+impl RunSpec {
+    pub fn new(workload: &str) -> Self {
+        RunSpec {
+            workload: workload.to_string(),
+            frames: 1,
+            rung: RungSel::Best,
+            overrides: ModeOverrides::default(),
+        }
+    }
+
+    pub fn frames(mut self, frames: usize) -> Self {
+        self.frames = frames;
+        self
+    }
+
+    pub fn rung(mut self, rung: RungSel) -> Self {
+        self.rung = rung;
+        self
+    }
+
+    pub fn overrides(mut self, overrides: ModeOverrides) -> Self {
+        self.overrides = overrides;
+        self
+    }
+}
+
+/// Resolve a rung selector against a workload's ladder.
+fn select_rung(rungs: &[Rung], sel: &RungSel) -> Result<Rung> {
+    if rungs.is_empty() {
+        bail!("workload declares no ladder rungs");
+    }
+    match sel {
+        RungSel::Best => Ok(*rungs.last().expect("checked non-empty above")),
+        RungSel::Index(i) => rungs
+            .get(*i)
+            .copied()
+            .ok_or_else(|| anyhow!("rung index {i} out of range (0..{})", rungs.len())),
+        RungSel::Label(sel) => {
+            let needle = sel.to_lowercase();
+            rungs
+                .iter()
+                .find(|r| r.label.to_lowercase().contains(&needle))
+                .copied()
+                .ok_or_else(|| {
+                    let names: Vec<&str> = rungs.iter().map(|r| r.label).collect();
+                    anyhow!("no rung matches {sel:?}; available: {names:?} or an index")
+                })
+        }
+    }
+}
+
+/// Per-tenant attribution row of a [`RunReport`] (one row for ordinary
+/// workloads; one per tenant for multi-tenant streams).
+#[derive(Debug, Clone)]
+pub struct TenantRow {
+    pub name: String,
+    /// OR1200-equivalent ops per frame of this tenant.
+    pub eq_ops: u64,
+    /// Active energy of this tenant's jobs over all frames (mJ).
+    pub active_mj: f64,
+    /// Active energy plus this tenant's proportional share of the
+    /// schedule-wide idle/standby energy (mJ).
+    pub energy_mj: f64,
+    pub pj_per_op: f64,
+}
+
+/// Structured outcome of one [`SocSystem::run`]: everything the text
+/// report shows, as data.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub workload: String,
+    /// Label of the rung the run executed at.
+    pub rung: String,
+    /// The rung's configuration after overrides.
+    pub cfg: ExecConfig,
+    pub frames: usize,
+    pub result: StreamResult,
+    pub tenants: Vec<TenantRow>,
+}
+
+impl RunReport {
+    /// The `fulmine stream` text report (byte-identical to the historical
+    /// output for single-tenant workloads; multi-tenant runs add one
+    /// attribution line per tenant).
+    pub fn render_text(&self) -> String {
+        let r = &self.result;
+        let frames = self.frames;
+        let mut s = String::new();
+        writeln!(s, "== stream: {} @ {}, {frames} frames ==", self.workload, self.rung).unwrap();
+        writeln!(
+            s,
+            "single frame {:>9.4} s | {frames} streamed {:>9.4} s  ({:.3} frames/s, {:.2}x vs back-to-back)",
+            r.single_frame_s, r.time_s, r.fps, r.speedup
+        )
+        .unwrap();
+        writeln!(
+            s,
+            "energy {:>9.4} mJ total, {:>8.4} mJ/frame, {:>7.2} pJ/op | {} mode switches",
+            r.energy_mj,
+            r.energy_mj / frames as f64,
+            r.pj_per_op,
+            r.mode_switches
+        )
+        .unwrap();
+        if self.tenants.len() > 1 {
+            for t in &self.tenants {
+                writeln!(
+                    s,
+                    "  tenant {:<14} {:>9.4} mJ  {:>7.2} pJ/op  ({:.3e} eq-ops/frame)",
+                    t.name, t.energy_mj, t.pj_per_op, t.eq_ops as f64
+                )
+                .unwrap();
+            }
+        }
+        write!(s, "engine utilization:").unwrap();
+        for e in Engine::ALL {
+            let busy = r.busy_s[e.index()];
+            if busy > 0.0 {
+                write!(s, "  {}={:.0}%", e.name(), busy / r.time_s * 100.0).unwrap();
+            }
+        }
+        writeln!(s).unwrap();
+        writeln!(s, "{}", r.ledger.report(&format!("{} x{frames}", self.workload))).unwrap();
+        s
+    }
+
+    pub fn to_json(&self) -> Json {
+        let r = &self.result;
+        let mut util = Vec::new();
+        for e in Engine::ALL {
+            let busy = r.busy_s[e.index()];
+            if busy > 0.0 {
+                util.push((e.name(), Json::num(busy / r.time_s)));
+            }
+        }
+        Json::obj(vec![
+            ("workload", Json::string(&self.workload)),
+            ("rung", Json::string(&self.rung)),
+            ("frames", Json::num(self.frames as f64)),
+            ("single_frame_s", Json::num(r.single_frame_s)),
+            ("time_s", Json::num(r.time_s)),
+            ("fps", Json::num(r.fps)),
+            ("speedup_vs_serial", Json::num(r.speedup)),
+            ("energy_mj", Json::num(r.energy_mj)),
+            ("pj_per_op", Json::num(r.pj_per_op)),
+            ("mode_switches", Json::num(r.mode_switches as f64)),
+            ("engine_utilization", Json::obj(util)),
+            ("energy_breakdown_mj", breakdown_json(&r.ledger)),
+            (
+                "tenants",
+                Json::Arr(
+                    self.tenants
+                        .iter()
+                        .map(|t| {
+                            Json::obj(vec![
+                                ("name", Json::string(&t.name)),
+                                ("eq_ops_per_frame", Json::num(t.eq_ops as f64)),
+                                ("active_mj", Json::num(t.active_mj)),
+                                ("energy_mj", Json::num(t.energy_mj)),
+                                ("pj_per_op", Json::num(t.pj_per_op)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+fn breakdown_json(ledger: &crate::energy::EnergyLedger) -> Json {
+    Json::Obj(
+        Category::all()
+            .iter()
+            .map(|&c| (c.name().to_string(), Json::num(ledger.energy_mj(c))))
+            .collect(),
+    )
+}
+
+/// One single-frame run per ladder rung of a workload.
+#[derive(Debug, Clone)]
+pub struct LadderReport {
+    pub workload: String,
+    pub rows: Vec<UseCaseResult>,
+}
+
+impl LadderReport {
+    /// The Fig. 10/11/12-style table (the historical `ladder_table`
+    /// rendering; `paper_note` appends the figure's comparison line).
+    pub fn render_table(&self, title: &str, paper_note: Option<&str>) -> String {
+        let mut s = String::new();
+        writeln!(s, "== {title} ==").unwrap();
+        writeln!(
+            s,
+            "{:<16} {:>9} {:>10} {:>8} | {:>8} {:>8} {:>8} {:>8} {:>8} {:>8}",
+            "config", "time [s]", "E [mJ]", "pJ/op", "conv", "crypto", "o-sw", "dma", "extmem", "idle"
+        )
+        .unwrap();
+        for r in &self.rows {
+            write!(
+                s,
+                "{:<16} {:>9.4} {:>10.4} {:>8.2} |",
+                r.label, r.time_s, r.energy_mj, r.pj_per_op
+            )
+            .unwrap();
+            for c in Category::all() {
+                write!(s, " {:>8.3}", r.ledger.energy_mj(c)).unwrap();
+            }
+            writeln!(s).unwrap();
+        }
+        if let Some(note) = paper_note {
+            writeln!(s, "{note}").unwrap();
+        }
+        s
+    }
+
+    /// Generic rendering for `fulmine ladder <workload>`.
+    pub fn render_text(&self) -> String {
+        self.render_table(&format!("ladder: {}", self.workload), None)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("workload", Json::string(&self.workload)),
+            (
+                "rungs",
+                Json::Arr(
+                    self.rows
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("label", Json::string(&r.label)),
+                                ("time_s", Json::num(r.time_s)),
+                                ("energy_mj", Json::num(r.energy_mj)),
+                                ("eq_ops", Json::num(r.eq_ops as f64)),
+                                ("pj_per_op", Json::num(r.pj_per_op)),
+                                ("energy_breakdown_mj", breakdown_json(&r.ledger)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// The surveillance design-choice sweep (ablation labels + results).
+#[derive(Debug, Clone)]
+pub struct AblationReport {
+    pub rows: Vec<(String, UseCaseResult)>,
+}
+
+impl AblationReport {
+    /// The historical `fulmine ablations` rows, one line each.
+    pub fn render_text(&self) -> String {
+        let mut s = String::new();
+        for (label, r) in &self.rows {
+            writeln!(
+                s,
+                "{label:<18} time {:>8.4} s  energy {:>8.3} mJ  {:>6.2} pJ/op",
+                r.time_s, r.energy_mj, r.pj_per_op
+            )
+            .unwrap();
+        }
+        s
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![(
+            "ablations",
+            Json::Arr(
+                self.rows
+                    .iter()
+                    .map(|(label, r)| {
+                        Json::obj(vec![
+                            ("label", Json::string(label)),
+                            ("time_s", Json::num(r.time_s)),
+                            ("energy_mj", Json::num(r.energy_mj)),
+                            ("pj_per_op", Json::num(r.pj_per_op)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        )])
+    }
+}
+
+/// The façade over one simulated Fulmine SoC: a workload [`Registry`] plus
+/// the scheduling/attribution machinery to execute a [`RunSpec`].
+pub struct SocSystem {
+    registry: Registry,
+}
+
+impl Default for SocSystem {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SocSystem {
+    /// A system with the built-in workload set registered.
+    pub fn new() -> Self {
+        SocSystem { registry: Registry::builtin() }
+    }
+
+    /// A system over a caller-composed registry.
+    pub fn with_registry(registry: Registry) -> Self {
+        SocSystem { registry }
+    }
+
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    pub fn registry_mut(&mut self) -> &mut Registry {
+        &mut self.registry
+    }
+
+    fn resolve(&self, spec: &RunSpec) -> Result<(&dyn Workload, Rung)> {
+        let w = self.registry.resolve(&spec.workload)?;
+        if spec.frames == 0 {
+            bail!("--frames must be at least 1");
+        }
+        let mut rung = select_rung(&w.rungs(), &spec.rung)?;
+        rung.cfg = spec.overrides.apply(rung.cfg);
+        Ok((w, rung))
+    }
+
+    /// Schedule one frame of the spec's workload and return the Fig.
+    /// 10/11/12-style result (the spec's `frames` is ignored here).
+    pub fn run_frame(&self, spec: &RunSpec) -> Result<UseCaseResult> {
+        let (w, rung) = self.resolve(spec)?;
+        let g = frame_graph(w, rung.cfg)?;
+        let res = Scheduler::run(&g);
+        Ok(UseCaseResult::from_ledger(w.name(), res.ledger, w.eq_ops()))
+    }
+
+    /// Stream `spec.frames` frames of the workload through the scheduler
+    /// and return the structured report, with per-tenant attribution for
+    /// multi-tenant workloads.
+    pub fn run(&self, spec: &RunSpec) -> Result<RunReport> {
+        let (w, rung) = self.resolve(spec)?;
+        let g = frame_graph(w, rung.cfg)?;
+        let result = stream_graph(w.name(), &g, spec.frames, w.eq_ops());
+        let frames = spec.frames as f64;
+
+        // Per-tenant attribution. Rows follow the workload's *declared*
+        // tenants (a tenant whose frame emitted no jobs still gets a row);
+        // active energy is schedule-independent, so per-frame segment
+        // totals — matched to tenants by name — scale by the frame count,
+        // and the leftover (idle, leakage, ext-mem standby, plus any
+        // segment matching no declared tenant) is shared out proportionally
+        // to each tenant's active energy. Single-tenant workloads are one
+        // row covering the whole schedule, whatever segments they marked.
+        let seg = g.segment_active_mj();
+        let tenant_info = w.tenants();
+        let tenants = if seg.is_empty() || tenant_info.len() <= 1 {
+            vec![TenantRow {
+                name: w.name().to_string(),
+                eq_ops: w.eq_ops(),
+                active_mj: g.active_mj() * frames,
+                energy_mj: result.energy_mj,
+                pj_per_op: result.pj_per_op,
+            }]
+        } else {
+            let active: Vec<f64> = tenant_info
+                .iter()
+                .map(|(name, _)| {
+                    seg.iter().find(|(l, _)| l == name).map_or(0.0, |(_, mj)| mj * frames)
+                })
+                .collect();
+            let active_total: f64 = active.iter().sum();
+            let overhead = (result.energy_mj - active_total).max(0.0);
+            tenant_info
+                .iter()
+                .zip(&active)
+                .map(|((name, eq_ops), &active_mj)| {
+                    let share = if active_total > 0.0 {
+                        active_mj / active_total
+                    } else {
+                        1.0 / tenant_info.len() as f64
+                    };
+                    let energy_mj = active_mj + overhead * share;
+                    // undefined rather than garbage when a tenant declares
+                    // no equivalent ops (JSON renders NaN as null)
+                    let pj_per_op = if *eq_ops > 0 {
+                        energy_mj * 1e9 / (*eq_ops as f64 * frames)
+                    } else {
+                        f64::NAN
+                    };
+                    TenantRow {
+                        name: name.clone(),
+                        eq_ops: *eq_ops,
+                        active_mj,
+                        energy_mj,
+                        pj_per_op,
+                    }
+                })
+                .collect()
+        };
+
+        Ok(RunReport {
+            workload: w.name().to_string(),
+            rung: rung.label.to_string(),
+            cfg: rung.cfg,
+            frames: spec.frames,
+            result,
+            tenants,
+        })
+    }
+
+    /// One single-frame run per rung of the workload's ladder.
+    pub fn ladder(&self, workload: &str) -> Result<LadderReport> {
+        let w = self.registry.resolve(workload)?;
+        let rows = w
+            .rungs()
+            .into_iter()
+            .map(|rung| {
+                let g = frame_graph(w, rung.cfg)?;
+                let res = Scheduler::run(&g);
+                let mut r = UseCaseResult::from_ledger(w.name(), res.ledger, w.eq_ops());
+                r.label = rung.label.to_string();
+                Ok(r)
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(LadderReport { workload: workload.to_string(), rows })
+    }
+
+    /// The Fig. 10 design-choice sweep, expressed as [`RunSpec`]s with
+    /// [`ModeOverrides`] on the best surveillance rung — intermediate
+    /// configurations not on the main ladder.
+    pub fn surveillance_ablations(&self) -> Result<AblationReport> {
+        let sweeps: [(&str, ModeOverrides); 4] = [
+            (
+                "hwce4+swcrypto",
+                ModeOverrides { hwcrypt: Some(false), ..Default::default() },
+            ),
+            (
+                "hwce8+hwcrypt",
+                ModeOverrides { hwce: Some(Some(WeightPrec::W8)), ..Default::default() },
+            ),
+            ("hwce4@1.0V", ModeOverrides { vdd: Some(1.0), ..Default::default() }),
+            ("hwce4@1.2V", ModeOverrides { vdd: Some(1.2), ..Default::default() }),
+        ];
+        let mut rows = Vec::new();
+        for (label, overrides) in sweeps {
+            let spec = RunSpec::new("surveillance").overrides(overrides);
+            rows.push((label.to_string(), self.run_frame(&spec)?));
+        }
+        Ok(AblationReport { rows })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rung_selection_modes() {
+        let rungs = ExecConfig::ladder();
+        assert_eq!(select_rung(&rungs, &RungSel::Best).unwrap().label, "+HWCE 4b");
+        assert_eq!(select_rung(&rungs, &RungSel::Index(0)).unwrap().label, "SW 1-core");
+        assert_eq!(
+            select_rung(&rungs, &RungSel::Label("hwcrypt".into())).unwrap().label,
+            "+HWCRYPT"
+        );
+        let e = select_rung(&rungs, &RungSel::Index(99)).unwrap_err().to_string();
+        assert!(e.contains("out of range"), "{e}");
+        let e = select_rung(&rungs, &RungSel::Label("nope".into())).unwrap_err().to_string();
+        assert!(e.contains("available"), "{e}");
+    }
+
+    #[test]
+    fn rungsel_parse_matches_cli_convention() {
+        assert_eq!(RungSel::parse(None), RungSel::Best);
+        assert_eq!(RungSel::parse(Some("2")), RungSel::Index(2));
+        assert_eq!(RungSel::parse(Some("hwce")), RungSel::Label("hwce".into()));
+    }
+
+    #[test]
+    fn zero_frames_rejected() {
+        let sys = SocSystem::new();
+        let e = sys.run(&RunSpec::new("surveillance").frames(0)).unwrap_err().to_string();
+        assert!(e.contains("at least 1"), "{e}");
+    }
+
+    #[test]
+    fn single_tenant_report_has_one_row() {
+        let sys = SocSystem::new();
+        let r = sys.run(&RunSpec::new("seizure").frames(2)).unwrap();
+        assert_eq!(r.tenants.len(), 1);
+        assert_eq!(r.tenants[0].name, "seizure");
+        assert!((r.tenants[0].energy_mj - r.result.energy_mj).abs() < 1e-12);
+        assert!(r.tenants[0].active_mj <= r.result.energy_mj + 1e-12);
+    }
+}

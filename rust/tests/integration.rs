@@ -151,10 +151,11 @@ fn scheduler_mode_discipline() {
 #[test]
 fn surveillance_ladder_holds_at_1v0() {
     let mut results = Vec::new();
-    for (label, mut cfg) in ExecConfig::ladder() {
+    for rung in ExecConfig::ladder() {
+        let mut cfg = rung.cfg;
         cfg.vdd = 1.0;
         let mut r = surveillance::run_frame(cfg);
-        r.label = label.to_string();
+        r.label = rung.label.to_string();
         results.push(r);
     }
     for i in 1..results.len() {

@@ -38,7 +38,7 @@ impl Rng {
 fn random_graph(seed: u64) -> JobGraph {
     let mut r = Rng::new(seed);
     let ladder = ExecConfig::ladder();
-    let (_, cfg) = ladder[(r.next() % ladder.len() as u64) as usize];
+    let cfg = ladder[(r.next() % ladder.len() as u64) as usize].cfg;
     let mut b = GraphBuilder::new(cfg);
     // keep ext-mem standby out so scheduled and analytic ledgers may only
     // differ in the Idle category
@@ -135,12 +135,13 @@ fn prop_active_energy_schedule_independent() {
 #[test]
 fn usecase_energy_within_5pct_of_analytic() {
     let mut cases: Vec<(String, JobGraph)> = Vec::new();
-    for (label, cfg) in ExecConfig::ladder() {
+    for rung in ExecConfig::ladder() {
+        let (label, cfg) = (rung.label, rung.cfg);
         cases.push((format!("surveillance/{label}"), surveillance::frame_graph(cfg)));
         cases.push((format!("facedet/{label}"), facedet::frame_graph(cfg)));
     }
-    for (label, cfg) in seizure::rung_configs() {
-        cases.push((format!("seizure/{label}"), seizure::window_graph(cfg)));
+    for rung in seizure::rung_configs() {
+        cases.push((format!("seizure/{}", rung.label), seizure::window_graph(rung.cfg)));
     }
     for (label, g) in cases {
         let run = Scheduler::run(&g);
@@ -168,7 +169,8 @@ fn usecase_energy_within_5pct_of_analytic() {
 /// cases and rungs (the headline acceptance number).
 #[test]
 fn usecase_pj_per_op_within_5pct() {
-    for (label, cfg) in ExecConfig::ladder() {
+    for rung in ExecConfig::ladder() {
+        let (label, cfg) = (rung.label, rung.cfg);
         for (case, sched, ana) in [
             (
                 "surveillance",
@@ -185,11 +187,11 @@ fn usecase_pj_per_op_within_5pct() {
             assert!(rel < 0.05, "{case}/{label}: {sched} vs {ana} ({rel:.4})");
         }
     }
-    for (label, cfg) in seizure::rung_configs() {
-        let sched = seizure::run_window(cfg).pj_per_op;
-        let ana = seizure::run_window_analytic(cfg).pj_per_op;
+    for rung in seizure::rung_configs() {
+        let sched = seizure::run_window(rung.cfg).pj_per_op;
+        let ana = seizure::run_window_analytic(rung.cfg).pj_per_op;
         let rel = (sched - ana).abs() / ana;
-        assert!(rel < 0.05, "seizure/{label}: {sched} vs {ana} ({rel:.4})");
+        assert!(rel < 0.05, "seizure/{}: {sched} vs {ana} ({rel:.4})", rung.label);
     }
 }
 
@@ -201,12 +203,13 @@ fn streaming_never_slower_than_serial() {
     let frames = 4usize;
     let mut cases: Vec<(String, JobGraph)> = Vec::new();
     for idx in [0usize, 2, 4] {
-        let (label, cfg) = ExecConfig::ladder()[idx];
+        let rung = ExecConfig::ladder()[idx];
+        let (label, cfg) = (rung.label, rung.cfg);
         cases.push((format!("surveillance/{label}"), surveillance::frame_graph(cfg)));
         cases.push((format!("facedet/{label}"), facedet::frame_graph(cfg)));
     }
-    let (label, cfg) = *seizure::rung_configs().last().unwrap();
-    cases.push((format!("seizure/{label}"), seizure::window_graph(cfg)));
+    let rung = *seizure::rung_configs().last().unwrap();
+    cases.push((format!("seizure/{}", rung.label), seizure::window_graph(rung.cfg)));
     for (label, g) in cases {
         let single = Scheduler::run(&g).makespan_s;
         let stream = Scheduler::run(&g.repeat(frames)).makespan_s;
@@ -222,7 +225,7 @@ fn streaming_never_slower_than_serial() {
 /// best surveillance rung, 8 streamed frames beat 8 serial ones.
 #[test]
 fn streaming_gain_at_best_surveillance_rung() {
-    let (_, cfg) = *ExecConfig::ladder().last().unwrap();
+    let cfg = ExecConfig::ladder().last().unwrap().cfg;
     let r = surveillance::run_stream(cfg, 8);
     assert!(r.speedup > 1.02, "stream speedup {:.3}", r.speedup);
     assert!(r.fps > 1.0 / r.single_frame_s, "fps {} vs single {}", r.fps, r.single_frame_s);
@@ -232,7 +235,7 @@ fn streaming_gain_at_best_surveillance_rung() {
 /// plausible utilization.
 #[test]
 fn stream_busy_invariant() {
-    let (_, cfg) = *ExecConfig::ladder().last().unwrap();
+    let cfg = ExecConfig::ladder().last().unwrap().cfg;
     let g = surveillance::frame_graph(cfg);
     let r = Scheduler::run(&g.repeat(4));
     for e in Engine::ALL {

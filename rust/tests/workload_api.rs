@@ -1,0 +1,202 @@
+//! Integration tests for the first-class workload API: the registry
+//! resolves every built-in workload, the `SocSystem` façade reproduces the
+//! legacy coordinator paths exactly, rung lookup fails helpfully, the JSON
+//! reports parse back and agree with the text tables, and the mixed
+//! multi-tenant stream runs end-to-end with per-workload attribution.
+
+use fulmine::coordinator::{facedet, seizure, surveillance, ModeOverrides, UseCaseResult};
+use fulmine::json::Json;
+use fulmine::system::{RunSpec, RungSel, SocSystem};
+use fulmine::workload::{MixedStream, Registry, SeizureDetection, Workload};
+
+#[test]
+fn registry_resolves_all_builtin_workloads() {
+    let sys = SocSystem::new();
+    let names = sys.registry().names();
+    assert_eq!(names, vec!["surveillance", "facedet", "seizure", "mixed"]);
+    for name in names {
+        let w = sys.registry().resolve(name).unwrap();
+        assert_eq!(w.name(), name);
+        assert!(!w.describe().is_empty());
+        assert!(!w.rungs().is_empty());
+    }
+    let err = sys.registry().resolve("thermostat").unwrap_err().to_string();
+    assert!(err.contains("unknown workload") && err.contains("available"), "{err}");
+}
+
+/// The façade's ladders must be numerically identical to the direct
+/// coordinator entry points the figures were calibrated on.
+#[test]
+fn facade_ladders_match_legacy_coordinator_paths() {
+    let sys = SocSystem::new();
+    let legacy: [(&str, Vec<UseCaseResult>); 3] = [
+        ("surveillance", surveillance::ladder()),
+        ("facedet", facedet::ladder()),
+        ("seizure", seizure::ladder()),
+    ];
+    for (name, legacy_rows) in legacy {
+        let rows = sys.ladder(name).unwrap().rows;
+        assert_eq!(rows.len(), legacy_rows.len(), "{name}");
+        for (a, b) in rows.iter().zip(&legacy_rows) {
+            assert_eq!(a.label, b.label, "{name}");
+            assert_eq!(a.time_s.to_bits(), b.time_s.to_bits(), "{name}/{}", a.label);
+            assert_eq!(a.energy_mj.to_bits(), b.energy_mj.to_bits(), "{name}/{}", a.label);
+            assert_eq!(a.pj_per_op.to_bits(), b.pj_per_op.to_bits(), "{name}/{}", a.label);
+            assert_eq!(a.eq_ops, b.eq_ops, "{name}/{}", a.label);
+        }
+    }
+}
+
+#[test]
+fn rung_lookup_rejects_unknown_rungs_helpfully() {
+    let sys = SocSystem::new();
+    let err = sys
+        .run(&RunSpec::new("surveillance").rung(RungSel::Label("turbo".into())))
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("no rung matches \"turbo\""), "{err}");
+    assert!(err.contains("SW 1-core"), "error should list the ladder: {err}");
+    let err = sys
+        .run(&RunSpec::new("seizure").rung(RungSel::Index(7)))
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("out of range (0..3)"), "{err}");
+}
+
+/// `--json` agrees with the text tables: the ladder JSON parses back and
+/// its energy/pJ-per-op numbers equal the rows that render the text
+/// report, for every built-in workload.
+#[test]
+fn ladder_json_roundtrips_and_matches_text() {
+    let sys = SocSystem::new();
+    for name in sys.registry().names() {
+        let ladder = sys.ladder(name).unwrap();
+        let parsed = Json::parse(&ladder.to_json().render()).unwrap();
+        assert_eq!(parsed.get("workload").and_then(Json::as_str), Some(name));
+        let rungs = parsed.get("rungs").and_then(Json::as_array).unwrap();
+        assert_eq!(rungs.len(), ladder.rows.len(), "{name}");
+        let text = ladder.render_text();
+        for (j, row) in rungs.iter().zip(&ladder.rows) {
+            assert_eq!(j.get("label").and_then(Json::as_str), Some(row.label.as_str()));
+            let energy = j.get("energy_mj").and_then(Json::as_f64).unwrap();
+            let pj = j.get("pj_per_op").and_then(Json::as_f64).unwrap();
+            assert_eq!(energy.to_bits(), row.energy_mj.to_bits(), "{name}/{}", row.label);
+            assert_eq!(pj.to_bits(), row.pj_per_op.to_bits(), "{name}/{}", row.label);
+            // and the text table shows the same numbers (at its precision)
+            assert!(
+                text.contains(&format!("{:>10.4}", row.energy_mj)),
+                "{name}/{}: {text}",
+                row.label
+            );
+            assert!(
+                text.contains(&format!("{:>8.2}", row.pj_per_op)),
+                "{name}/{}: {text}",
+                row.label
+            );
+        }
+    }
+}
+
+#[test]
+fn stream_json_roundtrips_and_matches_report() {
+    let sys = SocSystem::new();
+    for name in ["surveillance", "facedet", "seizure", "mixed"] {
+        let run = sys.run(&RunSpec::new(name).frames(3)).unwrap();
+        let parsed = Json::parse(&run.to_json().render()).unwrap();
+        assert_eq!(parsed.get("workload").and_then(Json::as_str), Some(name));
+        assert_eq!(parsed.get("frames").and_then(Json::as_f64), Some(3.0));
+        for (key, expect) in [
+            ("time_s", run.result.time_s),
+            ("fps", run.result.fps),
+            ("energy_mj", run.result.energy_mj),
+            ("pj_per_op", run.result.pj_per_op),
+        ] {
+            let got = parsed.get(key).and_then(Json::as_f64).unwrap();
+            assert_eq!(got.to_bits(), expect.to_bits(), "{name}.{key}");
+        }
+        let tenants = parsed.get("tenants").and_then(Json::as_array).unwrap();
+        assert_eq!(tenants.len(), run.tenants.len(), "{name}");
+        // breakdown totals match the ledger sum
+        let breakdown = parsed.get("energy_breakdown_mj").unwrap();
+        let total: f64 = ["conv", "crypto", "other-sw", "dma", "ext-mem", "idle"]
+            .iter()
+            .map(|c| breakdown.get(c).and_then(Json::as_f64).unwrap())
+            .sum();
+        assert!(
+            (total - run.result.energy_mj).abs() < 1e-9 * (1.0 + total),
+            "{name}: breakdown {total} vs {}",
+            run.result.energy_mj
+        );
+    }
+}
+
+/// Acceptance: the mixed multi-tenant stream runs end-to-end through the
+/// scheduler with per-workload pJ/op in its report.
+#[test]
+fn mixed_stream_runs_with_per_workload_attribution() {
+    let sys = SocSystem::new();
+    let frames = 4usize;
+    let run = sys.run(&RunSpec::new("mixed").frames(frames)).unwrap();
+    assert_eq!(run.frames, frames);
+    let names: Vec<&str> = run.tenants.iter().map(|t| t.name.as_str()).collect();
+    assert_eq!(names, vec!["surveillance", "facedet", "seizure"]);
+    for t in &run.tenants {
+        assert!(t.eq_ops > 0, "{}", t.name);
+        assert!(t.active_mj > 0.0, "{}", t.name);
+        assert!(t.energy_mj >= t.active_mj, "{}", t.name);
+        assert!(t.pj_per_op.is_finite() && t.pj_per_op > 0.0, "{}", t.name);
+    }
+    // attributed energy (active + shared idle) adds back up to the total
+    let attributed: f64 = run.tenants.iter().map(|t| t.energy_mj).sum();
+    assert!(
+        (attributed - run.result.energy_mj).abs() < 1e-6 * run.result.energy_mj,
+        "attributed {attributed} vs total {}",
+        run.result.energy_mj
+    );
+    // the surveillance tenant dominates (ResNet-20 vs a cascade + a window)
+    assert!(run.tenants[0].energy_mj > run.tenants[1].energy_mj);
+    assert!(run.tenants[0].energy_mj > run.tenants[2].energy_mj);
+    // the text report carries the per-tenant rows
+    let text = run.render_text();
+    assert!(text.contains("tenant surveillance"), "{text}");
+    assert!(text.contains("tenant seizure"), "{text}");
+    // streaming a mixed graph is never materially slower than back-to-back
+    // rounds (tolerance for the extra FLL relocks at round boundaries)
+    assert!(run.result.speedup >= 0.95, "mixed stream speedup {}", run.result.speedup);
+}
+
+/// The registry accepts new workloads: a custom mixed composition streams
+/// through the same façade with no other wiring.
+#[test]
+fn custom_workload_registers_and_runs() {
+    let mut registry = Registry::builtin();
+    registry.register(Box::new(MixedStream::new(
+        "wardroom",
+        "two seizure windows per round",
+        vec![Box::new(SeizureDetection), Box::new(SeizureDetection)],
+    )));
+    let sys = SocSystem::with_registry(registry);
+    let run = sys.run(&RunSpec::new("wardroom").frames(2)).unwrap();
+    assert_eq!(run.workload, "wardroom");
+    assert_eq!(run.tenants.len(), 1, "duplicate tenants aggregate by name");
+    assert_eq!(run.tenants[0].name, "seizure");
+    assert_eq!(run.tenants[0].eq_ops, 2 * SeizureDetection.eq_ops());
+    assert!(run.result.energy_mj > 0.0);
+}
+
+/// Ablations expressed as mode overrides reproduce the legacy sweep.
+#[test]
+fn ablation_overrides_reproduce_legacy_configs() {
+    use fulmine::coordinator::ExecConfig;
+    use fulmine::hwce::golden::WeightPrec;
+    let sys = SocSystem::new();
+    let spec = RunSpec::new("surveillance")
+        .overrides(ModeOverrides { hwcrypt: Some(false), ..Default::default() });
+    let via_facade = sys.run_frame(&spec).unwrap();
+    let legacy = surveillance::run_frame(ExecConfig {
+        hwcrypt: false,
+        ..ExecConfig::with_hwce(WeightPrec::W4)
+    });
+    assert_eq!(via_facade.time_s.to_bits(), legacy.time_s.to_bits());
+    assert_eq!(via_facade.energy_mj.to_bits(), legacy.energy_mj.to_bits());
+}
