@@ -5,14 +5,22 @@
 //! hot path). Workloads resolve through the [`fulmine::workload::Registry`]
 //! via the [`SocSystem`] façade.
 //!
+//! Besides the human-readable report this harness writes
+//! **`BENCH_sched.json`**: one row per (workload, rung) with the scheduled
+//! and analytic single-frame makespans, their gap, pJ/op and the
+//! co-residency statistics — the machine-readable trajectory CI tracks
+//! across PRs.
+//!
 //! Uses `fulmine::bench_support` (the offline crate set has no criterion).
 
 use fulmine::bench_support::{blackbox, measure, report_row};
 use fulmine::coordinator::{surveillance, ExecConfig};
 use fulmine::hwce::golden::WeightPrec;
+use fulmine::json::Json;
 use fulmine::report;
 use fulmine::soc::sched::{Engine, Scheduler};
 use fulmine::system::{RunSpec, SocSystem};
+use fulmine::workload::frame_graph;
 
 fn main() {
     let sys = SocSystem::new();
@@ -45,6 +53,12 @@ fn main() {
             println!("{:<14} {pct:>7.1}% busy ({busy:.4} s of {:.4} s)", e.name(), r.time_s);
         }
     }
+    println!(
+        "overlap {:.4} s | cluster co-residency {:.4} s | scheduled/analytic {:.3}x",
+        r.overlap_s,
+        r.coresidency_s,
+        r.single_frame_s / r.single_frame_analytic_s
+    );
 
     println!("\n== per-tenant attribution, mixed x8 ==");
     let mixed = sys.run(&RunSpec::new("mixed").frames(8)).unwrap();
@@ -52,7 +66,37 @@ fn main() {
 
     println!("{}", report::stream_report("surveillance", 8, None).unwrap());
 
-    println!("== host cost of scheduling ==");
+    // Machine-readable perf trajectory: pJ/op + makespans per rung.
+    let mut rows: Vec<Json> = Vec::new();
+    for name in sys.registry().names() {
+        let w = sys.registry().resolve(name).unwrap();
+        for rung in w.rungs() {
+            let g = frame_graph(w, rung.cfg).unwrap();
+            let run = Scheduler::run(&g);
+            let ana = g.analytic();
+            rows.push(Json::obj(vec![
+                ("workload", Json::string(name)),
+                ("rung", Json::string(rung.label)),
+                ("scheduled_s", Json::num(run.makespan_s)),
+                ("analytic_s", Json::num(ana.makespan_s)),
+                ("gap_vs_analytic", Json::num(run.makespan_s / ana.makespan_s)),
+                ("energy_mj", Json::num(run.ledger.total_mj())),
+                (
+                    "pj_per_op",
+                    Json::num(run.ledger.total_mj() * 1e9 / w.eq_ops() as f64),
+                ),
+                ("mode_switches", Json::num(run.mode_switches as f64)),
+                ("overlap_s", Json::num(run.overlap_s)),
+                ("coresidency_s", Json::num(run.coresidency_s)),
+                ("n_jobs", Json::num(run.n_jobs as f64)),
+            ]));
+        }
+    }
+    let doc = Json::obj(vec![("rungs", Json::Arr(rows))]);
+    std::fs::write("BENCH_sched.json", doc.render() + "\n").expect("write BENCH_sched.json");
+    println!("wrote BENCH_sched.json");
+
+    println!("\n== host cost of scheduling ==");
     let best = ExecConfig::with_hwce(WeightPrec::W4);
     let g1 = surveillance::frame_graph(best);
     let g8 = g1.repeat(8);

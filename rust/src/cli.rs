@@ -122,6 +122,9 @@ fn parse_stream(args: &[String]) -> Result<Command> {
             "--frames" => {
                 let v = it.next().ok_or_else(|| anyhow!("--frames needs a value"))?;
                 frames = v.parse().map_err(|_| anyhow!("bad --frames value {v:?}"))?;
+                if frames == 0 {
+                    bail!("--frames must be at least 1 (a stream of 0 frames schedules nothing)");
+                }
             }
             "--config" => {
                 let v = it.next().ok_or_else(|| anyhow!("--config needs a value"))?;
@@ -262,6 +265,20 @@ mod tests {
         assert!(parse(&argv(&["stream", "surveillance", "--frames"])).is_err());
         assert!(parse(&argv(&["stream", "surveillance", "--frames", "abc"])).is_err());
         assert!(parse(&argv(&["stream", "surveillance", "--bogus"])).is_err());
+    }
+
+    /// `--frames 0` would schedule an empty graph; it must be rejected at
+    /// parse time with a clear message, as must a bare `stream`.
+    #[test]
+    fn degenerate_stream_requests_rejected_clearly() {
+        let e = parse(&argv(&["stream", "surveillance", "--frames", "0"]))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("--frames must be at least 1"), "{e}");
+        let e = parse(&argv(&["stream"])).unwrap_err().to_string();
+        assert!(e.contains("stream needs a workload"), "{e}");
+        // negative values are not a valid usize either
+        assert!(parse(&argv(&["stream", "surveillance", "--frames", "-3"])).is_err());
     }
 
     #[test]

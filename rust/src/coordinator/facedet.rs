@@ -3,27 +3,34 @@
 //! external memories), plus full-frame AES-128-XTS encryption when a face
 //! candidate is found (for transmission to the paired device).
 //!
-//! The frame graph is a two-stage chain (12-net conv + dense, then 24-net
-//! on the surviving candidates) with DMA window staging ahead of each
-//! stage and the encryption epilogue at the end. In streaming mode the
-//! next frame's window staging (cluster DMA, mode-agnostic) overlaps the
-//! current frame's encryption, and same-mode phases of adjacent frames
-//! share the cluster's mode windows; conv (KEC-CNN-SW) and XTS
-//! (CRY-CNN-SW) phases still serialize on the shared cluster clock.
+//! Each cascade stage is emitted at **tile granularity** over its window
+//! batch: per TCDM-sized tile of windows, the DMA window staging, the
+//! convolution (HWCE programmed from core 0) and the dense scoring layers
+//! as a software epilogue on the cluster cores at the KEC-CNN-SW point —
+//! so the dense layers of tile *t* co-reside with the convolution of tile
+//! *t+1* instead of serializing through a SW-mode window. The 24-net
+//! stage gates on every 12-net score (the candidate set is known only
+//! then), and the encryption epilogue relocks to CRY-CNN-SW once at the
+//! end. In streaming mode the next frame's staging and convolutions fill
+//! the remaining stalls.
 
-use super::{stream_graph, ExecConfig, GraphBuilder, StreamResult, UseCaseResult, OR1200_FACTOR};
+use super::{
+    stream_graph, ExecConfig, GraphBuilder, StreamResult, TiledConv, UseCaseResult, OR1200_FACTOR,
+};
 use crate::apps::facedet::*;
 use crate::kernels_sw::crypto_cost::SW_AES_XTS_CPB_1CORE;
 use crate::kernels_sw::dsp::DENSE_CYC_PER_MAC;
-use crate::soc::sched::{JobGraph, Scheduler};
+use crate::soc::sched::{JobGraph, JobId, Scheduler};
 
 /// Naive scalar dense cost (no SIMD dot product): load-load-mac per element
 /// plus loop overhead.
 const NAIVE_DENSE_CYC_PER_MAC: f64 = 3.4;
 
-fn dense_cycles(macs: u64, cfg: &ExecConfig) -> f64 {
+/// Single-core cycles of `macs` dense-layer MACs (the epilogue splits them
+/// across the cores).
+fn dense_cycles_1core(macs: u64, cfg: &ExecConfig) -> f64 {
     let per_mac = if cfg.simd_sw { DENSE_CYC_PER_MAC } else { NAIVE_DENSE_CYC_PER_MAC };
-    macs as f64 * per_mac / cfg.n_cores as f64
+    macs as f64 * per_mac
 }
 
 /// Emit one detection frame into an existing builder (the
@@ -32,24 +39,41 @@ fn dense_cycles(macs: u64, cfg: &ExecConfig) -> f64 {
 pub fn emit(b: &mut GraphBuilder) {
     let cfg = b.cfg;
 
-    // Stage 1: 12-net over all windows. Conv on HWCE (or SW); window
-    // extraction + dense layers on the cores.
+    // Stage 1: 12-net over all windows, tiled to the TCDM. Conv on HWCE
+    // (or SW); window extraction + dense layers on the cores.
     let c12 = conv_12net();
-    let conv_macs_12 = n_windows_12() as u64 * c12.macs();
-    let stage1 = b.dma(n_windows_12() * 12 * 12 * 2, &[]);
-    let conv1 = b.conv(conv_macs_12, c12.k, &[stage1]);
-    let dense1 = b.sw(dense_cycles(n_windows_12() as u64 * dense_macs_12(), &cfg), 1.0, &[conv1]);
+    let w12 = n_windows_12() as u64;
+    let stage1_bytes = n_windows_12() * 12 * 12 * 2;
+    let n1 = b.tiles(stage1_bytes);
+    let spec1 = TiledConv {
+        macs: w12 * c12.macs(),
+        k: c12.k,
+        stage_in_bytes: stage1_bytes,
+        stage_out_bytes: 0, // scores stay resident in L1/L2
+        epi_cycles_1core: dense_cycles_1core(w12 * dense_macs_12(), &cfg),
+    };
+    let t1 = b.push_tiled(n1, &spec1, &[]);
 
-    // Stage 2: 24-net on the 10 % candidate windows (known only once the
-    // 12-net dense layers have scored stage 1).
+    // Stage 2: 24-net on the 10 % candidate windows — known only once
+    // every 12-net tile has been scored, so each stage-2 tile gates on all
+    // stage-1 dense epilogues.
     let c24 = conv_24net();
-    let conv_macs_24 = n_windows_24() as u64 * c24.macs();
-    let stage2 = b.dma(n_windows_24() * 24 * 24 * 2, &[dense1]);
-    let conv2 = b.conv(conv_macs_24, c24.k, &[stage2]);
-    let dense2 = b.sw(dense_cycles(n_windows_24() as u64 * dense_macs_24(), &cfg), 1.0, &[conv2]);
+    let w24 = n_windows_24() as u64;
+    let stage2_bytes = n_windows_24() * 24 * 24 * 2;
+    let n2 = b.tiles(stage2_bytes);
+    let gate = t1.tails();
+    let deps2: Vec<Vec<JobId>> = (0..n2).map(|_| gate.clone()).collect();
+    let spec2 = TiledConv {
+        macs: w24 * c24.macs(),
+        k: c24.k,
+        stage_in_bytes: stage2_bytes,
+        stage_out_bytes: 0,
+        epi_cycles_1core: dense_cycles_1core(w24 * dense_macs_24(), &cfg),
+    };
+    let t2 = b.push_tiled(n2, &spec2, &deps2);
 
     // Detection epilogue: encrypt the full frame for remote recognition.
-    b.xts(encrypted_image_bytes(), &[dense2]);
+    b.xts(encrypted_image_bytes(), &t2.tails());
 }
 
 /// Emit the job graph of one detection frame.
@@ -108,6 +132,8 @@ pub fn battery_days(r: &UseCaseResult) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::Tiling;
+    use crate::soc::sched::Scheduler;
 
     /// Fig. 11 shape: ≈24× speedup and ≈13× energy vs the SW baseline.
     #[test]
@@ -174,6 +200,23 @@ mod tests {
         // only standby ext-mem power, no active transfers
         let ext = r.ledger.energy_mj(Category::ExtMem);
         assert!(ext < 0.15 * r.energy_mj, "ext-mem standby share {ext}");
+    }
+
+    /// Tiling the window batches lets the dense scoring of tile *t*
+    /// co-reside with the convolution of tile *t+1*: the tiled schedule
+    /// must beat the layer-granular one.
+    #[test]
+    fn tiled_beats_layer_granular() {
+        let best = ExecConfig::ladder().last().unwrap().cfg;
+        let tiled = Scheduler::run(&frame_graph(best));
+        let layer = Scheduler::run(&frame_graph(ExecConfig { tiling: Tiling::Layer, ..best }));
+        assert!(
+            tiled.makespan_s < 0.95 * layer.makespan_s,
+            "tiled {} vs layer-granular {}",
+            tiled.makespan_s,
+            layer.makespan_s
+        );
+        assert!(tiled.coresidency_s > 0.0, "conv and dense epilogues must co-reside");
     }
 
     // The scheduled-vs-analytic 5 % calibration and the streaming

@@ -1,21 +1,30 @@
 //! The application coordinator: expresses the secure-analytics pipelines of
-//! §IV as *job graphs* over the simulated SoC's engines (cores, HWCE,
-//! HWCRYPT, cluster DMA, uDMA channels to the external memories) and runs
-//! them on the event-driven scheduler ([`crate::soc::sched`]).
+//! §IV as *job graphs* over the simulated SoC's engines (per-core OR10N
+//! complex, HWCE, HWCRYPT, cluster DMA, uDMA channels to the external
+//! memories and the ADC) and runs them on the event-driven scheduler
+//! ([`crate::soc::sched`]).
 //!
 //! Each use case emits a [`JobGraph`] via the [`GraphBuilder`], whose phase
 //! methods carry the calibrated service-time models (§III measurements) and
 //! per-component energy charges; the paper's execution discipline (§II-D)
 //! then *emerges from the schedule* instead of being hand-approximated:
 //!
-//! * tiles sized to the 64 kB TCDM, staged L2↔TCDM by the cluster DMA,
-//!   which runs concurrently with compute (double buffering);
-//! * I/O and external memories served by per-interface uDMA channels that
-//!   prefetch as early as their data dependencies allow;
-//! * HWCE and HWCRYPT phases serialize when their operating modes differ
-//!   (shared cluster clock) and overlap when they don't;
-//! * operating-mode switches cost the 10 µs FLL relock (§II-A), counted by
-//!   the scheduler as the mode lock changes hands.
+//! * layers are emitted at **tile granularity** ([`GraphBuilder::push_tiled`]),
+//!   sized so a double-buffered tile fits the 64 kB TCDM ([`TCDM_BYTES`]) —
+//!   the L2↔TCDM DMA round trips of a layer pipeline *within* the layer;
+//! * accelerator phases carry a short control stub on a named core
+//!   (`Core(0)` programs the HWCE, `Core(1)` the HWCRYPT), so accelerator
+//!   control and SW epilogues co-reside on the core complex while the
+//!   engines run autonomously (the cores clock-gate on the event unit);
+//! * software epilogues are emitted on the individual cluster cores at the
+//!   builder's **cluster point** — the operating mode the workload keeps
+//!   the cluster at (the all-capable CRY-CNN-SW point when HWCE and
+//!   HWCRYPT phases interleave, §II-D) — so conv, cipher and epilogue
+//!   phases co-reside instead of serializing on a mode lock;
+//! * I/O and external memories are served by per-interface uDMA channels
+//!   that prefetch as early as their data dependencies allow;
+//! * operating-point changes that do occur cost the 10 µs FLL relock
+//!   (§II-A), counted by the scheduler on genuine frequency changes.
 //!
 //! Each use case produces a [`UseCaseResult`] with the same breakdown
 //! categories as Fig. 10/11/12 and the paper's pJ-per-equivalent-RISC-op
@@ -26,7 +35,8 @@
 //! The pre-scheduler analytic model (phase times summed on the cluster
 //! critical path, I/O hidden up to an overlap backlog) survives as
 //! [`JobGraph::analytic`]; `rust/tests/scheduler.rs` pins the scheduled
-//! results to it within 5 % so the Fig. 10/11/12 reports stay faithful.
+//! energy to it within 5 % and requires the tiled, co-resident schedule to
+//! beat its makespan at the accelerated rungs.
 
 pub mod facedet;
 pub mod seizure;
@@ -39,7 +49,43 @@ use crate::hwcrypt;
 use crate::kernels_sw::crypto_cost;
 use crate::soc::opmodes::{OperatingMode, OperatingPoint};
 use crate::soc::power::Component;
-use crate::soc::sched::{Engine, Job, JobGraph, JobId, Scheduler};
+use crate::soc::sched::{Engine, Job, JobGraph, JobId, Scheduler, N_CORES};
+
+/// TCDM capacity (§II: 64 kB shared L1).
+pub const TCDM_BYTES: usize = 64 * 1024;
+
+/// Working-set budget of one tile: half the TCDM, so tiles double-buffer
+/// (the DMA fills one half while compute consumes the other).
+pub const TILE_BYTES: usize = TCDM_BYTES / 2;
+
+/// Cycles a core spends programming an accelerator job (register writes +
+/// trigger; the core then clock-gates on the event unit while the engine
+/// runs). Same order as the HWCRYPT's measured
+/// [`hwcrypt::JOB_CONFIG_CYCLES`].
+pub const ACCEL_CTRL_CYCLES: f64 = 32.0;
+
+/// Granularity at which a use case's layers are emitted.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Tiling {
+    /// One job per layer phase (the pre-tiling emission; kept as the
+    /// baseline the tiled schedule is asserted to beat).
+    Layer,
+    /// Tiles sized to the double-buffered TCDM ([`TILE_BYTES`]).
+    Tcdm,
+}
+
+/// Exact integer split of `total` into `n` near-equal shares (share `t` of
+/// `0..n`); the shares always sum to `total`.
+pub fn share(total: usize, n: usize, t: usize) -> usize {
+    debug_assert!(t < n);
+    total * (t + 1) / n - total * t / n
+}
+
+/// [`share`] for 64-bit op counts.
+pub fn share64(total: u64, n: u64, t: u64) -> u64 {
+    debug_assert!(t < n);
+    total * (t + 1) / n - total * t / n
+}
 
 /// One labeled rung of a workload's configuration ladder (Fig. 10/11/12):
 /// the typed replacement for the former `(&'static str, ExecConfig)` tuples.
@@ -51,8 +97,8 @@ pub struct Rung {
 
 /// Optional per-run overrides on top of a selected [`Rung`]'s
 /// [`ExecConfig`] — how a [`crate::system::RunSpec`] expresses ablations
-/// (swap the HWCE precision, drop the HWCRYPT, raise VDD) without
-/// inventing new rungs.
+/// (swap the HWCE precision, drop the HWCRYPT, raise VDD, force
+/// layer-granular emission) without inventing new rungs.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct ModeOverrides {
     pub n_cores: Option<usize>,
@@ -62,6 +108,7 @@ pub struct ModeOverrides {
     /// the HWCE at that precision.
     pub hwce: Option<Option<WeightPrec>>,
     pub vdd: Option<f64>,
+    pub tiling: Option<Tiling>,
 }
 
 impl ModeOverrides {
@@ -72,6 +119,7 @@ impl ModeOverrides {
             hwcrypt: self.hwcrypt.unwrap_or(cfg.hwcrypt),
             hwce: self.hwce.unwrap_or(cfg.hwce),
             vdd: self.vdd.unwrap_or(cfg.vdd),
+            tiling: self.tiling.unwrap_or(cfg.tiling),
         }
     }
 }
@@ -89,14 +137,23 @@ pub struct ExecConfig {
     pub hwce: Option<WeightPrec>,
     /// Cluster supply voltage.
     pub vdd: f64,
+    /// Emission granularity (TCDM-sized tiles by default).
+    pub tiling: Tiling,
 }
 
 impl ExecConfig {
     pub fn sw_1core() -> Self {
-        ExecConfig { n_cores: 1, simd_sw: false, hwcrypt: false, hwce: None, vdd: 0.8 }
+        ExecConfig {
+            n_cores: 1,
+            simd_sw: false,
+            hwcrypt: false,
+            hwce: None,
+            vdd: 0.8,
+            tiling: Tiling::Tcdm,
+        }
     }
     pub fn sw_4core_simd() -> Self {
-        ExecConfig { n_cores: 4, simd_sw: true, hwcrypt: false, hwce: None, vdd: 0.8 }
+        ExecConfig { n_cores: 4, simd_sw: true, ..Self::sw_1core() }
     }
     pub fn with_hwcrypt() -> Self {
         ExecConfig { hwcrypt: true, ..Self::sw_4core_simd() }
@@ -116,7 +173,9 @@ impl ExecConfig {
         ]
     }
 
-    /// Operating point for convolution phases.
+    /// Natural operating mode of convolution phases (the fastest point
+    /// whose engine set covers them); a workload may raise the builder's
+    /// cluster point above this for co-residency.
     pub fn conv_op(&self) -> OperatingPoint {
         let mode = if self.hwce.is_some() { OperatingMode::KecCnnSw } else { OperatingMode::Sw };
         OperatingPoint::new(mode, self.vdd)
@@ -204,12 +263,20 @@ pub struct StreamResult {
     pub pj_per_op: f64,
     /// Makespan of a single scheduled frame (s).
     pub single_frame_s: f64,
+    /// Makespan of the analytic (serialized-cluster) replay of a single
+    /// frame — the calibration reference the scheduled frame is measured
+    /// against.
+    pub single_frame_analytic_s: f64,
     /// Throughput gain over `frames` back-to-back single-frame runs.
     pub speedup: f64,
     pub mode_switches: u64,
-    /// Per-engine busy time of the streamed schedule (s), indexed by
-    /// [`Engine::index`].
+    /// Per-engine as-run busy time of the streamed schedule (s), indexed
+    /// by [`Engine::index`].
     pub busy_s: [f64; crate::soc::sched::N_ENGINES],
+    /// Time with ≥ 2 jobs in flight in the streamed schedule (s).
+    pub overlap_s: f64,
+    /// Time with ≥ 2 *cluster* jobs in flight (CRY–CNN–SW co-residency).
+    pub coresidency_s: f64,
     pub ledger: EnergyLedger,
 }
 
@@ -222,6 +289,7 @@ pub fn stream_graph(
 ) -> StreamResult {
     assert!(frames >= 1, "streaming needs at least one frame");
     let single = Scheduler::run(graph);
+    let analytic = graph.analytic();
     let res = Scheduler::run(&graph.repeat(frames));
     let energy_mj = res.ledger.total_mj();
     StreamResult {
@@ -232,15 +300,62 @@ pub fn stream_graph(
         energy_mj,
         pj_per_op: energy_mj * 1e9 / (eq_ops_per_frame as f64 * frames as f64),
         single_frame_s: single.makespan_s,
+        single_frame_analytic_s: analytic.makespan_s,
         speedup: single.makespan_s * frames as f64 / res.makespan_s,
         mode_switches: res.mode_switches,
         busy_s: res.busy_s,
+        overlap_s: res.overlap_s,
+        coresidency_s: res.coresidency_s,
         ledger: res.ledger,
     }
 }
 
+/// Specification of one tiled convolutional layer for
+/// [`GraphBuilder::push_tiled`]: the whole-layer totals, split across
+/// tiles by the builder.
+#[derive(Debug, Clone, Copy)]
+pub struct TiledConv {
+    /// Multiply-accumulates of the whole layer.
+    pub macs: u64,
+    /// Filter size.
+    pub k: usize,
+    /// Bytes staged L2→TCDM ahead of each tile's convolution (inputs +
+    /// weight slice).
+    pub stage_in_bytes: usize,
+    /// Bytes staged TCDM→L2 after each tile's epilogue (0 = results are
+    /// consumed in place or staged by the caller).
+    pub stage_out_bytes: usize,
+    /// Single-core cycles of the whole layer's software epilogue
+    /// (bias/ReLU/pool, dense heads…); 0 = no epilogue.
+    pub epi_cycles_1core: f64,
+}
+
+/// Job ids emitted by [`GraphBuilder::push_tiled`], one entry per tile.
+#[derive(Debug, Clone, Default)]
+pub struct TiledConvIds {
+    pub stage_in: Vec<JobId>,
+    pub convs: Vec<JobId>,
+    /// Empty when the spec had no epilogue.
+    pub epis: Vec<JobId>,
+    /// Empty when the spec had no out-staging.
+    pub stage_out: Vec<JobId>,
+}
+
+impl TiledConvIds {
+    /// The final compute job of tile `t` (its epilogue when present, the
+    /// convolution otherwise) — what per-tile consumers depend on.
+    pub fn tail(&self, t: usize) -> JobId {
+        self.epis.get(t).copied().unwrap_or(self.convs[t])
+    }
+
+    /// Final compute jobs of every tile.
+    pub fn tails(&self) -> Vec<JobId> {
+        (0..self.convs.len()).map(|t| self.tail(t)).collect()
+    }
+}
+
 /// Builds a [`JobGraph`] phase by phase. Each method mirrors one phase kind
-/// of the paper's pipelines, computing its engine, service time (from the
+/// of the paper's pipelines, computing its engines, service time (from the
 /// §III-calibrated cycle models) and energy charges from the [`ExecConfig`];
 /// dependencies are explicit job ids returned by earlier calls.
 pub struct GraphBuilder {
@@ -250,11 +365,38 @@ pub struct GraphBuilder {
     /// the cluster clock, so their service time and charge follow it (the
     /// same convention the analytic model used).
     emission_mode: Option<OperatingMode>,
+    /// The operating mode the workload keeps the cluster at for its
+    /// convolution and epilogue phases — see [`GraphBuilder::set_cluster_point`].
+    cluster_point: OperatingMode,
 }
 
 impl GraphBuilder {
     pub fn new(cfg: ExecConfig) -> Self {
-        GraphBuilder { cfg, graph: JobGraph::new(), emission_mode: None }
+        // Natural point ([`ExecConfig::conv_op`]): the fastest mode that
+        // covers the convolution engine; workloads with interleaved
+        // HWCRYPT traffic raise it to the all-capable CRY-CNN-SW point
+        // for co-residency.
+        let cluster_point = cfg.conv_op().mode;
+        GraphBuilder { cfg, graph: JobGraph::new(), emission_mode: None, cluster_point }
+    }
+
+    /// Pin the cluster at `mode` for convolution and epilogue phases. A
+    /// workload whose steady state interleaves HWCE and HWCRYPT work (e.g.
+    /// §IV-A, which decrypts and re-encrypts every tile) sets the
+    /// all-capable [`OperatingMode::CryCnnSw`] point here: everything then
+    /// shares one clock and co-resides with zero relocks, trading the
+    /// KEC-mode frequency margin for full overlap (§II-D). Panics if the
+    /// point cannot host the configured convolution engine.
+    pub fn set_cluster_point(&mut self, mode: OperatingMode) {
+        if self.cfg.hwce.is_some() {
+            assert!(mode.hwce_available(), "cluster point {mode:?} cannot host the HWCE");
+        }
+        self.cluster_point = mode;
+    }
+
+    /// The current cluster point (conv/epilogue emission mode).
+    pub fn cluster_point(&self) -> OperatingMode {
+        self.cluster_point
     }
 
     /// Detach the external flash/FRAM (no standby charge) — §IV-C.
@@ -286,6 +428,36 @@ impl GraphBuilder {
         self.graph
     }
 
+    /// Tiles a working set of `bytes` splits into so each tile fits the
+    /// double-buffered TCDM half ([`TILE_BYTES`]); 1 under layer-granular
+    /// emission.
+    pub fn tiles(&self, working_set_bytes: usize) -> usize {
+        match self.cfg.tiling {
+            Tiling::Layer => 1,
+            Tiling::Tcdm => working_set_bytes.div_ceil(TILE_BYTES).max(1),
+        }
+    }
+
+    /// The first `n` cluster cores.
+    fn core_set(&self, n: usize) -> Vec<Engine> {
+        (0..n.min(N_CORES)).map(|i| Engine::Core(i as u8)).collect()
+    }
+
+    /// The core that programs the HWCE.
+    fn hwce_ctrl_core(&self) -> Engine {
+        Engine::Core(0)
+    }
+
+    /// The core that programs the HWCRYPT (off the HWCE controller when
+    /// the complex has more than one core).
+    fn crypto_ctrl_core(&self) -> Engine {
+        if self.cfg.n_cores > 1 {
+            Engine::Core(1)
+        } else {
+            Engine::Core(0)
+        }
+    }
+
     /// Operating point for SOC-side movers: the cluster clock at the mode
     /// of the last cluster phase.
     fn mover_op(&self) -> OperatingPoint {
@@ -295,51 +467,87 @@ impl GraphBuilder {
     fn push(
         &mut self,
         label: &'static str,
-        engine: Engine,
+        engines: Vec<Engine>,
         op: OperatingPoint,
         duration_s: f64,
         deps: &[JobId],
         charges: Vec<(Category, Component, f64)>,
     ) -> JobId {
-        if engine.mode_locked() {
+        if engines.iter().any(|e| e.mode_locked()) {
             self.emission_mode = Some(op.mode);
         }
-        self.graph.push(Job { label, engine, op, duration_s, deps: deps.to_vec(), charges })
+        self.graph.push(Job { label, engines, op, duration_s, deps: deps.to_vec(), charges })
+    }
+
+    /// A control stub: the named core programs an accelerator job
+    /// ([`ACCEL_CTRL_CYCLES`]) and hands it off; the accelerator job
+    /// depends on it. Control therefore occupies the core complex only for
+    /// the programming interval — the core clock-gates on the event unit
+    /// while the engine runs (§II) — which is what lets epilogues
+    /// co-reside with accelerator control on the remaining cores. Energy
+    /// stays on the accelerator job's controller-core charge (the
+    /// calibrated §III anchors include it).
+    fn accel_ctrl(&mut self, core: Engine, op: OperatingPoint, deps: &[JobId]) -> JobId {
+        self.push("ctrl", vec![core], op, ACCEL_CTRL_CYCLES / op.freq_hz(), deps, Vec::new())
     }
 
     /// A convolution phase over `macs` MACs with filter size `k` — on the
-    /// HWCE (plus one controller core) or on the software cores.
+    /// HWCE (programmed from `Core(0)`, running at the cluster point) or
+    /// on the software cores.
     pub fn conv(&mut self, macs: u64, k: usize, deps: &[JobId]) -> JobId {
-        let op = self.cfg.conv_op();
-        let (cycles, engine, charges) = match self.cfg.hwce {
-            Some(prec) => (
-                macs as f64 / (k * k) as f64 * crate::hwce::timing::analytic_cycles_per_px(k, prec),
-                Engine::Hwce,
-                vec![
-                    (Category::Conv, Component::Core, 1.0), // controller core
-                    (Category::Conv, Component::ClusterInfra, 1.0),
-                    (Category::Conv, Component::Hwce, 1.0),
-                ],
-            ),
-            None => (
-                macs as f64 * sw_conv_cyc_per_mac(k, &self.cfg),
-                Engine::Cores,
-                vec![
-                    (Category::Conv, Component::Core, self.cfg.n_cores as f64),
-                    (Category::Conv, Component::ClusterInfra, 1.0),
-                ],
-            ),
-        };
-        self.push("conv", engine, op, cycles / op.freq_hz(), deps, charges)
+        match self.cfg.hwce {
+            Some(prec) => {
+                let op = OperatingPoint::new(self.cluster_point, self.cfg.vdd);
+                let cycles = macs as f64 / (k * k) as f64
+                    * crate::hwce::timing::analytic_cycles_per_px(k, prec);
+                let ctrl = self.accel_ctrl(self.hwce_ctrl_core(), op, deps);
+                self.push(
+                    "conv",
+                    vec![Engine::Hwce],
+                    op,
+                    cycles / op.freq_hz(),
+                    &[ctrl],
+                    vec![
+                        (Category::Conv, Component::Core, 1.0), // controller core
+                        (Category::Conv, Component::ClusterInfra, 1.0),
+                        (Category::Conv, Component::Hwce, 1.0),
+                    ],
+                )
+            }
+            None => {
+                let op = OperatingPoint::new(self.cluster_point, self.cfg.vdd);
+                let cycles = macs as f64 * sw_conv_cyc_per_mac(k, &self.cfg);
+                let engines = self.core_set(self.cfg.n_cores);
+                self.push(
+                    "conv",
+                    engines,
+                    op,
+                    cycles / op.freq_hz(),
+                    deps,
+                    vec![
+                        (Category::Conv, Component::Core, self.cfg.n_cores as f64),
+                        (Category::Conv, Component::ClusterInfra, 1.0),
+                    ],
+                )
+            }
+        }
     }
 
-    /// An AES-128-XTS phase over `bytes` (en- or decryption).
+    /// An AES-128-XTS phase over `bytes` (en- or decryption). The HWCRYPT
+    /// path needs the all-capable CRY-CNN-SW point and is programmed from
+    /// the crypto controller core.
     pub fn xts(&mut self, bytes: usize, deps: &[JobId]) -> JobId {
-        let op = self.cfg.crypto_op();
-        let (cycles, engine, charges) = if self.cfg.hwcrypt {
-            (
-                hwcrypt::CipherOp::AesXts.cycles(bytes) as f64 + hwcrypt::JOB_CONFIG_CYCLES as f64,
-                Engine::HwcryptAes,
+        if self.cfg.hwcrypt {
+            let op = self.cfg.crypto_op(); // the AES datapath needs CRY-CNN-SW
+            let cycles =
+                hwcrypt::CipherOp::AesXts.cycles(bytes) as f64 + hwcrypt::JOB_CONFIG_CYCLES as f64;
+            let ctrl = self.accel_ctrl(self.crypto_ctrl_core(), op, deps);
+            self.push(
+                "xts",
+                vec![Engine::HwcryptAes],
+                op,
+                cycles / op.freq_hz(),
+                &[ctrl],
                 vec![
                     (Category::Crypto, Component::Core, 1.0), // controller core
                     (Category::Crypto, Component::ClusterInfra, 1.0),
@@ -347,26 +555,42 @@ impl GraphBuilder {
                 ],
             )
         } else {
-            (
-                crypto_cost::sw_xts_cpb(self.cfg.n_cores) * bytes as f64,
-                Engine::Cores,
+            let op = self.cfg.sw_op();
+            let cycles = crypto_cost::sw_xts_cpb(self.cfg.n_cores) * bytes as f64;
+            let engines = self.core_set(self.cfg.n_cores);
+            self.push(
+                "xts",
+                engines,
+                op,
+                cycles / op.freq_hz(),
+                deps,
                 vec![
                     (Category::Crypto, Component::Core, self.cfg.n_cores as f64),
                     (Category::Crypto, Component::ClusterInfra, 1.0),
                 ],
             )
-        };
-        self.push("xts", engine, op, cycles / op.freq_hz(), deps, charges)
+        }
     }
 
-    /// A sponge authenticated-encryption phase (KEC-CNN-SW capable).
+    /// A sponge authenticated-encryption phase (KEC-CNN-SW capable; hosted
+    /// at the cluster point when that point covers the KECCAK datapath).
     pub fn sponge_ae(&mut self, bytes: usize, deps: &[JobId]) -> JobId {
-        let (op, cycles, engine, charges) = if self.cfg.hwcrypt {
-            (
-                OperatingPoint::new(OperatingMode::KecCnnSw, self.cfg.vdd),
-                hwcrypt::CipherOp::SpongeAe(crate::crypto::sponge::SpongeConfig::MAX_RATE)
-                    .cycles(bytes) as f64,
-                Engine::HwcryptKec,
+        if self.cfg.hwcrypt {
+            let mode = if self.cluster_point.keccak_available() {
+                self.cluster_point
+            } else {
+                OperatingMode::KecCnnSw
+            };
+            let op = OperatingPoint::new(mode, self.cfg.vdd);
+            let cycles = hwcrypt::CipherOp::SpongeAe(crate::crypto::sponge::SpongeConfig::MAX_RATE)
+                .cycles(bytes) as f64;
+            let ctrl = self.accel_ctrl(self.crypto_ctrl_core(), op, deps);
+            self.push(
+                "sponge-ae",
+                vec![Engine::HwcryptKec],
+                op,
+                cycles / op.freq_hz(),
+                &[ctrl],
                 vec![
                     (Category::Crypto, Component::Core, 1.0),
                     (Category::Crypto, Component::ClusterInfra, 1.0),
@@ -374,28 +598,43 @@ impl GraphBuilder {
                 ],
             )
         } else {
-            (
-                self.cfg.sw_op(),
-                crypto_cost::SW_KECCAK_CPB_1CORE * bytes as f64,
-                Engine::Cores,
+            let op = self.cfg.sw_op();
+            let cycles = crypto_cost::SW_KECCAK_CPB_1CORE * bytes as f64;
+            let engines = self.core_set(1);
+            self.push(
+                "sponge-ae",
+                engines,
+                op,
+                cycles / op.freq_hz(),
+                deps,
                 vec![
                     (Category::Crypto, Component::Core, 1.0),
                     (Category::Crypto, Component::ClusterInfra, 1.0),
                 ],
             )
-        };
-        self.push("sponge-ae", engine, op, cycles / op.freq_hz(), deps, charges)
+        }
     }
 
     /// A software phase of `cycles_1core` single-core cycles with a
-    /// parallelizable fraction `par` (Amdahl over the config's cores).
+    /// parallelizable fraction `par` (Amdahl over the config's cores). The
+    /// phase owns the configured cores for its whole interval and runs at
+    /// the SW point (its own mode window).
     pub fn sw(&mut self, cycles_1core: f64, par: f64, deps: &[JobId]) -> JobId {
+        self.sw_split(cycles_1core * (1.0 - par), cycles_1core * par, deps)
+    }
+
+    /// A software phase given explicit serial and parallelizable cycle
+    /// pools: the serial part runs on one core while the others wait at
+    /// the barrier (still clocked, as the lump model charged), the
+    /// parallel part splits across the configured cores.
+    pub fn sw_split(&mut self, serial_cycles: f64, parallel_cycles: f64, deps: &[JobId]) -> JobId {
         let op = self.cfg.sw_op();
         let n = self.cfg.n_cores as f64;
-        let cycles = cycles_1core * ((1.0 - par) + par / n);
+        let cycles = serial_cycles + parallel_cycles / n;
+        let engines = self.core_set(self.cfg.n_cores);
         self.push(
             "sw",
-            Engine::Cores,
+            engines,
             op,
             cycles / op.freq_hz(),
             deps,
@@ -406,6 +645,69 @@ impl GraphBuilder {
         )
     }
 
+    /// A fully-parallel software epilogue of `cycles_1core` single-core
+    /// cycles, emitted at the *cluster point* on the individual cores —
+    /// so it co-resides with accelerator phases instead of forcing the
+    /// cluster through a SW-mode window (total core-cycles, and therefore
+    /// active energy, match the equivalent [`GraphBuilder::sw`] phase).
+    pub fn epilogue(&mut self, cycles_1core: f64, deps: &[JobId]) -> JobId {
+        let op = OperatingPoint::new(self.cluster_point, self.cfg.vdd);
+        let engines = self.core_set(self.cfg.n_cores);
+        let n = engines.len() as f64;
+        self.push(
+            "epilogue",
+            engines,
+            op,
+            cycles_1core / n / op.freq_hz(),
+            deps,
+            vec![
+                (Category::OtherSw, Component::Core, n),
+                (Category::OtherSw, Component::ClusterInfra, 1.0),
+            ],
+        )
+    }
+
+    /// Emit one convolutional layer at tile granularity: per tile, the
+    /// L2→TCDM staging DMA, the convolution (with its control stub), the
+    /// software epilogue on the cores and the optional TCDM→L2 staging
+    /// back — each tile chained only through its own dependencies, so the
+    /// staging of tile *t+1* pipelines under the compute of tile *t*
+    /// (double buffering within the layer). `per_tile_deps[t]` supplies
+    /// the tile's external inputs (e.g. its decrypted operands); pass `&[]`
+    /// when the layer has none. `n_tiles` normally comes from
+    /// [`GraphBuilder::tiles`] over the layer's TCDM working set.
+    pub fn push_tiled(
+        &mut self,
+        n_tiles: usize,
+        spec: &TiledConv,
+        per_tile_deps: &[Vec<JobId>],
+    ) -> TiledConvIds {
+        assert!(n_tiles >= 1, "a layer has at least one tile");
+        assert!(
+            per_tile_deps.is_empty() || per_tile_deps.len() == n_tiles,
+            "per-tile deps must match the tile count ({} vs {n_tiles})",
+            per_tile_deps.len()
+        );
+        let mut ids = TiledConvIds::default();
+        for t in 0..n_tiles {
+            let deps: &[JobId] = per_tile_deps.get(t).map(Vec::as_slice).unwrap_or(&[]);
+            let si = self.dma(share(spec.stage_in_bytes, n_tiles, t), deps);
+            let cv = self.conv(share64(spec.macs, n_tiles as u64, t as u64), spec.k, &[si]);
+            ids.stage_in.push(si);
+            ids.convs.push(cv);
+            let mut tail = cv;
+            if spec.epi_cycles_1core > 0.0 {
+                let ep = self.epilogue(spec.epi_cycles_1core / n_tiles as f64, &[cv]);
+                ids.epis.push(ep);
+                tail = ep;
+            }
+            if spec.stage_out_bytes > 0 {
+                ids.stage_out.push(self.dma(share(spec.stage_out_bytes, n_tiles, t), &[tail]));
+            }
+        }
+        ids
+    }
+
     /// Cluster-DMA staging of `bytes` L2↔TCDM (8 B/cycle AXI), concurrent
     /// with compute on its own engine.
     pub fn dma(&mut self, bytes: usize, deps: &[JobId]) -> JobId {
@@ -413,11 +715,28 @@ impl GraphBuilder {
         let duration = bytes as f64 / 8.0 / op.freq_hz();
         self.push(
             "dma",
-            Engine::ClusterDma,
+            vec![Engine::ClusterDma],
             op,
             duration,
             deps,
             vec![(Category::Dma, Component::ClusterInfra, 1.0)],
+        )
+    }
+
+    /// Sensor acquisition over the dedicated ADC uDMA channel (§II: the
+    /// uDMA serves its peripherals on independent channels, even with the
+    /// cluster asleep) — a burst from the ADC FIFO at the AXI-side width,
+    /// concurrent with cluster compute and the other movers.
+    pub fn adc(&mut self, bytes: usize, deps: &[JobId]) -> JobId {
+        let op = self.mover_op();
+        let duration = bytes as f64 / 8.0 / op.freq_hz();
+        self.push(
+            "adc",
+            vec![Engine::UdmaAdc],
+            op,
+            duration,
+            deps,
+            vec![(Category::Dma, Component::SocDomain, 1.0)],
         )
     }
 
@@ -432,7 +751,7 @@ impl GraphBuilder {
         let duration = bytes as f64 / device.bandwidth_bps();
         self.push(
             "extmem",
-            engine,
+            vec![engine],
             op,
             duration,
             deps,
@@ -458,6 +777,7 @@ mod tests {
         assert_eq!(l.len(), 5);
         assert_eq!(l[0].cfg.n_cores, 1);
         assert!(l[4].cfg.hwce == Some(WeightPrec::W4));
+        assert!(l.iter().all(|r| r.cfg.tiling == Tiling::Tcdm));
     }
 
     #[test]
@@ -472,6 +792,33 @@ mod tests {
         assert_eq!(cfg.n_cores, base.n_cores);
         let sw = ModeOverrides { hwce: Some(None), ..Default::default() }.apply(base);
         assert_eq!(sw.hwce, None);
+        let layered = ModeOverrides { tiling: Some(Tiling::Layer), ..Default::default() }.apply(base);
+        assert_eq!(layered.tiling, Tiling::Layer);
+    }
+
+    #[test]
+    fn shares_partition_exactly() {
+        for (total, n) in [(0usize, 1usize), (7, 3), (64 * 1024, 5), (1_000_003, 17)] {
+            let sum: usize = (0..n).map(|t| share(total, n, t)).sum();
+            assert_eq!(sum, total, "{total}/{n}");
+        }
+        let total = 2_300_000_017u64;
+        let sum: u64 = (0..53u64).map(|t| share64(total, 53, t)).sum();
+        assert_eq!(sum, total);
+    }
+
+    #[test]
+    fn tiles_respect_tcdm_and_granularity() {
+        let b = GraphBuilder::new(ExecConfig::with_hwce(WeightPrec::W4));
+        assert_eq!(b.tiles(1), 1);
+        assert_eq!(b.tiles(TILE_BYTES), 1);
+        assert_eq!(b.tiles(TILE_BYTES + 1), 2);
+        assert_eq!(b.tiles(10 * TILE_BYTES), 10);
+        let layer = GraphBuilder::new(ExecConfig {
+            tiling: Tiling::Layer,
+            ..ExecConfig::with_hwce(WeightPrec::W4)
+        });
+        assert_eq!(layer.tiles(10 * TILE_BYTES), 1);
     }
 
     #[test]
@@ -496,12 +843,27 @@ mod tests {
 
     #[test]
     fn mode_switch_counted_and_costed() {
+        // conv at the default KEC point, XTS at CRY: two genuine relocks
         let mut b = GraphBuilder::new(ExecConfig::with_hwce(WeightPrec::W4));
-        let c1 = b.conv(1_000_000, 3, &[]); // KEC mode
-        let x = b.xts(1024, &[c1]); // CRY mode — switch
+        let c1 = b.conv(1_000_000, 3, &[]); // KEC point
+        let x = b.xts(1 << 20, &[c1]); // CRY — switch
         b.conv(1_000_000, 3, &[x]); // back — switch
         let r = Scheduler::run(&b.build());
         assert_eq!(r.mode_switches, 2);
+    }
+
+    /// Raising the cluster point to CRY-CNN-SW makes the same chain
+    /// relock-free: conv, cipher and epilogue share the all-capable point.
+    #[test]
+    fn cry_point_removes_relocks() {
+        let mut b = GraphBuilder::new(ExecConfig::with_hwce(WeightPrec::W4));
+        b.set_cluster_point(OperatingMode::CryCnnSw);
+        let c1 = b.conv(1_000_000, 3, &[]);
+        let x = b.xts(1 << 20, &[c1]);
+        let c2 = b.conv(1_000_000, 3, &[x]);
+        b.epilogue(10_000.0, &[c2]);
+        let r = Scheduler::run(&b.build());
+        assert_eq!(r.mode_switches, 0, "all phases share the CRY-CNN-SW point");
     }
 
     #[test]
@@ -528,6 +890,55 @@ mod tests {
         let t4 = phase_time(ExecConfig::sw_4core_simd(), |b| b.sw(1e9, 0.9, &[]));
         let s = t1 / t4;
         assert!((s - 1.0 / (0.1 + 0.9 / 4.0)).abs() < 0.05, "amdahl {s}");
+    }
+
+    /// An epilogue phase carries the same core-cycles (and therefore
+    /// active energy) as the equivalent fully-parallel `sw` phase, but at
+    /// the cluster point so it can co-reside with accelerator work.
+    #[test]
+    fn epilogue_energy_matches_sw_phase() {
+        let cycles = 5e6;
+        let cfg = ExecConfig::with_hwce(WeightPrec::W4);
+        let mut a = GraphBuilder::new(cfg);
+        a.epilogue(cycles, &[]);
+        let ga = a.build();
+        let mut b = GraphBuilder::new(cfg);
+        b.sw(cycles, 1.0, &[]);
+        let gb = b.build();
+        let (ea, eb) = (ga.active_mj(), gb.active_mj());
+        // core charges identical; only the ClusterInfra share differs with
+        // the point's frequency — a few percent of a small term
+        assert!((ea - eb).abs() / eb < 0.05, "epilogue {ea} vs sw {eb}");
+    }
+
+    #[test]
+    fn push_tiled_emits_pipelined_tiles() {
+        let mut b = GraphBuilder::new(ExecConfig::with_hwce(WeightPrec::W4));
+        let spec = TiledConv {
+            macs: 9_000_000,
+            k: 3,
+            stage_in_bytes: 3 * TILE_BYTES,
+            stage_out_bytes: 3 * TILE_BYTES / 2,
+            epi_cycles_1core: 300_000.0,
+        };
+        let n = b.tiles(spec.stage_in_bytes);
+        assert_eq!(n, 3);
+        let ids = b.push_tiled(n, &spec, &[]);
+        assert_eq!(ids.convs.len(), 3);
+        assert_eq!(ids.epis.len(), 3);
+        assert_eq!(ids.stage_out.len(), 3);
+        assert_eq!(ids.tails(), ids.epis);
+        let g = b.build();
+        // tiles pipeline: the 3-tile schedule beats 3× a 1-tile-serial
+        // schedule's span because DMA/conv/epilogue of adjacent tiles
+        // overlap, and never beats the critical path of one tile chain
+        let r = Scheduler::run(&g);
+        assert!(r.overlap_s > 0.0, "tiles must overlap");
+        assert!(r.makespan_s <= g.serialized_bound());
+        // every tile's conv depends on its own staging only
+        for t in 0..3 {
+            assert_eq!(g.jobs[ids.convs[t]].deps.len(), 1, "conv deps via ctrl stub");
+        }
     }
 
     #[test]
@@ -574,5 +985,6 @@ mod tests {
         assert!((r.fps - 4.0 / r.time_s).abs() < 1e-9);
         assert!(r.speedup >= 0.99, "streaming slower than serial: {}", r.speedup);
         assert!(r.time_s >= r.single_frame_s - 1e-12);
+        assert!(r.single_frame_analytic_s > 0.0);
     }
 }

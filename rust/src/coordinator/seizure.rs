@@ -3,36 +3,68 @@
 //! overlapped 256-sample windows), with AES-128-XTS encryption of the PCA
 //! components for collection.
 //!
-//! The window graph is acquisition (ADC samples staged by DMA) → analytics
-//! on the cores → encryption of the collected components; in streaming
-//! mode the next window's acquisition overlaps the current analytics, as
-//! the real device does between its 0.5 s deadlines.
+//! The window graph streams the acquisition over the dedicated ADC uDMA
+//! channel in chunks, with the covariance accumulation pipelining behind
+//! each chunk (the analytics no longer wait for the full window to land).
+//! The remaining pipeline stages run on the cores with the serial/parallel
+//! split of the cycle model ([`eeg_cost::EegOpCounts`]): Jacobi
+//! diagonalization (rotation search serial, row/column updates parallel),
+//! projection, DWT, SVM. The XTS encryption of the collected components
+//! depends only on the projection (the components exist then), so in
+//! streaming mode it overlaps the next window's acquisition and analytics;
+//! the cluster relocks once to CRY-CNN-SW per window, as the real device
+//! does between its 0.5 s deadlines.
 
-use super::{stream_graph, ExecConfig, GraphBuilder, Rung, StreamResult, UseCaseResult, OR1200_FACTOR};
+use super::{
+    share, stream_graph, ExecConfig, GraphBuilder, Rung, StreamResult, Tiling, UseCaseResult,
+    OR1200_FACTOR,
+};
 use crate::apps::eeg;
 use crate::kernels_sw::crypto_cost::SW_AES_XTS_CPB_1CORE;
-use crate::kernels_sw::eeg_cost;
-use crate::soc::sched::{JobGraph, Scheduler};
+use crate::kernels_sw::eeg_cost::{self, CYC_PER_OP_PARALLEL, CYC_PER_OP_SERIAL};
+use crate::soc::sched::{JobGraph, JobId, Scheduler};
 
 /// Seconds between windows (50 % overlap at 256 Hz).
 pub const WINDOW_PERIOD_S: f64 = 0.5;
+
+/// Acquisition chunks per window under tiled emission: the ADC uDMA
+/// delivers channel groups while the covariance accumulation consumes
+/// them.
+pub const ACQ_CHUNKS: usize = 4;
 
 /// Emit one detection window into an existing builder (the
 /// [`crate::workload::Workload`] entry point; the configuration is the
 /// builder's).
 pub fn emit(b: &mut GraphBuilder) {
     b.set_ext_mem_present(false); // pacemaker-class node: no flash/FRAM
-    // acquire samples (23 ch × 128 new samples × 4 B). Modeled as a
-    // cluster-DMA staging job at AXI bandwidth — the convention the
-    // analytic model used; a dedicated ADC uDMA channel is a scheduler
-    // follow-up (see ROADMAP).
-    let acq = b.dma(eeg_cost::N_CHANNELS * 128 * 4, &[]);
-    // the analytics pipeline runs on the cores (PCA diagonalization partly
-    // serial — Amdahl handled inside eeg_pipeline_cycles)
-    let cycn = eeg_cost::eeg_pipeline_cycles(b.cfg.n_cores) as f64;
-    let analytics = b.sw(cycn, 0.0, &[acq]); // cycles already include the parallel split
-    // encrypt the PCA components for secure collection
-    b.xts(eeg::collected_bytes(), &[analytics]);
+    let ops = eeg_cost::EegOpCounts::standard();
+    // acquire samples (23 ch × 128 new samples × 4 B) over the dedicated
+    // ADC uDMA channel, in chunks; the covariance accumulation of chunk t
+    // starts as soon as chunk t has landed.
+    let acq_bytes = eeg_cost::N_CHANNELS * 128 * 4;
+    let n = if b.cfg.tiling == Tiling::Layer { 1 } else { ACQ_CHUNKS };
+    let cov_cycles = ops.covariance as f64 * CYC_PER_OP_PARALLEL;
+    let mut cov: Vec<JobId> = Vec::with_capacity(n);
+    for t in 0..n {
+        let a = b.adc(share(acq_bytes, n, t), &[]);
+        cov.push(b.sw_split(0.0, cov_cycles / n as f64, &[a]));
+    }
+    // Jacobi eigendecomposition: the rotation search is serial, the
+    // row/column updates parallelize (the §IV-C 2.6× four-core band)
+    let diag_serial_ops = ops.diagonalization / 4;
+    let diag = b.sw_split(
+        diag_serial_ops as f64 * CYC_PER_OP_SERIAL,
+        (ops.diagonalization - diag_serial_ops) as f64 * CYC_PER_OP_PARALLEL,
+        &cov,
+    );
+    // projection onto the principal components — the collected data
+    let proj = b.sw_split(0.0, ops.projection as f64 * CYC_PER_OP_PARALLEL, &[diag]);
+    // DWT + energy coefficients + SVM classification
+    let dwt = b.sw_split(0.0, ops.dwt as f64 * CYC_PER_OP_PARALLEL, &[proj]);
+    b.sw_split(ops.svm as f64 * CYC_PER_OP_SERIAL, 0.0, &[dwt]);
+    // encrypt the PCA components for secure collection: ready once the
+    // projection exists, independent of the classification tail
+    b.xts(eeg::collected_bytes(), &[proj]);
 }
 
 /// Emit the job graph of one detection window.
@@ -169,6 +201,41 @@ mod tests {
         for r in ladder() {
             assert!(r.time_s < WINDOW_PERIOD_S, "{}: {} s", r.label, r.time_s);
         }
+    }
+
+    /// The staged pipeline must cost exactly the lump cycle model: the
+    /// per-stage serial/parallel split re-sums to
+    /// [`eeg_cost::eeg_pipeline_cycles`].
+    #[test]
+    fn staged_emission_matches_lump_cycle_model() {
+        for n_cores in [1usize, 4] {
+            let ops = eeg_cost::EegOpCounts::standard();
+            let n = n_cores as f64;
+            let diag_serial = ops.diagonalization / 4;
+            let staged = ops.covariance as f64 * CYC_PER_OP_PARALLEL / n
+                + diag_serial as f64 * CYC_PER_OP_SERIAL
+                + (ops.diagonalization - diag_serial) as f64 * CYC_PER_OP_PARALLEL / n
+                + ops.projection as f64 * CYC_PER_OP_PARALLEL / n
+                + ops.dwt as f64 * CYC_PER_OP_PARALLEL / n
+                + ops.svm as f64 * CYC_PER_OP_SERIAL;
+            let lump = eeg_cost::eeg_pipeline_cycles(n_cores) as f64;
+            assert!(
+                (staged - lump).abs() <= 1.0,
+                "{n_cores} cores: staged {staged} vs lump {lump}"
+            );
+        }
+    }
+
+    /// Chunked acquisition pipelines under the covariance accumulation:
+    /// the tiled window is strictly faster than the layer-granular one
+    /// (by most of the acquisition latency).
+    #[test]
+    fn tiled_acquisition_beats_layer_granular() {
+        let best = rung_configs().pop().unwrap().cfg;
+        let tiled = Scheduler::run(&window_graph(best)).makespan_s;
+        let layer =
+            Scheduler::run(&window_graph(ExecConfig { tiling: Tiling::Layer, ..best })).makespan_s;
+        assert!(tiled < layer, "tiled {tiled} vs layer-granular {layer}");
     }
 
     /// Streamed windows stay within the 0.5 s real-time budget per window

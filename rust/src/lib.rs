@@ -21,23 +21,31 @@
 //! ## Execution model: job graphs on an event-driven scheduler
 //!
 //! The secure-analytics use cases of §IV ([`coordinator`]) do not sum phase
-//! times analytically; they *emit job graphs*. A
+//! times analytically; they *emit job graphs at tile granularity*. A
 //! [`coordinator::GraphBuilder`] turns each pipeline phase (convolution,
-//! XTS/sponge cipher run, software kernel, cluster-DMA stage, external
-//! flash/FRAM transfer) into a typed [`soc::sched::Job`] bound to one of
-//! the SoC's engines — cores, HWCE, the two HWCRYPT datapaths, the cluster
-//! DMA, and per-interface uDMA channels — with explicit data dependencies.
-//! [`soc::sched::Scheduler`] then advances simulated time through a
-//! binary-heap event queue: engines execute one job at a time, cluster
-//! engines share the operating mode of §III-A (with the 10 µs FLL relock
-//! charged on every switch), and the [`energy::EnergyLedger`] integrates
+//! XTS/sponge cipher run, software kernel or epilogue, cluster-DMA stage,
+//! external flash/FRAM/ADC transfer) into a typed [`soc::sched::Job`]
+//! bound to a set of the SoC's engines — the four cluster cores
+//! individually, the HWCE, the two HWCRYPT datapaths, the cluster DMA,
+//! and per-interface uDMA channels — with explicit data dependencies;
+//! layers split into TCDM-sized tiles
+//! ([`coordinator::GraphBuilder::push_tiled`]) so a layer's L2↔TCDM and
+//! external round trips pipeline within the layer. [`soc::sched::Scheduler`]
+//! then advances simulated time through a binary-heap event queue: engines
+//! execute one job at a time, and the cluster engines share one clock
+//! under a *co-residency rule* — jobs whose modes are compatible under the
+//! current point (the all-capable CRY-CNN-SW point hosts everything) run
+//! concurrently, with the 10 µs FLL relock charged only on genuine
+//! frequency changes — while the [`energy::EnergyLedger`] integrates
 //! per-component power over each busy interval. Cross-engine concurrency —
-//! double-buffered DMA, I/O prefetch under compute, next-layer weight
-//! decryption under the current convolution — *emerges from the schedule*;
-//! the paper's per-phase cycle measurements (§III) survive as each
-//! engine's service-time model, and [`soc::sched::JobGraph::analytic`]
-//! keeps the old phase-summation model as the calibration reference
-//! (scheduled results stay within 5 % of it; see `rust/tests/scheduler.rs`).
+//! double-buffered DMA, I/O prefetch under compute, next-tile weight
+//! decryption and SW epilogues under the current convolution — *emerges
+//! from the schedule*; the paper's per-phase cycle measurements (§III)
+//! survive as each engine's service-time model, and
+//! [`soc::sched::JobGraph::analytic`] keeps the old phase-summation model
+//! as the calibration reference (scheduled energy stays within 5 % of it,
+//! and the best-rung makespan closes below 1.15× of it; see
+//! `rust/tests/scheduler.rs`).
 //!
 //! Streaming: [`soc::sched::JobGraph::repeat`] concatenates N frames of a
 //! use case, and the scheduler pipelines them through the shared engines —

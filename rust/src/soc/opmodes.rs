@@ -67,6 +67,29 @@ impl OperatingMode {
         matches!(self, OperatingMode::CryCnnSw)
     }
 
+    /// Capability subsumption: can a cluster clocked at `self` execute a
+    /// job that was emitted for `other`? The three modes are totally
+    /// ordered by their engine capability sets — CRY-CNN-SW (everything) ⊇
+    /// KEC-CNN-SW (cores + HWCE + KECCAK) ⊇ SW (cores only) — so a
+    /// higher-capability point can host any lower-capability job, at its
+    /// own (lower) clock. This is the scheduler's co-residency rule: jobs
+    /// whose modes are compatible under the current point run concurrently
+    /// instead of serializing on a mode lock (§II-D overlap discipline).
+    pub fn supports(self, other: OperatingMode) -> bool {
+        self.capability_rank() >= other.capability_rank()
+    }
+
+    /// Position in the capability order (SW ⊂ KEC-CNN-SW ⊂ CRY-CNN-SW).
+    /// Note the *frequency* order is the reverse: more capability, lower
+    /// fmax (Table II).
+    fn capability_rank(self) -> u8 {
+        match self {
+            OperatingMode::Sw => 0,
+            OperatingMode::KecCnnSw => 1,
+            OperatingMode::CryCnnSw => 2,
+        }
+    }
+
     /// Whether the HWCRYPT KECCAK sponge engine is usable in this mode.
     pub fn keccak_available(self) -> bool {
         matches!(self, OperatingMode::CryCnnSw | OperatingMode::KecCnnSw)
@@ -161,6 +184,28 @@ mod tests {
         assert!(OperatingMode::KecCnnSw.hwce_available());
         assert!(!OperatingMode::Sw.hwce_available());
         assert!(!OperatingMode::Sw.keccak_available());
+    }
+
+    /// The subsumption order must agree with the per-engine capability
+    /// flags: `a.supports(b)` iff every engine usable at `b` is usable
+    /// at `a`.
+    #[test]
+    fn supports_is_capability_subsumption() {
+        let modes = [OperatingMode::CryCnnSw, OperatingMode::KecCnnSw, OperatingMode::Sw];
+        for a in modes {
+            assert!(a.supports(a), "{a:?} must support itself");
+            for b in modes {
+                let flagwise = (!b.aes_available() || a.aes_available())
+                    && (!b.keccak_available() || a.keccak_available())
+                    && (!b.hwce_available() || a.hwce_available());
+                assert_eq!(a.supports(b), flagwise, "{a:?} supports {b:?}");
+            }
+        }
+        // the all-capable point hosts everything; SW hosts only SW
+        assert!(OperatingMode::CryCnnSw.supports(OperatingMode::Sw));
+        assert!(OperatingMode::CryCnnSw.supports(OperatingMode::KecCnnSw));
+        assert!(!OperatingMode::Sw.supports(OperatingMode::KecCnnSw));
+        assert!(!OperatingMode::KecCnnSw.supports(OperatingMode::CryCnnSw));
     }
 
     #[test]

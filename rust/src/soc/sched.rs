@@ -5,41 +5,60 @@
 //! cipher runs, software phases, DMA and external-memory transfers with
 //! their data dependencies — and [`Scheduler::run`] advances simulated time
 //! through a binary-heap event queue, dispatching each job as soon as its
-//! dependencies have completed, its engine is free, and the cluster
-//! operating mode allows it. Cross-engine concurrency (double-buffered DMA,
-//! uDMA I/O under compute, HWCRYPT decrypting the next layer's weights
-//! while the HWCE convolves the current one) falls out of the schedule
-//! instead of being approximated by an analytic overlap term.
+//! dependencies have completed, its engines are free, and the cluster
+//! operating point admits it. Cross-engine concurrency (double-buffered
+//! DMA, uDMA I/O under compute, HWCRYPT decrypting the next tile's weights
+//! while the HWCE convolves the current one, SW epilogues on the cores
+//! under both) falls out of the schedule instead of being approximated by
+//! an analytic overlap term.
 //!
 //! ## Engines
 //!
-//! One entry per serially-busy resource of the Fulmine SoC: the core
-//! complex (software jobs run on all configured cores at once, so the
-//! complex is one resource), the HWCE, the two HWCRYPT datapaths, the
-//! cluster DMA, and one uDMA channel per external interface (the uDMA
-//! serves its peripherals on independent channels, §II).
+//! One entry per serially-busy resource of the Fulmine SoC: the four OR10N
+//! cluster cores — *individually*, [`Engine::Core`]`(0..4)`, so software
+//! phases, accelerator-control stubs and epilogues contend per core the
+//! way the TCDM masters do — the HWCE, the two HWCRYPT datapaths, the
+//! cluster DMA, and one uDMA channel per external interface (flash, FRAM,
+//! and the ADC front end; the uDMA serves its peripherals on independent
+//! channels, §II). A job may span several engines at once (a 4-core
+//! software phase occupies four `Core` engines for one interval).
 //!
-//! ## Operating modes
+//! ## Operating modes and co-residency
 //!
 //! The cluster-domain engines (cores + accelerators) share one clock and
-//! one operating mode (§III-A). Jobs carry the [`OperatingPoint`] they run
-//! at; the scheduler serializes cluster jobs of *different* modes and
-//! charges the 10 µs FLL relock ([`MODE_SWITCH_S`]) on every switch. A
-//! switch is only granted to the lowest-id ready cluster job, which keeps
-//! the mode sequence faithful to program order and prevents later frames
-//! of a stream from starving earlier ones. SOC-domain engines (cluster
-//! DMA, uDMA) run in any mode — the uDMA works "even when the cluster is
-//! in sleep mode" (§II).
+//! one operating mode (§III-A). Jobs carry the [`OperatingPoint`] they
+//! were *emitted* for; at dispatch the cluster is at some current mode and
+//! the co-residency rule applies:
+//!
+//! * a job whose mode equals the current mode dispatches immediately —
+//!   same clock, no cost;
+//! * a job whose mode is *subsumed* by the current mode
+//!   ([`OperatingMode::supports`]: the CRY-CNN-SW point is all-capable,
+//!   KEC-CNN-SW hosts KEC/CNN/SW work, SW only SW) may co-reside: it runs
+//!   at the current — lower — clock, its service time rescaled by the
+//!   frequency ratio. The scheduler accepts this only when the slowdown
+//!   costs less than the 10 µs FLL relock a private mode window would
+//!   (tiny epilogue slivers and cipher-control stubs ride along free;
+//!   long software phases get their own window);
+//! * otherwise the job waits for the cluster to drain, and the relock
+//!   ([`MODE_SWITCH_S`]) is charged only on a *genuine* frequency change.
+//!   A switch is granted to the lowest-id ready cluster job, keeping the
+//!   mode sequence in program order.
+//!
+//! SOC-domain engines (cluster DMA, uDMA channels) run in any mode — the
+//! uDMA works "even when the cluster is in sleep mode" (§II).
 //!
 //! ## Energy
 //!
 //! Each job lists per-component charges; the busy interval is integrated
-//! on the [`EnergyLedger`] at the job's operating point. Leakage and
-//! external-memory standby are charged over the makespan. Active energy is
-//! therefore schedule-independent; only the Idle/standby terms (≈1.5 mW)
-//! vary with the schedule — which keeps scheduled results within a few
-//! percent of [`JobGraph::analytic`], the phase-summation model the
-//! figures of the paper were calibrated against.
+//! on the [`EnergyLedger`] at the job's *emission* operating point.
+//! Because cluster dynamic power is linear in frequency at fixed VDD
+//! ([`PowerModel`]), a rescaled co-resident job consumes exactly the same
+//! active energy as at its own point (P·t = pJ/cycle × cycles), so active
+//! energy stays schedule-independent; only the makespan-proportional
+//! Idle/standby terms (≈1.5 mW) vary with the schedule — which keeps
+//! scheduled results within a few percent of [`JobGraph::analytic`], the
+//! phase-summation model the figures of the paper were calibrated against.
 //!
 //! ## Streaming
 //!
@@ -55,11 +74,16 @@ use crate::soc::power::{Component, PowerModel, FLASH_STANDBY_MW, FRAM_STANDBY_MW
 use std::cmp::Ordering;
 use std::collections::{BTreeSet, BinaryHeap};
 
+/// Cluster cores (OR10N complex).
+pub const N_CORES: usize = 4;
+
 /// A serially-busy hardware resource of the SoC.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum Engine {
-    /// The OR10N core complex (a software job occupies all its cores).
-    Cores,
+    /// One OR10N cluster core (0..[`N_CORES`]). Modeling the cores as
+    /// separate masters lets accelerator control and SW epilogues share
+    /// the complex instead of folding into one aggregate resource.
+    Core(u8),
     /// HWCE convolution engine.
     Hwce,
     /// HWCRYPT AES datapath.
@@ -72,44 +96,72 @@ pub enum Engine {
     UdmaFlash,
     /// uDMA channel serving the FRAM.
     UdmaFram,
+    /// uDMA channel serving the sensor/ADC front end (§IV-C acquisition).
+    UdmaAdc,
 }
 
 /// Number of scheduled engines.
 pub const N_ENGINES: usize = Engine::ALL.len();
 
 impl Engine {
-    /// Every engine, in declaration (= discriminant) order.
-    pub const ALL: [Engine; 7] = [
-        Engine::Cores,
+    /// Every engine, in [`Engine::index`] order.
+    pub const ALL: [Engine; 11] = [
+        Engine::Core(0),
+        Engine::Core(1),
+        Engine::Core(2),
+        Engine::Core(3),
         Engine::Hwce,
         Engine::HwcryptAes,
         Engine::HwcryptKec,
         Engine::ClusterDma,
         Engine::UdmaFlash,
         Engine::UdmaFram,
+        Engine::UdmaAdc,
     ];
 
-    /// Dense index for per-engine arrays (the enum discriminant, which by
-    /// construction matches the position in [`Engine::ALL`]).
+    /// Dense index for per-engine arrays (matches the position in
+    /// [`Engine::ALL`]).
     pub fn index(self) -> usize {
-        self as usize
+        match self {
+            Engine::Core(i) => {
+                // unconditional: an out-of-range core would alias another
+                // engine's dense index and silently corrupt its accounting
+                assert!((i as usize) < N_CORES, "core index {i} out of range");
+                i as usize
+            }
+            Engine::Hwce => N_CORES,
+            Engine::HwcryptAes => N_CORES + 1,
+            Engine::HwcryptKec => N_CORES + 2,
+            Engine::ClusterDma => N_CORES + 3,
+            Engine::UdmaFlash => N_CORES + 4,
+            Engine::UdmaFram => N_CORES + 5,
+            Engine::UdmaAdc => N_CORES + 6,
+        }
     }
 
     /// Cluster-domain engines share the cluster clock and therefore the
     /// operating mode; SOC-domain movers do not.
     pub fn mode_locked(self) -> bool {
-        matches!(self, Engine::Cores | Engine::Hwce | Engine::HwcryptAes | Engine::HwcryptKec)
+        matches!(
+            self,
+            Engine::Core(_) | Engine::Hwce | Engine::HwcryptAes | Engine::HwcryptKec
+        )
     }
 
     pub fn name(self) -> &'static str {
         match self {
-            Engine::Cores => "cores",
+            Engine::Core(0) => "core0",
+            Engine::Core(1) => "core1",
+            Engine::Core(2) => "core2",
+            Engine::Core(3) => "core3",
+            Engine::Core(_) => "core?",
             Engine::Hwce => "hwce",
             Engine::HwcryptAes => "hwcrypt-aes",
             Engine::HwcryptKec => "hwcrypt-kec",
             Engine::ClusterDma => "cluster-dma",
             Engine::UdmaFlash => "udma-flash",
             Engine::UdmaFram => "udma-fram",
+            Engine::UdmaAdc => "udma-adc",
         }
     }
 }
@@ -117,18 +169,43 @@ impl Engine {
 /// Identifier of a job within its [`JobGraph`] (its insertion index).
 pub type JobId = usize;
 
-/// One unit of work bound to an engine: a service time at an operating
-/// point, dependencies on earlier jobs, and the energy charges to integrate
-/// over the busy interval (`(category, component, multiplicity)` — e.g. a
-/// 4-core software phase charges `Component::Core` with multiplicity 4).
+/// One unit of work bound to one or more engines: a service time at an
+/// operating point, dependencies on earlier jobs, and the energy charges
+/// to integrate over the busy interval (`(category, component,
+/// multiplicity)` — e.g. a 4-core software phase occupies
+/// `Core(0)..Core(3)` and charges `Component::Core` with multiplicity 4).
 #[derive(Debug, Clone)]
 pub struct Job {
     pub label: &'static str,
-    pub engine: Engine,
+    /// Engines this job occupies for its whole busy interval (≥ 1,
+    /// distinct). Multi-engine jobs model phases that hold several cores
+    /// at once.
+    pub engines: Vec<Engine>,
     pub op: OperatingPoint,
+    /// Service time at `op`; a co-resident dispatch at a slower compatible
+    /// point rescales it by the frequency ratio.
     pub duration_s: f64,
     pub deps: Vec<JobId>,
     pub charges: Vec<(Category, Component, f64)>,
+}
+
+impl Job {
+    /// Whether this job runs in the cluster clock domain (any of its
+    /// engines is mode-locked).
+    pub fn mode_locked(&self) -> bool {
+        self.engines.iter().any(|e| e.mode_locked())
+    }
+
+    /// Service time when hosted at cluster mode `at` (its own time at its
+    /// own mode; stretched by the frequency ratio under a slower
+    /// compatible point).
+    fn duration_at(&self, at: OperatingMode) -> f64 {
+        if at == self.op.mode {
+            self.duration_s
+        } else {
+            self.duration_s * self.op.freq_hz() / OperatingPoint::new(at, self.op.vdd).freq_hz()
+        }
+    }
 }
 
 /// A dependency graph of jobs. Acyclic by construction: dependencies must
@@ -165,11 +242,20 @@ impl JobGraph {
         self.segments.push((label.to_string(), self.jobs.len()));
     }
 
-    /// Append a job; its dependencies must reference earlier jobs, and all
-    /// jobs of a graph must share one supply voltage (leakage is charged
-    /// graph-wide at the first job's VDD).
+    /// Append a job; its dependencies must reference earlier jobs, its
+    /// engine set must be non-empty and duplicate-free, and all jobs of a
+    /// graph must share one supply voltage (leakage is charged graph-wide
+    /// at the first job's VDD).
     pub fn push(&mut self, job: Job) -> JobId {
         let id = self.jobs.len();
+        assert!(!job.engines.is_empty(), "job {id} occupies no engine");
+        debug_assert!(
+            {
+                let mut seen = [false; N_ENGINES];
+                job.engines.iter().all(|e| !std::mem::replace(&mut seen[e.index()], true))
+            },
+            "job {id} lists an engine twice"
+        );
         for &d in &job.deps {
             assert!(d < id, "job {id} depends on not-yet-pushed job {d}");
         }
@@ -222,7 +308,9 @@ impl JobGraph {
     /// Active energy (mJ) of one job: its per-component charges integrated
     /// over its busy interval at its operating point — the same arithmetic
     /// [`JobGraph::finish_ledger`] feeds the [`EnergyLedger`], without the
-    /// makespan-proportional leakage/standby terms.
+    /// makespan-proportional leakage/standby terms. Cluster dynamic power
+    /// is frequency-linear, so this is also exactly the energy of a
+    /// co-resident (rescaled) execution of the job.
     fn job_active_mj(job: &Job) -> f64 {
         job.charges
             .iter()
@@ -298,11 +386,15 @@ impl JobGraph {
         ledger
     }
 
-    /// Per-engine total service time (schedule-independent).
+    /// Per-engine total service time at the emission operating points
+    /// (what the analytic replay uses; the scheduler reports *as-run*
+    /// occupancy instead).
     fn busy_totals(&self) -> [f64; N_ENGINES] {
         let mut busy = [0.0; N_ENGINES];
         for job in &self.jobs {
-            busy[job.engine.index()] += job.duration_s;
+            for &e in &job.engines {
+                busy[e.index()] += job.duration_s;
+            }
         }
         busy
     }
@@ -314,14 +406,16 @@ impl JobGraph {
     /// survives lands on the critical path at the end. This reproduces the
     /// analytic `Pipeline` numbers the Fig. 10/11/12 bands were calibrated
     /// against, and serves as the correctness reference for
-    /// [`Scheduler::run`] (see `rust/tests/scheduler.rs`).
+    /// [`Scheduler::run`] (see `rust/tests/scheduler.rs`): the scheduled
+    /// energy is pinned to it, and at the accelerated rungs the scheduled
+    /// makespan must beat it via tile pipelining and co-residency.
     pub fn analytic(&self) -> SchedResult {
         let mut elapsed = 0.0f64;
         let mut backlog = 0.0f64;
         let mut last_mode: Option<OperatingMode> = None;
         let mut switches = 0u64;
         for job in &self.jobs {
-            if job.engine.mode_locked() {
+            if job.mode_locked() {
                 if last_mode != Some(job.op.mode) {
                     if last_mode.is_some() {
                         switches += 1;
@@ -343,7 +437,30 @@ impl JobGraph {
             mode_switches: switches,
             busy_s: self.busy_totals(),
             n_jobs: self.jobs.len(),
+            overlap_s: 0.0,
+            coresidency_s: 0.0,
         }
+    }
+
+    /// A true serialization upper bound on any schedule of this graph:
+    /// every job back-to-back at the slowest point it could be hosted at
+    /// (the all-capable CRY-CNN-SW clock for cluster jobs), plus one FLL
+    /// relock per cluster job. The greedy scheduler never idles all
+    /// engines outside a relock window, so [`Scheduler::run`] can never
+    /// exceed this — the property `rust/tests/scheduler.rs` checks on
+    /// random graphs.
+    pub fn serialized_bound(&self) -> f64 {
+        let mut total = 0.0f64;
+        let mut cluster_jobs = 0u64;
+        for job in &self.jobs {
+            if job.mode_locked() {
+                cluster_jobs += 1;
+                total += job.duration_at(OperatingMode::CryCnnSw).max(job.duration_s);
+            } else {
+                total += job.duration_s;
+            }
+        }
+        total + cluster_jobs as f64 * MODE_SWITCH_S
     }
 }
 
@@ -355,9 +472,29 @@ pub struct SchedResult {
     pub makespan_s: f64,
     /// FLL relocks performed.
     pub mode_switches: u64,
-    /// Total busy time per engine, indexed by [`Engine::index`].
+    /// Total busy time per engine, indexed by [`Engine::index`] — as-run
+    /// occupancy for scheduled results, emission service time for the
+    /// analytic replay.
     pub busy_s: [f64; N_ENGINES],
     pub n_jobs: usize,
+    /// Simulated time during which ≥ 2 jobs were in flight at once (any
+    /// engines) — the schedule's total overlap.
+    pub overlap_s: f64,
+    /// Simulated time during which ≥ 2 *cluster* jobs were in flight at
+    /// once: CRY–CNN–SW co-residency made visible (0 for the analytic
+    /// replay, which serializes the cluster by construction).
+    pub coresidency_s: f64,
+}
+
+impl SchedResult {
+    /// Busy fraction of an engine over the makespan (0 when empty).
+    pub fn utilization(&self, e: Engine) -> f64 {
+        if self.makespan_s > 0.0 {
+            self.busy_s[e.index()] / self.makespan_s
+        } else {
+            0.0
+        }
+    }
 }
 
 /// Completion event: min-heap by time (ties broken by job id) on top of
@@ -387,6 +524,45 @@ impl PartialOrd for Ev {
     }
 }
 
+/// Busy interval of one dispatched job, for the overlap statistics.
+struct Span {
+    start: f64,
+    end: f64,
+    cluster: bool,
+}
+
+/// Sweep the job spans and integrate the time with ≥ 2 concurrent jobs
+/// (overall, and restricted to cluster jobs).
+fn overlap_stats(spans: &[Span]) -> (f64, f64) {
+    let mut events: Vec<(f64, i32, i32)> = Vec::with_capacity(spans.len() * 2);
+    for s in spans {
+        if s.end > s.start {
+            let c = s.cluster as i32;
+            events.push((s.start, 1, c));
+            events.push((s.end, -1, -c));
+        }
+    }
+    events.sort_by(|a, b| a.0.total_cmp(&b.0));
+    let (mut overlap, mut cores) = (0.0f64, 0.0f64);
+    let (mut n_all, mut n_cluster) = (0i32, 0i32);
+    let mut last_t = 0.0f64;
+    for (t, d_all, d_cluster) in events {
+        let dt = t - last_t;
+        if dt > 0.0 {
+            if n_all >= 2 {
+                overlap += dt;
+            }
+            if n_cluster >= 2 {
+                cores += dt;
+            }
+        }
+        n_all += d_all;
+        n_cluster += d_cluster;
+        last_t = t;
+    }
+    (overlap, cores)
+}
+
 /// The event-driven scheduler. Stateless: all state lives on the run.
 pub struct Scheduler;
 
@@ -407,6 +583,8 @@ impl Scheduler {
         let mut ready: BTreeSet<JobId> = (0..n).filter(|&i| indeg[i] == 0).collect();
         let mut heap: BinaryHeap<Ev> = BinaryHeap::new();
         let mut engine_busy = [false; N_ENGINES];
+        let mut busy = [0.0f64; N_ENGINES];
+        let mut spans: Vec<Span> = Vec::with_capacity(n);
         let mut current_mode: Option<OperatingMode> = None;
         let mut mode_ready_at = 0.0f64;
         let mut mode_locked_running = 0usize;
@@ -419,17 +597,19 @@ impl Scheduler {
             // Dispatch everything startable at time t, lowest job id first.
             loop {
                 let lowest_ml_ready =
-                    ready.iter().copied().find(|&j| graph.jobs[j].engine.mode_locked());
+                    ready.iter().copied().find(|&j| graph.jobs[j].mode_locked());
                 let mut pick: Option<(JobId, bool)> = None; // (job, switches mode)
                 for &j in ready.iter() {
                     let job = &graph.jobs[j];
-                    if engine_busy[job.engine.index()] {
+                    if job.engines.iter().any(|&e| engine_busy[e.index()]) {
                         continue;
                     }
-                    if job.engine.mode_locked() {
-                        if current_mode == Some(job.op.mode) {
-                            pick = Some((j, false));
-                            break;
+                    if job.mode_locked() {
+                        if let Some(c) = current_mode {
+                            if Self::co_resident(c, job) {
+                                pick = Some((j, false));
+                                break;
+                            }
                         }
                         // A mode switch is granted only to the lowest-id
                         // ready cluster job, and only once the cluster
@@ -447,20 +627,32 @@ impl Scheduler {
                 ready.remove(&j);
                 let job = &graph.jobs[j];
                 let mut start = t;
-                if job.engine.mode_locked() {
+                let mut dur = job.duration_s;
+                if job.mode_locked() {
                     if switch {
-                        if current_mode.is_some() {
+                        // Relock only on a genuine frequency change (the
+                        // first mode entry is free).
+                        if current_mode.is_some() && current_mode != Some(job.op.mode) {
                             switches += 1;
                             mode_ready_at = t + MODE_SWITCH_S;
                         }
                         current_mode = Some(job.op.mode);
+                    } else {
+                        // Co-resident dispatch: hosted at the cluster's
+                        // current point, service time rescaled.
+                        let c = current_mode.expect("co-resident dispatch without a mode");
+                        dur = job.duration_at(c);
                     }
                     // The cluster sleeps while the FLL relocks.
                     start = start.max(mode_ready_at);
                     mode_locked_running += 1;
                 }
-                engine_busy[job.engine.index()] = true;
-                heap.push(Ev { t: start + job.duration_s, job: j });
+                for &e in &job.engines {
+                    engine_busy[e.index()] = true;
+                    busy[e.index()] += dur;
+                }
+                spans.push(Span { start, end: start + dur, cluster: job.mode_locked() });
+                heap.push(Ev { t: start + dur, job: j });
             }
 
             // Advance simulated time to the next completion.
@@ -468,8 +660,10 @@ impl Scheduler {
             t = ev.t;
             makespan = makespan.max(t);
             let job = &graph.jobs[ev.job];
-            engine_busy[job.engine.index()] = false;
-            if job.engine.mode_locked() {
+            for &e in &job.engines {
+                engine_busy[e.index()] = false;
+            }
+            if job.mode_locked() {
                 mode_locked_running -= 1;
             }
             n_done += 1;
@@ -482,13 +676,30 @@ impl Scheduler {
         }
         assert_eq!(n_done, n, "scheduler stalled: {n_done} of {n} jobs completed");
 
+        let (overlap_s, coresidency_s) = overlap_stats(&spans);
         SchedResult {
             ledger: graph.finish_ledger(makespan),
             makespan_s: makespan,
             mode_switches: switches,
-            busy_s: graph.busy_totals(),
+            busy_s: busy,
             n_jobs: n,
+            overlap_s,
+            coresidency_s,
         }
+    }
+
+    /// The co-residency rule: may `job` be hosted at current mode `c`
+    /// without a mode switch? Equal modes always; a subsumed mode only
+    /// when the frequency-rescale penalty is cheaper than the FLL relock
+    /// a private mode window would cost.
+    fn co_resident(c: OperatingMode, job: &Job) -> bool {
+        if c == job.op.mode {
+            return true;
+        }
+        if !c.supports(job.op.mode) {
+            return false;
+        }
+        job.duration_at(c) - job.duration_s <= MODE_SWITCH_S
     }
 }
 
@@ -497,9 +708,13 @@ mod tests {
     use super::*;
 
     fn job(engine: Engine, mode: OperatingMode, duration_s: f64, deps: &[JobId]) -> Job {
+        multi(vec![engine], mode, duration_s, deps)
+    }
+
+    fn multi(engines: Vec<Engine>, mode: OperatingMode, duration_s: f64, deps: &[JobId]) -> Job {
         Job {
             label: "test",
-            engine,
+            engines,
             op: OperatingPoint::new(mode, 0.8),
             duration_s,
             deps: deps.to_vec(),
@@ -508,25 +723,37 @@ mod tests {
     }
 
     #[test]
+    fn engine_indices_are_dense_and_ordered() {
+        for (i, e) in Engine::ALL.iter().enumerate() {
+            assert_eq!(e.index(), i, "{}", e.name());
+        }
+        assert_eq!(N_ENGINES, 11);
+        assert!(Engine::Core(3).mode_locked() && Engine::Hwce.mode_locked());
+        assert!(!Engine::UdmaAdc.mode_locked() && !Engine::ClusterDma.mode_locked());
+    }
+
+    #[test]
     fn serial_chain_sums_durations() {
         let mut g = JobGraph::new();
-        let a = g.push(job(Engine::Cores, OperatingMode::Sw, 1.0, &[]));
-        let b = g.push(job(Engine::Cores, OperatingMode::Sw, 2.0, &[a]));
-        g.push(job(Engine::Cores, OperatingMode::Sw, 3.0, &[b]));
+        let a = g.push(job(Engine::Core(0), OperatingMode::Sw, 1.0, &[]));
+        let b = g.push(job(Engine::Core(0), OperatingMode::Sw, 2.0, &[a]));
+        g.push(job(Engine::Core(0), OperatingMode::Sw, 3.0, &[b]));
         let r = Scheduler::run(&g);
         assert!((r.makespan_s - 6.0).abs() < 1e-12);
         assert_eq!(r.mode_switches, 0);
-        assert!((r.busy_s[Engine::Cores.index()] - 6.0).abs() < 1e-12);
+        assert!((r.busy_s[Engine::Core(0).index()] - 6.0).abs() < 1e-12);
+        assert_eq!(r.overlap_s, 0.0);
     }
 
     #[test]
     fn independent_engines_overlap() {
         let mut g = JobGraph::new();
-        g.push(job(Engine::Cores, OperatingMode::Sw, 2.0, &[]));
+        g.push(job(Engine::Core(0), OperatingMode::Sw, 2.0, &[]));
         g.push(job(Engine::UdmaFlash, OperatingMode::Sw, 1.5, &[]));
         g.push(job(Engine::UdmaFram, OperatingMode::Sw, 1.0, &[]));
         let r = Scheduler::run(&g);
         assert!((r.makespan_s - 2.0).abs() < 1e-12, "I/O must hide under compute");
+        assert!((r.overlap_s - 1.5).abs() < 1e-12, "overlap {}", r.overlap_s);
     }
 
     #[test]
@@ -539,26 +766,80 @@ mod tests {
     }
 
     #[test]
+    fn multi_engine_job_occupies_all_its_cores() {
+        // a 2-core phase on {0,1} blocks a core-1 job but not a core-2 job
+        let mut g = JobGraph::new();
+        g.push(multi(
+            vec![Engine::Core(0), Engine::Core(1)],
+            OperatingMode::Sw,
+            2.0,
+            &[],
+        ));
+        g.push(job(Engine::Core(1), OperatingMode::Sw, 1.0, &[]));
+        g.push(job(Engine::Core(2), OperatingMode::Sw, 1.0, &[]));
+        let r = Scheduler::run(&g);
+        assert!((r.makespan_s - 3.0).abs() < 1e-12, "core1 job must wait: {}", r.makespan_s);
+        assert!((r.busy_s[Engine::Core(1).index()] - 3.0).abs() < 1e-12);
+        assert!((r.busy_s[Engine::Core(2).index()] - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
     fn mode_switch_costs_relock() {
         let mut g = JobGraph::new();
         let a = g.push(job(Engine::Hwce, OperatingMode::KecCnnSw, 1.0, &[]));
         let b = g.push(job(Engine::HwcryptAes, OperatingMode::CryCnnSw, 1.0, &[a]));
         g.push(job(Engine::Hwce, OperatingMode::KecCnnSw, 1.0, &[b]));
         let r = Scheduler::run(&g);
+        // a 1 s KEC job under the CRY clock would cost ≈0.22 s — far more
+        // than the relock, so both boundaries pay the genuine switch
         assert_eq!(r.mode_switches, 2);
         assert!((r.makespan_s - (3.0 + 2.0 * MODE_SWITCH_S)).abs() < 1e-9);
     }
 
     #[test]
-    fn different_mode_jobs_serialize_without_deps() {
-        // No dependency between them, but the shared cluster clock
-        // serializes a KEC-mode and a CRY-mode job.
+    fn long_incompatible_jobs_serialize_without_deps() {
+        // No dependency between them, and hosting a 1 s KEC job at the CRY
+        // clock would cost more than a relock — the shared cluster clock
+        // serializes them.
         let mut g = JobGraph::new();
         g.push(job(Engine::Hwce, OperatingMode::KecCnnSw, 1.0, &[]));
         g.push(job(Engine::HwcryptAes, OperatingMode::CryCnnSw, 1.0, &[]));
         let r = Scheduler::run(&g);
         assert!(r.makespan_s >= 2.0, "mode exclusivity violated: {}", r.makespan_s);
         assert_eq!(r.mode_switches, 1);
+        assert_eq!(r.coresidency_s, 0.0);
+    }
+
+    /// The co-residency rule: a short lower-capability job rides inside
+    /// the current all-capable window instead of forcing a relock.
+    #[test]
+    fn short_subsumed_job_co_resides_free() {
+        let mut g = JobGraph::new();
+        g.push(job(Engine::HwcryptAes, OperatingMode::CryCnnSw, 1.0, &[]));
+        let tiny = 1e-6; // rescale penalty ≈ 0.22 µs < 10 µs relock
+        g.push(job(Engine::Hwce, OperatingMode::KecCnnSw, tiny, &[]));
+        g.push(job(Engine::Core(2), OperatingMode::Sw, tiny, &[]));
+        let r = Scheduler::run(&g);
+        assert_eq!(r.mode_switches, 0, "subsumed jobs must not relock");
+        assert!((r.makespan_s - 1.0).abs() < 1e-9, "makespan {}", r.makespan_s);
+        assert!(r.coresidency_s > 0.0, "cluster co-residency must be visible");
+        // hosted at the slower CRY clock, the KEC job's as-run busy time
+        // stretches by the frequency ratio
+        let hosted = tiny * OperatingMode::KecCnnSw.fmax_nominal_mhz()
+            / OperatingMode::CryCnnSw.fmax_nominal_mhz();
+        assert!((r.busy_s[Engine::Hwce.index()] - hosted).abs() < 1e-12);
+    }
+
+    /// A long subsumed job prefers its own mode window: the rescale
+    /// penalty exceeds the relock, so it waits and switches.
+    #[test]
+    fn long_subsumed_job_takes_its_own_window() {
+        let mut g = JobGraph::new();
+        g.push(job(Engine::HwcryptAes, OperatingMode::CryCnnSw, 1.0, &[]));
+        g.push(job(Engine::Core(0), OperatingMode::Sw, 1.0, &[]));
+        let r = Scheduler::run(&g);
+        assert_eq!(r.mode_switches, 1);
+        assert!((r.makespan_s - (2.0 + MODE_SWITCH_S)).abs() < 1e-9);
     }
 
     #[test]
@@ -569,6 +850,7 @@ mod tests {
         let r = Scheduler::run(&g);
         assert!((r.makespan_s - 2.0).abs() < 1e-12);
         assert_eq!(r.mode_switches, 0);
+        assert!((r.coresidency_s - 2.0).abs() < 1e-12);
     }
 
     #[test]
@@ -601,13 +883,13 @@ mod tests {
     fn analytic_hides_io_behind_compute() {
         let mut g = JobGraph::new();
         g.push(job(Engine::UdmaFram, OperatingMode::Sw, 1.0, &[]));
-        g.push(job(Engine::Cores, OperatingMode::Sw, 3.0, &[]));
+        g.push(job(Engine::Core(0), OperatingMode::Sw, 3.0, &[]));
         let ana = g.analytic();
         assert!((ana.makespan_s - 3.0).abs() < 1e-12);
         // I/O-dominated: the surplus lands on the critical path.
         let mut g2 = JobGraph::new();
         g2.push(job(Engine::UdmaFram, OperatingMode::Sw, 5.0, &[]));
-        g2.push(job(Engine::Cores, OperatingMode::Sw, 3.0, &[]));
+        g2.push(job(Engine::Core(0), OperatingMode::Sw, 3.0, &[]));
         let ana2 = g2.analytic();
         assert!((ana2.makespan_s - 5.0).abs() < 1e-12);
     }
@@ -616,7 +898,7 @@ mod tests {
     fn repeat_streams_through_shared_engines() {
         // frame: long compute + short store that depends on it
         let mut g = JobGraph::new();
-        let c = g.push(job(Engine::Cores, OperatingMode::Sw, 2.0, &[]));
+        let c = g.push(job(Engine::Core(0), OperatingMode::Sw, 2.0, &[]));
         g.push(job(Engine::UdmaFram, OperatingMode::Sw, 1.0, &[c]));
         let single = Scheduler::run(&g);
         assert!((single.makespan_s - 3.0).abs() < 1e-12);
@@ -647,7 +929,7 @@ mod tests {
     fn busy_never_exceeds_makespan() {
         let mut g = JobGraph::new();
         let mut prev = Vec::new();
-        for i in 0..20 {
+        for i in 0..22 {
             let e = Engine::ALL[i % N_ENGINES];
             let deps: Vec<JobId> = prev.clone();
             prev = vec![g.push(job(e, OperatingMode::Sw, 0.01 * (i + 1) as f64, &deps))];
@@ -658,15 +940,28 @@ mod tests {
         }
         let total: f64 = r.busy_s.iter().sum();
         assert!(total <= r.makespan_s * N_ENGINES as f64 + 1e-9);
+        assert!(r.makespan_s <= g.serialized_bound() + 1e-9);
+    }
+
+    #[test]
+    fn serialized_bound_holds_with_coresidency_and_switches() {
+        let mut g = JobGraph::new();
+        g.push(job(Engine::HwcryptAes, OperatingMode::CryCnnSw, 0.5, &[]));
+        g.push(job(Engine::Hwce, OperatingMode::KecCnnSw, 1e-6, &[]));
+        g.push(job(Engine::Core(0), OperatingMode::Sw, 0.4, &[]));
+        g.push(job(Engine::Hwce, OperatingMode::KecCnnSw, 0.3, &[]));
+        g.push(job(Engine::UdmaFram, OperatingMode::Sw, 0.2, &[]));
+        let r = Scheduler::run(&g);
+        assert!(r.makespan_s <= g.serialized_bound() + 1e-9);
     }
 
     #[test]
     fn segments_attribute_active_energy() {
         let mut g = JobGraph::new();
         g.mark_segment("a");
-        g.push(job(Engine::Cores, OperatingMode::Sw, 2.0, &[]));
+        g.push(job(Engine::Core(0), OperatingMode::Sw, 2.0, &[]));
         g.mark_segment("b");
-        g.push(job(Engine::Cores, OperatingMode::Sw, 1.0, &[]));
+        g.push(job(Engine::Core(0), OperatingMode::Sw, 1.0, &[]));
         g.mark_segment("empty"); // trailing marker with no jobs
         let seg = g.segment_active_mj();
         assert_eq!(seg.len(), 3);
@@ -691,25 +986,47 @@ mod tests {
         assert_eq!(r.makespan_s, 0.0);
         assert_eq!(r.n_jobs, 0);
         assert_eq!(r.ledger.total_mj(), 0.0);
+        assert_eq!(r.overlap_s, 0.0);
     }
 
     #[test]
     #[should_panic(expected = "not-yet-pushed")]
     fn forward_dependency_rejected() {
         let mut g = JobGraph::new();
-        g.push(job(Engine::Cores, OperatingMode::Sw, 1.0, &[3]));
+        g.push(job(Engine::Core(0), OperatingMode::Sw, 1.0, &[3]));
+    }
+
+    #[test]
+    #[should_panic(expected = "occupies no engine")]
+    fn engineless_job_rejected() {
+        let mut g = JobGraph::new();
+        g.push(multi(vec![], OperatingMode::Sw, 1.0, &[]));
     }
 
     #[test]
     fn energy_charges_integrate_at_op() {
         use crate::soc::power::PowerModel;
         let mut g = JobGraph::new();
-        g.push(job(Engine::Cores, OperatingMode::Sw, 2.0, &[]));
+        g.push(job(Engine::Core(0), OperatingMode::Sw, 2.0, &[]));
         let r = Scheduler::run(&g);
         let op = OperatingPoint::new(OperatingMode::Sw, 0.8);
         let expect = PowerModel::active_mw(Component::Core, op) * 2.0;
         assert!((r.ledger.energy_mj(Category::OtherSw) - expect).abs() < 1e-9);
         // leakage charged over the makespan
         assert!(r.ledger.energy_mj(Category::Idle) > 0.0);
+    }
+
+    /// Rescaled co-resident execution leaves active energy untouched:
+    /// cluster dynamic power is frequency-linear, so P·t is invariant.
+    #[test]
+    fn coresident_rescale_preserves_active_energy() {
+        let mut g = JobGraph::new();
+        g.push(job(Engine::HwcryptAes, OperatingMode::CryCnnSw, 1.0, &[]));
+        g.push(job(Engine::Hwce, OperatingMode::KecCnnSw, 1e-6, &[]));
+        let run = Scheduler::run(&g);
+        let ana = g.analytic();
+        let a = run.ledger.energy_mj(Category::OtherSw);
+        let b = ana.ledger.energy_mj(Category::OtherSw);
+        assert!((a - b).abs() < 1e-12 * (1.0 + a.abs()), "{a} vs {b}");
     }
 }

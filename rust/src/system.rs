@@ -20,7 +20,7 @@
 //! system is another implementor of the same spec-in/report-out surface.
 
 use crate::coordinator::{
-    stream_graph, ExecConfig, ModeOverrides, Rung, StreamResult, UseCaseResult,
+    stream_graph, ExecConfig, ModeOverrides, Rung, StreamResult, Tiling, UseCaseResult,
 };
 use crate::energy::Category;
 use crate::hwce::golden::WeightPrec;
@@ -149,9 +149,10 @@ pub struct RunReport {
 }
 
 impl RunReport {
-    /// The `fulmine stream` text report (byte-identical to the historical
-    /// output for single-tenant workloads; multi-tenant runs add one
-    /// attribution line per tenant).
+    /// The `fulmine stream` text report: throughput and energy as always,
+    /// plus the per-engine utilization table (busy_s / makespan) and the
+    /// overlap statistics of the schedule; multi-tenant runs add one
+    /// attribution line per tenant.
     pub fn render_text(&self) -> String {
         let r = &self.result;
         let frames = self.frames;
@@ -161,6 +162,13 @@ impl RunReport {
             s,
             "single frame {:>9.4} s | {frames} streamed {:>9.4} s  ({:.3} frames/s, {:.2}x vs back-to-back)",
             r.single_frame_s, r.time_s, r.fps, r.speedup
+        )
+        .unwrap();
+        writeln!(
+            s,
+            "single-frame analytic bound {:>9.4} s (scheduled/analytic {:.3}x)",
+            r.single_frame_analytic_s,
+            r.single_frame_s / r.single_frame_analytic_s
         )
         .unwrap();
         writeln!(
@@ -182,25 +190,35 @@ impl RunReport {
                 .unwrap();
             }
         }
-        write!(s, "engine utilization:").unwrap();
+        writeln!(s, "{:<14} {:>10} {:>7}", "engine", "busy [s]", "util").unwrap();
         for e in Engine::ALL {
             let busy = r.busy_s[e.index()];
             if busy > 0.0 {
-                write!(s, "  {}={:.0}%", e.name(), busy / r.time_s * 100.0).unwrap();
+                writeln!(s, "{:<14} {:>10.4} {:>6.1}%", e.name(), busy, busy / r.time_s * 100.0)
+                    .unwrap();
             }
         }
-        writeln!(s).unwrap();
+        writeln!(
+            s,
+            "overlap {:>9.4} s (>=2 jobs in flight) | cluster co-residency {:>9.4} s",
+            r.overlap_s, r.coresidency_s
+        )
+        .unwrap();
         writeln!(s, "{}", r.ledger.report(&format!("{} x{frames}", self.workload))).unwrap();
         s
     }
 
     pub fn to_json(&self) -> Json {
         let r = &self.result;
-        let mut util = Vec::new();
+        let mut engines = Vec::new();
         for e in Engine::ALL {
             let busy = r.busy_s[e.index()];
             if busy > 0.0 {
-                util.push((e.name(), Json::num(busy / r.time_s)));
+                engines.push(Json::obj(vec![
+                    ("name", Json::string(e.name())),
+                    ("busy_s", Json::num(busy)),
+                    ("utilization", Json::num(busy / r.time_s)),
+                ]));
             }
         }
         Json::obj(vec![
@@ -208,13 +226,16 @@ impl RunReport {
             ("rung", Json::string(&self.rung)),
             ("frames", Json::num(self.frames as f64)),
             ("single_frame_s", Json::num(r.single_frame_s)),
+            ("single_frame_analytic_s", Json::num(r.single_frame_analytic_s)),
             ("time_s", Json::num(r.time_s)),
             ("fps", Json::num(r.fps)),
             ("speedup_vs_serial", Json::num(r.speedup)),
             ("energy_mj", Json::num(r.energy_mj)),
             ("pj_per_op", Json::num(r.pj_per_op)),
             ("mode_switches", Json::num(r.mode_switches as f64)),
-            ("engine_utilization", Json::obj(util)),
+            ("overlap_s", Json::num(r.overlap_s)),
+            ("coresidency_s", Json::num(r.coresidency_s)),
+            ("engines", Json::Arr(engines)),
             ("energy_breakdown_mj", breakdown_json(&r.ledger)),
             (
                 "tenants",
@@ -499,7 +520,7 @@ impl SocSystem {
     /// [`ModeOverrides`] on the best surveillance rung — intermediate
     /// configurations not on the main ladder.
     pub fn surveillance_ablations(&self) -> Result<AblationReport> {
-        let sweeps: [(&str, ModeOverrides); 4] = [
+        let sweeps: [(&str, ModeOverrides); 5] = [
             (
                 "hwce4+swcrypto",
                 ModeOverrides { hwcrypt: Some(false), ..Default::default() },
@@ -510,6 +531,10 @@ impl SocSystem {
             ),
             ("hwce4@1.0V", ModeOverrides { vdd: Some(1.0), ..Default::default() }),
             ("hwce4@1.2V", ModeOverrides { vdd: Some(1.2), ..Default::default() }),
+            (
+                "hwce4 layer-gran",
+                ModeOverrides { tiling: Some(Tiling::Layer), ..Default::default() },
+            ),
         ];
         let mut rows = Vec::new();
         for (label, overrides) in sweeps {

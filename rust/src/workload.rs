@@ -126,12 +126,18 @@ impl Workload for SeizureDetection {
 
 /// A multi-tenant stream: one "frame" interleaves one frame of each tenant
 /// workload on the same SoC. The scheduler is free to overlap tenants'
-/// phases across engines (a seizure window's analytics run under the
-/// surveillance frame's FRAM round trips); per-tenant attribution comes
-/// from graph segments.
+/// phases across engines and cores (a seizure window's analytics run under
+/// the surveillance frame's FRAM round trips, and mode-compatible tenants
+/// co-reside on the cluster point); per-tenant attribution comes from
+/// graph segments.
 ///
 /// All tenants share the selected rung's [`ExecConfig`] — one cluster, one
-/// supply voltage, one mode sequence (the §II-D discipline).
+/// supply voltage, one mode sequence (the §II-D discipline). They also
+/// share one [`GraphBuilder`], so a tenant that pins the cluster at the
+/// all-capable CRY-CNN-SW point (e.g. surveillance at the accelerated
+/// rungs) pins it for the tenants emitted after it too: on a shared chip
+/// the cluster point is a chip-wide choice, and staying at the
+/// all-capable point is what lets tenants co-reside without relock churn.
 pub struct MixedStream {
     name: &'static str,
     describe: &'static str,

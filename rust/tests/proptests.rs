@@ -228,6 +228,27 @@ fn prop_hwce_timing_monotone_and_bounded() {
     }
 }
 
+/// Tile-share arithmetic (the coordinator's TCDM tiling): shares always
+/// partition the total exactly, and no two shares differ by more than one
+/// byte/op — what keeps per-tile energy attribution lossless.
+#[test]
+fn prop_tile_shares_partition_exactly() {
+    use fulmine::coordinator::{share, share64};
+    for seed in 0..300u64 {
+        let mut r = Rng::new(4200 + seed);
+        let total = r.range(0, 10_000_000) as usize;
+        let n = r.range(1, 64) as usize;
+        let shares: Vec<usize> = (0..n).map(|t| share(total, n, t)).collect();
+        assert_eq!(shares.iter().sum::<usize>(), total, "seed {seed}");
+        let (lo, hi) =
+            (shares.iter().min().unwrap(), shares.iter().max().unwrap());
+        assert!(hi - lo <= 1, "seed {seed}: uneven shares {lo}..{hi}");
+        let total64 = r.range(0, 4_000_000_000) as u64;
+        let sum64: u64 = (0..n as u64).map(|t| share64(total64, n as u64, t)).sum();
+        assert_eq!(sum64, total64, "seed {seed}");
+    }
+}
+
 /// ECB determinism/pattern-leak property (the §II-B motivation): equal
 /// blocks ⇒ equal ciphertext blocks in ECB, never in XTS (same sector,
 /// different block index).

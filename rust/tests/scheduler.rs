@@ -1,20 +1,28 @@
 //! Scheduler invariants (seeded-exploration style — the offline crate set
 //! has no `proptest`; failures print the seed):
 //!
-//! * resource sanity: per-engine busy time never exceeds the makespan, and
-//!   total busy time never exceeds makespan × engine count;
+//! * resource sanity: per-engine as-run busy time never exceeds the
+//!   makespan, runs are deterministic, and no schedule ever exceeds the
+//!   full serialization bound (`JobGraph::serialized_bound`) — even with
+//!   tiling, per-core engines and mode co-residency in play;
 //! * calibration: the scheduled use cases stay within 5 % of the analytic
 //!   phase-summation model (per energy category and in pJ/op) on every
 //!   ladder rung — the contract that keeps the Fig. 10/11/12 reports
-//!   faithful;
+//!   faithful — and per-segment attribution always re-sums to the graph's
+//!   schedule-independent active energy;
+//! * acceptance: at the best rung of every use case the tiled,
+//!   co-resident schedule closes to below 1.15× of the analytic bound
+//!   (ROADMAP: the layer-granular schedule sat ≈1.3× above it);
 //! * streaming: N frames through the scheduler are never slower than N
-//!   back-to-back single-frame runs, and genuinely faster where the frame
-//!   graph leaves engine stalls to fill.
+//!   back-to-back single-frame runs.
 
-use fulmine::coordinator::{facedet, seizure, surveillance, ExecConfig, GraphBuilder};
+use fulmine::coordinator::{
+    facedet, seizure, surveillance, ExecConfig, GraphBuilder, Tiling,
+};
 use fulmine::energy::Category;
 use fulmine::extmem::Device;
 use fulmine::soc::sched::{Engine, JobGraph, JobId, Scheduler, N_ENGINES};
+use fulmine::workload::{frame_graph, Registry};
 
 struct Rng(u64);
 
@@ -33,9 +41,11 @@ impl Rng {
     }
 }
 
-/// A random but well-formed job graph: random phase kinds, random
-/// dependencies on earlier jobs, a ladder-sampled configuration.
-fn random_graph(seed: u64) -> JobGraph {
+/// A random but well-formed job graph: random phase kinds (including
+/// tile-style epilogues and ADC bursts), random dependencies on earlier
+/// jobs, a ladder-sampled configuration, and — when `segments` — a tenant
+/// marker every few jobs.
+fn random_graph_with(seed: u64, segments: bool) -> JobGraph {
     let mut r = Rng::new(seed);
     let ladder = ExecConfig::ladder();
     let cfg = ladder[(r.next() % ladder.len() as u64) as usize].cfg;
@@ -45,7 +55,10 @@ fn random_graph(seed: u64) -> JobGraph {
     b.set_ext_mem_present(false);
     let n_jobs = r.range(3, 40) as usize;
     let mut ids: Vec<JobId> = Vec::new();
-    for _ in 0..n_jobs {
+    for i in 0..n_jobs {
+        if segments && i % 5 == 0 {
+            b.begin_segment(if (i / 5) % 2 == 0 { "even" } else { "odd" });
+        }
         let mut deps: Vec<JobId> = Vec::new();
         for _ in 0..r.range(0, 2) {
             if !ids.is_empty() {
@@ -54,12 +67,14 @@ fn random_graph(seed: u64) -> JobGraph {
         }
         deps.sort_unstable();
         deps.dedup();
-        let id = match r.next() % 6 {
+        let id = match r.next() % 8 {
             0 => b.conv(r.range(10_000, 5_000_000), if r.next() % 2 == 0 { 3 } else { 5 }, &deps),
             1 => b.xts(r.range(64, 100_000) as usize, &deps),
             2 => b.sponge_ae(r.range(64, 100_000) as usize, &deps),
             3 => b.sw(r.range(1_000, 2_000_000) as f64, 1.0, &deps),
             4 => b.dma(r.range(64, 200_000) as usize, &deps),
+            5 => b.epilogue(r.range(1_000, 500_000) as f64, &deps),
+            6 => b.adc(r.range(64, 50_000) as usize, &deps),
             _ => {
                 let dev = if r.next() % 2 == 0 { Device::Flash } else { Device::Fram };
                 b.extmem(dev, r.range(64, 200_000) as usize, &deps)
@@ -70,6 +85,10 @@ fn random_graph(seed: u64) -> JobGraph {
     b.build()
 }
 
+fn random_graph(seed: u64) -> JobGraph {
+    random_graph_with(seed, false)
+}
+
 const ACTIVE_CATEGORIES: [Category; 5] = [
     Category::Conv,
     Category::Crypto,
@@ -78,8 +97,8 @@ const ACTIVE_CATEGORIES: [Category; 5] = [
     Category::ExtMem,
 ];
 
-/// (a) Engine-busy accounting: each engine's busy time is bounded by the
-/// makespan, and the total by makespan × engine count; runs are
+/// (a) Engine-busy accounting: each engine's as-run busy time is bounded
+/// by the makespan, overlap statistics are consistent, and runs are
 /// deterministic.
 #[test]
 fn prop_engine_busy_bounded() {
@@ -102,15 +121,53 @@ fn prop_engine_busy_bounded() {
             N_ENGINES,
             r.makespan_s
         );
+        assert!(r.overlap_s <= r.makespan_s + 1e-9, "seed {seed}");
+        assert!(r.coresidency_s <= r.overlap_s + 1e-9, "seed {seed}");
         let again = Scheduler::run(&g);
         assert_eq!(r.makespan_s.to_bits(), again.makespan_s.to_bits(), "seed {seed}");
         assert_eq!(r.mode_switches, again.mode_switches, "seed {seed}");
     }
 }
 
+/// (b) No schedule exceeds the full serialization bound — every job
+/// back-to-back at the slowest admissible point plus one relock per
+/// cluster job — under tiling, co-residency and per-core contention.
+#[test]
+fn prop_makespan_within_serialized_bound() {
+    for seed in 0..80u64 {
+        let g = random_graph(2000 + seed);
+        let r = Scheduler::run(&g);
+        let bound = g.serialized_bound();
+        assert!(
+            r.makespan_s <= bound + 1e-9,
+            "seed {seed}: makespan {} > serialized bound {bound}",
+            r.makespan_s
+        );
+        let cluster_jobs = g.jobs.iter().filter(|j| j.mode_locked()).count() as u64;
+        assert!(r.mode_switches <= cluster_jobs, "seed {seed}");
+    }
+    // and for the real use-case graphs at every rung
+    let reg = Registry::builtin();
+    for name in reg.names() {
+        let w = reg.resolve(name).unwrap();
+        for rung in w.rungs() {
+            let g = frame_graph(w, rung.cfg).unwrap();
+            let r = Scheduler::run(&g);
+            assert!(
+                r.makespan_s <= g.serialized_bound() + 1e-9,
+                "{name}/{}: {} > {}",
+                rung.label,
+                r.makespan_s,
+                g.serialized_bound()
+            );
+        }
+    }
+}
+
 /// Active energy is schedule-independent: scheduled and analytic runs of
 /// the same graph charge identical Conv/Crypto/OtherSw/Dma/ExtMem energy
-/// (only Idle tracks the makespan).
+/// (only Idle tracks the makespan) — co-resident frequency rescaling
+/// included, since cluster dynamic power is frequency-linear.
 #[test]
 fn prop_active_energy_schedule_independent() {
     for seed in 0..60u64 {
@@ -128,10 +185,47 @@ fn prop_active_energy_schedule_independent() {
     }
 }
 
-/// (b) Calibration contract: on every ladder rung of every use case the
+/// Per-segment attribution re-sums to the graph's active energy — on
+/// random segmented graphs, under streaming repetition, and on the real
+/// multi-tenant `mixed` frame with tiling and co-residency in play.
+#[test]
+fn prop_segment_attribution_sums_to_active() {
+    for seed in 0..40u64 {
+        let g = random_graph_with(3000 + seed, true);
+        let seg = g.segment_active_mj();
+        let sum: f64 = seg.iter().map(|(_, mj)| mj).sum();
+        let active = g.active_mj();
+        assert!(
+            (sum - active).abs() <= 1e-9 * (1.0 + active),
+            "seed {seed}: segments {sum} vs active {active}"
+        );
+        let g3 = g.repeat(3);
+        let sum3: f64 = g3.segment_active_mj().iter().map(|(_, mj)| mj).sum();
+        assert!(
+            (sum3 - 3.0 * active).abs() <= 1e-9 * (1.0 + 3.0 * active),
+            "seed {seed}: streamed segments {sum3} vs {}",
+            3.0 * active
+        );
+    }
+    let reg = Registry::builtin();
+    let mixed = reg.resolve("mixed").unwrap();
+    for rung in mixed.rungs() {
+        let g = frame_graph(mixed, rung.cfg).unwrap();
+        let sum: f64 = g.segment_active_mj().iter().map(|(_, mj)| mj).sum();
+        let active = g.active_mj();
+        assert!(
+            (sum - active).abs() <= 1e-9 * (1.0 + active),
+            "mixed/{}: {sum} vs {active}",
+            rung.label
+        );
+    }
+}
+
+/// (c) Calibration contract: on every ladder rung of every use case the
 /// scheduled energy matches the analytic phase-summation model within 5 %
-/// per active category and in total, pJ/op within 5 %, and the makespan
-/// stays in the band explained by exposed I/O dependencies.
+/// per active category and in total, and the makespan stays in the band
+/// explained by co-residency gains (below 1) and exposed I/O dependencies
+/// (slightly above 1 at the software rungs).
 #[test]
 fn usecase_energy_within_5pct_of_analytic() {
     let mut cases: Vec<(String, JobGraph)> = Vec::new();
@@ -158,10 +252,9 @@ fn usecase_energy_within_5pct_of_analytic() {
         assert!((ta - tb).abs() / tb < 0.05, "{label} total: {ta} vs {tb}");
         let ratio = run.makespan_s / ana.makespan_s;
         assert!(
-            (0.9..1.6).contains(&ratio),
+            (0.5..1.25).contains(&ratio),
             "{label}: scheduled/analytic makespan ratio {ratio:.3}"
         );
-        assert_eq!(run.mode_switches, ana.mode_switches, "{label} switch count");
     }
 }
 
@@ -195,7 +288,45 @@ fn usecase_pj_per_op_within_5pct() {
     }
 }
 
-/// (c) Streaming N frames is never slower than N back-to-back single
+/// Acceptance: at the best rung of every use case, tile-granular emission
+/// plus CRY–CNN–SW co-residency closes the scheduled/analytic gap to
+/// below 1.15× (the layer-granular schedule sat ≈1.3× above the bound),
+/// and the tiled schedule beats the layer-granular one outright.
+#[test]
+fn best_rung_gap_below_1p15_and_tiling_wins() {
+    let cases: [(&str, ExecConfig); 3] = [
+        ("surveillance", ExecConfig::ladder().last().unwrap().cfg),
+        ("facedet", ExecConfig::ladder().last().unwrap().cfg),
+        ("seizure", seizure::rung_configs().last().unwrap().cfg),
+    ];
+    for (name, cfg) in cases {
+        let g = match name {
+            "surveillance" => surveillance::frame_graph(cfg),
+            "facedet" => facedet::frame_graph(cfg),
+            _ => seizure::window_graph(cfg),
+        };
+        let run = Scheduler::run(&g);
+        let ana = g.analytic();
+        let gap = run.makespan_s / ana.makespan_s;
+        assert!(gap < 1.15, "{name}: scheduled/analytic gap {gap:.3}");
+
+        let layer_cfg = ExecConfig { tiling: Tiling::Layer, ..cfg };
+        let layer = match name {
+            "surveillance" => surveillance::frame_graph(layer_cfg),
+            "facedet" => facedet::frame_graph(layer_cfg),
+            _ => seizure::window_graph(layer_cfg),
+        };
+        let layer_run = Scheduler::run(&layer);
+        assert!(
+            run.makespan_s < layer_run.makespan_s,
+            "{name}: tiled {} not better than layer-granular {}",
+            run.makespan_s,
+            layer_run.makespan_s
+        );
+    }
+}
+
+/// (d) Streaming N frames is never slower than N back-to-back single
 /// frames (small tolerance for the extra FLL relock at each frame
 /// boundary, which back-to-back runs get for free).
 #[test]
@@ -221,18 +352,29 @@ fn streaming_never_slower_than_serial() {
     }
 }
 
-/// Cross-frame overlap is real where the frame graph stalls on I/O: at the
-/// best surveillance rung, 8 streamed frames beat 8 serial ones.
+/// Streaming at the best surveillance rung: the tiled frame already keeps
+/// the engines busy, so the cross-frame gain is modest — but streaming
+/// must never lose throughput, and the pipeline stays co-resident.
 #[test]
-fn streaming_gain_at_best_surveillance_rung() {
+fn streaming_holds_throughput_at_best_surveillance_rung() {
     let cfg = ExecConfig::ladder().last().unwrap().cfg;
     let r = surveillance::run_stream(cfg, 8);
-    assert!(r.speedup > 1.02, "stream speedup {:.3}", r.speedup);
-    assert!(r.fps > 1.0 / r.single_frame_s, "fps {} vs single {}", r.fps, r.single_frame_s);
+    assert!(r.speedup >= 0.999, "stream speedup {:.4}", r.speedup);
+    // streamed frames amortize the makespan-proportional idle energy, so
+    // per-frame pJ/op never exceeds the single-frame number
+    let single = surveillance::run_frame(cfg);
+    assert!(
+        r.pj_per_op <= single.pj_per_op * 1.001,
+        "streamed pJ/op {} vs single-frame {}",
+        r.pj_per_op,
+        single.pj_per_op
+    );
+    assert!(r.coresidency_s > 0.0, "streamed schedule must co-reside");
+    assert!((r.fps - 8.0 / r.time_s).abs() < 1e-9);
 }
 
-/// Streamed schedules keep the busy-time invariant too, and report
-/// plausible utilization.
+/// Streamed schedules keep the busy-time invariant, report plausible
+/// utilization, and keep the convolution engine hot at the best rung.
 #[test]
 fn stream_busy_invariant() {
     let cfg = ExecConfig::ladder().last().unwrap().cfg;
@@ -243,5 +385,9 @@ fn stream_busy_invariant() {
         assert!((0.0..=1.0 + 1e-9).contains(&u), "{} utilization {u}", e.name());
     }
     // the convolution engine dominates this use case at the best rung
-    assert!(r.busy_s[Engine::Hwce.index()] > 0.0);
+    let hwce_util = r.busy_s[Engine::Hwce.index()] / r.makespan_s;
+    assert!(hwce_util > 0.5, "HWCE utilization {hwce_util} — tiling should keep it hot");
+    // per-core engines see work too: the epilogues and control stubs
+    let core_busy: f64 = (0..4).map(|i| r.busy_s[Engine::Core(i).index()]).sum();
+    assert!(core_busy > 0.0, "cores never busy?");
 }
