@@ -8,8 +8,12 @@
 //! Besides the human-readable report this harness writes
 //! **`BENCH_sched.json`**: one row per (workload, rung) with the scheduled
 //! and analytic single-frame makespans, their gap, pJ/op and the
-//! co-residency statistics — the machine-readable trajectory CI tracks
-//! across PRs.
+//! co-residency statistics, plus a `stream_scaling` section with the
+//! *simulator's own* wall-clock throughput (jobs/s) and peak resident job
+//! count at `--frames {1, 64, 4096}` for the bounded-window streaming
+//! path against the materialized paths (indexed dispatch and the legacy
+//! linear scan) — the machine-readable perf trajectory CI tracks across
+//! PRs.
 //!
 //! Uses `fulmine::bench_support` (the offline crate set has no criterion).
 
@@ -18,9 +22,10 @@ use fulmine::coordinator::{surveillance, ExecConfig};
 use fulmine::hwce::golden::WeightPrec;
 use fulmine::json::Json;
 use fulmine::report;
-use fulmine::soc::sched::{Engine, Scheduler};
+use fulmine::soc::sched::{Engine, Scheduler, StreamScheduler, DEFAULT_STREAM_WINDOW};
 use fulmine::system::{RunSpec, SocSystem};
 use fulmine::workload::frame_graph;
+use std::time::Instant;
 
 fn main() {
     let sys = SocSystem::new();
@@ -92,13 +97,74 @@ fn main() {
             ]));
         }
     }
-    let doc = Json::obj(vec![("rungs", Json::Arr(rows))]);
+    // The simulator's own hot path, at scale: wall-clock jobs/s and peak
+    // resident jobs of the bounded-window streaming path at 1/64/4096
+    // frames, against the materialized paths (indexed dispatch, and the
+    // legacy linear scan that rescans the ready set per event) at the
+    // depths they can reasonably reach.
+    println!("\n== stream scaling: simulator wall-clock and resident jobs ==");
+    println!(
+        "{:<22} {:>7} {:>10} {:>12} {:>14}",
+        "path", "frames", "wall [s]", "jobs/s", "peak resident"
+    );
+    let best = ExecConfig::with_hwce(WeightPrec::W4);
+    let g1 = surveillance::frame_graph(best);
+    let mut scaling_rows: Vec<Json> = Vec::new();
+    let mut jobs_per_s: Vec<(&'static str, usize, f64)> = Vec::new();
+    let mut scale_row = |path: &'static str, frames: usize, wall_s: f64, peak: usize| {
+        let jobs = g1.len() * frames;
+        let jps = jobs as f64 / wall_s.max(1e-12);
+        println!("{path:<22} {frames:>7} {wall_s:>10.4} {jps:>12.0} {peak:>14}");
+        scaling_rows.push(Json::obj(vec![
+            ("workload", Json::string("surveillance")),
+            ("path", Json::string(path)),
+            ("frames", Json::num(frames as f64)),
+            ("wall_s", Json::num(wall_s)),
+            ("jobs", Json::num(jobs as f64)),
+            ("jobs_per_s", Json::num(jps)),
+            ("peak_resident_jobs", Json::num(peak as f64)),
+        ]));
+        jobs_per_s.push((path, frames, jps));
+    };
+    for frames in [1usize, 64, 4096] {
+        let t = Instant::now();
+        let r = blackbox(StreamScheduler::run(&g1, frames, DEFAULT_STREAM_WINDOW));
+        scale_row("windowed", frames, t.elapsed().as_secs_f64(), r.peak_resident_jobs);
+    }
+    for frames in [1usize, 64] {
+        let rep = g1.repeat(frames);
+        let t = Instant::now();
+        let r = blackbox(Scheduler::run(&rep));
+        scale_row("materialized", frames, t.elapsed().as_secs_f64(), r.peak_resident_jobs);
+        let t = Instant::now();
+        let r = blackbox(Scheduler::run_scan(&rep));
+        scale_row("materialized-scan", frames, t.elapsed().as_secs_f64(), r.peak_resident_jobs);
+    }
+    let jps_of = |path: &str, frames: usize| {
+        jobs_per_s
+            .iter()
+            .find(|(p, f, _)| *p == path && *f == frames)
+            .map(|&(_, _, v)| v)
+            .unwrap_or(0.0)
+    };
+    // the headline ratios: windowed streaming vs the legacy scan at the
+    // deepest stream the scan can run, and at the scan's own depth
+    let vs_scan_64 = jps_of("windowed", 64) / jps_of("materialized-scan", 64).max(1e-12);
+    let deep_vs_scan = jps_of("windowed", 4096) / jps_of("materialized-scan", 64).max(1e-12);
+    println!(
+        "windowed vs scan: {vs_scan_64:.1}x at 64 frames, {deep_vs_scan:.1}x at 4096-vs-64 frames"
+    );
+
+    let doc = Json::obj(vec![
+        ("rungs", Json::Arr(rows)),
+        ("stream_scaling", Json::Arr(scaling_rows)),
+        ("windowed_vs_scan_jobs_per_s", Json::num(vs_scan_64)),
+        ("windowed_4096_vs_scan_64_jobs_per_s", Json::num(deep_vs_scan)),
+    ]);
     std::fs::write("BENCH_sched.json", doc.render() + "\n").expect("write BENCH_sched.json");
     println!("wrote BENCH_sched.json");
 
     println!("\n== host cost of scheduling ==");
-    let best = ExecConfig::with_hwce(WeightPrec::W4);
-    let g1 = surveillance::frame_graph(best);
     let g8 = g1.repeat(8);
     let (m, lo, hi) = measure(2, 9, || {
         blackbox(Scheduler::run(&g1));
@@ -115,6 +181,16 @@ fn main() {
     });
     report_row(
         "schedule surveillance x8 stream",
+        m,
+        lo,
+        hi,
+        Some((g8.len() as f64 / m / 1e3, "kjobs/s")),
+    );
+    let (m, lo, hi) = measure(2, 9, || {
+        blackbox(StreamScheduler::run(&g1, 8, DEFAULT_STREAM_WINDOW));
+    });
+    report_row(
+        "windowed x8 stream",
         m,
         lo,
         hi,

@@ -21,8 +21,10 @@ commands:
   workloads     list the registered workloads
   ladder <workload> [--json]
                 run every ladder rung of a workload (one frame each)
-  stream <workload> [--frames N] [--config RUNG] [--json]
-                pipeline N frames through the event-driven SoC scheduler
+  stream <workload> [--frames N] [--window K] [--config RUNG] [--json]
+                pipeline N frames through the bounded-window streaming
+                scheduler: at most K frames in flight (default 8), so
+                memory stays O(K) however large N is
                 (RUNG: ladder index or label substring, default best)
   ablations [--json]
                 run the surveillance design-choice sweep
@@ -38,8 +40,14 @@ pub enum Command {
     Workloads,
     /// Run a workload's full ladder.
     Ladder { workload: String, json: bool },
-    /// Stream frames through the scheduler.
-    Stream { workload: String, frames: usize, rung: Option<String>, json: bool },
+    /// Stream frames through the bounded-window scheduler.
+    Stream {
+        workload: String,
+        frames: usize,
+        window: Option<usize>,
+        rung: Option<String>,
+        json: bool,
+    },
     /// The surveillance ablation sweep.
     Ablations { json: bool },
     /// PJRT artifact listing/compilation.
@@ -107,13 +115,14 @@ fn parse_ladder(args: &[String]) -> Result<Command> {
 }
 
 /// Parse the `stream` subcommand's flags: `<workload> [--frames N]
-/// [--config RUNG] [--json]`.
+/// [--window K] [--config RUNG] [--json]`.
 fn parse_stream(args: &[String]) -> Result<Command> {
     let workload = args
         .first()
         .cloned()
         .ok_or_else(|| anyhow!("stream needs a workload; try `fulmine workloads`"))?;
     let mut frames = 8usize;
+    let mut window: Option<usize> = None;
     let mut rung: Option<String> = None;
     let mut json = false;
     let mut it = args[1..].iter();
@@ -126,6 +135,14 @@ fn parse_stream(args: &[String]) -> Result<Command> {
                     bail!("--frames must be at least 1 (a stream of 0 frames schedules nothing)");
                 }
             }
+            "--window" => {
+                let v = it.next().ok_or_else(|| anyhow!("--window needs a value"))?;
+                let w: usize = v.parse().map_err(|_| anyhow!("bad --window value {v:?}"))?;
+                if w == 0 {
+                    bail!("--window must be at least 1 (zero in-flight frames schedule nothing)");
+                }
+                window = Some(w);
+            }
             "--config" => {
                 let v = it.next().ok_or_else(|| anyhow!("--config needs a value"))?;
                 rung = Some(v.clone());
@@ -134,7 +151,7 @@ fn parse_stream(args: &[String]) -> Result<Command> {
             other => bail!("unknown stream flag {other:?}"),
         }
     }
-    Ok(Command::Stream { workload, frames, rung, json })
+    Ok(Command::Stream { workload, frames, window, rung, json })
 }
 
 /// Execute a parsed command, printing its output to stdout.
@@ -159,9 +176,12 @@ pub fn dispatch(cmd: &Command) -> Result<()> {
                 print!("{}", ladder.render_text());
             }
         }
-        Command::Stream { workload, frames, rung, json } => {
-            let spec =
+        Command::Stream { workload, frames, window, rung, json } => {
+            let mut spec =
                 RunSpec::new(workload).frames(*frames).rung(RungSel::parse(rung.as_deref()));
+            if let Some(w) = window {
+                spec = spec.window(*w);
+            }
             let run = SocSystem::new().run(&spec)?;
             if *json {
                 println!("{}", run.to_json().render());
@@ -243,7 +263,13 @@ mod tests {
     fn parses_stream_flags() {
         assert_eq!(
             parse(&argv(&["stream", "surveillance"])).unwrap(),
-            Command::Stream { workload: "surveillance".into(), frames: 8, rung: None, json: false }
+            Command::Stream {
+                workload: "surveillance".into(),
+                frames: 8,
+                window: None,
+                rung: None,
+                json: false
+            }
         );
         assert_eq!(
             parse(&argv(&["stream", "mixed", "--frames", "4", "--config", "hwce", "--json"]))
@@ -251,10 +277,34 @@ mod tests {
             Command::Stream {
                 workload: "mixed".into(),
                 frames: 4,
+                window: None,
                 rung: Some("hwce".into()),
                 json: true
             }
         );
+        assert_eq!(
+            parse(&argv(&["stream", "surveillance", "--frames", "4096", "--window", "16"]))
+                .unwrap(),
+            Command::Stream {
+                workload: "surveillance".into(),
+                frames: 4096,
+                window: Some(16),
+                rung: None,
+                json: false
+            }
+        );
+    }
+
+    /// `--window 0` (and garbage values) are rejected at parse time with a
+    /// clear message — the window is the memory bound of the stream.
+    #[test]
+    fn degenerate_window_rejected() {
+        let e = parse(&argv(&["stream", "surveillance", "--window", "0"]))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("--window must be at least 1"), "{e}");
+        assert!(parse(&argv(&["stream", "surveillance", "--window"])).is_err());
+        assert!(parse(&argv(&["stream", "surveillance", "--window", "abc"])).is_err());
     }
 
     /// The former `parse_stream_args` called `usage()` (process exit) on a

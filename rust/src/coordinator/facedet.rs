@@ -15,7 +15,8 @@
 //! the remaining stalls.
 
 use super::{
-    stream_graph, ExecConfig, GraphBuilder, StreamResult, TiledConv, UseCaseResult, OR1200_FACTOR,
+    stream_graph, ExecConfig, Extent, GraphBuilder, RegionDeps, StreamResult, TiledConv,
+    UseCaseResult, OR1200_FACTOR,
 };
 use crate::apps::facedet::*;
 use crate::kernels_sw::crypto_cost::SW_AES_XTS_CPB_1CORE;
@@ -54,15 +55,19 @@ pub fn emit(b: &mut GraphBuilder) {
     };
     let t1 = b.push_tiled(n1, &spec1, &[]);
 
-    // Stage 2: 24-net on the 10 % candidate windows — known only once
-    // every 12-net tile has been scored, so each stage-2 tile gates on all
-    // stage-1 dense epilogues.
+    // Stage 2: 24-net on the 10 % candidate windows. The candidate set is
+    // known only once *every* 12-net tile has been scored (the selection
+    // is global), so the stage boundary carries no region information:
+    // the producer set is a [`RegionDeps::barrier`] and every stage-2
+    // tile's `covering` resolves to all stage-1 tails — the documented
+    // fallback when regions are unknown.
     let c24 = conv_24net();
     let w24 = n_windows_24() as u64;
     let stage2_bytes = n_windows_24() * 24 * 24 * 2;
     let n2 = b.tiles(stage2_bytes);
-    let gate = t1.tails();
-    let deps2: Vec<Vec<JobId>> = (0..n2).map(|_| gate.clone()).collect();
+    let gate = RegionDeps::barrier(t1.tails());
+    let deps2: Vec<Vec<JobId>> =
+        (0..n2).map(|t| gate.covering(Extent::tile(t, n2))).collect();
     let spec2 = TiledConv {
         macs: w24 * c24.macs(),
         k: c24.k,

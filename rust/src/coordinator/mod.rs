@@ -12,6 +12,12 @@
 //! * layers are emitted at **tile granularity** ([`GraphBuilder::push_tiled`]),
 //!   sized so a double-buffered tile fits the 64 kB TCDM ([`TCDM_BYTES`]) —
 //!   the L2↔TCDM DMA round trips of a layer pipeline *within* the layer;
+//! * layer boundaries carry **region-level dependencies**: each tile
+//!   records its output [`Extent`], and the next layer's tiles depend only
+//!   on the producer tiles covering their (halo-dilated) input region
+//!   ([`RegionDeps`]) — layer *i+1* starts fetching while layer *i* is
+//!   still storing its last tiles; a gate whose consumers genuinely need
+//!   every producer falls back to the barrier;
 //! * accelerator phases carry a short control stub on a named core
 //!   (`Core(0)` programs the HWCE, `Core(1)` the HWCRYPT), so accelerator
 //!   control and SW epilogues co-reside on the core complex while the
@@ -49,7 +55,9 @@ use crate::hwcrypt;
 use crate::kernels_sw::crypto_cost;
 use crate::soc::opmodes::{OperatingMode, OperatingPoint};
 use crate::soc::power::Component;
-use crate::soc::sched::{Engine, Job, JobGraph, JobId, Scheduler, N_CORES};
+use crate::soc::sched::{
+    Engine, Job, JobGraph, JobId, Scheduler, StreamScheduler, DEFAULT_STREAM_WINDOW, N_CORES,
+};
 
 /// TCDM capacity (§II: 64 kB shared L1).
 pub const TCDM_BYTES: usize = 64 * 1024;
@@ -277,20 +285,43 @@ pub struct StreamResult {
     pub overlap_s: f64,
     /// Time with ≥ 2 *cluster* jobs in flight (CRY–CNN–SW co-residency).
     pub coresidency_s: f64,
+    /// In-flight frame window of the bounded-memory streaming path.
+    pub window: usize,
+    /// Peak jobs resident in the scheduler at once — bounded by
+    /// `window × frame jobs`, independent of the stream length.
+    pub peak_resident_jobs: usize,
+    /// Jobs scheduled over the whole stream (`frames × frame jobs`).
+    pub total_jobs: usize,
     pub ledger: EnergyLedger,
 }
 
-/// Run `graph` single-frame and `frames`-deep and package the comparison.
+/// Run `graph` single-frame and `frames`-deep (through the bounded-window
+/// [`StreamScheduler`] at [`DEFAULT_STREAM_WINDOW`]) and package the
+/// comparison.
 pub fn stream_graph(
     label: &str,
     graph: &JobGraph,
     frames: usize,
     eq_ops_per_frame: u64,
 ) -> StreamResult {
+    stream_graph_windowed(label, graph, frames, DEFAULT_STREAM_WINDOW, eq_ops_per_frame)
+}
+
+/// [`stream_graph`] with an explicit in-flight frame window. Memory and
+/// dispatch cost are O(window × frame jobs) however long the stream is;
+/// with `window ≥ frames` the schedule is bitwise identical to the
+/// materialized `Scheduler::run(&graph.repeat(frames))`.
+pub fn stream_graph_windowed(
+    label: &str,
+    graph: &JobGraph,
+    frames: usize,
+    window: usize,
+    eq_ops_per_frame: u64,
+) -> StreamResult {
     assert!(frames >= 1, "streaming needs at least one frame");
     let single = Scheduler::run(graph);
     let analytic = graph.analytic();
-    let res = Scheduler::run(&graph.repeat(frames));
+    let res = StreamScheduler::run(graph, frames, window);
     let energy_mj = res.ledger.total_mj();
     StreamResult {
         label: label.to_string(),
@@ -306,7 +337,94 @@ pub fn stream_graph(
         busy_s: res.busy_s,
         overlap_s: res.overlap_s,
         coresidency_s: res.coresidency_s,
+        window,
+        peak_resident_jobs: res.peak_resident_jobs,
+        total_jobs: res.n_jobs,
         ledger: res.ledger,
+    }
+}
+
+/// Normalized half-open extent `[lo, hi)` of a tile's data within its
+/// layer's spatial range (fraction of the row space). Tile `t` of `n`
+/// covers `[t/n, (t+1)/n)`; a consumer dilates its input extent by the
+/// convolution halo before matching producer extents. The 1-D row model
+/// matches how [`share`] splits layer working sets contiguously.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Extent {
+    pub lo: f64,
+    pub hi: f64,
+}
+
+impl Extent {
+    /// The extent of tile `t` of `n` equal shares.
+    pub fn tile(t: usize, n: usize) -> Extent {
+        debug_assert!(t < n);
+        Extent { lo: t as f64 / n as f64, hi: (t + 1) as f64 / n as f64 }
+    }
+
+    /// Grow both edges by `halo` (clamped to `[0, 1]`) — the rows a
+    /// convolution window reads beyond its output rows.
+    pub fn dilate(self, halo: f64) -> Extent {
+        Extent { lo: (self.lo - halo).max(0.0), hi: (self.hi + halo).min(1.0) }
+    }
+
+    /// Half-open interval overlap (adjacent tiles do not overlap).
+    pub fn overlaps(self, other: Extent) -> bool {
+        self.lo < other.hi && other.lo < self.hi
+    }
+}
+
+/// The producer side of a layer boundary: per-tile job ids, with the
+/// output [`Extent`] of each tile when known. A consumer tile depends only
+/// on the producers covering its (halo-dilated) input extent — the
+/// region-level matching that lets layer *i+1*'s first tiles start while
+/// layer *i*'s last tiles are still storing. When extents are unknown
+/// (e.g. a gate whose consumers need *every* producer, like the face-
+/// detection candidate selection) the matching falls back to the
+/// conservative barrier: every consumer depends on every producer.
+#[derive(Debug, Clone, Default)]
+pub struct RegionDeps {
+    jobs: Vec<JobId>,
+    /// One extent per job when region information exists; `None` = barrier.
+    extents: Option<Vec<Extent>>,
+}
+
+impl RegionDeps {
+    /// No producers (e.g. the first layer of a frame).
+    pub fn none() -> Self {
+        RegionDeps::default()
+    }
+
+    /// Producers with unknown regions: every consumer waits for all of
+    /// them (the conservative cross-layer barrier).
+    pub fn barrier(jobs: Vec<JobId>) -> Self {
+        RegionDeps { jobs, extents: None }
+    }
+
+    /// Producers with known per-tile output extents.
+    pub fn tiled(pairs: Vec<(JobId, Extent)>) -> Self {
+        let (jobs, extents) = pairs.into_iter().unzip();
+        RegionDeps { jobs, extents: Some(extents) }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.jobs.is_empty()
+    }
+
+    /// The producer jobs a consumer reading `input` must wait for: the
+    /// tiles whose extents overlap it, or all of them under the barrier
+    /// fallback.
+    pub fn covering(&self, input: Extent) -> Vec<JobId> {
+        match &self.extents {
+            None => self.jobs.clone(),
+            Some(extents) => self
+                .jobs
+                .iter()
+                .zip(extents)
+                .filter(|(_, e)| e.overlaps(input))
+                .map(|(&j, _)| j)
+                .collect(),
+        }
     }
 }
 
@@ -339,6 +457,9 @@ pub struct TiledConvIds {
     pub epis: Vec<JobId>,
     /// Empty when the spec had no out-staging.
     pub stage_out: Vec<JobId>,
+    /// Output extent of each tile within the layer's spatial range — what
+    /// downstream layers match their input regions against.
+    pub out_extents: Vec<Extent>,
 }
 
 impl TiledConvIds {
@@ -351,6 +472,14 @@ impl TiledConvIds {
     /// Final compute jobs of every tile.
     pub fn tails(&self) -> Vec<JobId> {
         (0..self.convs.len()).map(|t| self.tail(t)).collect()
+    }
+
+    /// The per-tile tails paired with their output extents, as a
+    /// [`RegionDeps`] producer set for the next layer.
+    pub fn tail_regions(&self) -> RegionDeps {
+        RegionDeps::tiled(
+            (0..self.convs.len()).map(|t| (self.tail(t), self.out_extents[t])).collect(),
+        )
     }
 }
 
@@ -675,7 +804,11 @@ impl GraphBuilder {
     /// (double buffering within the layer). `per_tile_deps[t]` supplies
     /// the tile's external inputs (e.g. its decrypted operands); pass `&[]`
     /// when the layer has none. `n_tiles` normally comes from
-    /// [`GraphBuilder::tiles`] over the layer's TCDM working set.
+    /// [`GraphBuilder::tiles`] over the layer's TCDM working set. Each
+    /// tile's output [`Extent`] is recorded in the returned ids, so the
+    /// next layer can depend only on the producer tiles covering its
+    /// input region ([`RegionDeps`]) instead of barriering on the whole
+    /// layer.
     pub fn push_tiled(
         &mut self,
         n_tiles: usize,
@@ -695,6 +828,7 @@ impl GraphBuilder {
             let cv = self.conv(share64(spec.macs, n_tiles as u64, t as u64), spec.k, &[si]);
             ids.stage_in.push(si);
             ids.convs.push(cv);
+            ids.out_extents.push(Extent::tile(t, n_tiles));
             let mut tail = cv;
             if spec.epi_cycles_1core > 0.0 {
                 let ep = self.epilogue(spec.epi_cycles_1core / n_tiles as f64, &[cv]);
@@ -986,5 +1120,67 @@ mod tests {
         assert!(r.speedup >= 0.99, "streaming slower than serial: {}", r.speedup);
         assert!(r.time_s >= r.single_frame_s - 1e-12);
         assert!(r.single_frame_analytic_s > 0.0);
+        assert_eq!(r.window, crate::soc::sched::DEFAULT_STREAM_WINDOW);
+        assert!(r.peak_resident_jobs <= r.window * g.len());
+        // an explicit window covering the stream matches the default run
+        // here (4 frames ≤ the default window ⇒ both are the full graph)
+        let rw = stream_graph_windowed("test", &g, 4, 4, 1_000_000);
+        assert_eq!(rw.time_s.to_bits(), r.time_s.to_bits());
+        assert_eq!(rw.energy_mj.to_bits(), r.energy_mj.to_bits());
+    }
+
+    #[test]
+    fn extents_tile_and_overlap() {
+        let a = Extent::tile(0, 4);
+        let b = Extent::tile(1, 4);
+        let d = Extent::tile(3, 4);
+        assert!(!a.overlaps(b), "adjacent half-open tiles do not overlap");
+        assert!(a.overlaps(a));
+        assert!(!a.overlaps(d));
+        // a one-row halo on a 28-row layer reaches into the neighbour tile
+        let haloed = b.dilate(1.0 / 28.0);
+        assert!(haloed.overlaps(a) && haloed.overlaps(Extent::tile(2, 4)));
+        assert!(!haloed.overlaps(d));
+        // clamping at the borders
+        let edge = Extent::tile(0, 4).dilate(0.5);
+        assert_eq!(edge.lo, 0.0);
+    }
+
+    #[test]
+    fn region_deps_cover_overlapping_producers_only() {
+        let tiled = RegionDeps::tiled(vec![
+            (10, Extent::tile(0, 3)),
+            (11, Extent::tile(1, 3)),
+            (12, Extent::tile(2, 3)),
+        ]);
+        // an un-dilated middle tile maps to its own producer
+        assert_eq!(tiled.covering(Extent::tile(1, 3)), vec![11]);
+        // a halo reaches the neighbours
+        assert_eq!(tiled.covering(Extent::tile(1, 3).dilate(0.01)), vec![10, 11, 12]);
+        // different consumer tiling still resolves by overlap
+        assert_eq!(tiled.covering(Extent::tile(0, 2)), vec![10, 11]);
+        // the barrier fallback hands back every producer
+        let barrier = RegionDeps::barrier(vec![10, 11, 12]);
+        assert_eq!(barrier.covering(Extent::tile(0, 5)), vec![10, 11, 12]);
+        assert!(RegionDeps::none().covering(Extent::tile(0, 1)).is_empty());
+        assert!(RegionDeps::none().is_empty() && !tiled.is_empty());
+    }
+
+    #[test]
+    fn push_tiled_records_out_extents() {
+        let mut b = GraphBuilder::new(ExecConfig::with_hwce(WeightPrec::W4));
+        let spec = TiledConv {
+            macs: 9_000_000,
+            k: 3,
+            stage_in_bytes: 3 * TILE_BYTES,
+            stage_out_bytes: 0,
+            epi_cycles_1core: 0.0,
+        };
+        let ids = b.push_tiled(3, &spec, &[]);
+        assert_eq!(ids.out_extents.len(), 3);
+        assert_eq!(ids.out_extents[0], Extent::tile(0, 3));
+        assert_eq!(ids.out_extents[2], Extent::tile(2, 3));
+        let regions = ids.tail_regions();
+        assert_eq!(regions.covering(Extent::tile(2, 3)), vec![ids.tail(2)]);
     }
 }

@@ -16,8 +16,8 @@
 //! does between its 0.5 s deadlines.
 
 use super::{
-    share, stream_graph, ExecConfig, GraphBuilder, Rung, StreamResult, Tiling, UseCaseResult,
-    OR1200_FACTOR,
+    share, stream_graph, ExecConfig, Extent, GraphBuilder, RegionDeps, Rung, StreamResult, Tiling,
+    UseCaseResult, OR1200_FACTOR,
 };
 use crate::apps::eeg;
 use crate::kernels_sw::crypto_cost::SW_AES_XTS_CPB_1CORE;
@@ -44,10 +44,17 @@ pub fn emit(b: &mut GraphBuilder) {
     let acq_bytes = eeg_cost::N_CHANNELS * 128 * 4;
     let n = if b.cfg.tiling == Tiling::Layer { 1 } else { ACQ_CHUNKS };
     let cov_cycles = ops.covariance as f64 * CYC_PER_OP_PARALLEL;
+    // The acquisition chunks carry their sample extents: each covariance
+    // accumulation chunk region-matches exactly the ADC burst that
+    // produced its channel group (a 1:1 [`RegionDeps`] mapping — the
+    // degenerate but type-checked case of the layer-boundary matching).
+    let acq = RegionDeps::tiled(
+        (0..n).map(|t| (b.adc(share(acq_bytes, n, t), &[]), Extent::tile(t, n))).collect(),
+    );
     let mut cov: Vec<JobId> = Vec::with_capacity(n);
     for t in 0..n {
-        let a = b.adc(share(acq_bytes, n, t), &[]);
-        cov.push(b.sw_split(0.0, cov_cycles / n as f64, &[a]));
+        let deps = acq.covering(Extent::tile(t, n));
+        cov.push(b.sw_split(0.0, cov_cycles / n as f64, &deps));
     }
     // Jacobi eigendecomposition: the rotation search is serial, the
     // row/column updates parallelize (the §IV-C 2.6× four-core band)

@@ -12,6 +12,13 @@
 //! trip of tile *t* pipelines under the convolution of tile *t±1* —
 //! double buffering *within* the layer, not just across frames.
 //!
+//! Layer boundaries are **region-matched** ([`RegionDeps`]): each tile's
+//! FRAM store carries its output extent, and layer *i+1*'s tile fetches
+//! depend only on the producer tiles covering their halo-dilated input
+//! rows — so the first tiles of the next layer start their FRAM round
+//! trip while the previous layer is still convolving and storing its last
+//! tiles, instead of barriering on the whole layer.
+//!
 //! When both accelerators are configured the emission pins the cluster at
 //! the all-capable CRY-CNN-SW point ([`GraphBuilder::set_cluster_point`]):
 //! HWCE convolution, HWCRYPT cipher runs and SW epilogues then co-reside
@@ -21,8 +28,8 @@
 //! whatever stalls remain.
 
 use super::{
-    share, stream_graph, ExecConfig, GraphBuilder, StreamResult, TiledConv, UseCaseResult,
-    NAIVE_CYC_PER_MAC_3, OR1200_FACTOR,
+    share, stream_graph, ExecConfig, Extent, GraphBuilder, RegionDeps, StreamResult, TiledConv,
+    UseCaseResult, NAIVE_CYC_PER_MAC_3, OR1200_FACTOR,
 };
 use crate::apps::resnet::{self, ConvLayer};
 use crate::extmem::Device;
@@ -63,9 +70,11 @@ pub fn emit(b: &mut GraphBuilder) {
         b.set_cluster_point(OperatingMode::CryCnnSw);
     }
 
-    // FRAM stores of the previous layer's output tiles — the next layer's
-    // input fetches must wait for them (the partial-result round trip).
-    let mut prev_stores: Vec<JobId> = Vec::new();
+    // FRAM stores of the previous layer's output tiles, with their output
+    // extents: the next layer's input fetches wait only for the producer
+    // tiles covering their (halo-dilated) input region, so layer *i+1*
+    // starts fetching while layer *i* is still storing its last tiles.
+    let mut prev_stores = RegionDeps::none();
     let mut last_tails: Vec<JobId> = Vec::new();
     for (i, l) in layers.iter().enumerate() {
         let wb = l.weight_bytes(store_prec);
@@ -74,6 +83,9 @@ pub fn emit(b: &mut GraphBuilder) {
         // tile count from the layer's TCDM working set: input slice +
         // weight slice + output buffer
         let n = b.tiles(in_b + wb + out_b);
+        // rows the k×k window reads beyond a tile's own rows, as a
+        // fraction of the layer's input height
+        let halo = ((l.k - 1) / 2) as f64 / l.h as f64;
 
         // per-tile operand production: weights flash→L2 (prefetchable from
         // frame start) and decrypt; partial results FRAM→L2 and decrypt
@@ -85,7 +97,9 @@ pub fn emit(b: &mut GraphBuilder) {
             let w_dec = b.xts(share(wb, n, t), &[w_fetch]);
             let mut d = vec![w_dec];
             if i > 0 {
-                let in_fetch = b.extmem(Device::Fram, share(in_b, n, t), &prev_stores);
+                let region = Extent::tile(t, n).dilate(halo);
+                let producers = prev_stores.covering(region);
+                let in_fetch = b.extmem(Device::Fram, share(in_b, n, t), &producers);
                 d.push(b.xts(share(in_b, n, t), &[in_fetch]));
             }
             deps.push(d);
@@ -101,14 +115,18 @@ pub fn emit(b: &mut GraphBuilder) {
         };
         let tiled = b.push_tiled(n, &spec, &deps);
 
-        // results: per tile encrypt → stage back → store to FRAM
-        prev_stores = (0..n)
-            .map(|t| {
-                let enc = b.xts(share(out_b, n, t), &[tiled.tail(t)]);
-                let out_dma = b.dma(share(out_b, n, t), &[enc]);
-                b.extmem(Device::Fram, share(out_b, n, t), &[out_dma])
-            })
-            .collect();
+        // results: per tile encrypt → stage back → store to FRAM, each
+        // store tagged with its tile's output extent for the next layer
+        prev_stores = RegionDeps::tiled(
+            (0..n)
+                .map(|t| {
+                    let enc = b.xts(share(out_b, n, t), &[tiled.tail(t)]);
+                    let out_dma = b.dma(share(out_b, n, t), &[enc]);
+                    let store = b.extmem(Device::Fram, share(out_b, n, t), &[out_dma]);
+                    (store, tiled.out_extents[t])
+                })
+                .collect(),
+        );
         last_tails = tiled.tails();
     }
     // classifier head on the last layer's activations (still in the
@@ -263,6 +281,35 @@ mod tests {
         let r = Scheduler::run(&frame_graph(cfg));
         assert!(r.mode_switches <= 1, "{} relocks at the CRY-CNN-SW point", r.mode_switches);
         assert!(r.coresidency_s > 0.0, "tiles must co-reside");
+    }
+
+    /// Region-level layer boundaries: a tile's FRAM input fetch waits only
+    /// on the producer tiles covering its halo-dilated rows, never on the
+    /// whole previous layer (the pre-region barrier).
+    #[test]
+    fn region_deps_replace_cross_layer_barrier() {
+        use crate::soc::sched::Engine;
+        let cfg = ExecConfig::ladder().last().unwrap().cfg;
+        let g = frame_graph(cfg);
+        let is_fram_store = |id: usize| g.jobs[id].engines == [Engine::UdmaFram];
+        let (mut n_fetches, mut max_producers, mut min_producers) = (0usize, 0usize, usize::MAX);
+        for job in &g.jobs {
+            // an input fetch: a FRAM transfer gated on producer FRAM stores
+            if job.engines == [Engine::UdmaFram]
+                && !job.deps.is_empty()
+                && job.deps.iter().all(|&d| is_fram_store(d))
+            {
+                n_fetches += 1;
+                max_producers = max_producers.max(job.deps.len());
+                min_producers = min_producers.min(job.deps.len());
+            }
+        }
+        assert!(n_fetches > 10, "expected per-tile input fetches, found {n_fetches}");
+        assert!(
+            max_producers < 11,
+            "a fetch waits on {max_producers} producers — region matching regressed to a barrier"
+        );
+        assert!(min_producers <= 3, "even edge tiles wait on {min_producers} producers");
     }
 
     /// Tile-granular emission keeps the FRAM round trip off the critical

@@ -47,11 +47,14 @@
 //! and the best-rung makespan closes below 1.15× of it; see
 //! `rust/tests/scheduler.rs`).
 //!
-//! Streaming: [`soc::sched::JobGraph::repeat`] concatenates N frames of a
-//! use case, and the scheduler pipelines them through the shared engines —
+//! Streaming: [`soc::sched::StreamScheduler`] admits frame instances into
+//! a rolling window of K in-flight frames (O(window) live jobs however
+//! long the stream; bitwise identical to the materialized
+//! [`soc::sched::JobGraph::repeat`] path when the window covers the
+//! stream), and the scheduler pipelines them through the shared engines —
 //! frame *f+1* fills the I/O stalls of frame *f*. The `fulmine stream`
-//! subcommand and `bench_scheduler` report the resulting frames/s, pJ/op
-//! and engine utilization.
+//! subcommand and `bench_scheduler` report the resulting frames/s, pJ/op,
+//! engine utilization and peak resident job count.
 //!
 //! ## Public surface: workloads and the `SocSystem` façade
 //!

@@ -501,7 +501,8 @@ mod tests {
     #[test]
     fn ablations_produce_distinct_results() {
         let ab = surveillance_ablations();
-        assert_eq!(ab.len(), 4);
+        assert_eq!(ab.len(), 5);
+        assert!(ab.iter().any(|(l, _)| l == "hwce4 layer-gran"));
         // higher voltage: faster but less efficient
         let base = ab.iter().find(|(l, _)| l == "hwce8+hwcrypt").unwrap();
         let v12 = ab.iter().find(|(l, _)| l == "hwce4@1.2V").unwrap();

@@ -46,7 +46,29 @@
 //!   mode sequence in program order.
 //!
 //! SOC-domain engines (cluster DMA, uDMA channels) run in any mode — the
-//! uDMA works "even when the cluster is in sleep mode" (§II).
+//! uDMA works "even when the cluster is in sleep mode" (§II). The movers
+//! whose service time is *clock-derived* (cluster DMA, the ADC burst
+//! channel — bytes per AXI cycle; [`Engine::clock_scaled`]) follow the
+//! cluster point live at dispatch: hosted under a slower co-resident point
+//! they rescale by the frequency ratio exactly like cluster jobs do,
+//! instead of being pinned at their emission-mode clock. The flash/FRAM
+//! channels stay bound by the external device's bandwidth.
+//!
+//! ## Dispatch (indexed)
+//!
+//! The ready set is partitioned: non-cluster jobs wait in **per-engine
+//! ready queues** (ordered by job id; only the queues of *free* engines
+//! are consulted, and in the single-engine common case only their heads),
+//! and mode-locked cluster jobs in a separate ordered set that is scanned
+//! under the co-residency rules — with the pick pruned by the best
+//! I/O candidate's id. Dispatch cost therefore tracks the number of
+//! *startable* jobs (bounded by the engines and the in-flight window),
+//! not the total pending backlog: a 4096-frame stream keeps thousands of
+//! prefetchable uDMA transfers queued without the scheduler rescanning
+//! them on every event. The pick rule is unchanged — the lowest-id
+//! startable job wins — and [`Scheduler::run_scan`] keeps the original
+//! linear-scan dispatcher as a bitwise parity reference (asserted on
+//! random graphs and every use-case rung in `rust/tests/scheduler.rs`).
 //!
 //! ## Energy
 //!
@@ -63,19 +85,35 @@
 //! ## Streaming
 //!
 //! [`JobGraph::repeat`] concatenates N copies of a frame graph (dependency
-//! edges stay within each frame). Scheduling the combined graph pipelines
-//! successive frames through the engines: frame *f+1*'s I/O and
-//! accelerator phases fill the stalls of frame *f*, which is where the
-//! multi-frame throughput of `fulmine stream` comes from.
+//! edges stay within each frame) — the *materialized* path, kept for
+//! small-N parity tests. The production streaming path is the
+//! [`StreamScheduler`]: it admits frame instances of the template graph
+//! into a rolling window of at most K in-flight frames, retiring completed
+//! frames and recycling their dependency-tracking slots — O(window × jobs)
+//! live state instead of O(frames × jobs), with per-frame energy
+//! accumulated incrementally and the overlap statistics swept online. With
+//! K ≥ frames the windowed schedule reproduces the materialized one
+//! *bitwise* (same admission order, same dispatch decisions — a property
+//! test pins this); smaller windows bound memory at a possible makespan
+//! cost once the window is tighter than the pipeline depth. Either way
+//! frame *f+1*'s I/O and accelerator phases fill the stalls of frame *f*,
+//! which is where the multi-frame throughput of `fulmine stream` comes
+//! from.
 
 use crate::energy::{Category, EnergyLedger};
 use crate::soc::opmodes::{OperatingMode, OperatingPoint, MODE_SWITCH_S, V_NOM};
 use crate::soc::power::{Component, PowerModel, FLASH_STANDBY_MW, FRAM_STANDBY_MW};
 use std::cmp::Ordering;
-use std::collections::{BTreeSet, BinaryHeap};
+use std::collections::{BTreeSet, BinaryHeap, VecDeque};
 
 /// Cluster cores (OR10N complex).
 pub const N_CORES: usize = 4;
+
+/// Default in-flight frame window of the streaming path (see
+/// [`StreamScheduler`]): deep enough that adjacent-frame pipelining is
+/// never clipped for the §IV use cases, small enough that a 100 000-frame
+/// stream holds only a few thousand live jobs.
+pub const DEFAULT_STREAM_WINDOW: usize = 8;
 
 /// A serially-busy hardware resource of the SoC.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
@@ -148,6 +186,15 @@ impl Engine {
         )
     }
 
+    /// SOC-domain movers whose service time is derived from the cluster/AXI
+    /// clock (bytes per cycle): they follow the *hosting* cluster point at
+    /// dispatch instead of staying pinned at their emission-mode clock.
+    /// The flash/FRAM uDMA channels are external-device-bandwidth bound and
+    /// do not rescale.
+    pub fn clock_scaled(self) -> bool {
+        matches!(self, Engine::ClusterDma | Engine::UdmaAdc)
+    }
+
     pub fn name(self) -> &'static str {
         match self {
             Engine::Core(0) => "core0",
@@ -196,6 +243,13 @@ impl Job {
         self.engines.iter().any(|e| e.mode_locked())
     }
 
+    /// Whether this job's service time follows the cluster clock live at
+    /// dispatch even though it is not mode-locked (the clock-derived SOC
+    /// movers — see [`Engine::clock_scaled`]).
+    pub fn clock_scaled(&self) -> bool {
+        !self.mode_locked() && self.engines.iter().all(|e| e.clock_scaled())
+    }
+
     /// Service time when hosted at cluster mode `at` (its own time at its
     /// own mode; stretched by the frequency ratio under a slower
     /// compatible point).
@@ -217,9 +271,13 @@ pub struct JobGraph {
     /// charged over the whole run); the pacemaker-class seizure platform
     /// has none (§IV-C).
     pub ext_mem_present: bool,
-    /// Named segment markers `(label, first job id)` — see
-    /// [`JobGraph::mark_segment`]. Empty for single-tenant graphs.
-    pub segments: Vec<(String, JobId)>,
+    /// Interned segment label table, in first-marker order — markers
+    /// reference labels by index so streaming repetition copies no
+    /// strings (see [`JobGraph::mark_segment`]).
+    pub segment_labels: Vec<String>,
+    /// Named segment markers `(label index, first job id)`. Empty for
+    /// single-tenant graphs.
+    pub segments: Vec<(u32, JobId)>,
 }
 
 impl Default for JobGraph {
@@ -230,16 +288,29 @@ impl Default for JobGraph {
 
 impl JobGraph {
     pub fn new() -> Self {
-        JobGraph { jobs: Vec::new(), ext_mem_present: true, segments: Vec::new() }
+        JobGraph {
+            jobs: Vec::new(),
+            ext_mem_present: true,
+            segment_labels: Vec::new(),
+            segments: Vec::new(),
+        }
     }
 
     /// Open a named segment at the current end of the graph: jobs pushed
     /// from here until the next marker belong to `label`. Multi-tenant
     /// workloads use this to attribute active energy per tenant
     /// ([`JobGraph::segment_active_mj`]); repeating the same label
-    /// aggregates (each streamed frame re-marks its tenants).
+    /// aggregates (each streamed frame re-marks its tenants) and interns
+    /// it — the marker list holds indices, never cloned strings.
     pub fn mark_segment(&mut self, label: &str) {
-        self.segments.push((label.to_string(), self.jobs.len()));
+        let idx = match self.segment_labels.iter().position(|l| l == label) {
+            Some(i) => i,
+            None => {
+                self.segment_labels.push(label.to_string());
+                self.segment_labels.len() - 1
+            }
+        };
+        self.segments.push((idx as u32, self.jobs.len()));
     }
 
     /// Append a job; its dependencies must reference earlier jobs, its
@@ -281,12 +352,16 @@ impl JobGraph {
 
     /// Concatenate `frames` copies of this graph (streaming): dependency
     /// edges stay within each copy; pipelining across copies comes from the
-    /// shared engines at schedule time.
+    /// shared engines at schedule time. This materializes O(frames × jobs)
+    /// state — the bounded-memory path is [`StreamScheduler::run`] on the
+    /// single-frame template; `repeat` survives as its small-N parity
+    /// reference.
     pub fn repeat(&self, frames: usize) -> JobGraph {
         let n = self.jobs.len();
         let mut out = JobGraph {
             jobs: Vec::with_capacity(n * frames),
             ext_mem_present: self.ext_mem_present,
+            segment_labels: self.segment_labels.clone(),
             segments: Vec::with_capacity(self.segments.len() * frames),
         };
         for f in 0..frames {
@@ -298,8 +373,8 @@ impl JobGraph {
                 }
                 out.jobs.push(j);
             }
-            for (label, start) in &self.segments {
-                out.segments.push((label.clone(), start + off));
+            for &(label, start) in &self.segments {
+                out.segments.push((label, start + off));
             }
         }
         out
@@ -307,9 +382,9 @@ impl JobGraph {
 
     /// Active energy (mJ) of one job: its per-component charges integrated
     /// over its busy interval at its operating point — the same arithmetic
-    /// [`JobGraph::finish_ledger`] feeds the [`EnergyLedger`], without the
-    /// makespan-proportional leakage/standby terms. Cluster dynamic power
-    /// is frequency-linear, so this is also exactly the energy of a
+    /// [`JobGraph::charge_active_into`] feeds the [`EnergyLedger`], without
+    /// the makespan-proportional leakage/standby terms. Cluster dynamic
+    /// power is frequency-linear, so this is also exactly the energy of a
     /// co-resident (rescaled) execution of the job.
     fn job_active_mj(job: &Job) -> f64 {
         job.charges
@@ -323,38 +398,27 @@ impl JobGraph {
         self.jobs.iter().map(Self::job_active_mj).sum()
     }
 
-    /// Active energy per segment label, in first-appearance order; jobs
-    /// pushed before the first marker are unattributed. Labels repeated
-    /// across markers (e.g. one per streamed frame) aggregate into one row,
-    /// and a segment whose marker is followed by no jobs still reports a
-    /// zero row (its tenant must not vanish from attribution).
+    /// Active energy per segment label, in first-marker order; jobs pushed
+    /// before the first marker are unattributed. Labels repeated across
+    /// markers (e.g. one per streamed frame) aggregate into one row via
+    /// the interned label index — O(jobs + markers), no per-marker label
+    /// search — and a segment whose marker is followed by no jobs still
+    /// reports a zero row (its tenant must not vanish from attribution).
     pub fn segment_active_mj(&self) -> Vec<(String, f64)> {
-        let mut out: Vec<(String, f64)> = Vec::new();
-        let row_of = |out: &mut Vec<(String, f64)>, label: &str| -> usize {
-            match out.iter().position(|(l, _)| l == label) {
-                Some(i) => i,
-                None => {
-                    out.push((label.to_string(), 0.0));
-                    out.len() - 1
-                }
-            }
-        };
+        let mut rows = vec![0.0f64; self.segment_labels.len()];
         let mut next = 0usize; // next marker to cross
-        let mut current: Option<usize> = None; // index into `out`
+        let mut current: Option<usize> = None; // index into `rows`
         for (id, job) in self.jobs.iter().enumerate() {
             while next < self.segments.len() && self.segments[next].1 <= id {
-                current = Some(row_of(&mut out, self.segments[next].0.as_str()));
+                current = Some(self.segments[next].0 as usize);
                 next += 1;
             }
             if let Some(cur) = current {
-                out[cur].1 += Self::job_active_mj(job);
+                rows[cur] += Self::job_active_mj(job);
             }
         }
-        // trailing markers past the last job
-        for (label, _) in &self.segments[next..] {
-            row_of(&mut out, label);
-        }
-        out
+        // trailing markers past the last job already have their zero rows
+        self.segment_labels.iter().cloned().zip(rows).collect()
     }
 
     /// The supply voltage the graph runs at (jobs all share the builder's
@@ -363,16 +427,23 @@ impl JobGraph {
         self.jobs.first().map(|j| j.op.vdd).unwrap_or(V_NOM)
     }
 
-    /// Integrate every job's charges plus makespan-proportional leakage and
-    /// external-memory standby into a ledger whose elapsed time is
-    /// `makespan_s`.
-    fn finish_ledger(&self, makespan_s: f64) -> EnergyLedger {
-        let mut ledger = EnergyLedger::new();
+    /// Integrate every job's per-component charges at its emission
+    /// operating point into `ledger` — the schedule-independent active
+    /// energy. The streaming path calls this once per admitted frame, so
+    /// the accumulation order (frame-major, job order) is identical to
+    /// [`JobGraph::finish_ledger`] over a [`JobGraph::repeat`] graph and
+    /// the sums match bitwise.
+    fn charge_active_into(&self, ledger: &mut EnergyLedger) {
         for job in &self.jobs {
             for &(cat, comp, mult) in &job.charges {
                 ledger.charge(cat, comp, job.op, job.duration_s * mult);
             }
         }
+    }
+
+    /// The makespan-proportional terms: leakage and external-memory
+    /// standby over `makespan_s`, plus the elapsed-time advance.
+    fn charge_overheads_into(&self, ledger: &mut EnergyLedger, makespan_s: f64) {
         // Leakage is mode-independent (it scales only with VDD), so one
         // charge over the makespan equals the per-phase charges of the
         // analytic model.
@@ -383,6 +454,15 @@ impl JobGraph {
             ledger.charge_mj(Category::ExtMem, (FLASH_STANDBY_MW + FRAM_STANDBY_MW) * makespan_s);
         }
         ledger.advance(makespan_s);
+    }
+
+    /// Integrate every job's charges plus makespan-proportional leakage and
+    /// external-memory standby into a ledger whose elapsed time is
+    /// `makespan_s`.
+    fn finish_ledger(&self, makespan_s: f64) -> EnergyLedger {
+        let mut ledger = EnergyLedger::new();
+        self.charge_active_into(&mut ledger);
+        self.charge_overheads_into(&mut ledger, makespan_s);
         ledger
     }
 
@@ -439,15 +519,19 @@ impl JobGraph {
             n_jobs: self.jobs.len(),
             overlap_s: 0.0,
             coresidency_s: 0.0,
+            peak_resident_jobs: self.jobs.len(),
         }
     }
 
     /// A true serialization upper bound on any schedule of this graph:
     /// every job back-to-back at the slowest point it could be hosted at
-    /// (the all-capable CRY-CNN-SW clock for cluster jobs), plus one FLL
-    /// relock per cluster job. The greedy scheduler never idles all
-    /// engines outside a relock window, so [`Scheduler::run`] can never
-    /// exceed this — the property `rust/tests/scheduler.rs` checks on
+    /// (the all-capable CRY-CNN-SW clock for cluster jobs *and* for the
+    /// clock-scaled SOC movers, which may be hosted there too), plus one
+    /// FLL relock per cluster job. The greedy scheduler never idles all
+    /// engines outside a relock window — windowed admission included,
+    /// since retirement and admission happen eagerly at completion events
+    /// — so neither [`Scheduler::run`] nor [`StreamScheduler::run`] can
+    /// exceed this; the property `rust/tests/scheduler.rs` checks on
     /// random graphs.
     pub fn serialized_bound(&self) -> f64 {
         let mut total = 0.0f64;
@@ -455,6 +539,8 @@ impl JobGraph {
         for job in &self.jobs {
             if job.mode_locked() {
                 cluster_jobs += 1;
+                total += job.duration_at(OperatingMode::CryCnnSw).max(job.duration_s);
+            } else if job.clock_scaled() {
                 total += job.duration_at(OperatingMode::CryCnnSw).max(job.duration_s);
             } else {
                 total += job.duration_s;
@@ -484,6 +570,11 @@ pub struct SchedResult {
     /// once: CRY–CNN–SW co-residency made visible (0 for the analytic
     /// replay, which serializes the cluster by construction).
     pub coresidency_s: f64,
+    /// Peak number of jobs resident in the scheduler at once (admitted
+    /// into the window, not yet completed). The materialized paths hold
+    /// the whole graph (`= n_jobs`); [`StreamScheduler::run`] is bounded
+    /// by `window × frame jobs` independent of the stream length.
+    pub peak_resident_jobs: usize,
 }
 
 impl SchedResult {
@@ -524,7 +615,8 @@ impl PartialOrd for Ev {
     }
 }
 
-/// Busy interval of one dispatched job, for the overlap statistics.
+/// Busy interval of one dispatched job, for the overlap statistics of the
+/// legacy scan dispatcher ([`Scheduler::run_scan`]).
 struct Span {
     start: f64,
     end: f64,
@@ -563,14 +655,435 @@ fn overlap_stats(spans: &[Span]) -> (f64, f64) {
     (overlap, cores)
 }
 
+/// One boundary of a busy interval in the online overlap sweep: min-heap
+/// by (time, insertion sequence) so ties integrate in the same order the
+/// batch sweep's stable sort produced.
+struct SweepEv {
+    t: f64,
+    seq: u64,
+    d_all: i32,
+    d_cluster: i32,
+}
+
+impl PartialEq for SweepEv {
+    fn eq(&self, other: &Self) -> bool {
+        self.t == other.t && self.seq == other.seq
+    }
+}
+
+impl Eq for SweepEv {}
+
+impl Ord for SweepEv {
+    fn cmp(&self, other: &Self) -> Ordering {
+        other.t.total_cmp(&self.t).then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+
+impl PartialOrd for SweepEv {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Online version of [`overlap_stats`]: span boundaries are pushed at
+/// dispatch time and integrated as simulated time advances past them, so
+/// the streaming path never materializes the O(frames × jobs) span list.
+/// All pending boundaries lie within the in-flight window (+ one relock),
+/// keeping the heap O(window).
+struct OverlapSweep {
+    events: BinaryHeap<SweepEv>,
+    seq: u64,
+    overlap: f64,
+    cluster: f64,
+    n_all: i32,
+    n_cluster: i32,
+    last_t: f64,
+}
+
+impl OverlapSweep {
+    fn new() -> Self {
+        OverlapSweep {
+            events: BinaryHeap::new(),
+            seq: 0,
+            overlap: 0.0,
+            cluster: 0.0,
+            n_all: 0,
+            n_cluster: 0,
+            last_t: 0.0,
+        }
+    }
+
+    fn push_span(&mut self, start: f64, end: f64, cluster: bool) {
+        if end > start {
+            let c = cluster as i32;
+            self.events.push(SweepEv { t: start, seq: self.seq, d_all: 1, d_cluster: c });
+            self.seq += 1;
+            self.events.push(SweepEv { t: end, seq: self.seq, d_all: -1, d_cluster: -c });
+            self.seq += 1;
+        }
+    }
+
+    fn step(&mut self, ev: SweepEv) {
+        let dt = ev.t - self.last_t;
+        if dt > 0.0 {
+            if self.n_all >= 2 {
+                self.overlap += dt;
+            }
+            if self.n_cluster >= 2 {
+                self.cluster += dt;
+            }
+        }
+        self.n_all += ev.d_all;
+        self.n_cluster += ev.d_cluster;
+        self.last_t = ev.t;
+    }
+
+    /// Integrate every boundary at or before `horizon`. Safe because no
+    /// later dispatch can introduce a boundary earlier than the current
+    /// simulated time.
+    fn drain_until(&mut self, horizon: f64) {
+        while self.events.peek().is_some_and(|e| e.t <= horizon) {
+            let ev = self.events.pop().expect("peeked");
+            self.step(ev);
+        }
+    }
+
+    fn finish(mut self) -> (f64, f64) {
+        while let Some(ev) = self.events.pop() {
+            self.step(ev);
+        }
+        (self.overlap, self.cluster)
+    }
+}
+
+/// Per-frame dependency-tracking slot of the windowed core; retired slots
+/// are recycled so a long stream allocates O(window) of them total.
+struct FrameSlot {
+    indeg: Vec<u32>,
+    remaining: usize,
+}
+
+/// The shared event-driven execution core: schedules `frames` instances of
+/// a template graph admitted through a rolling window of at most `window`
+/// in-flight frames, with indexed dispatch. [`Scheduler::run`] is the
+/// `frames == 1` case; [`StreamScheduler::run`] streams with a bounded
+/// window. Global job ids are `frame × n + local`, so the admission and
+/// dispatch order with `window ≥ frames` is identical to running the
+/// materialized [`JobGraph::repeat`] graph.
+struct ExecCore<'g> {
+    g: &'g JobGraph,
+    n: usize,
+    frames: usize,
+    window: usize,
+    children: Vec<Vec<JobId>>,
+    indeg0: Vec<u32>,
+    roots: Vec<JobId>,
+    slots: VecDeque<FrameSlot>,
+    spare: Vec<FrameSlot>,
+    first_frame: usize,
+    admitted: usize,
+    /// Ready non-cluster jobs, queued under their (single, in practice)
+    /// engine — only free engines' queues are consulted at dispatch.
+    io_ready: Vec<BTreeSet<JobId>>,
+    /// Ready mode-locked cluster jobs.
+    ml_ready: BTreeSet<JobId>,
+    engine_busy: [bool; N_ENGINES],
+    busy: [f64; N_ENGINES],
+    current_mode: Option<OperatingMode>,
+    mode_ready_at: f64,
+    mode_locked_running: usize,
+    switches: u64,
+    heap: BinaryHeap<Ev>,
+    sweep: OverlapSweep,
+    ledger: EnergyLedger,
+    live: usize,
+    peak_live: usize,
+    t: f64,
+    makespan: f64,
+    done: usize,
+}
+
+impl<'g> ExecCore<'g> {
+    fn new(g: &'g JobGraph, frames: usize, window: usize) -> Self {
+        let n = g.jobs.len();
+        let mut indeg0: Vec<u32> = Vec::with_capacity(n);
+        let mut children: Vec<Vec<JobId>> = vec![Vec::new(); n];
+        let mut roots: Vec<JobId> = Vec::new();
+        for (id, job) in g.jobs.iter().enumerate() {
+            indeg0.push(job.deps.len() as u32);
+            if job.deps.is_empty() {
+                roots.push(id);
+            }
+            for &d in &job.deps {
+                children[d].push(id);
+            }
+        }
+        ExecCore {
+            g,
+            n,
+            frames,
+            window: window.max(1),
+            children,
+            indeg0,
+            roots,
+            slots: VecDeque::new(),
+            spare: Vec::new(),
+            first_frame: 0,
+            admitted: 0,
+            io_ready: vec![BTreeSet::new(); N_ENGINES],
+            ml_ready: BTreeSet::new(),
+            engine_busy: [false; N_ENGINES],
+            busy: [0.0; N_ENGINES],
+            current_mode: None,
+            mode_ready_at: 0.0,
+            mode_locked_running: 0,
+            switches: 0,
+            heap: BinaryHeap::new(),
+            sweep: OverlapSweep::new(),
+            ledger: EnergyLedger::new(),
+            live: 0,
+            peak_live: 0,
+            t: 0.0,
+            makespan: 0.0,
+            done: 0,
+        }
+    }
+
+    /// Retire completed frames off the front of the window and admit new
+    /// ones while there is both headroom and frames left. Admission
+    /// charges the frame's active energy (frame-major order — the same
+    /// accumulation sequence `finish_ledger` uses on a materialized
+    /// repeat) and enqueues its dependency-free jobs at the current time.
+    fn fill(&mut self) {
+        loop {
+            while self.slots.front().is_some_and(|s| s.remaining == 0) {
+                let slot = self.slots.pop_front().expect("checked front");
+                self.spare.push(slot);
+                self.first_frame += 1;
+            }
+            if self.admitted < self.frames && self.slots.len() < self.window {
+                self.admit();
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn admit(&mut self) {
+        let base = self.admitted * self.n;
+        let mut slot = self
+            .spare
+            .pop()
+            .unwrap_or_else(|| FrameSlot { indeg: Vec::new(), remaining: 0 });
+        slot.indeg.clear();
+        slot.indeg.extend_from_slice(&self.indeg0);
+        slot.remaining = self.n;
+        self.slots.push_back(slot);
+        self.admitted += 1;
+        self.live += self.n;
+        self.peak_live = self.peak_live.max(self.live);
+        self.g.charge_active_into(&mut self.ledger);
+        for &r in &self.roots {
+            let job = &self.g.jobs[r];
+            if job.mode_locked() {
+                self.ml_ready.insert(base + r);
+            } else {
+                self.io_ready[job.engines[0].index()].insert(base + r);
+            }
+        }
+    }
+
+    /// The lowest-id startable job under the same predicates the linear
+    /// scan used: non-cluster jobs via the free engines' queue heads,
+    /// cluster jobs via the ordered mode-locked set (co-residency first,
+    /// then a mode-switch grant for the overall-lowest cluster job once
+    /// the cluster has drained), each scan pruned by the other partition's
+    /// best candidate.
+    fn find_pick(&self) -> Option<(JobId, bool)> {
+        let mut best_io: Option<JobId> = None;
+        for e in Engine::ALL {
+            if e.mode_locked() {
+                continue;
+            }
+            if self.engine_busy[e.index()] {
+                continue; // every job queued here needs this engine
+            }
+            for &id in &self.io_ready[e.index()] {
+                if best_io.is_some_and(|b| id >= b) {
+                    break;
+                }
+                let job = &self.g.jobs[id % self.n];
+                if job.engines.iter().all(|&x| !self.engine_busy[x.index()]) {
+                    best_io = Some(id);
+                    break;
+                }
+            }
+        }
+        let mut best_ml: Option<(JobId, bool)> = None;
+        let lowest_ml = self.ml_ready.first().copied();
+        for &id in &self.ml_ready {
+            if best_io.is_some_and(|b| id >= b) {
+                break;
+            }
+            let job = &self.g.jobs[id % self.n];
+            if job.engines.iter().any(|&x| self.engine_busy[x.index()]) {
+                continue;
+            }
+            if let Some(c) = self.current_mode {
+                if Scheduler::co_resident(c, job) {
+                    best_ml = Some((id, false));
+                    break;
+                }
+            }
+            // A mode switch is granted only to the lowest-id ready
+            // cluster job, and only once the cluster engines have drained.
+            if self.mode_locked_running == 0 && Some(id) == lowest_ml {
+                best_ml = Some((id, true));
+                break;
+            }
+        }
+        match (best_io, best_ml) {
+            (Some(a), Some((b, sw))) => {
+                if a < b {
+                    Some((a, false))
+                } else {
+                    Some((b, sw))
+                }
+            }
+            (Some(a), None) => Some((a, false)),
+            (None, b) => b,
+        }
+    }
+
+    fn dispatch(&mut self, id: JobId, switch: bool) {
+        let job = &self.g.jobs[id % self.n];
+        if job.mode_locked() {
+            self.ml_ready.remove(&id);
+        } else {
+            self.io_ready[job.engines[0].index()].remove(&id);
+        }
+        let mut start = self.t;
+        let mut dur = job.duration_s;
+        if job.mode_locked() {
+            if switch {
+                // Relock only on a genuine frequency change (the first
+                // mode entry is free).
+                if self.current_mode.is_some() && self.current_mode != Some(job.op.mode) {
+                    self.switches += 1;
+                    self.mode_ready_at = self.t + MODE_SWITCH_S;
+                }
+                self.current_mode = Some(job.op.mode);
+            } else {
+                // Co-resident dispatch: hosted at the cluster's current
+                // point, service time rescaled.
+                let c = self.current_mode.expect("co-resident dispatch without a mode");
+                dur = job.duration_at(c);
+            }
+            // The cluster sleeps while the FLL relocks.
+            start = start.max(self.mode_ready_at);
+            self.mode_locked_running += 1;
+        } else if job.clock_scaled() {
+            // Clock-derived SOC movers follow the live cluster point
+            // (emission clock only while no cluster point is set).
+            if let Some(c) = self.current_mode {
+                dur = job.duration_at(c);
+            }
+        }
+        for &e in &job.engines {
+            self.engine_busy[e.index()] = true;
+            self.busy[e.index()] += dur;
+        }
+        self.sweep.push_span(start, start + dur, job.mode_locked());
+        self.heap.push(Ev { t: start + dur, job: id });
+    }
+
+    fn complete(&mut self, gid: JobId) {
+        let local = gid % self.n;
+        let frame = gid / self.n;
+        let job = &self.g.jobs[local];
+        for &e in &job.engines {
+            self.engine_busy[e.index()] = false;
+        }
+        if job.mode_locked() {
+            self.mode_locked_running -= 1;
+        }
+        self.done += 1;
+        self.live -= 1;
+        let si = frame - self.first_frame;
+        self.slots[si].remaining -= 1;
+        for &c in &self.children[local] {
+            let slot = &mut self.slots[si];
+            slot.indeg[c] -= 1;
+            if slot.indeg[c] == 0 {
+                let cid = frame * self.n + c;
+                let cjob = &self.g.jobs[c];
+                if cjob.mode_locked() {
+                    self.ml_ready.insert(cid);
+                } else {
+                    self.io_ready[cjob.engines[0].index()].insert(cid);
+                }
+            }
+        }
+    }
+
+    fn run(mut self) -> SchedResult {
+        self.fill();
+        loop {
+            // Dispatch everything startable at time t, lowest job id first.
+            while let Some((id, switch)) = self.find_pick() {
+                self.dispatch(id, switch);
+            }
+            // Advance simulated time to the next completion.
+            let Some(ev) = self.heap.pop() else { break };
+            self.t = ev.t;
+            self.makespan = self.makespan.max(ev.t);
+            self.sweep.drain_until(ev.t);
+            self.complete(ev.job);
+            self.fill();
+        }
+        assert_eq!(
+            self.done,
+            self.n * self.frames,
+            "scheduler stalled: {} of {} jobs completed",
+            self.done,
+            self.n * self.frames
+        );
+        let (overlap_s, coresidency_s) = self.sweep.finish();
+        let mut ledger = std::mem::take(&mut self.ledger);
+        self.g.charge_overheads_into(&mut ledger, self.makespan);
+        SchedResult {
+            ledger,
+            makespan_s: self.makespan,
+            mode_switches: self.switches,
+            busy_s: self.busy,
+            n_jobs: self.n * self.frames,
+            overlap_s,
+            coresidency_s,
+            peak_resident_jobs: self.peak_live,
+        }
+    }
+}
+
 /// The event-driven scheduler. Stateless: all state lives on the run.
 pub struct Scheduler;
 
 impl Scheduler {
     /// Schedule `graph` to completion and return makespan, energy and
     /// per-engine statistics. Deterministic: dispatch prefers the
-    /// lowest-id ready job, completion ties resolve by job id.
+    /// lowest-id ready job, completion ties resolve by job id. Dispatch is
+    /// indexed (per-engine ready queues + a mode-locked partition), with
+    /// [`Scheduler::run_scan`] as the linear-scan parity reference.
     pub fn run(graph: &JobGraph) -> SchedResult {
+        ExecCore::new(graph, 1, 1).run()
+    }
+
+    /// The original linear-scan dispatcher: rescans the whole ready set on
+    /// every dispatch — O(pending) per event, O(n²) over a long stream.
+    /// Kept as the bitwise correctness reference for [`Scheduler::run`]
+    /// (property-tested on random graphs and every use-case rung) and as
+    /// the materialized-path baseline `bench_scheduler` measures the
+    /// indexed and windowed paths against.
+    pub fn run_scan(graph: &JobGraph) -> SchedResult {
         let n = graph.jobs.len();
         let mut indeg: Vec<usize> = Vec::with_capacity(n);
         let mut children: Vec<Vec<JobId>> = vec![Vec::new(); n];
@@ -646,6 +1159,10 @@ impl Scheduler {
                     // The cluster sleeps while the FLL relocks.
                     start = start.max(mode_ready_at);
                     mode_locked_running += 1;
+                } else if job.clock_scaled() {
+                    if let Some(c) = current_mode {
+                        dur = job.duration_at(c);
+                    }
                 }
                 for &e in &job.engines {
                     engine_busy[e.index()] = true;
@@ -685,6 +1202,7 @@ impl Scheduler {
             n_jobs: n,
             overlap_s,
             coresidency_s,
+            peak_resident_jobs: n,
         }
     }
 
@@ -700,6 +1218,22 @@ impl Scheduler {
             return false;
         }
         job.duration_at(c) - job.duration_s <= MODE_SWITCH_S
+    }
+}
+
+/// Bounded-window streaming: schedules `frames` instances of a frame
+/// template through the shared execution core, admitting at most `window`
+/// frames at a time and recycling the dependency state of retired frames.
+/// Memory and dispatch cost are O(window × frame jobs) regardless of the
+/// stream length; with `window ≥ frames` the result is bitwise identical
+/// to `Scheduler::run(&frame.repeat(frames))`.
+pub struct StreamScheduler;
+
+impl StreamScheduler {
+    pub fn run(frame: &JobGraph, frames: usize, window: usize) -> SchedResult {
+        assert!(frames >= 1, "streaming needs at least one frame");
+        assert!(window >= 1, "streaming needs at least one in-flight frame of window");
+        ExecCore::new(frame, frames, window).run()
     }
 }
 
@@ -730,6 +1264,10 @@ mod tests {
         assert_eq!(N_ENGINES, 11);
         assert!(Engine::Core(3).mode_locked() && Engine::Hwce.mode_locked());
         assert!(!Engine::UdmaAdc.mode_locked() && !Engine::ClusterDma.mode_locked());
+        // clock-scaled movers: AXI-clock-derived service only
+        assert!(Engine::ClusterDma.clock_scaled() && Engine::UdmaAdc.clock_scaled());
+        assert!(!Engine::UdmaFlash.clock_scaled() && !Engine::UdmaFram.clock_scaled());
+        assert!(!Engine::Hwce.clock_scaled());
     }
 
     #[test]
@@ -743,6 +1281,7 @@ mod tests {
         assert_eq!(r.mode_switches, 0);
         assert!((r.busy_s[Engine::Core(0).index()] - 6.0).abs() < 1e-12);
         assert_eq!(r.overlap_s, 0.0);
+        assert_eq!(r.peak_resident_jobs, 3);
     }
 
     #[test]
@@ -862,6 +1401,47 @@ mod tests {
         assert!((r.makespan_s - 1.0).abs() < 1e-12);
     }
 
+    /// Satellite fix (ROADMAP): clock-derived SOC movers rescale with the
+    /// hosting cluster point at dispatch instead of staying pinned at
+    /// their emission-mode clock; the device-bandwidth-bound flash/FRAM
+    /// channels do not.
+    #[test]
+    fn dma_service_rescales_with_hosting_point() {
+        // A long CRY cluster job establishes the hosting point; the
+        // cluster DMA and ADC burst were emitted at the KEC clock and must
+        // stretch by f_KEC / f_CRY, the FRAM transfer must not.
+        let d = 0.01;
+        let mut g = JobGraph::new();
+        g.push(job(Engine::HwcryptAes, OperatingMode::CryCnnSw, 1.0, &[]));
+        g.push(job(Engine::ClusterDma, OperatingMode::KecCnnSw, d, &[]));
+        g.push(job(Engine::UdmaAdc, OperatingMode::KecCnnSw, d, &[]));
+        g.push(job(Engine::UdmaFram, OperatingMode::KecCnnSw, d, &[]));
+        let r = Scheduler::run(&g);
+        let hosted = d * OperatingMode::KecCnnSw.fmax_nominal_mhz()
+            / OperatingMode::CryCnnSw.fmax_nominal_mhz();
+        assert!(
+            (r.busy_s[Engine::ClusterDma.index()] - hosted).abs() < 1e-15,
+            "DMA busy {} vs hosted {hosted}",
+            r.busy_s[Engine::ClusterDma.index()]
+        );
+        assert!((r.busy_s[Engine::UdmaAdc.index()] - hosted).abs() < 1e-15);
+        assert!(
+            (r.busy_s[Engine::UdmaFram.index()] - d).abs() < 1e-15,
+            "FRAM is device-bandwidth bound, not clock-scaled"
+        );
+        // same-mode hosting is a no-op: emitted at CRY, hosted at CRY
+        let mut g2 = JobGraph::new();
+        g2.push(job(Engine::HwcryptAes, OperatingMode::CryCnnSw, 1.0, &[]));
+        g2.push(job(Engine::ClusterDma, OperatingMode::CryCnnSw, d, &[]));
+        let r2 = Scheduler::run(&g2);
+        assert_eq!(r2.busy_s[Engine::ClusterDma.index()].to_bits(), d.to_bits());
+        // with no cluster point set, the emission clock stands
+        let mut g3 = JobGraph::new();
+        g3.push(job(Engine::ClusterDma, OperatingMode::KecCnnSw, d, &[]));
+        let r3 = Scheduler::run(&g3);
+        assert_eq!(r3.busy_s[Engine::ClusterDma.index()].to_bits(), d.to_bits());
+    }
+
     #[test]
     fn analytic_matches_run_on_serial_cluster_graph() {
         let mut g = JobGraph::new();
@@ -925,6 +1505,101 @@ mod tests {
         }
     }
 
+    /// The indexed dispatcher must reproduce the legacy linear scan
+    /// bitwise on graphs exercising every dispatch rule: per-engine
+    /// queues, co-residency, switch grants and clock-scaled movers.
+    #[test]
+    fn indexed_dispatch_matches_scan_reference() {
+        let mut g = JobGraph::new();
+        let a = g.push(job(Engine::Hwce, OperatingMode::KecCnnSw, 0.4, &[]));
+        g.push(job(Engine::HwcryptAes, OperatingMode::CryCnnSw, 0.5, &[]));
+        g.push(job(Engine::Hwce, OperatingMode::KecCnnSw, 1e-6, &[]));
+        let s = g.push(multi(
+            vec![Engine::Core(0), Engine::Core(1)],
+            OperatingMode::Sw,
+            0.3,
+            &[a],
+        ));
+        g.push(job(Engine::ClusterDma, OperatingMode::KecCnnSw, 0.05, &[]));
+        g.push(job(Engine::UdmaAdc, OperatingMode::Sw, 0.02, &[s]));
+        g.push(job(Engine::UdmaFram, OperatingMode::Sw, 0.2, &[]));
+        g.push(job(Engine::Core(2), OperatingMode::Sw, 1e-6, &[]));
+        for graph in [g.clone(), g.repeat(3)] {
+            let fast = Scheduler::run(&graph);
+            let scan = Scheduler::run_scan(&graph);
+            assert_eq!(fast.makespan_s.to_bits(), scan.makespan_s.to_bits());
+            assert_eq!(fast.mode_switches, scan.mode_switches);
+            assert_eq!(fast.ledger.total_mj().to_bits(), scan.ledger.total_mj().to_bits());
+            for e in Engine::ALL {
+                assert_eq!(
+                    fast.busy_s[e.index()].to_bits(),
+                    scan.busy_s[e.index()].to_bits(),
+                    "{}",
+                    e.name()
+                );
+            }
+            assert!((fast.overlap_s - scan.overlap_s).abs() < 1e-12);
+            assert!((fast.coresidency_s - scan.coresidency_s).abs() < 1e-12);
+        }
+    }
+
+    /// Tentpole contract: a window covering the whole stream reproduces
+    /// the materialized repeat bitwise; tighter windows still complete,
+    /// stay within the serialization bound, and hold only O(window) jobs.
+    #[test]
+    fn windowed_stream_matches_materialized_when_window_covers() {
+        let mut g = JobGraph::new();
+        let c = g.push(job(Engine::Hwce, OperatingMode::KecCnnSw, 0.3, &[]));
+        let x = g.push(job(Engine::HwcryptAes, OperatingMode::CryCnnSw, 0.1, &[c]));
+        let d = g.push(job(Engine::ClusterDma, OperatingMode::CryCnnSw, 0.05, &[x]));
+        g.push(job(Engine::UdmaFram, OperatingMode::Sw, 0.2, &[d]));
+        let frames = 5usize;
+        let mat = Scheduler::run(&g.repeat(frames));
+        for window in [frames, frames + 3, 64] {
+            let win = StreamScheduler::run(&g, frames, window);
+            assert_eq!(win.makespan_s.to_bits(), mat.makespan_s.to_bits(), "window {window}");
+            assert_eq!(win.mode_switches, mat.mode_switches);
+            assert_eq!(win.ledger.total_mj().to_bits(), mat.ledger.total_mj().to_bits());
+            for cat in Category::all() {
+                assert_eq!(
+                    win.ledger.energy_mj(cat).to_bits(),
+                    mat.ledger.energy_mj(cat).to_bits(),
+                    "{cat:?}"
+                );
+            }
+            for e in Engine::ALL {
+                assert_eq!(win.busy_s[e.index()].to_bits(), mat.busy_s[e.index()].to_bits());
+            }
+            assert!((win.overlap_s - mat.overlap_s).abs() < 1e-12);
+            assert_eq!(win.peak_resident_jobs, g.len() * frames);
+        }
+        for window in [1usize, 2] {
+            let win = StreamScheduler::run(&g, frames, window);
+            assert_eq!(win.n_jobs, g.len() * frames);
+            assert!(win.makespan_s <= frames as f64 * g.serialized_bound() + 1e-9);
+            assert!(win.peak_resident_jobs <= window * g.len(), "window {window}");
+            // a bounded window can only delay admissions, never break the
+            // per-frame pipeline: it is no faster than the full window
+            assert!(win.makespan_s >= mat.makespan_s - 1e-12);
+        }
+    }
+
+    /// O(window) residency: the peak live-job count of the windowed path
+    /// depends on the window, not the stream length.
+    #[test]
+    fn windowed_stream_peak_residency_is_frame_count_independent() {
+        let mut g = JobGraph::new();
+        let c = g.push(job(Engine::Core(0), OperatingMode::Sw, 0.1, &[]));
+        g.push(job(Engine::UdmaFram, OperatingMode::Sw, 0.05, &[c]));
+        let w = 3usize;
+        let a = StreamScheduler::run(&g, 8, w);
+        let b = StreamScheduler::run(&g, 64, w);
+        assert_eq!(a.peak_resident_jobs, b.peak_resident_jobs);
+        assert!(a.peak_resident_jobs <= w * g.len());
+        // while the materialized path scales with the stream length
+        assert_eq!(Scheduler::run(&g.repeat(64)).peak_resident_jobs, 64 * g.len());
+    }
+
     #[test]
     fn busy_never_exceeds_makespan() {
         let mut g = JobGraph::new();
@@ -951,6 +1626,7 @@ mod tests {
         g.push(job(Engine::Core(0), OperatingMode::Sw, 0.4, &[]));
         g.push(job(Engine::Hwce, OperatingMode::KecCnnSw, 0.3, &[]));
         g.push(job(Engine::UdmaFram, OperatingMode::Sw, 0.2, &[]));
+        g.push(job(Engine::ClusterDma, OperatingMode::Sw, 0.1, &[]));
         let r = Scheduler::run(&g);
         assert!(r.makespan_s <= g.serialized_bound() + 1e-9);
     }
@@ -979,6 +1655,38 @@ mod tests {
         assert!((seg4[0].1 - 4.0 * seg[0].1).abs() < 1e-12);
     }
 
+    /// Regression for the quadratic per-marker label scan: labels are
+    /// interned once, markers carry indices, and heavy repetition (many
+    /// streamed frames × few tenants) neither clones strings per frame
+    /// nor rescans rows per marker.
+    #[test]
+    fn segment_labels_interned_across_heavy_repetition() {
+        let mut g = JobGraph::new();
+        for i in 0..30 {
+            g.mark_segment(if i % 3 == 0 { "alpha" } else if i % 3 == 1 { "beta" } else { "gamma" });
+            g.push(job(Engine::Core(0), OperatingMode::Sw, 0.001 * (i + 1) as f64, &[]));
+        }
+        assert_eq!(g.segment_labels.len(), 3, "three distinct tenants");
+        assert_eq!(g.segments.len(), 30);
+        let base = g.segment_active_mj();
+        assert_eq!(base.len(), 3);
+        let frames = 500usize;
+        let big = g.repeat(frames);
+        assert_eq!(big.segment_labels.len(), 3, "repeat must not duplicate labels");
+        assert_eq!(big.segments.len(), 30 * frames);
+        let seg = big.segment_active_mj();
+        assert_eq!(seg.len(), 3);
+        for ((l0, v0), (l1, v1)) in base.iter().zip(&seg) {
+            assert_eq!(l0, l1);
+            assert!(
+                (v1 - frames as f64 * v0).abs() < 1e-9 * (1.0 + v1.abs()),
+                "{l0}: {v1} vs {frames}x{v0}"
+            );
+        }
+        let total: f64 = seg.iter().map(|(_, mj)| mj).sum();
+        assert!((total - big.active_mj()).abs() < 1e-9 * (1.0 + total));
+    }
+
     #[test]
     fn empty_graph_is_trivial() {
         let g = JobGraph::new();
@@ -1001,6 +1709,14 @@ mod tests {
     fn engineless_job_rejected() {
         let mut g = JobGraph::new();
         g.push(multi(vec![], OperatingMode::Sw, 1.0, &[]));
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one in-flight frame")]
+    fn zero_window_stream_rejected() {
+        let mut g = JobGraph::new();
+        g.push(job(Engine::Core(0), OperatingMode::Sw, 1.0, &[]));
+        StreamScheduler::run(&g, 4, 0);
     }
 
     #[test]

@@ -20,7 +20,7 @@
 //! system is another implementor of the same spec-in/report-out surface.
 
 use crate::coordinator::{
-    stream_graph, ExecConfig, ModeOverrides, Rung, StreamResult, Tiling, UseCaseResult,
+    stream_graph_windowed, ExecConfig, ModeOverrides, Rung, StreamResult, Tiling, UseCaseResult,
 };
 use crate::energy::Category;
 use crate::hwce::golden::WeightPrec;
@@ -66,6 +66,10 @@ pub struct RunSpec {
     pub rung: RungSel,
     /// Applied on top of the selected rung's configuration.
     pub overrides: ModeOverrides,
+    /// In-flight frame window of the streaming scheduler
+    /// ([`crate::soc::sched::DEFAULT_STREAM_WINDOW`] when `None`). Live
+    /// scheduler state is O(window × frame jobs) whatever `frames` is.
+    pub window: Option<usize>,
 }
 
 impl RunSpec {
@@ -75,6 +79,7 @@ impl RunSpec {
             frames: 1,
             rung: RungSel::Best,
             overrides: ModeOverrides::default(),
+            window: None,
         }
     }
 
@@ -90,6 +95,11 @@ impl RunSpec {
 
     pub fn overrides(mut self, overrides: ModeOverrides) -> Self {
         self.overrides = overrides;
+        self
+    }
+
+    pub fn window(mut self, window: usize) -> Self {
+        self.window = Some(window);
         self
     }
 }
@@ -204,6 +214,12 @@ impl RunReport {
             r.overlap_s, r.coresidency_s
         )
         .unwrap();
+        writeln!(
+            s,
+            "window {} in-flight frames | peak resident jobs {} (of {} scheduled)",
+            r.window, r.peak_resident_jobs, r.total_jobs
+        )
+        .unwrap();
         writeln!(s, "{}", r.ledger.report(&format!("{} x{frames}", self.workload))).unwrap();
         s
     }
@@ -235,6 +251,9 @@ impl RunReport {
             ("mode_switches", Json::num(r.mode_switches as f64)),
             ("overlap_s", Json::num(r.overlap_s)),
             ("coresidency_s", Json::num(r.coresidency_s)),
+            ("window", Json::num(r.window as f64)),
+            ("peak_resident_jobs", Json::num(r.peak_resident_jobs as f64)),
+            ("total_jobs", Json::num(r.total_jobs as f64)),
             ("engines", Json::Arr(engines)),
             ("energy_breakdown_mj", breakdown_json(&r.ledger)),
             (
@@ -430,8 +449,12 @@ impl SocSystem {
     /// multi-tenant workloads.
     pub fn run(&self, spec: &RunSpec) -> Result<RunReport> {
         let (w, rung) = self.resolve(spec)?;
+        if spec.window == Some(0) {
+            bail!("--window must be at least 1 (zero in-flight frames schedule nothing)");
+        }
         let g = frame_graph(w, rung.cfg)?;
-        let result = stream_graph(w.name(), &g, spec.frames, w.eq_ops());
+        let window = spec.window.unwrap_or(crate::soc::sched::DEFAULT_STREAM_WINDOW);
+        let result = stream_graph_windowed(w.name(), &g, spec.frames, window, w.eq_ops());
         let frames = spec.frames as f64;
 
         // Per-tenant attribution. Rows follow the workload's *declared*
@@ -586,5 +609,44 @@ mod tests {
         assert_eq!(r.tenants[0].name, "seizure");
         assert!((r.tenants[0].energy_mj - r.result.energy_mj).abs() < 1e-12);
         assert!(r.tenants[0].active_mj <= r.result.energy_mj + 1e-12);
+    }
+
+    #[test]
+    fn zero_window_rejected() {
+        let sys = SocSystem::new();
+        let e = sys.run(&RunSpec::new("seizure").window(0)).unwrap_err().to_string();
+        assert!(e.contains("--window must be at least 1"), "{e}");
+    }
+
+    /// Satellite: per-tenant attribution is window-invariant — the active
+    /// rows are identical for any window, and the attributed total always
+    /// re-sums to the schedule's energy even though tighter windows may
+    /// change the makespan (and with it the shared idle overhead).
+    #[test]
+    fn tenant_attribution_sums_are_window_invariant() {
+        let sys = SocSystem::new();
+        let frames = 6usize;
+        let mut reference: Option<Vec<(String, f64)>> = None;
+        for window in [1usize, 2, frames, 32] {
+            let r = sys.run(&RunSpec::new("mixed").frames(frames).window(window)).unwrap();
+            assert_eq!(r.result.window, window);
+            let attributed: f64 = r.tenants.iter().map(|t| t.energy_mj).sum();
+            assert!(
+                (attributed - r.result.energy_mj).abs() < 1e-6 * r.result.energy_mj,
+                "window {window}: attributed {attributed} vs {}",
+                r.result.energy_mj
+            );
+            let active: Vec<(String, f64)> =
+                r.tenants.iter().map(|t| (t.name.clone(), t.active_mj)).collect();
+            match &reference {
+                None => reference = Some(active),
+                Some(base) => {
+                    for ((n0, a0), (n1, a1)) in base.iter().zip(&active) {
+                        assert_eq!(n0, n1);
+                        assert_eq!(a0.to_bits(), a1.to_bits(), "{n0} active energy vs window");
+                    }
+                }
+            }
+        }
     }
 }

@@ -322,6 +322,11 @@ mod tests {
         .sum();
         assert_eq!(g.len(), expect, "mixed frame = one frame of each tenant");
         assert_eq!(g.segments.len(), 3);
+        assert_eq!(g.segment_labels.len(), 3, "tenant labels intern once");
+        // streaming repeats markers but never duplicates the label table
+        let g16 = g.repeat(16);
+        assert_eq!(g16.segments.len(), 48);
+        assert_eq!(g16.segment_labels.len(), 3);
         assert!(g.ext_mem_present, "surveillance needs the external memories");
         let seg = g.segment_active_mj();
         assert_eq!(seg.len(), 3);

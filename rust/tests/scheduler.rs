@@ -14,14 +14,24 @@
 //!   co-resident schedule closes to below 1.15× of the analytic bound
 //!   (ROADMAP: the layer-granular schedule sat ≈1.3× above it);
 //! * streaming: N frames through the scheduler are never slower than N
-//!   back-to-back single-frame runs.
+//!   back-to-back single-frame runs;
+//! * dispatch parity: the indexed dispatcher (`Scheduler::run`) is
+//!   bitwise identical to the legacy linear scan (`Scheduler::run_scan`)
+//!   on random graphs and on every use-case rung;
+//! * windowed streaming: `StreamScheduler` with window K ≥ frames
+//!   reproduces the materialized `Scheduler::run(graph.repeat(frames))`
+//!   makespan/energy bitwise, bounded windows complete within the
+//!   serialization bound, and the peak resident job count depends on the
+//!   window — not the stream length.
 
 use fulmine::coordinator::{
     facedet, seizure, surveillance, ExecConfig, GraphBuilder, Tiling,
 };
 use fulmine::energy::Category;
 use fulmine::extmem::Device;
-use fulmine::soc::sched::{Engine, JobGraph, JobId, Scheduler, N_ENGINES};
+use fulmine::soc::sched::{
+    Engine, JobGraph, JobId, Scheduler, StreamScheduler, DEFAULT_STREAM_WINDOW, N_ENGINES,
+};
 use fulmine::workload::{frame_graph, Registry};
 
 struct Rng(u64);
@@ -162,6 +172,109 @@ fn prop_makespan_within_serialized_bound() {
             );
         }
     }
+}
+
+/// Bitwise agreement of two scheduler results (makespan, relocks, energy
+/// per category, per-engine busy time; overlap to fp tolerance).
+fn assert_results_match(label: &str, a: &fulmine::soc::sched::SchedResult, b: &fulmine::soc::sched::SchedResult) {
+    assert_eq!(a.makespan_s.to_bits(), b.makespan_s.to_bits(), "{label}: makespan");
+    assert_eq!(a.mode_switches, b.mode_switches, "{label}: relocks");
+    assert_eq!(a.n_jobs, b.n_jobs, "{label}: job count");
+    for cat in Category::all() {
+        assert_eq!(
+            a.ledger.energy_mj(cat).to_bits(),
+            b.ledger.energy_mj(cat).to_bits(),
+            "{label}: {cat:?} energy"
+        );
+    }
+    for e in Engine::ALL {
+        assert_eq!(
+            a.busy_s[e.index()].to_bits(),
+            b.busy_s[e.index()].to_bits(),
+            "{label}: {} busy",
+            e.name()
+        );
+    }
+    let scale = 1.0 + a.overlap_s.abs();
+    assert!((a.overlap_s - b.overlap_s).abs() < 1e-12 * scale, "{label}: overlap");
+    assert!((a.coresidency_s - b.coresidency_s).abs() < 1e-12 * scale, "{label}: coresidency");
+}
+
+/// Tentpole parity (dispatch indexing): the per-engine-queue dispatcher
+/// must reproduce the legacy linear scan bitwise — on random graphs
+/// (covering co-residency, switch grants, multi-core phases, clock-scaled
+/// movers and segments) and on every rung of every registered workload.
+#[test]
+fn prop_indexed_dispatch_matches_scan() {
+    for seed in 0..60u64 {
+        let g = random_graph_with(5000 + seed, seed % 2 == 0);
+        let fast = Scheduler::run(&g);
+        let scan = Scheduler::run_scan(&g);
+        assert_results_match(&format!("seed {seed}"), &fast, &scan);
+    }
+    let reg = Registry::builtin();
+    for name in reg.names() {
+        let w = reg.resolve(name).unwrap();
+        for rung in w.rungs() {
+            let g = frame_graph(w, rung.cfg).unwrap();
+            let fast = Scheduler::run(&g);
+            let scan = Scheduler::run_scan(&g);
+            assert_results_match(&format!("{name}/{}", rung.label), &fast, &scan);
+        }
+    }
+}
+
+/// Tentpole parity (bounded-window streaming): a window covering the
+/// whole stream reproduces the materialized repeat bitwise; tighter
+/// windows complete every job, never beat the full window, and stay
+/// within the serialization bound.
+#[test]
+fn prop_windowed_stream_parity_and_bounds() {
+    for seed in 0..25u64 {
+        let g = random_graph_with(7000 + seed, seed % 2 == 0);
+        for frames in [1usize, 3, 6] {
+            let mat = Scheduler::run(&g.repeat(frames));
+            for window in [frames, frames + 5, 64] {
+                let win = StreamScheduler::run(&g, frames, window);
+                assert_results_match(&format!("seed {seed} f{frames} w{window}"), &win, &mat);
+            }
+            for window in [1usize, 2] {
+                let win = StreamScheduler::run(&g, frames, window);
+                assert_eq!(win.n_jobs, g.len() * frames, "seed {seed}");
+                assert!(
+                    win.makespan_s <= frames as f64 * g.serialized_bound() + 1e-9,
+                    "seed {seed}: window {window} exceeded the serialization bound"
+                );
+                assert!(win.peak_resident_jobs <= window * g.len(), "seed {seed}");
+            }
+        }
+    }
+}
+
+/// Acceptance: streaming the surveillance use case holds O(window) live
+/// jobs — the peak resident count is identical at 8 and 64 frames and
+/// bounded by window × frame jobs, while the materialized path scales
+/// with the stream length.
+#[test]
+fn stream_peak_residency_independent_of_frame_count() {
+    let cfg = ExecConfig::ladder().last().unwrap().cfg;
+    let g = surveillance::frame_graph(cfg);
+    let short = StreamScheduler::run(&g, 8, DEFAULT_STREAM_WINDOW);
+    let long = StreamScheduler::run(&g, 64, DEFAULT_STREAM_WINDOW);
+    assert_eq!(
+        short.peak_resident_jobs, long.peak_resident_jobs,
+        "peak residency must not grow with the frame count"
+    );
+    assert!(short.peak_resident_jobs <= DEFAULT_STREAM_WINDOW * g.len());
+    assert_eq!(Scheduler::run(&g.repeat(16)).peak_resident_jobs, 16 * g.len());
+    // and the windowed stream still beats 64 back-to-back frames
+    let single = Scheduler::run(&g).makespan_s;
+    assert!(
+        long.makespan_s <= 64.0 * single * 1.02 + 1e-6,
+        "windowed stream slower than serial: {} vs {}",
+        long.makespan_s,
+        64.0 * single
+    );
 }
 
 /// Active energy is schedule-independent: scheduled and analytic runs of
