@@ -10,10 +10,12 @@
 //! and analytic single-frame makespans, their gap, pJ/op and the
 //! co-residency statistics, plus a `stream_scaling` section with the
 //! *simulator's own* wall-clock throughput (jobs/s) and peak resident job
-//! count at `--frames {1, 64, 4096}` for the bounded-window streaming
-//! path against the materialized paths (indexed dispatch and the legacy
-//! linear scan) — the machine-readable perf trajectory CI tracks across
-//! PRs.
+//! count at `--frames {1, 64, 4096}` for the production streaming path
+//! (compiled templates + steady-state fast-forward) against the live
+//! windowed path (fast-forward disabled — the PR 4 semantics) and the
+//! materialized paths (indexed dispatch and the legacy linear scan), and
+//! a `shard_scaling` section with jobs/s at S = {1, 2, 4} simulated SoCs
+//! — the machine-readable perf trajectory CI tracks across PRs.
 //!
 //! Uses `fulmine::bench_support` (the offline crate set has no criterion).
 
@@ -23,7 +25,7 @@ use fulmine::hwce::golden::WeightPrec;
 use fulmine::json::Json;
 use fulmine::report;
 use fulmine::soc::sched::{Engine, Scheduler, StreamScheduler, DEFAULT_STREAM_WINDOW};
-use fulmine::system::{RunSpec, SocSystem};
+use fulmine::system::{RunSpec, ShardedStream, SocSystem};
 use fulmine::workload::frame_graph;
 use std::time::Instant;
 
@@ -98,23 +100,25 @@ fn main() {
         }
     }
     // The simulator's own hot path, at scale: wall-clock jobs/s and peak
-    // resident jobs of the bounded-window streaming path at 1/64/4096
-    // frames, against the materialized paths (indexed dispatch, and the
-    // legacy linear scan that rescans the ready set per event) at the
-    // depths they can reasonably reach.
+    // resident jobs of the production streaming path (compiled template +
+    // steady-state fast-forward) at 1/64/4096 frames, against the live
+    // windowed path (fast-forward disabled — the PR 4 baseline) and the
+    // materialized paths (indexed dispatch, and the legacy linear scan
+    // that rescans the ready set per event) at the depths they can
+    // reasonably reach.
     println!("\n== stream scaling: simulator wall-clock and resident jobs ==");
     println!(
-        "{:<22} {:>7} {:>10} {:>12} {:>14}",
-        "path", "frames", "wall [s]", "jobs/s", "peak resident"
+        "{:<22} {:>7} {:>10} {:>12} {:>14} {:>6}",
+        "path", "frames", "wall [s]", "jobs/s", "peak resident", "ff"
     );
     let best = ExecConfig::with_hwce(WeightPrec::W4);
     let g1 = surveillance::frame_graph(best);
     let mut scaling_rows: Vec<Json> = Vec::new();
     let mut jobs_per_s: Vec<(&'static str, usize, f64)> = Vec::new();
-    let mut scale_row = |path: &'static str, frames: usize, wall_s: f64, peak: usize| {
+    let mut scale_row = |path: &'static str, frames: usize, wall_s: f64, peak: usize, ff: usize| {
         let jobs = g1.len() * frames;
         let jps = jobs as f64 / wall_s.max(1e-12);
-        println!("{path:<22} {frames:>7} {wall_s:>10.4} {jps:>12.0} {peak:>14}");
+        println!("{path:<22} {frames:>7} {wall_s:>10.4} {jps:>12.0} {peak:>14} {ff:>6}");
         scaling_rows.push(Json::obj(vec![
             ("workload", Json::string("surveillance")),
             ("path", Json::string(path)),
@@ -123,22 +127,40 @@ fn main() {
             ("jobs", Json::num(jobs as f64)),
             ("jobs_per_s", Json::num(jps)),
             ("peak_resident_jobs", Json::num(peak as f64)),
+            ("fast_forwarded_frames", Json::num(ff as f64)),
         ]));
         jobs_per_s.push((path, frames, jps));
     };
     for frames in [1usize, 64, 4096] {
         let t = Instant::now();
         let r = blackbox(StreamScheduler::run(&g1, frames, DEFAULT_STREAM_WINDOW));
-        scale_row("windowed", frames, t.elapsed().as_secs_f64(), r.peak_resident_jobs);
+        scale_row(
+            "windowed",
+            frames,
+            t.elapsed().as_secs_f64(),
+            r.peak_resident_jobs,
+            r.fast_forwarded_frames,
+        );
+    }
+    for frames in [1usize, 64, 4096] {
+        let t = Instant::now();
+        let r = blackbox(StreamScheduler::run_live(&g1, frames, DEFAULT_STREAM_WINDOW));
+        scale_row("windowed-live", frames, t.elapsed().as_secs_f64(), r.peak_resident_jobs, 0);
     }
     for frames in [1usize, 64] {
         let rep = g1.repeat(frames);
         let t = Instant::now();
         let r = blackbox(Scheduler::run(&rep));
-        scale_row("materialized", frames, t.elapsed().as_secs_f64(), r.peak_resident_jobs);
+        scale_row("materialized", frames, t.elapsed().as_secs_f64(), r.peak_resident_jobs, 0);
         let t = Instant::now();
         let r = blackbox(Scheduler::run_scan(&rep));
-        scale_row("materialized-scan", frames, t.elapsed().as_secs_f64(), r.peak_resident_jobs);
+        scale_row(
+            "materialized-scan",
+            frames,
+            t.elapsed().as_secs_f64(),
+            r.peak_resident_jobs,
+            0,
+        );
     }
     let jps_of = |path: &str, frames: usize| {
         jobs_per_s
@@ -147,19 +169,60 @@ fn main() {
             .map(|&(_, _, v)| v)
             .unwrap_or(0.0)
     };
-    // the headline ratios: windowed streaming vs the legacy scan at the
-    // deepest stream the scan can run, and at the scan's own depth
+    // the headline ratios: the production path vs the legacy scan at the
+    // deepest stream the scan can run, vs the PR 4 live windowed path at
+    // full depth (the fast-forward win), and the historic scan ratios
     let vs_scan_64 = jps_of("windowed", 64) / jps_of("materialized-scan", 64).max(1e-12);
     let deep_vs_scan = jps_of("windowed", 4096) / jps_of("materialized-scan", 64).max(1e-12);
+    let ff_vs_live_4096 = jps_of("windowed", 4096) / jps_of("windowed-live", 4096).max(1e-12);
     println!(
         "windowed vs scan: {vs_scan_64:.1}x at 64 frames, {deep_vs_scan:.1}x at 4096-vs-64 frames"
     );
+    println!("fast-forward vs live windowed at 4096 frames: {ff_vs_live_4096:.1}x jobs/s");
+
+    // Multi-SoC sharding: frames split across S simulated chips on
+    // parallel host threads; near-linear simulator throughput on top of
+    // whatever one chip does.
+    println!("\n== shard scaling: 4096 frames across S simulated SoCs ==");
+    println!(
+        "{:<8} {:>10} {:>12} {:>12} {:>10}",
+        "shards", "wall [s]", "jobs/s", "sim fps", "vs S=1"
+    );
+    let mut shard_rows: Vec<Json> = Vec::new();
+    let mut base_jps = 0.0f64;
+    for shards in [1usize, 2, 4] {
+        let frames = 4096usize;
+        let t = Instant::now();
+        let parts = blackbox(ShardedStream::run(&g1, frames, DEFAULT_STREAM_WINDOW, shards));
+        let wall_s = t.elapsed().as_secs_f64();
+        let jobs = g1.len() * frames;
+        let jps = jobs as f64 / wall_s.max(1e-12);
+        if shards == 1 {
+            base_jps = jps;
+        }
+        let sim_time = parts.iter().map(|(r, _)| r.makespan_s).fold(0.0, f64::max);
+        let sim_fps = frames as f64 / sim_time;
+        let speedup = jps / base_jps.max(1e-12);
+        println!("{shards:<8} {wall_s:>10.4} {jps:>12.0} {sim_fps:>12.3} {speedup:>9.2}x");
+        shard_rows.push(Json::obj(vec![
+            ("workload", Json::string("surveillance")),
+            ("shards", Json::num(shards as f64)),
+            ("frames", Json::num(frames as f64)),
+            ("wall_s", Json::num(wall_s)),
+            ("jobs", Json::num(jobs as f64)),
+            ("jobs_per_s", Json::num(jps)),
+            ("sim_fps", Json::num(sim_fps)),
+            ("speedup_vs_one_shard", Json::num(speedup)),
+        ]));
+    }
 
     let doc = Json::obj(vec![
         ("rungs", Json::Arr(rows)),
         ("stream_scaling", Json::Arr(scaling_rows)),
+        ("shard_scaling", Json::Arr(shard_rows)),
         ("windowed_vs_scan_jobs_per_s", Json::num(vs_scan_64)),
         ("windowed_4096_vs_scan_64_jobs_per_s", Json::num(deep_vs_scan)),
+        ("windowed_ff_vs_live_4096_jobs_per_s", Json::num(ff_vs_live_4096)),
     ]);
     std::fs::write("BENCH_sched.json", doc.render() + "\n").expect("write BENCH_sched.json");
     println!("wrote BENCH_sched.json");

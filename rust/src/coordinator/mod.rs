@@ -285,13 +285,19 @@ pub struct StreamResult {
     pub overlap_s: f64,
     /// Time with ≥ 2 *cluster* jobs in flight (CRY–CNN–SW co-residency).
     pub coresidency_s: f64,
-    /// In-flight frame window of the bounded-memory streaming path.
+    /// In-flight frame window of the bounded-memory streaming path,
+    /// clamped to the stream length (a window wider than the stream could
+    /// never fill).
     pub window: usize,
     /// Peak jobs resident in the scheduler at once — bounded by
     /// `window × frame jobs`, independent of the stream length.
     pub peak_resident_jobs: usize,
     /// Jobs scheduled over the whole stream (`frames × frame jobs`).
     pub total_jobs: usize,
+    /// Frames executed by the scheduler's steady-state replay instead of
+    /// live dispatch — a simulator-performance statistic; replayed frames
+    /// are bitwise identical to live execution.
+    pub fast_forwarded_frames: usize,
     pub ledger: EnergyLedger,
 }
 
@@ -319,6 +325,10 @@ pub fn stream_graph_windowed(
     eq_ops_per_frame: u64,
 ) -> StreamResult {
     assert!(frames >= 1, "streaming needs at least one frame");
+    // A window wider than the stream clamps to it: the rolling window
+    // could never fill the extra slots, and the report should say what
+    // actually bounded the run.
+    let window = window.min(frames);
     let single = Scheduler::run(graph);
     let analytic = graph.analytic();
     let res = StreamScheduler::run(graph, frames, window);
@@ -340,37 +350,90 @@ pub fn stream_graph_windowed(
         window,
         peak_resident_jobs: res.peak_resident_jobs,
         total_jobs: res.n_jobs,
+        fast_forwarded_frames: res.fast_forwarded_frames,
         ledger: res.ledger,
     }
 }
 
-/// Normalized half-open extent `[lo, hi)` of a tile's data within its
-/// layer's spatial range (fraction of the row space). Tile `t` of `n`
-/// covers `[t/n, (t+1)/n)`; a consumer dilates its input extent by the
-/// convolution halo before matching producer extents. The 1-D row model
-/// matches how [`share`] splits layer working sets contiguously.
+/// Normalized half-open extent of a tile's data within its layer's
+/// spatial range: a row×column *rectangle* `[lo, hi) × [col_lo, col_hi)`
+/// in fractional coordinates. The historical 1-D row-band model survives
+/// as the fallback — [`Extent::tile`] spans the full column range, so
+/// band extents compare, dilate and overlap exactly as before — while
+/// [`Extent::grid`] describes a cell of an `nr × nc` tile grid for
+/// workloads whose layers tile in both dimensions. A consumer dilates its
+/// input extent by the convolution halo (both dimensions; a full-width
+/// band clamps to the layer, so the 1-D path is unchanged) before
+/// matching producer extents.
+///
+/// With TCDM-sized tiles the §IV-A layers split into only 6–13 row bands
+/// (often a prime count), where a 2-D grid would *widen* the average
+/// halo fan-in rather than sharpen it — so the surveillance emitter keeps
+/// the band fallback, and the grid path is exercised (and its sharper
+/// matching pinned) by the region tests below with larger synthetic
+/// grids.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Extent {
+    /// Row range (fraction of the layer's rows).
     pub lo: f64,
     pub hi: f64,
+    /// Column range (fraction of the layer's columns); `[0, 1)` ≡ the
+    /// full-width 1-D band.
+    pub col_lo: f64,
+    pub col_hi: f64,
 }
 
 impl Extent {
-    /// The extent of tile `t` of `n` equal shares.
+    /// The full-width row band of tile `t` of `n` equal shares (the 1-D
+    /// fallback; matches how [`share`] splits layer working sets
+    /// contiguously).
     pub fn tile(t: usize, n: usize) -> Extent {
         debug_assert!(t < n);
-        Extent { lo: t as f64 / n as f64, hi: (t + 1) as f64 / n as f64 }
+        Extent {
+            lo: t as f64 / n as f64,
+            hi: (t + 1) as f64 / n as f64,
+            col_lo: 0.0,
+            col_hi: 1.0,
+        }
     }
 
-    /// Grow both edges by `halo` (clamped to `[0, 1]`) — the rows a
-    /// convolution window reads beyond its output rows.
+    /// Cell `(tr, tc)` of an `nr × nc` tile grid — rows split `nr` ways,
+    /// columns `nc` ways.
+    pub fn grid(tr: usize, nr: usize, tc: usize, nc: usize) -> Extent {
+        debug_assert!(tr < nr && tc < nc);
+        Extent {
+            lo: tr as f64 / nr as f64,
+            hi: (tr + 1) as f64 / nr as f64,
+            col_lo: tc as f64 / nc as f64,
+            col_hi: (tc + 1) as f64 / nc as f64,
+        }
+    }
+
+    /// Grow all four edges by `halo` (clamped to `[0, 1]`) — the rows and
+    /// columns a convolution window reads beyond its output rectangle. A
+    /// full-width band clamps to the layer in the column dimension, so
+    /// dilation on 1-D extents behaves exactly as the row-only model did.
     pub fn dilate(self, halo: f64) -> Extent {
-        Extent { lo: (self.lo - halo).max(0.0), hi: (self.hi + halo).min(1.0) }
+        self.dilate2(halo, halo)
     }
 
-    /// Half-open interval overlap (adjacent tiles do not overlap).
+    /// [`Extent::dilate`] with independent row/column halos (a `k×1`
+    /// separable stage reads extra rows but no extra columns).
+    pub fn dilate2(self, row_halo: f64, col_halo: f64) -> Extent {
+        Extent {
+            lo: (self.lo - row_halo).max(0.0),
+            hi: (self.hi + row_halo).min(1.0),
+            col_lo: (self.col_lo - col_halo).max(0.0),
+            col_hi: (self.col_hi + col_halo).min(1.0),
+        }
+    }
+
+    /// Half-open rectangle overlap (adjacent tiles do not overlap).
     pub fn overlaps(self, other: Extent) -> bool {
-        self.lo < other.hi && other.lo < self.hi
+        self.lo < other.hi
+            && other.lo < self.hi
+            && self.col_lo < other.col_hi
+            && other.col_lo < self.col_hi
     }
 }
 
@@ -1120,13 +1183,20 @@ mod tests {
         assert!(r.speedup >= 0.99, "streaming slower than serial: {}", r.speedup);
         assert!(r.time_s >= r.single_frame_s - 1e-12);
         assert!(r.single_frame_analytic_s > 0.0);
-        assert_eq!(r.window, crate::soc::sched::DEFAULT_STREAM_WINDOW);
+        // the default window clamps to the 4-frame stream
+        assert_eq!(r.window, crate::soc::sched::DEFAULT_STREAM_WINDOW.min(r.frames));
         assert!(r.peak_resident_jobs <= r.window * g.len());
         // an explicit window covering the stream matches the default run
         // here (4 frames ≤ the default window ⇒ both are the full graph)
         let rw = stream_graph_windowed("test", &g, 4, 4, 1_000_000);
+        assert_eq!(rw.window, 4);
         assert_eq!(rw.time_s.to_bits(), r.time_s.to_bits());
         assert_eq!(rw.energy_mj.to_bits(), r.energy_mj.to_bits());
+        // an oversized window reports — and behaves as — the clamped one
+        let huge = stream_graph_windowed("test", &g, 4, 4096, 1_000_000);
+        assert_eq!(huge.window, 4, "window must clamp to the stream length");
+        assert_eq!(huge.time_s.to_bits(), r.time_s.to_bits());
+        assert_eq!(huge.peak_resident_jobs, r.peak_resident_jobs);
     }
 
     #[test]
@@ -1164,6 +1234,52 @@ mod tests {
         assert_eq!(barrier.covering(Extent::tile(0, 5)), vec![10, 11, 12]);
         assert!(RegionDeps::none().covering(Extent::tile(0, 1)).is_empty());
         assert!(RegionDeps::none().is_empty() && !tiled.is_empty());
+    }
+
+    /// 2-D tile grids (satellite): rectangle extents discriminate columns
+    /// where the 1-D band fallback pulls in whole tile rows — the halo
+    /// fan-in of a grid consumer is its 3×3 neighbourhood, not 3 rows of
+    /// tiles.
+    #[test]
+    fn grid_extents_sharpen_halo_matching() {
+        let (nr, nc) = (6usize, 6usize);
+        let cells: Vec<(JobId, Extent)> = (0..nr * nc)
+            .map(|i| (i, Extent::grid(i / nc, nr, i % nc, nc)))
+            .collect();
+        let grid = RegionDeps::tiled(cells);
+        let halo = 0.01;
+        let consumer = Extent::grid(2, nr, 3, nc).dilate(halo);
+        let covered = grid.covering(consumer);
+        assert_eq!(covered.len(), 9, "3x3 neighbourhood, got {covered:?}");
+        // the same producers described as full-width row bands (the 1-D
+        // fallback) cannot discriminate columns: the row halo pulls in
+        // three whole tile rows
+        let bands = RegionDeps::tiled(
+            (0..nr * nc).map(|i| (i, Extent::tile(i / nc, nr))).collect(),
+        );
+        let banded = bands.covering(Extent::tile(2, nr).dilate(halo));
+        assert_eq!(banded.len(), 3 * nc, "bands pull whole tile rows");
+        assert!(covered.len() < banded.len(), "grids must sharpen the fan-in");
+        // un-dilated cells map 1:1; a separable row-only halo keeps the
+        // column fan-in tight
+        assert_eq!(grid.covering(Extent::grid(2, nr, 3, nc)).len(), 1);
+        assert_eq!(grid.covering(Extent::grid(2, nr, 3, nc).dilate2(halo, 0.0)).len(), 3);
+        // grid cells degenerate to bands at nc = 1
+        assert_eq!(Extent::grid(2, nr, 0, 1), Extent::tile(2, nr));
+    }
+
+    /// Band extents keep their exact pre-rectangle semantics: column range
+    /// [0,1), dilation clamps, and band↔band matching is the 1-D interval
+    /// test.
+    #[test]
+    fn band_extents_preserve_1d_semantics() {
+        let band = Extent::tile(1, 4);
+        assert_eq!((band.col_lo, band.col_hi), (0.0, 1.0));
+        let d = band.dilate(0.3);
+        assert_eq!((d.col_lo, d.col_hi), (0.0, 1.0), "full-width bands clamp");
+        // a band always overlaps any cell in its row range, whatever column
+        assert!(band.overlaps(Extent::grid(1, 4, 7, 8)));
+        assert!(!band.overlaps(Extent::grid(3, 4, 0, 8)));
     }
 
     #[test]

@@ -52,9 +52,18 @@
 //! long the stream; bitwise identical to the materialized
 //! [`soc::sched::JobGraph::repeat`] path when the window covers the
 //! stream), and the scheduler pipelines them through the shared engines —
-//! frame *f+1* fills the I/O stalls of frame *f*. The `fulmine stream`
-//! subcommand and `bench_scheduler` report the resulting frames/s, pJ/op,
-//! engine utilization and peak resident job count.
+//! frame *f+1* fills the I/O stalls of frame *f*. Templates are lowered
+//! once to struct-of-arrays [`soc::sched::CompiledFrame`] form (engine
+//! bitmasks, CSR dependencies, prefolded energy rows), and once the
+//! stream's schedule turns periodic the core **fast-forwards** it —
+//! replaying the recorded steady-state decisions with pure accumulator
+//! arithmetic, bitwise identical to live execution and verified each
+//! cycle, falling back to live dispatch on any divergence. For scale-out,
+//! [`system::ShardedStream`] splits a stream across S simulated chips on
+//! parallel host threads (`fulmine stream --shards S`) with near-linear
+//! throughput. The `fulmine stream` subcommand and `bench_scheduler`
+//! report the resulting frames/s, pJ/op, engine utilization, peak
+//! resident job count and fast-forwarded frame share.
 //!
 //! ## Public surface: workloads and the `SocSystem` façade
 //!

@@ -88,17 +88,50 @@
 //! edges stay within each frame) — the *materialized* path, kept for
 //! small-N parity tests. The production streaming path is the
 //! [`StreamScheduler`]: it admits frame instances of the template graph
-//! into a rolling window of at most K in-flight frames, retiring completed
-//! frames and recycling their dependency-tracking slots — O(window × jobs)
-//! live state instead of O(frames × jobs), with per-frame energy
-//! accumulated incrementally and the overlap statistics swept online. With
-//! K ≥ frames the windowed schedule reproduces the materialized one
-//! *bitwise* (same admission order, same dispatch decisions — a property
-//! test pins this); smaller windows bound memory at a possible makespan
-//! cost once the window is tighter than the pipeline depth. Either way
-//! frame *f+1*'s I/O and accelerator phases fill the stalls of frame *f*,
-//! which is where the multi-frame throughput of `fulmine stream` comes
-//! from.
+//! into a rolling window of at most K in-flight frames (K is clamped to
+//! the stream length — a window wider than the stream cannot fill),
+//! retiring completed frames and recycling their dependency-tracking
+//! slots — O(window × jobs) live state instead of O(frames × jobs), with
+//! per-frame energy accumulated incrementally and the overlap statistics
+//! swept online. With K ≥ frames the windowed schedule reproduces the
+//! materialized one *bitwise* (same admission order, same dispatch
+//! decisions — a property test pins this); smaller windows bound memory at
+//! a possible makespan cost once the window is tighter than the pipeline
+//! depth. Either way frame *f+1*'s I/O and accelerator phases fill the
+//! stalls of frame *f*, which is where the multi-frame throughput of
+//! `fulmine stream` comes from.
+//!
+//! ## Compiled frame templates
+//!
+//! The execution core does not chase `Vec<Engine>`/`Vec<JobId>` pointers
+//! per job: a [`CompiledFrame`] lowers the template once into flat
+//! struct-of-arrays form — an engine *bitmask* per job (conflict check =
+//! one `AND` against the busy mask), CSR successor arrays, per-job
+//! mode/duration tables, and the per-frame energy charges prefolded to
+//! `(category, mJ)` rows so admission is a tight add loop. Compilation
+//! changes no arithmetic: every float the core produces is the same
+//! expression the job-structure path evaluated, so results stay bitwise
+//! identical to the [`Scheduler::run_scan`] reference.
+//!
+//! ## Steady-state fast-forward
+//!
+//! A long stream of identical frames settles into a periodic schedule.
+//! While streaming, the core records each *admission cycle* (the dispatch/
+//! completion/retire/admit decisions between consecutive admissions) in
+//! frame-relative form and watches for a period-*k* repeat (k ≤ 4): when
+//! the last cycles repeat and the frame-relative scheduler state is a
+//! verified fixpoint across one period, the core switches to **replay** —
+//! it executes the recorded decision sequence directly, with no ready
+//! queues, no dependency counting and no dispatch search, verifying at
+//! every completion that the event order still matches (the ≤ #engines
+//! in-flight jobs make that a trivial scan). Replay performs *the same
+//! float operations in the same order* as live execution would, so the
+//! result is bitwise identical — this is re-derived, not assumed: any
+//! mismatch rolls the cycle back and falls back to live execution, and
+//! [`SchedResult::fast_forwarded_frames`] reports how much of the stream
+//! was replayed. Per-frame template *variants*
+//! ([`StreamScheduler::run_with_variants`]) suspend fast-forward around
+//! the divergent frames and re-engage after they retire.
 
 use crate::energy::{Category, EnergyLedger};
 use crate::soc::opmodes::{OperatingMode, OperatingPoint, MODE_SWITCH_S, V_NOM};
@@ -254,11 +287,7 @@ impl Job {
     /// own mode; stretched by the frequency ratio under a slower
     /// compatible point).
     fn duration_at(&self, at: OperatingMode) -> f64 {
-        if at == self.op.mode {
-            self.duration_s
-        } else {
-            self.duration_s * self.op.freq_hz() / OperatingPoint::new(at, self.op.vdd).freq_hz()
-        }
+        hosted_duration(self.duration_s, self.op, at)
     }
 }
 
@@ -444,16 +473,7 @@ impl JobGraph {
     /// The makespan-proportional terms: leakage and external-memory
     /// standby over `makespan_s`, plus the elapsed-time advance.
     fn charge_overheads_into(&self, ledger: &mut EnergyLedger, makespan_s: f64) {
-        // Leakage is mode-independent (it scales only with VDD), so one
-        // charge over the makespan equals the per-phase charges of the
-        // analytic model.
-        let leak_op = OperatingPoint::new(OperatingMode::Sw, self.vdd());
-        ledger.charge(Category::Idle, Component::ClusterLeak, leak_op, makespan_s);
-        ledger.charge(Category::Idle, Component::SocLeak, leak_op, makespan_s);
-        if self.ext_mem_present {
-            ledger.charge_mj(Category::ExtMem, (FLASH_STANDBY_MW + FRAM_STANDBY_MW) * makespan_s);
-        }
-        ledger.advance(makespan_s);
+        charge_overheads(ledger, self.vdd(), self.ext_mem_present, makespan_s);
     }
 
     /// Integrate every job's charges plus makespan-proportional leakage and
@@ -520,6 +540,7 @@ impl JobGraph {
             overlap_s: 0.0,
             coresidency_s: 0.0,
             peak_resident_jobs: self.jobs.len(),
+            fast_forwarded_frames: 0,
         }
     }
 
@@ -550,6 +571,50 @@ impl JobGraph {
     }
 }
 
+/// The makespan-proportional ledger terms shared by the job-structure and
+/// compiled paths: leakage and external-memory standby over `makespan_s`,
+/// plus the elapsed-time advance. Leakage is mode-independent (it scales
+/// only with VDD), so one charge over the makespan equals the per-phase
+/// charges of the analytic model.
+fn charge_overheads(ledger: &mut EnergyLedger, vdd: f64, ext_mem_present: bool, makespan_s: f64) {
+    let leak_op = OperatingPoint::new(OperatingMode::Sw, vdd);
+    ledger.charge(Category::Idle, Component::ClusterLeak, leak_op, makespan_s);
+    ledger.charge(Category::Idle, Component::SocLeak, leak_op, makespan_s);
+    if ext_mem_present {
+        ledger.charge_mj(Category::ExtMem, (FLASH_STANDBY_MW + FRAM_STANDBY_MW) * makespan_s);
+    }
+    ledger.advance(makespan_s);
+}
+
+/// Service time of a job emitted for `op` when hosted at cluster mode `at`
+/// (its own time at its own mode; stretched by the frequency ratio under a
+/// slower compatible point). The single expression both the job-structure
+/// and the compiled paths evaluate — bitwise-identical by construction.
+fn hosted_duration(duration_s: f64, op: OperatingPoint, at: OperatingMode) -> f64 {
+    if at == op.mode {
+        duration_s
+    } else {
+        duration_s * op.freq_hz() / OperatingPoint::new(at, op.vdd).freq_hz()
+    }
+}
+
+/// Dense index of a breakdown category in [`Category::all`] order — the
+/// compiled path accumulates active energy in a flat array and transfers
+/// it to the [`EnergyLedger`] once at the end of the run.
+fn cat_index(c: Category) -> usize {
+    match c {
+        Category::Conv => 0,
+        Category::Crypto => 1,
+        Category::OtherSw => 2,
+        Category::Dma => 3,
+        Category::ExtMem => 4,
+        Category::Idle => 5,
+    }
+}
+
+/// Number of breakdown categories (length of [`Category::all`]).
+const N_CATS: usize = 6;
+
 /// Outcome of scheduling a [`JobGraph`].
 #[derive(Debug, Clone)]
 pub struct SchedResult {
@@ -575,6 +640,12 @@ pub struct SchedResult {
     /// the whole graph (`= n_jobs`); [`StreamScheduler::run`] is bounded
     /// by `window × frame jobs` independent of the stream length.
     pub peak_resident_jobs: usize,
+    /// Frames executed by steady-state replay instead of live dispatch
+    /// (0 for the materialized/analytic paths and for streams that never
+    /// reach a periodic steady state). Replayed frames are bitwise
+    /// identical to live execution — this is a performance statistic, not
+    /// an accuracy knob.
+    pub fast_forwarded_frames: usize,
 }
 
 impl SchedResult {
@@ -658,6 +729,7 @@ fn overlap_stats(spans: &[Span]) -> (f64, f64) {
 /// One boundary of a busy interval in the online overlap sweep: min-heap
 /// by (time, insertion sequence) so ties integrate in the same order the
 /// batch sweep's stable sort produced.
+#[derive(Clone)]
 struct SweepEv {
     t: f64,
     seq: u64,
@@ -689,7 +761,10 @@ impl PartialOrd for SweepEv {
 /// dispatch time and integrated as simulated time advances past them, so
 /// the streaming path never materializes the O(frames × jobs) span list.
 /// All pending boundaries lie within the in-flight window (+ one relock),
-/// keeping the heap O(window).
+/// keeping the heap O(window). `Clone` lets the fast-forward replay keep a
+/// per-cycle undo copy (the pending set is tiny — bounded by the in-flight
+/// spans).
+#[derive(Clone)]
 struct OverlapSweep {
     events: BinaryHeap<SweepEv>,
     seq: u64,
@@ -763,21 +838,243 @@ struct FrameSlot {
     remaining: usize,
 }
 
+/// The co-residency predicate on raw job parameters (shared by the
+/// job-structure and compiled paths): may a job emitted for `op` with
+/// service time `duration_s` be hosted at current mode `c` without a mode
+/// switch? Equal modes always; a subsumed mode only when the
+/// frequency-rescale penalty is cheaper than the FLL relock a private mode
+/// window would cost.
+fn co_resident_at(c: OperatingMode, op: OperatingPoint, duration_s: f64) -> bool {
+    if c == op.mode {
+        return true;
+    }
+    if !c.supports(op.mode) {
+        return false;
+    }
+    hosted_duration(duration_s, op, c) - duration_s <= MODE_SWITCH_S
+}
+
+/// A frame template lowered to flat struct-of-arrays form: the hot-path
+/// representation the execution core actually runs. Per job: an engine
+/// occupancy *bitmask* (startability = one `AND` against the core's busy
+/// mask), the ready-queue key, mode/clock flags, operating point and
+/// service time; plus CSR successor arrays replacing the per-job
+/// `Vec<JobId>` children, and the frame's active-energy charges prefolded
+/// to `(category, mJ)` rows — exactly the values `EnergyLedger::charge`
+/// would compute, so per-frame admission is a tight add loop with zero
+/// heap traffic and bitwise-identical sums.
+#[derive(Debug, Clone)]
+pub struct CompiledFrame {
+    n: usize,
+    ext_mem_present: bool,
+    vdd: f64,
+    /// Engine occupancy bitmask per job (bit = [`Engine::index`]).
+    engine_mask: Vec<u16>,
+    /// `engines[0]` index per job — the ready-queue key of non-cluster jobs.
+    first_engine: Vec<u8>,
+    mode_locked: Vec<bool>,
+    clock_scaled: Vec<bool>,
+    op: Vec<OperatingPoint>,
+    duration_s: Vec<f64>,
+    indeg0: Vec<u32>,
+    roots: Vec<u32>,
+    /// CSR successors: job `j`'s dependents are `succ[succ_off[j]..succ_off[j+1]]`.
+    succ_off: Vec<u32>,
+    succ: Vec<u32>,
+    /// Active-energy rows of one frame in job-then-charge order (parallel
+    /// arrays: breakdown-category index, energy in mJ).
+    charge_cat: Vec<u8>,
+    charge_mj: Vec<f64>,
+}
+
+impl CompiledFrame {
+    /// Lower a frame graph into the struct-of-arrays template. Pure
+    /// repackaging: no float is computed differently from the
+    /// job-structure path, so compiled execution is bitwise identical.
+    pub fn compile(g: &JobGraph) -> CompiledFrame {
+        let n = g.jobs.len();
+        let mut cf = CompiledFrame {
+            n,
+            ext_mem_present: g.ext_mem_present,
+            vdd: g.vdd(),
+            engine_mask: Vec::with_capacity(n),
+            first_engine: Vec::with_capacity(n),
+            mode_locked: Vec::with_capacity(n),
+            clock_scaled: Vec::with_capacity(n),
+            op: Vec::with_capacity(n),
+            duration_s: Vec::with_capacity(n),
+            indeg0: Vec::with_capacity(n),
+            roots: Vec::new(),
+            succ_off: vec![0u32; n + 1],
+            succ: Vec::new(),
+            charge_cat: Vec::new(),
+            charge_mj: Vec::new(),
+        };
+        for (id, job) in g.jobs.iter().enumerate() {
+            let mut mask = 0u16;
+            for &e in &job.engines {
+                mask |= 1 << e.index();
+            }
+            cf.engine_mask.push(mask);
+            cf.first_engine.push(job.engines[0].index() as u8);
+            cf.mode_locked.push(job.mode_locked());
+            cf.clock_scaled.push(job.clock_scaled());
+            cf.op.push(job.op);
+            cf.duration_s.push(job.duration_s);
+            cf.indeg0.push(job.deps.len() as u32);
+            if job.deps.is_empty() {
+                cf.roots.push(id as u32);
+            }
+            for &d in &job.deps {
+                cf.succ_off[d + 1] += 1;
+            }
+            for &(cat, comp, mult) in &job.charges {
+                cf.charge_cat.push(cat_index(cat) as u8);
+                // the exact expression `charge_active_into` feeds the
+                // ledger: active_mw(comp, op) x (duration x multiplicity)
+                cf.charge_mj
+                    .push(PowerModel::active_mw(comp, job.op) * (job.duration_s * mult));
+            }
+        }
+        for i in 0..n {
+            let upto = cf.succ_off[i];
+            cf.succ_off[i + 1] += upto;
+        }
+        let mut cursor: Vec<u32> = cf.succ_off[..n].to_vec();
+        cf.succ = vec![0u32; cf.succ_off[n] as usize];
+        for (id, job) in g.jobs.iter().enumerate() {
+            for &d in &job.deps {
+                cf.succ[cursor[d] as usize] = id as u32;
+                cursor[d] += 1;
+            }
+        }
+        cf
+    }
+
+    /// Jobs in the template.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    fn succ_of(&self, local: usize) -> &[u32] {
+        &self.succ[self.succ_off[local] as usize..self.succ_off[local + 1] as usize]
+    }
+
+    fn duration_at(&self, local: usize, at: OperatingMode) -> f64 {
+        hosted_duration(self.duration_s[local], self.op[local], at)
+    }
+
+    /// Whether `other` may stand in for `self` as a per-frame variant: the
+    /// job *structure* (engine sets, dependencies) must match; operating
+    /// points, service times and charges may differ (a mode override).
+    fn structurally_eq(&self, other: &CompiledFrame) -> bool {
+        self.n == other.n
+            && self.engine_mask == other.engine_mask
+            && self.first_engine == other.first_engine
+            && self.succ_off == other.succ_off
+            && self.succ == other.succ
+            && self.indeg0 == other.indeg0
+    }
+}
+
+/// Longest steady-state period the detector searches for (frames). The
+/// §IV streams settle at period 1; small multiples cover beat patterns
+/// between engines.
+const FF_MAX_PERIOD: usize = 4;
+
+/// Identical periods required before a candidate fixpoint is captured.
+const FF_STEADY_PERIODS: usize = 2;
+
+/// Extra identical cycles demanded per prior replay bail-out, so a
+/// near-periodic stream cannot thrash between engage and bail.
+const FF_BAIL_PENALTY: usize = 4;
+
+/// One recorded scheduling decision of an admission cycle, in
+/// frame-relative form (`delta` = frames admitted at the time of the op,
+/// minus the job's frame index). Cycle equality compares these sequences —
+/// times are deliberately absent: detection is about *decisions*, and the
+/// replay recomputes every float with the exact live arithmetic.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum OpRec {
+    Dispatch { delta: u32, local: u32, switch: bool },
+    Pop { delta: u32, local: u32 },
+    Retire,
+    Admit,
+}
+
+/// Frame-relative snapshot of the discrete scheduler state at an
+/// admission boundary. Captured twice, one period apart: equality
+/// certifies the steady state is a genuine fixpoint (a repeating op log
+/// alone is not sufficient — the state must map onto itself under the
+/// one-period shift), and the snapshot doubles as the rebuild recipe when
+/// replay hands back to live execution.
+#[derive(PartialEq)]
+struct RelSnapshot {
+    slots: Vec<(Vec<u32>, usize)>,
+    io: Vec<Vec<(u32, u32)>>,
+    ml: Vec<(u32, u32)>,
+    running: Vec<(u32, u32)>,
+    current_mode: Option<OperatingMode>,
+    mode_locked_running: usize,
+    busy_mask: u16,
+}
+
+/// A job in flight during fast-forward replay. The live path keeps these
+/// in the event heap; replay scans them directly — engines are serially
+/// busy, so there are at most [`N_ENGINES`] entries and the min scan is
+/// cheaper than heap maintenance.
+#[derive(Clone, Copy)]
+struct RunEntry {
+    end: f64,
+    gid: JobId,
+    mask: u16,
+    cluster: bool,
+}
+
+/// Undo copy of the accumulator state, taken before each replayed cycle so
+/// a verification failure can roll back to the cycle boundary (where the
+/// frame-relative snapshot is valid) and resume live execution.
+struct FfUndo {
+    t: f64,
+    makespan: f64,
+    mode_ready_at: f64,
+    current_mode: Option<OperatingMode>,
+    mode_locked_running: usize,
+    switches: u64,
+    busy: [f64; N_ENGINES],
+    busy_mask: u16,
+    cats: [f64; N_CATS],
+    live: usize,
+    peak_live: usize,
+    done: usize,
+    admitted: usize,
+    first_frame: usize,
+    sweep: OverlapSweep,
+    running: Vec<RunEntry>,
+}
+
 /// The shared event-driven execution core: schedules `frames` instances of
-/// a template graph admitted through a rolling window of at most `window`
-/// in-flight frames, with indexed dispatch. [`Scheduler::run`] is the
-/// `frames == 1` case; [`StreamScheduler::run`] streams with a bounded
-/// window. Global job ids are `frame × n + local`, so the admission and
-/// dispatch order with `window ≥ frames` is identical to running the
-/// materialized [`JobGraph::repeat`] graph.
-struct ExecCore<'g> {
-    g: &'g JobGraph,
+/// a [`CompiledFrame`] template admitted through a rolling window of at
+/// most `window` in-flight frames, with indexed dispatch over the
+/// compiled bitmask/CSR arrays. [`Scheduler::run`] is the `frames == 1`
+/// case; [`StreamScheduler::run`] streams with a bounded window and
+/// steady-state fast-forward. Global job ids are `frame × n + local`, so
+/// the admission and dispatch order with `window ≥ frames` is identical to
+/// running the materialized [`JobGraph::repeat`] graph.
+struct ExecCore<'c> {
+    base: &'c CompiledFrame,
+    /// Per-frame template overrides, sorted by frame index (empty for
+    /// homogeneous streams). Variants are structurally identical to the
+    /// base — see [`StreamScheduler::run_with_variants`].
+    variants: &'c [(usize, CompiledFrame)],
     n: usize,
     frames: usize,
     window: usize,
-    children: Vec<Vec<JobId>>,
-    indeg0: Vec<u32>,
-    roots: Vec<JobId>,
+    ff_enabled: bool,
     slots: VecDeque<FrameSlot>,
     spare: Vec<FrameSlot>,
     first_frame: usize,
@@ -787,7 +1084,8 @@ struct ExecCore<'g> {
     io_ready: Vec<BTreeSet<JobId>>,
     /// Ready mode-locked cluster jobs.
     ml_ready: BTreeSet<JobId>,
-    engine_busy: [bool; N_ENGINES],
+    /// Busy engines as a bitmask (bit = [`Engine::index`]).
+    busy_mask: u16,
     busy: [f64; N_ENGINES],
     current_mode: Option<OperatingMode>,
     mode_ready_at: f64,
@@ -795,44 +1093,51 @@ struct ExecCore<'g> {
     switches: u64,
     heap: BinaryHeap<Ev>,
     sweep: OverlapSweep,
-    ledger: EnergyLedger,
+    /// Active energy per breakdown category ([`cat_index`] order) — the
+    /// flat accumulator the final [`EnergyLedger`] is built from.
+    cats: [f64; N_CATS],
     live: usize,
     peak_live: usize,
     t: f64,
     makespan: f64,
     done: usize,
+    // --- steady-state detection + replay ---
+    cur_ops: Vec<OpRec>,
+    ring: VecDeque<Vec<OpRec>>,
+    streak: [usize; FF_MAX_PERIOD + 1],
+    confirm: Option<(usize, usize, RelSnapshot)>,
+    engage: Option<(usize, Vec<OpRec>, RelSnapshot)>,
+    bails: usize,
+    ff_frames: usize,
+    running: Vec<RunEntry>,
 }
 
-impl<'g> ExecCore<'g> {
-    fn new(g: &'g JobGraph, frames: usize, window: usize) -> Self {
-        let n = g.jobs.len();
-        let mut indeg0: Vec<u32> = Vec::with_capacity(n);
-        let mut children: Vec<Vec<JobId>> = vec![Vec::new(); n];
-        let mut roots: Vec<JobId> = Vec::new();
-        for (id, job) in g.jobs.iter().enumerate() {
-            indeg0.push(job.deps.len() as u32);
-            if job.deps.is_empty() {
-                roots.push(id);
-            }
-            for &d in &job.deps {
-                children[d].push(id);
-            }
-        }
+impl<'c> ExecCore<'c> {
+    fn new(
+        base: &'c CompiledFrame,
+        variants: &'c [(usize, CompiledFrame)],
+        frames: usize,
+        window: usize,
+        ff_enabled: bool,
+    ) -> Self {
+        // Clamp the window to the stream length: slots beyond `frames`
+        // could never fill (satellite fix — a 1024-frame window over a
+        // 3-frame stream is a 3-frame window).
+        let window = window.max(1).min(frames.max(1));
         ExecCore {
-            g,
-            n,
+            base,
+            variants,
+            n: base.n,
             frames,
-            window: window.max(1),
-            children,
-            indeg0,
-            roots,
+            window,
+            ff_enabled,
             slots: VecDeque::new(),
             spare: Vec::new(),
             first_frame: 0,
             admitted: 0,
             io_ready: vec![BTreeSet::new(); N_ENGINES],
             ml_ready: BTreeSet::new(),
-            engine_busy: [false; N_ENGINES],
+            busy_mask: 0,
             busy: [0.0; N_ENGINES],
             current_mode: None,
             mode_ready_at: 0.0,
@@ -840,12 +1145,58 @@ impl<'g> ExecCore<'g> {
             switches: 0,
             heap: BinaryHeap::new(),
             sweep: OverlapSweep::new(),
-            ledger: EnergyLedger::new(),
+            cats: [0.0; N_CATS],
             live: 0,
             peak_live: 0,
             t: 0.0,
             makespan: 0.0,
             done: 0,
+            cur_ops: Vec::new(),
+            ring: VecDeque::new(),
+            streak: [0; FF_MAX_PERIOD + 1],
+            confirm: None,
+            engage: None,
+            bails: 0,
+            ff_frames: 0,
+            running: Vec::new(),
+        }
+    }
+
+    /// The template frame `frame` executes from (its variant when one is
+    /// registered, the base otherwise). Returns the `'c` lifetime, not a
+    /// reborrow of `self`, so callers may keep mutating the core while
+    /// holding template rows.
+    fn tpl(&self, frame: usize) -> &'c CompiledFrame {
+        if self.variants.is_empty() {
+            self.base
+        } else {
+            match self.variants.binary_search_by_key(&frame, |v| v.0) {
+                Ok(i) => &self.variants[i].1,
+                Err(_) => self.base,
+            }
+        }
+    }
+
+    /// Whether `frame` runs the base template (fast-forward replays base
+    /// frames only).
+    fn variant_free(&self, frame: usize) -> bool {
+        self.variants.is_empty() || self.variants.binary_search_by_key(&frame, |v| v.0).is_err()
+    }
+
+    /// Cycle recording is on while admissions remain (once the last frame
+    /// is admitted no cycle can close, so recording would only accumulate
+    /// garbage for the drain tail).
+    fn recording(&self) -> bool {
+        self.ff_enabled && self.admitted < self.frames
+    }
+
+    fn enqueue_ready(&mut self, gid: JobId) {
+        let tpl = self.tpl(gid / self.n);
+        let local = gid % self.n;
+        if tpl.mode_locked[local] {
+            self.ml_ready.insert(gid);
+        } else {
+            self.io_ready[tpl.first_engine[local] as usize].insert(gid);
         }
     }
 
@@ -860,6 +1211,9 @@ impl<'g> ExecCore<'g> {
                 let slot = self.slots.pop_front().expect("checked front");
                 self.spare.push(slot);
                 self.first_frame += 1;
+                if self.recording() {
+                    self.cur_ops.push(OpRec::Retire);
+                }
             }
             if self.admitted < self.frames && self.slots.len() < self.window {
                 self.admit();
@@ -870,26 +1224,130 @@ impl<'g> ExecCore<'g> {
     }
 
     fn admit(&mut self) {
-        let base = self.admitted * self.n;
+        let base_id = self.admitted * self.n;
+        let tpl = self.tpl(self.admitted);
+        let rec = self.recording();
         let mut slot = self
             .spare
             .pop()
             .unwrap_or_else(|| FrameSlot { indeg: Vec::new(), remaining: 0 });
         slot.indeg.clear();
-        slot.indeg.extend_from_slice(&self.indeg0);
+        slot.indeg.extend_from_slice(&tpl.indeg0);
         slot.remaining = self.n;
         self.slots.push_back(slot);
         self.admitted += 1;
         self.live += self.n;
         self.peak_live = self.peak_live.max(self.live);
-        self.g.charge_active_into(&mut self.ledger);
-        for &r in &self.roots {
-            let job = &self.g.jobs[r];
-            if job.mode_locked() {
-                self.ml_ready.insert(base + r);
+        for (&c, &v) in tpl.charge_cat.iter().zip(&tpl.charge_mj) {
+            self.cats[c as usize] += v;
+        }
+        for &r in &tpl.roots {
+            self.enqueue_ready(base_id + r as usize);
+        }
+        if rec {
+            self.cur_ops.push(OpRec::Admit);
+            self.close_cycle();
+        }
+    }
+
+    /// Close the admission cycle that just ended: update the lag-k repeat
+    /// streaks, drive the two-phase fixpoint confirmation, and arm
+    /// `engage` once a period is certified. The run loop fast-forwards at
+    /// the next loop head — exactly the recorded cycle boundary.
+    fn close_cycle(&mut self) {
+        let closed = std::mem::take(&mut self.cur_ops);
+        for k in 1..=FF_MAX_PERIOD {
+            if self.ring.len() >= k && closed == self.ring[self.ring.len() - k] {
+                self.streak[k] += 1;
             } else {
-                self.io_ready[job.engines[0].index()].insert(base + r);
+                self.streak[k] = 0;
             }
+        }
+        self.ring.push_back(closed);
+        if self.ring.len() > FF_MAX_PERIOD + 1 {
+            self.ring.pop_front();
+        }
+        if self.engage.is_some() {
+            return;
+        }
+        if let Some((k, left, snap)) = self.confirm.take() {
+            if self.streak[k] > 0 {
+                if left > 1 {
+                    self.confirm = Some((k, left - 1, snap));
+                } else {
+                    // One full period after the candidate: the relative
+                    // state must have mapped onto itself.
+                    let now = self.capture_rel();
+                    if now == snap && self.guards_ok(k) {
+                        let mut pattern = Vec::new();
+                        for cycle in self.ring.iter().skip(self.ring.len() - k) {
+                            pattern.extend_from_slice(cycle);
+                        }
+                        self.engage = Some((k, pattern, now));
+                    }
+                }
+            }
+            return;
+        }
+        let need_extra = FF_BAIL_PENALTY * self.bails;
+        for k in 1..=FF_MAX_PERIOD {
+            if self.streak[k] >= FF_STEADY_PERIODS * k + need_extra && self.guards_ok(k) {
+                self.confirm = Some((k, k, self.capture_rel()));
+                break;
+            }
+        }
+    }
+
+    /// Sanity guards on a candidate period `k`: a full window, enough
+    /// frames left to replay at least once (plus the confirm period), a
+    /// block that completes exactly k frames (k retires, k·n pops), and no
+    /// per-frame variant from the window onwards.
+    fn guards_ok(&self, k: usize) -> bool {
+        if self.slots.len() != self.window || self.n == 0 || self.ring.len() < k {
+            return false;
+        }
+        if self.admitted + 2 * k > self.frames {
+            return false;
+        }
+        let (mut pops, mut retires) = (0usize, 0usize);
+        for cycle in self.ring.iter().skip(self.ring.len() - k) {
+            for op in cycle {
+                match op {
+                    OpRec::Pop { .. } => pops += 1,
+                    OpRec::Retire => retires += 1,
+                    _ => {}
+                }
+            }
+        }
+        if pops != k * self.n || retires != k {
+            return false;
+        }
+        match self.variants.last() {
+            None => true,
+            Some(v) => v.0 < self.first_frame,
+        }
+    }
+
+    /// Snapshot the discrete scheduler state in frame-relative form
+    /// (`delta` = admitted − frame) at an admission boundary.
+    fn capture_rel(&self) -> RelSnapshot {
+        let n = self.n;
+        let admitted = self.admitted;
+        let rel = move |gid: usize| ((admitted - gid / n) as u32, (gid % n) as u32);
+        let mut running: Vec<(u32, u32)> = self.heap.iter().map(|ev| rel(ev.job)).collect();
+        running.sort_unstable();
+        RelSnapshot {
+            slots: self.slots.iter().map(|s| (s.indeg.clone(), s.remaining)).collect(),
+            io: self
+                .io_ready
+                .iter()
+                .map(|q| q.iter().map(|&g| rel(g)).collect())
+                .collect(),
+            ml: self.ml_ready.iter().map(|&g| rel(g)).collect(),
+            running,
+            current_mode: self.current_mode,
+            mode_locked_running: self.mode_locked_running,
+            busy_mask: self.busy_mask,
         }
     }
 
@@ -905,15 +1363,14 @@ impl<'g> ExecCore<'g> {
             if e.mode_locked() {
                 continue;
             }
-            if self.engine_busy[e.index()] {
+            if self.busy_mask & (1 << e.index()) != 0 {
                 continue; // every job queued here needs this engine
             }
             for &id in &self.io_ready[e.index()] {
                 if best_io.is_some_and(|b| id >= b) {
                     break;
                 }
-                let job = &self.g.jobs[id % self.n];
-                if job.engines.iter().all(|&x| !self.engine_busy[x.index()]) {
+                if self.tpl(id / self.n).engine_mask[id % self.n] & self.busy_mask == 0 {
                     best_io = Some(id);
                     break;
                 }
@@ -925,12 +1382,13 @@ impl<'g> ExecCore<'g> {
             if best_io.is_some_and(|b| id >= b) {
                 break;
             }
-            let job = &self.g.jobs[id % self.n];
-            if job.engines.iter().any(|&x| self.engine_busy[x.index()]) {
+            let tpl = self.tpl(id / self.n);
+            let local = id % self.n;
+            if tpl.engine_mask[local] & self.busy_mask != 0 {
                 continue;
             }
             if let Some(c) = self.current_mode {
-                if Scheduler::co_resident(c, job) {
+                if co_resident_at(c, tpl.op[local], tpl.duration_s[local]) {
                     best_ml = Some((id, false));
                     break;
                 }
@@ -956,79 +1414,316 @@ impl<'g> ExecCore<'g> {
     }
 
     fn dispatch(&mut self, id: JobId, switch: bool) {
-        let job = &self.g.jobs[id % self.n];
-        if job.mode_locked() {
+        let frame = id / self.n;
+        let local = id % self.n;
+        let tpl = self.tpl(frame);
+        if tpl.mode_locked[local] {
             self.ml_ready.remove(&id);
         } else {
-            self.io_ready[job.engines[0].index()].remove(&id);
+            self.io_ready[tpl.first_engine[local] as usize].remove(&id);
+        }
+        if self.recording() {
+            self.cur_ops.push(OpRec::Dispatch {
+                delta: (self.admitted - frame) as u32,
+                local: local as u32,
+                switch,
+            });
         }
         let mut start = self.t;
-        let mut dur = job.duration_s;
-        if job.mode_locked() {
+        let mut dur = tpl.duration_s[local];
+        if tpl.mode_locked[local] {
             if switch {
                 // Relock only on a genuine frequency change (the first
                 // mode entry is free).
-                if self.current_mode.is_some() && self.current_mode != Some(job.op.mode) {
+                if self.current_mode.is_some() && self.current_mode != Some(tpl.op[local].mode) {
                     self.switches += 1;
                     self.mode_ready_at = self.t + MODE_SWITCH_S;
                 }
-                self.current_mode = Some(job.op.mode);
+                self.current_mode = Some(tpl.op[local].mode);
             } else {
                 // Co-resident dispatch: hosted at the cluster's current
                 // point, service time rescaled.
                 let c = self.current_mode.expect("co-resident dispatch without a mode");
-                dur = job.duration_at(c);
+                dur = tpl.duration_at(local, c);
             }
             // The cluster sleeps while the FLL relocks.
             start = start.max(self.mode_ready_at);
             self.mode_locked_running += 1;
-        } else if job.clock_scaled() {
+        } else if tpl.clock_scaled[local] {
             // Clock-derived SOC movers follow the live cluster point
             // (emission clock only while no cluster point is set).
             if let Some(c) = self.current_mode {
-                dur = job.duration_at(c);
+                dur = tpl.duration_at(local, c);
             }
         }
-        for &e in &job.engines {
-            self.engine_busy[e.index()] = true;
-            self.busy[e.index()] += dur;
+        let mask = tpl.engine_mask[local];
+        let mut m = mask;
+        while m != 0 {
+            let e = m.trailing_zeros() as usize;
+            self.busy[e] += dur;
+            m &= m - 1;
         }
-        self.sweep.push_span(start, start + dur, job.mode_locked());
+        self.busy_mask |= mask;
+        self.sweep.push_span(start, start + dur, tpl.mode_locked[local]);
         self.heap.push(Ev { t: start + dur, job: id });
     }
 
     fn complete(&mut self, gid: JobId) {
-        let local = gid % self.n;
         let frame = gid / self.n;
-        let job = &self.g.jobs[local];
-        for &e in &job.engines {
-            self.engine_busy[e.index()] = false;
-        }
-        if job.mode_locked() {
+        let local = gid % self.n;
+        let tpl = self.tpl(frame);
+        self.busy_mask &= !tpl.engine_mask[local];
+        if tpl.mode_locked[local] {
             self.mode_locked_running -= 1;
         }
         self.done += 1;
         self.live -= 1;
         let si = frame - self.first_frame;
         self.slots[si].remaining -= 1;
-        for &c in &self.children[local] {
+        for &c in tpl.succ_of(local) {
             let slot = &mut self.slots[si];
-            slot.indeg[c] -= 1;
-            if slot.indeg[c] == 0 {
-                let cid = frame * self.n + c;
-                let cjob = &self.g.jobs[c];
-                if cjob.mode_locked() {
-                    self.ml_ready.insert(cid);
-                } else {
-                    self.io_ready[cjob.engines[0].index()].insert(cid);
+            slot.indeg[c as usize] -= 1;
+            if slot.indeg[c as usize] == 0 {
+                self.enqueue_ready(frame * self.n + c as usize);
+            }
+        }
+    }
+
+    // ---- steady-state replay -------------------------------------------
+
+    fn save_floats(&self) -> FfUndo {
+        FfUndo {
+            t: self.t,
+            makespan: self.makespan,
+            mode_ready_at: self.mode_ready_at,
+            current_mode: self.current_mode,
+            mode_locked_running: self.mode_locked_running,
+            switches: self.switches,
+            busy: self.busy,
+            busy_mask: self.busy_mask,
+            cats: self.cats,
+            live: self.live,
+            peak_live: self.peak_live,
+            done: self.done,
+            admitted: self.admitted,
+            first_frame: self.first_frame,
+            sweep: self.sweep.clone(),
+            running: self.running.clone(),
+        }
+    }
+
+    fn restore_floats(&mut self, u: FfUndo) {
+        self.t = u.t;
+        self.makespan = u.makespan;
+        self.mode_ready_at = u.mode_ready_at;
+        self.current_mode = u.current_mode;
+        self.mode_locked_running = u.mode_locked_running;
+        self.switches = u.switches;
+        self.busy = u.busy;
+        self.busy_mask = u.busy_mask;
+        self.cats = u.cats;
+        self.live = u.live;
+        self.peak_live = u.peak_live;
+        self.done = u.done;
+        self.admitted = u.admitted;
+        self.first_frame = u.first_frame;
+        self.sweep = u.sweep;
+        self.running = u.running;
+    }
+
+    /// The next completion among the in-flight jobs, under exactly the
+    /// event heap's order: earliest end time ([`f64::total_cmp`]), ties by
+    /// job id.
+    fn min_running(&self) -> Option<usize> {
+        let mut best: Option<usize> = None;
+        for (i, r) in self.running.iter().enumerate() {
+            let better = match best {
+                None => true,
+                Some(b) => {
+                    let rb = &self.running[b];
+                    r.end.total_cmp(&rb.end).then_with(|| r.gid.cmp(&rb.gid)) == Ordering::Less
+                }
+            };
+            if better {
+                best = Some(i);
+            }
+        }
+        best
+    }
+
+    /// Execute one recorded steady-state period without the ready queues,
+    /// dependency counters or dispatch search: pure accumulator arithmetic
+    /// plus an order check at every completion. Every float op is the
+    /// exact op live execution would perform, in the same order, so a
+    /// completed cycle is bitwise identical to having run it live. Returns
+    /// false on any divergence (the caller rolls back to the cycle
+    /// boundary and resumes live execution).
+    fn replay_cycle(&mut self, pattern: &[OpRec]) -> bool {
+        let base = self.base;
+        for &op in pattern {
+            match op {
+                OpRec::Dispatch { delta, local, switch } => {
+                    let local = local as usize;
+                    let Some(frame) = self.admitted.checked_sub(delta as usize) else {
+                        return false;
+                    };
+                    let gid = frame * self.n + local;
+                    let mask = base.engine_mask[local];
+                    if mask & self.busy_mask != 0 {
+                        return false;
+                    }
+                    let mut start = self.t;
+                    let mut dur = base.duration_s[local];
+                    if base.mode_locked[local] {
+                        if switch {
+                            if self.current_mode.is_some()
+                                && self.current_mode != Some(base.op[local].mode)
+                            {
+                                self.switches += 1;
+                                self.mode_ready_at = self.t + MODE_SWITCH_S;
+                            }
+                            self.current_mode = Some(base.op[local].mode);
+                        } else {
+                            let Some(c) = self.current_mode else {
+                                return false;
+                            };
+                            dur = base.duration_at(local, c);
+                        }
+                        start = start.max(self.mode_ready_at);
+                        self.mode_locked_running += 1;
+                    } else if base.clock_scaled[local] {
+                        if let Some(c) = self.current_mode {
+                            dur = base.duration_at(local, c);
+                        }
+                    }
+                    let mut m = mask;
+                    while m != 0 {
+                        let e = m.trailing_zeros() as usize;
+                        self.busy[e] += dur;
+                        m &= m - 1;
+                    }
+                    self.busy_mask |= mask;
+                    self.sweep.push_span(start, start + dur, base.mode_locked[local]);
+                    self.running.push(RunEntry {
+                        end: start + dur,
+                        gid,
+                        mask,
+                        cluster: base.mode_locked[local],
+                    });
+                }
+                OpRec::Pop { delta, local } => {
+                    let Some(frame) = self.admitted.checked_sub(delta as usize) else {
+                        return false;
+                    };
+                    let expect = frame * self.n + local as usize;
+                    let Some(bi) = self.min_running() else {
+                        return false;
+                    };
+                    if self.running[bi].gid != expect {
+                        return false;
+                    }
+                    let r = self.running.swap_remove(bi);
+                    self.t = r.end;
+                    self.makespan = self.makespan.max(r.end);
+                    self.sweep.drain_until(r.end);
+                    self.busy_mask &= !r.mask;
+                    if r.cluster {
+                        self.mode_locked_running -= 1;
+                    }
+                    self.done += 1;
+                    self.live -= 1;
+                }
+                OpRec::Retire => self.first_frame += 1,
+                OpRec::Admit => {
+                    if self.admitted >= self.frames || !self.variant_free(self.admitted) {
+                        return false;
+                    }
+                    for (&c, &v) in base.charge_cat.iter().zip(&base.charge_mj) {
+                        self.cats[c as usize] += v;
+                    }
+                    self.admitted += 1;
+                    self.live += self.n;
+                    self.peak_live = self.peak_live.max(self.live);
                 }
             }
+        }
+        true
+    }
+
+    /// Replay the certified steady-state pattern until the stream's
+    /// admissions are exhausted (or a verification check fails), then
+    /// rebuild the live structures from the frame-relative fixpoint and
+    /// hand back to event-driven execution for the drain tail.
+    fn fast_forward(&mut self) {
+        let (k, pattern, snap) = self.engage.take().expect("fast_forward without engage");
+        // In-flight jobs move from the event heap to the flat running set
+        // (all in-window frames are base-template — the variant guard).
+        self.running.clear();
+        while let Some(ev) = self.heap.pop() {
+            let local = ev.job % self.n;
+            self.running.push(RunEntry {
+                end: ev.t,
+                gid: ev.job,
+                mask: self.base.engine_mask[local],
+                cluster: self.base.mode_locked[local],
+            });
+        }
+        while self.admitted + k <= self.frames {
+            let undo = self.save_floats();
+            if self.replay_cycle(&pattern) {
+                self.ff_frames += k;
+            } else {
+                self.restore_floats(undo);
+                self.bails += 1;
+                break;
+            }
+        }
+        self.rebuild(&snap);
+        self.running.clear();
+        self.ring.clear();
+        self.streak = [0; FF_MAX_PERIOD + 1];
+        self.confirm = None;
+        self.cur_ops.clear();
+    }
+
+    /// Reconstruct the discrete scheduler structures from the
+    /// frame-relative fixpoint, shifted to the current admission boundary.
+    fn rebuild(&mut self, snap: &RelSnapshot) {
+        debug_assert_eq!(self.admitted - self.first_frame, snap.slots.len());
+        debug_assert_eq!(self.busy_mask, snap.busy_mask);
+        debug_assert_eq!(self.current_mode, snap.current_mode);
+        debug_assert_eq!(self.mode_locked_running, snap.mode_locked_running);
+        let n = self.n;
+        let admitted = self.admitted;
+        let gid = move |&(delta, local): &(u32, u32)| (admitted - delta as usize) * n + local as usize;
+        self.slots.clear();
+        for (indeg, remaining) in &snap.slots {
+            self.slots.push_back(FrameSlot { indeg: indeg.clone(), remaining: *remaining });
+        }
+        for (e, q) in self.io_ready.iter_mut().enumerate() {
+            q.clear();
+            for r in &snap.io[e] {
+                q.insert(gid(r));
+            }
+        }
+        self.ml_ready.clear();
+        for r in &snap.ml {
+            self.ml_ready.insert(gid(r));
+        }
+        self.heap.clear();
+        for r in &self.running {
+            self.heap.push(Ev { t: r.end, job: r.gid });
         }
     }
 
     fn run(mut self) -> SchedResult {
         self.fill();
         loop {
+            // A certified steady state replays here — exactly the
+            // admission boundary the pattern was recorded at.
+            if self.engage.is_some() {
+                self.fast_forward();
+            }
             // Dispatch everything startable at time t, lowest job id first.
             while let Some((id, switch)) = self.find_pick() {
                 self.dispatch(id, switch);
@@ -1038,6 +1733,12 @@ impl<'g> ExecCore<'g> {
             self.t = ev.t;
             self.makespan = self.makespan.max(ev.t);
             self.sweep.drain_until(ev.t);
+            if self.recording() {
+                self.cur_ops.push(OpRec::Pop {
+                    delta: (self.admitted - ev.job / self.n) as u32,
+                    local: (ev.job % self.n) as u32,
+                });
+            }
             self.complete(ev.job);
             self.fill();
         }
@@ -1048,18 +1749,26 @@ impl<'g> ExecCore<'g> {
             self.done,
             self.n * self.frames
         );
+        let makespan = self.makespan;
         let (overlap_s, coresidency_s) = self.sweep.finish();
-        let mut ledger = std::mem::take(&mut self.ledger);
-        self.g.charge_overheads_into(&mut ledger, self.makespan);
+        // Transfer the flat accumulators into a ledger (category order),
+        // then the makespan-proportional overheads — the same order the
+        // job-structure `finish_ledger` charges, so sums match bitwise.
+        let mut ledger = EnergyLedger::new();
+        for (i, cat) in Category::all().into_iter().enumerate() {
+            ledger.charge_mj(cat, self.cats[i]);
+        }
+        charge_overheads(&mut ledger, self.base.vdd, self.base.ext_mem_present, makespan);
         SchedResult {
             ledger,
-            makespan_s: self.makespan,
+            makespan_s: makespan,
             mode_switches: self.switches,
             busy_s: self.busy,
             n_jobs: self.n * self.frames,
             overlap_s,
             coresidency_s,
             peak_resident_jobs: self.peak_live,
+            fast_forwarded_frames: self.ff_frames,
         }
     }
 }
@@ -1070,11 +1779,13 @@ pub struct Scheduler;
 impl Scheduler {
     /// Schedule `graph` to completion and return makespan, energy and
     /// per-engine statistics. Deterministic: dispatch prefers the
-    /// lowest-id ready job, completion ties resolve by job id. Dispatch is
-    /// indexed (per-engine ready queues + a mode-locked partition), with
+    /// lowest-id ready job, completion ties resolve by job id. The graph
+    /// is lowered to a [`CompiledFrame`] and dispatch is indexed
+    /// (per-engine ready queues + a mode-locked partition), with
     /// [`Scheduler::run_scan`] as the linear-scan parity reference.
     pub fn run(graph: &JobGraph) -> SchedResult {
-        ExecCore::new(graph, 1, 1).run()
+        let cf = CompiledFrame::compile(graph);
+        ExecCore::new(&cf, &[], 1, 1, false).run()
     }
 
     /// The original linear-scan dispatcher: rescans the whole ready set on
@@ -1203,6 +1914,7 @@ impl Scheduler {
             overlap_s,
             coresidency_s,
             peak_resident_jobs: n,
+            fast_forwarded_frames: 0,
         }
     }
 
@@ -1211,29 +1923,103 @@ impl Scheduler {
     /// when the frequency-rescale penalty is cheaper than the FLL relock
     /// a private mode window would cost.
     fn co_resident(c: OperatingMode, job: &Job) -> bool {
-        if c == job.op.mode {
-            return true;
-        }
-        if !c.supports(job.op.mode) {
-            return false;
-        }
-        job.duration_at(c) - job.duration_s <= MODE_SWITCH_S
+        co_resident_at(c, job.op, job.duration_s)
     }
 }
 
 /// Bounded-window streaming: schedules `frames` instances of a frame
 /// template through the shared execution core, admitting at most `window`
-/// frames at a time and recycling the dependency state of retired frames.
-/// Memory and dispatch cost are O(window × frame jobs) regardless of the
-/// stream length; with `window ≥ frames` the result is bitwise identical
-/// to `Scheduler::run(&frame.repeat(frames))`.
+/// frames at a time (clamped to the stream length) and recycling the
+/// dependency state of retired frames. Memory and dispatch cost are
+/// O(window × frame jobs) regardless of the stream length; with
+/// `window ≥ frames` the result is bitwise identical to
+/// `Scheduler::run(&frame.repeat(frames))`. The production entry points
+/// compile the template and fast-forward through the periodic steady
+/// state — bitwise identical to the live path (see the module docs),
+/// which survives as [`StreamScheduler::run_live`] for parity testing.
 pub struct StreamScheduler;
 
 impl StreamScheduler {
+    /// Stream `frames` instances of `frame`: compiled template +
+    /// steady-state fast-forward.
     pub fn run(frame: &JobGraph, frames: usize, window: usize) -> SchedResult {
+        Self::run_compiled(&CompiledFrame::compile(frame), frames, window)
+    }
+
+    /// [`StreamScheduler::run`] over a pre-compiled template — compile
+    /// once, stream many (e.g. one template shared by every shard of a
+    /// [`crate::system::ShardedStream`]).
+    pub fn run_compiled(frame: &CompiledFrame, frames: usize, window: usize) -> SchedResult {
         assert!(frames >= 1, "streaming needs at least one frame");
         assert!(window >= 1, "streaming needs at least one in-flight frame of window");
-        ExecCore::new(frame, frames, window).run()
+        ExecCore::new(frame, &[], frames, window, true).run()
+    }
+
+    /// The live windowed path with fast-forward disabled — the bitwise
+    /// parity reference for [`StreamScheduler::run`] (the PR 4 semantics),
+    /// and the baseline `bench_scheduler` measures the replay win against.
+    pub fn run_live(frame: &JobGraph, frames: usize, window: usize) -> SchedResult {
+        assert!(frames >= 1, "streaming needs at least one frame");
+        assert!(window >= 1, "streaming needs at least one in-flight frame of window");
+        let cf = CompiledFrame::compile(frame);
+        ExecCore::new(&cf, &[], frames, window, false).run()
+    }
+
+    /// Stream with per-frame template overrides: a frame listed in
+    /// `variants` executes its own graph instead of the base template
+    /// (e.g. a mode override on one frame of a long stream). Variants must
+    /// be *structurally* identical to the base — same job count, engine
+    /// sets and dependencies; operating points, service times and energy
+    /// charges may differ. Fast-forward suspends while a variant is in (or
+    /// ahead of) the window and re-engages after it retires.
+    pub fn run_with_variants(
+        frame: &JobGraph,
+        frames: usize,
+        window: usize,
+        variants: &[(usize, &JobGraph)],
+    ) -> SchedResult {
+        Self::run_variants_inner(frame, frames, window, variants, true)
+    }
+
+    /// [`StreamScheduler::run_with_variants`] with fast-forward disabled —
+    /// the parity reference for the variant fallback path.
+    pub fn run_with_variants_live(
+        frame: &JobGraph,
+        frames: usize,
+        window: usize,
+        variants: &[(usize, &JobGraph)],
+    ) -> SchedResult {
+        Self::run_variants_inner(frame, frames, window, variants, false)
+    }
+
+    fn run_variants_inner(
+        frame: &JobGraph,
+        frames: usize,
+        window: usize,
+        variants: &[(usize, &JobGraph)],
+        ff: bool,
+    ) -> SchedResult {
+        assert!(frames >= 1, "streaming needs at least one frame");
+        assert!(window >= 1, "streaming needs at least one in-flight frame of window");
+        let base = CompiledFrame::compile(frame);
+        let mut compiled: Vec<(usize, CompiledFrame)> =
+            variants.iter().map(|&(f, g)| (f, CompiledFrame::compile(g))).collect();
+        compiled.sort_by_key(|v| v.0);
+        for w in compiled.windows(2) {
+            assert!(w[0].0 != w[1].0, "duplicate variant for frame {}", w[0].0);
+        }
+        for (f, v) in &compiled {
+            assert!(*f < frames, "variant frame {f} beyond the {frames}-frame stream");
+            assert!(
+                base.structurally_eq(v),
+                "variant for frame {f} must match the template's job structure"
+            );
+            assert!(
+                v.vdd == base.vdd && v.ext_mem_present == base.ext_mem_present,
+                "variant for frame {f} must share the template's supply and external memories"
+            );
+        }
+        ExecCore::new(&base, &compiled, frames, window, ff).run()
     }
 }
 
@@ -1253,6 +2039,19 @@ mod tests {
             duration_s,
             deps: deps.to_vec(),
             charges: vec![(Category::OtherSw, Component::Core, 1.0)],
+        }
+    }
+
+    /// The flat category accumulator's index map must agree with
+    /// [`Category::all`] — the transfer loop in `ExecCore::run` pairs the
+    /// two by position, so a drift would silently mis-bucket the energy
+    /// breakdown on every path at once.
+    #[test]
+    fn cat_index_matches_category_all_order() {
+        let all = Category::all();
+        assert_eq!(all.len(), N_CATS);
+        for (i, c) in all.into_iter().enumerate() {
+            assert_eq!(cat_index(c), i, "{c:?}");
         }
     }
 
@@ -1744,5 +2543,194 @@ mod tests {
         let a = run.ledger.energy_mj(Category::OtherSw);
         let b = ana.ledger.energy_mj(Category::OtherSw);
         assert!((a - b).abs() < 1e-12 * (1.0 + a.abs()), "{a} vs {b}");
+    }
+
+    /// Bitwise agreement of two scheduler results — the fast-forward
+    /// acceptance bar (time, energy, busy, overlap, residency).
+    fn assert_bitwise(a: &SchedResult, b: &SchedResult, label: &str) {
+        assert_eq!(a.makespan_s.to_bits(), b.makespan_s.to_bits(), "{label}: makespan");
+        assert_eq!(a.mode_switches, b.mode_switches, "{label}: relocks");
+        assert_eq!(a.n_jobs, b.n_jobs, "{label}: job count");
+        assert_eq!(a.peak_resident_jobs, b.peak_resident_jobs, "{label}: peak residency");
+        for cat in Category::all() {
+            assert_eq!(
+                a.ledger.energy_mj(cat).to_bits(),
+                b.ledger.energy_mj(cat).to_bits(),
+                "{label}: {cat:?} energy"
+            );
+        }
+        for e in Engine::ALL {
+            assert_eq!(
+                a.busy_s[e.index()].to_bits(),
+                b.busy_s[e.index()].to_bits(),
+                "{label}: {} busy",
+                e.name()
+            );
+        }
+        assert_eq!(a.overlap_s.to_bits(), b.overlap_s.to_bits(), "{label}: overlap");
+        assert_eq!(a.coresidency_s.to_bits(), b.coresidency_s.to_bits(), "{label}: coresidency");
+    }
+
+    /// A tiled-pipeline-shaped frame (fetch → decrypt → conv → epilogue →
+    /// DMA per tile) that settles into a periodic steady state when
+    /// streamed.
+    fn pipeline_frame() -> JobGraph {
+        let mut g = JobGraph::new();
+        for t in 0..3usize {
+            let f = g.push(job(Engine::UdmaFram, OperatingMode::Sw, 0.01 * (t + 1) as f64, &[]));
+            let x = g.push(job(Engine::HwcryptAes, OperatingMode::CryCnnSw, 0.004, &[f]));
+            let c = g.push(job(Engine::Hwce, OperatingMode::CryCnnSw, 0.02, &[x]));
+            let e = g.push(multi(
+                vec![Engine::Core(0), Engine::Core(1)],
+                OperatingMode::CryCnnSw,
+                0.003,
+                &[c],
+            ));
+            g.push(job(Engine::ClusterDma, OperatingMode::CryCnnSw, 0.002, &[e]));
+        }
+        g
+    }
+
+    /// Tentpole contract: steady-state fast-forward is bitwise identical
+    /// to the live windowed path, and it actually engages on a periodic
+    /// stream (replaying most of the frames).
+    #[test]
+    fn fast_forward_matches_live_and_engages() {
+        // simple serial chain: compute + store, strictly periodic
+        let mut chain = JobGraph::new();
+        let c = chain.push(job(Engine::Core(0), OperatingMode::Sw, 2.0, &[]));
+        chain.push(job(Engine::UdmaFram, OperatingMode::Sw, 1.0, &[c]));
+        let live = StreamScheduler::run_live(&chain, 64, 2);
+        let ff = StreamScheduler::run(&chain, 64, 2);
+        assert_bitwise(&ff, &live, "serial chain");
+        assert_eq!(live.fast_forwarded_frames, 0, "live path must not replay");
+        assert!(
+            ff.fast_forwarded_frames >= 40,
+            "only {} of 64 frames fast-forwarded",
+            ff.fast_forwarded_frames
+        );
+        // pipeline-shaped frame across several windows
+        let g = pipeline_frame();
+        for window in [2usize, 4, 8] {
+            let live = StreamScheduler::run_live(&g, 48, window);
+            let ff = StreamScheduler::run(&g, 48, window);
+            assert_bitwise(&ff, &live, &format!("pipeline w{window}"));
+            assert!(ff.fast_forwarded_frames > 0, "window {window} never engaged");
+        }
+    }
+
+    /// Below the detection warmup there is nothing to replay: short
+    /// streams run fully live and stay bitwise identical.
+    #[test]
+    fn short_streams_never_fast_forward() {
+        let g = pipeline_frame();
+        for frames in [1usize, 2, 3] {
+            for window in [1usize, 2, 8] {
+                let live = StreamScheduler::run_live(&g, frames, window);
+                let ff = StreamScheduler::run(&g, frames, window);
+                assert_bitwise(&ff, &live, &format!("f{frames} w{window}"));
+                assert_eq!(ff.fast_forwarded_frames, 0, "f{frames} w{window}");
+            }
+        }
+    }
+
+    /// Satellite fix: a window wider than the stream clamps to the stream
+    /// length — identical schedule, and no phantom slots to account for.
+    #[test]
+    fn oversized_window_clamps_to_stream() {
+        let g = pipeline_frame();
+        let wide = StreamScheduler::run(&g, 3, 1024);
+        let exact = StreamScheduler::run(&g, 3, 3);
+        assert_bitwise(&wide, &exact, "clamped window");
+        assert_eq!(wide.peak_resident_jobs, 3 * g.len());
+    }
+
+    /// Concatenate per-frame templates into one materialized graph (the
+    /// reference for the variant streaming path).
+    fn concat_frames(tpls: &[&JobGraph]) -> JobGraph {
+        let mut out = JobGraph::new();
+        out.ext_mem_present = tpls[0].ext_mem_present;
+        let mut off = 0usize;
+        for t in tpls {
+            for jb in &t.jobs {
+                let mut j = jb.clone();
+                for d in &mut j.deps {
+                    *d += off;
+                }
+                out.jobs.push(j);
+            }
+            off += t.jobs.len();
+        }
+        out
+    }
+
+    /// Satellite edge case: a mode-override variant mid-stream breaks
+    /// periodicity — the scheduler must fall back to live execution around
+    /// it (bitwise identical to the no-fast-forward path and to the
+    /// materialized concatenation) and re-engage afterwards.
+    #[test]
+    fn mid_stream_variant_falls_back_to_live() {
+        let base = pipeline_frame();
+        // same structure, slower service times (e.g. hosted at a derated
+        // point) — breaks the period at frame 17
+        let mut variant = base.clone();
+        for j in &mut variant.jobs {
+            j.duration_s *= 3.0;
+        }
+        let frames = 40usize;
+        let vats: [(usize, &JobGraph); 1] = [(17, &variant)];
+        for window in [2usize, 4] {
+            let live = StreamScheduler::run_with_variants_live(&base, frames, window, &vats);
+            let ff = StreamScheduler::run_with_variants(&base, frames, window, &vats);
+            assert_bitwise(&ff, &live, &format!("variant w{window}"));
+            assert!(
+                ff.fast_forwarded_frames > 0,
+                "window {window}: must re-engage after the variant retires"
+            );
+            // the variant frame itself is never replayed
+            assert!(ff.fast_forwarded_frames <= frames - 1);
+        }
+        // window >= frames: the whole stream materializes — compare against
+        // the concatenated graph run through the single-shot scheduler
+        let mut tpls: Vec<&JobGraph> = vec![&base; frames];
+        tpls[17] = &variant;
+        let mat = Scheduler::run(&concat_frames(&tpls));
+        let full = StreamScheduler::run_with_variants(&base, frames, frames, &vats);
+        assert_bitwise(&full, &mat, "variant materialized");
+    }
+
+    /// The compiled template records the same structure the job graph
+    /// described (masks, roots, CSR successors, charge rows).
+    #[test]
+    fn compiled_frame_mirrors_graph_structure() {
+        let g = pipeline_frame();
+        let cf = CompiledFrame::compile(&g);
+        assert_eq!(cf.len(), g.len());
+        assert!(!cf.is_empty());
+        for (i, jb) in g.jobs.iter().enumerate() {
+            let mut mask = 0u16;
+            for &e in &jb.engines {
+                mask |= 1 << e.index();
+            }
+            assert_eq!(cf.engine_mask[i], mask, "job {i} mask");
+            assert_eq!(cf.mode_locked[i], jb.mode_locked(), "job {i} ml");
+            assert_eq!(cf.indeg0[i] as usize, jb.deps.len(), "job {i} indeg");
+            for &d in &jb.deps {
+                assert!(cf.succ_of(d).contains(&(i as u32)), "edge {d}->{i} lost");
+            }
+        }
+        let total_rows: usize = g.jobs.iter().map(|j| j.charges.len()).sum();
+        assert_eq!(cf.charge_mj.len(), total_rows);
+        let sum: f64 = cf.charge_mj.iter().sum();
+        assert!((sum - g.active_mj()).abs() < 1e-12 * (1.0 + sum), "charge rows vs active_mj");
+    }
+
+    #[test]
+    #[should_panic(expected = "job structure")]
+    fn structurally_different_variant_rejected() {
+        let base = pipeline_frame();
+        let mut other = JobGraph::new();
+        other.push(job(Engine::Core(0), OperatingMode::Sw, 1.0, &[]));
+        StreamScheduler::run_with_variants(&base, 8, 2, &[(3, &other)]);
     }
 }

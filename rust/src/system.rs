@@ -16,19 +16,29 @@
 //!   *and* to JSON ([`crate::json`], hand-rolled — the crate stays
 //!   anyhow-only).
 //!
-//! The multi-SoC sharding item on the ROADMAP plugs in here: a sharded
-//! system is another implementor of the same spec-in/report-out surface.
+//! Multi-SoC scale-out lives here too: [`ShardedStream`] splits a frame
+//! stream across S simulated Fulmine chips on `std::thread` workers (the
+//! job-graph seam is the natural sharding boundary — frames are
+//! independent, chips share nothing), and a [`RunSpec`] with
+//! `shards > 1` returns the same [`RunReport`] with per-shard statistics
+//! (simulated makespan, energy, and the `serialized_bound`/`analytic`
+//! admission estimates) merged in: energy sums across chips, the
+//! makespan is the slowest shard's, and throughput scales near-linearly.
 
 use crate::coordinator::{
-    stream_graph_windowed, ExecConfig, ModeOverrides, Rung, StreamResult, Tiling, UseCaseResult,
+    share, stream_graph_windowed, ExecConfig, ModeOverrides, Rung, StreamResult, Tiling,
+    UseCaseResult,
 };
-use crate::energy::Category;
+use crate::energy::{Category, EnergyLedger};
 use crate::hwce::golden::WeightPrec;
 use crate::json::Json;
-use crate::soc::sched::{Engine, Scheduler};
+use crate::soc::sched::{
+    CompiledFrame, Engine, JobGraph, SchedResult, Scheduler, StreamScheduler, N_ENGINES,
+};
 use crate::workload::{frame_graph, Registry, Workload};
 use anyhow::{anyhow, bail, Result};
 use std::fmt::Write as _;
+use std::time::Instant;
 
 /// How a [`RunSpec`] selects a ladder rung.
 #[derive(Debug, Clone, PartialEq)]
@@ -67,9 +77,15 @@ pub struct RunSpec {
     /// Applied on top of the selected rung's configuration.
     pub overrides: ModeOverrides,
     /// In-flight frame window of the streaming scheduler
-    /// ([`crate::soc::sched::DEFAULT_STREAM_WINDOW`] when `None`). Live
-    /// scheduler state is O(window × frame jobs) whatever `frames` is.
+    /// ([`crate::soc::sched::DEFAULT_STREAM_WINDOW`] when `None`; clamped
+    /// to the stream length). Live scheduler state is
+    /// O(window × frame jobs) whatever `frames` is.
     pub window: Option<usize>,
+    /// Simulated Fulmine chips to split the stream across (1 = one SoC,
+    /// the default). With S > 1 the frames are sharded over S chips
+    /// simulated on parallel host threads ([`ShardedStream`]) and the
+    /// report carries per-shard statistics.
+    pub shards: usize,
 }
 
 impl RunSpec {
@@ -80,6 +96,7 @@ impl RunSpec {
             rung: RungSel::Best,
             overrides: ModeOverrides::default(),
             window: None,
+            shards: 1,
         }
     }
 
@@ -101,6 +118,172 @@ impl RunSpec {
     pub fn window(mut self, window: usize) -> Self {
         self.window = Some(window);
         self
+    }
+
+    pub fn shards(mut self, shards: usize) -> Self {
+        self.shards = shards;
+        self
+    }
+}
+
+/// Per-chip statistics of a sharded stream run ([`ShardedStream`]).
+#[derive(Debug, Clone)]
+pub struct ShardStat {
+    /// Shard index (0..S).
+    pub shard: usize,
+    /// Frames this chip streamed (near-equal [`share`] split).
+    pub frames: usize,
+    /// Simulated makespan of this chip's stream (s).
+    pub time_s: f64,
+    /// Total energy this chip consumed (mJ).
+    pub energy_mj: f64,
+    pub mode_switches: u64,
+    pub peak_resident_jobs: usize,
+    /// Frames this chip's scheduler replayed through the steady-state
+    /// fast-forward path.
+    pub fast_forwarded_frames: usize,
+    /// Host wall-clock spent simulating this shard (s) — the simulator's
+    /// own cost, not simulated time.
+    pub wall_s: f64,
+    /// Admission estimate for this shard's share: the analytic
+    /// (serialized-cluster) single-frame replay × frames.
+    pub analytic_est_s: f64,
+    /// Worst-case admission bound: [`JobGraph::serialized_bound`] × frames
+    /// — no schedule of this shard can exceed it.
+    pub serialized_bound_s: f64,
+}
+
+/// Frame-parallel multi-SoC scale-out: split a stream of identical frames
+/// across S simulated Fulmine chips, one `std::thread` worker per chip.
+/// The frame template is compiled once ([`CompiledFrame`]) and shared
+/// read-only by every worker; each chip streams its [`share`] of the
+/// frames through the bounded-window scheduler independently (chips share
+/// nothing — the job-graph seam makes frames embarrassingly parallel, the
+/// scaling axis multi-cluster endpoint SoCs like Vega take in hardware).
+pub struct ShardedStream;
+
+impl ShardedStream {
+    /// Run `frames` split across `shards` chips (each chip streams its
+    /// share with in-flight window `window`, clamped per shard). Returns
+    /// per-shard scheduler results and statistics in shard order; shards
+    /// is clamped to `frames` so no chip receives an empty stream.
+    pub fn run(
+        graph: &JobGraph,
+        frames: usize,
+        window: usize,
+        shards: usize,
+    ) -> Vec<(SchedResult, ShardStat)> {
+        assert!(frames >= 1, "sharded streaming needs at least one frame");
+        assert!(window >= 1, "sharded streaming needs at least one in-flight frame of window");
+        assert!(shards >= 1, "sharded streaming needs at least one chip");
+        let shards = shards.min(frames);
+        let template = CompiledFrame::compile(graph);
+        let analytic_s = graph.analytic().makespan_s;
+        let bound_s = graph.serialized_bound();
+        let shares: Vec<usize> = (0..shards).map(|s| share(frames, shards, s)).collect();
+        let results: Vec<(SchedResult, f64)> = std::thread::scope(|scope| {
+            let template = &template;
+            let handles: Vec<_> = shares
+                .iter()
+                .map(|&f| {
+                    scope.spawn(move || {
+                        let t0 = Instant::now();
+                        let r = StreamScheduler::run_compiled(template, f, window.min(f));
+                        (r, t0.elapsed().as_secs_f64())
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("shard worker panicked"))
+                .collect()
+        });
+        results
+            .into_iter()
+            .enumerate()
+            .map(|(i, (r, wall_s))| {
+                let stat = ShardStat {
+                    shard: i,
+                    frames: shares[i],
+                    time_s: r.makespan_s,
+                    energy_mj: r.ledger.total_mj(),
+                    mode_switches: r.mode_switches,
+                    peak_resident_jobs: r.peak_resident_jobs,
+                    fast_forwarded_frames: r.fast_forwarded_frames,
+                    wall_s,
+                    analytic_est_s: analytic_s * shares[i] as f64,
+                    serialized_bound_s: bound_s * shares[i] as f64,
+                };
+                (r, stat)
+            })
+            .collect()
+    }
+}
+
+/// Merge per-shard scheduler results into one [`StreamResult`]: energy,
+/// busy time, overlap and relocks sum across chips; the makespan is the
+/// slowest shard's (chips run concurrently); peak residency is the
+/// per-chip maximum (each chip bounds its own memory). Idle/standby
+/// energy accrues per chip over *its own* makespan — a chip that drains
+/// its share early enters deep sleep (§II power modes) rather than
+/// leaking until the slowest shard finishes — which keeps the invariant
+/// that the merged energy is exactly the sum of the shard energies.
+fn merge_sharded(
+    label: &str,
+    graph: &JobGraph,
+    frames: usize,
+    window: usize,
+    eq_ops_per_frame: u64,
+    parts: &[(SchedResult, ShardStat)],
+) -> StreamResult {
+    let single = Scheduler::run(graph);
+    let analytic = graph.analytic();
+    let mut ledger = EnergyLedger::new();
+    let mut busy_s = [0.0f64; N_ENGINES];
+    let (mut overlap_s, mut coresidency_s) = (0.0f64, 0.0f64);
+    let mut mode_switches = 0u64;
+    let (mut peak, mut total_jobs, mut ff) = (0usize, 0usize, 0usize);
+    let mut time_s = 0.0f64;
+    let mut max_share = 0usize;
+    for (r, st) in parts {
+        max_share = max_share.max(st.frames);
+        ledger.merge(&r.ledger);
+        for e in 0..N_ENGINES {
+            busy_s[e] += r.busy_s[e];
+        }
+        overlap_s += r.overlap_s;
+        coresidency_s += r.coresidency_s;
+        mode_switches += r.mode_switches;
+        peak = peak.max(r.peak_resident_jobs);
+        total_jobs += r.n_jobs;
+        ff += r.fast_forwarded_frames;
+        time_s = time_s.max(r.makespan_s);
+    }
+    // chips run concurrently: elapsed time is the slowest shard, not the
+    // sum `EnergyLedger::merge` accumulated
+    ledger.elapsed_s = time_s;
+    let energy_mj = ledger.total_mj();
+    StreamResult {
+        label: label.to_string(),
+        frames,
+        time_s,
+        fps: frames as f64 / time_s,
+        energy_mj,
+        pj_per_op: energy_mj * 1e9 / (eq_ops_per_frame as f64 * frames as f64),
+        single_frame_s: single.makespan_s,
+        single_frame_analytic_s: analytic.makespan_s,
+        speedup: single.makespan_s * frames as f64 / time_s,
+        mode_switches,
+        busy_s,
+        overlap_s,
+        coresidency_s,
+        // each chip clamps to its own share; report the widest window any
+        // shard actually ran with
+        window: window.min(max_share),
+        peak_resident_jobs: peak,
+        total_jobs,
+        fast_forwarded_frames: ff,
+        ledger,
     }
 }
 
@@ -156,6 +339,9 @@ pub struct RunReport {
     pub frames: usize,
     pub result: StreamResult,
     pub tenants: Vec<TenantRow>,
+    /// Per-chip statistics of a sharded run (empty for a single SoC —
+    /// the single-chip report is byte-identical to the unsharded one).
+    pub shards: Vec<ShardStat>,
 }
 
 impl RunReport {
@@ -200,12 +386,23 @@ impl RunReport {
                 .unwrap();
             }
         }
+        // busy time sums across chips in a sharded run: normalize
+        // utilization by chip-time (makespan × chips) so it stays ≤ 100 %
+        // — a fleet average per engine type. S = 1 reduces to the
+        // historical single-chip rendering unchanged.
+        let chips = self.shards.len().max(1) as f64;
         writeln!(s, "{:<14} {:>10} {:>7}", "engine", "busy [s]", "util").unwrap();
         for e in Engine::ALL {
             let busy = r.busy_s[e.index()];
             if busy > 0.0 {
-                writeln!(s, "{:<14} {:>10.4} {:>6.1}%", e.name(), busy, busy / r.time_s * 100.0)
-                    .unwrap();
+                writeln!(
+                    s,
+                    "{:<14} {:>10.4} {:>6.1}%",
+                    e.name(),
+                    busy,
+                    busy / (r.time_s * chips) * 100.0
+                )
+                .unwrap();
             }
         }
         writeln!(
@@ -220,12 +417,31 @@ impl RunReport {
             r.window, r.peak_resident_jobs, r.total_jobs
         )
         .unwrap();
+        if !self.shards.is_empty() {
+            writeln!(
+                s,
+                "sharded across {} SoCs (frame-parallel chips: energy/busy/overlap summed, makespan = slowest shard, util = fleet average)",
+                self.shards.len()
+            )
+            .unwrap();
+            for st in &self.shards {
+                writeln!(
+                    s,
+                    "  shard {} {:>6} frames  {:>9.4} s  {:>9.4} mJ  analytic est {:>9.4} s  bound {:>9.4} s",
+                    st.shard, st.frames, st.time_s, st.energy_mj, st.analytic_est_s, st.serialized_bound_s
+                )
+                .unwrap();
+            }
+        }
         writeln!(s, "{}", r.ledger.report(&format!("{} x{frames}", self.workload))).unwrap();
         s
     }
 
     pub fn to_json(&self) -> Json {
         let r = &self.result;
+        // same chip-time normalization as the text report: per-chip
+        // utilization for S = 1, fleet average per engine type otherwise
+        let chips = self.shards.len().max(1) as f64;
         let mut engines = Vec::new();
         for e in Engine::ALL {
             let busy = r.busy_s[e.index()];
@@ -233,7 +449,7 @@ impl RunReport {
                 engines.push(Json::obj(vec![
                     ("name", Json::string(e.name())),
                     ("busy_s", Json::num(busy)),
-                    ("utilization", Json::num(busy / r.time_s)),
+                    ("utilization", Json::num(busy / (r.time_s * chips))),
                 ]));
             }
         }
@@ -254,6 +470,36 @@ impl RunReport {
             ("window", Json::num(r.window as f64)),
             ("peak_resident_jobs", Json::num(r.peak_resident_jobs as f64)),
             ("total_jobs", Json::num(r.total_jobs as f64)),
+            ("fast_forwarded_frames", Json::num(r.fast_forwarded_frames as f64)),
+            ("shard_count", Json::num(self.shards.len().max(1) as f64)),
+            (
+                "shards",
+                Json::Arr(
+                    self.shards
+                        .iter()
+                        .map(|st| {
+                            Json::obj(vec![
+                                ("shard", Json::num(st.shard as f64)),
+                                ("frames", Json::num(st.frames as f64)),
+                                ("time_s", Json::num(st.time_s)),
+                                ("energy_mj", Json::num(st.energy_mj)),
+                                ("mode_switches", Json::num(st.mode_switches as f64)),
+                                (
+                                    "peak_resident_jobs",
+                                    Json::num(st.peak_resident_jobs as f64),
+                                ),
+                                (
+                                    "fast_forwarded_frames",
+                                    Json::num(st.fast_forwarded_frames as f64),
+                                ),
+                                ("wall_s", Json::num(st.wall_s)),
+                                ("analytic_est_s", Json::num(st.analytic_est_s)),
+                                ("serialized_bound_s", Json::num(st.serialized_bound_s)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
             ("engines", Json::Arr(engines)),
             ("energy_breakdown_mj", breakdown_json(&r.ledger)),
             (
@@ -445,16 +691,30 @@ impl SocSystem {
     }
 
     /// Stream `spec.frames` frames of the workload through the scheduler
-    /// and return the structured report, with per-tenant attribution for
-    /// multi-tenant workloads.
+    /// (across `spec.shards` simulated chips when sharded) and return the
+    /// structured report, with per-tenant attribution for multi-tenant
+    /// workloads.
     pub fn run(&self, spec: &RunSpec) -> Result<RunReport> {
         let (w, rung) = self.resolve(spec)?;
         if spec.window == Some(0) {
             bail!("--window must be at least 1 (zero in-flight frames schedule nothing)");
         }
+        if spec.shards == 0 {
+            bail!("--shards must be at least 1 (no chips schedule no frames)");
+        }
         let g = frame_graph(w, rung.cfg)?;
         let window = spec.window.unwrap_or(crate::soc::sched::DEFAULT_STREAM_WINDOW);
-        let result = stream_graph_windowed(w.name(), &g, spec.frames, window, w.eq_ops());
+        let (result, shards) = if spec.shards > 1 {
+            let parts = ShardedStream::run(&g, spec.frames, window, spec.shards);
+            let result =
+                merge_sharded(w.name(), &g, spec.frames, window, w.eq_ops(), &parts);
+            (result, parts.into_iter().map(|(_, st)| st).collect())
+        } else {
+            (
+                stream_graph_windowed(w.name(), &g, spec.frames, window, w.eq_ops()),
+                Vec::new(),
+            )
+        };
         let frames = spec.frames as f64;
 
         // Per-tenant attribution. Rows follow the workload's *declared*
@@ -519,6 +779,7 @@ impl SocSystem {
             frames: spec.frames,
             result,
             tenants,
+            shards,
         })
     }
 
@@ -618,6 +879,74 @@ mod tests {
         assert!(e.contains("--window must be at least 1"), "{e}");
     }
 
+    #[test]
+    fn zero_shards_rejected() {
+        let sys = SocSystem::new();
+        let e = sys.run(&RunSpec::new("seizure").shards(0)).unwrap_err().to_string();
+        assert!(e.contains("--shards must be at least 1"), "{e}");
+    }
+
+    /// Satellite (window clamp): a window wider than the stream reports —
+    /// and schedules — exactly as the clamped window does.
+    #[test]
+    fn oversized_window_clamps_and_matches() {
+        let sys = SocSystem::new();
+        let wide = sys.run(&RunSpec::new("seizure").frames(3).window(4096)).unwrap();
+        let exact = sys.run(&RunSpec::new("seizure").frames(3).window(3)).unwrap();
+        assert_eq!(wide.result.window, 3);
+        assert_eq!(wide.result.time_s.to_bits(), exact.result.time_s.to_bits());
+        assert_eq!(wide.result.energy_mj.to_bits(), exact.result.energy_mj.to_bits());
+        assert_eq!(wide.result.peak_resident_jobs, exact.result.peak_resident_jobs);
+    }
+
+    /// Tentpole (multi-SoC sharding): splitting a stream across simulated
+    /// chips sums energy, takes the slowest shard as the makespan, scales
+    /// throughput near-linearly, and surfaces per-shard admission
+    /// estimates that bound the scheduled makespans.
+    #[test]
+    fn sharded_stream_consistency() {
+        let sys = SocSystem::new();
+        let frames = 8usize;
+        let base = sys.run(&RunSpec::new("seizure").frames(frames)).unwrap();
+        let sharded = sys.run(&RunSpec::new("seizure").frames(frames).shards(2)).unwrap();
+        assert_eq!(sharded.frames, frames);
+        assert_eq!(sharded.shards.len(), 2);
+        let f_sum: usize = sharded.shards.iter().map(|s| s.frames).sum();
+        assert_eq!(f_sum, frames, "shard shares must partition the stream");
+        let e_sum: f64 = sharded.shards.iter().map(|s| s.energy_mj).sum();
+        assert!(
+            (e_sum - sharded.result.energy_mj).abs() < 1e-9 * (1.0 + e_sum),
+            "shard energies {e_sum} vs merged {}",
+            sharded.result.energy_mj
+        );
+        assert!(
+            sharded.result.time_s <= base.result.time_s + 1e-12,
+            "sharding must not slow the stream"
+        );
+        assert!(
+            sharded.result.fps >= base.result.fps * 1.5,
+            "2 chips should approach 2x throughput: {} vs {}",
+            sharded.result.fps,
+            base.result.fps
+        );
+        for st in &sharded.shards {
+            assert!(st.time_s <= st.serialized_bound_s + 1e-9, "shard {} bound", st.shard);
+            assert!(st.analytic_est_s > 0.0 && st.frames > 0);
+        }
+        let text = sharded.render_text();
+        assert!(text.contains("sharded across 2 SoCs"), "{text}");
+        assert!(text.contains("shard 0") && text.contains("shard 1"), "{text}");
+        let json = sharded.to_json().render();
+        assert!(json.contains("\"shard_count\":2"), "{json}");
+        assert!(json.contains("\"serialized_bound_s\""), "{json}");
+        // a single-SoC report carries no shard section (byte-stable text)
+        assert!(!base.render_text().contains("sharded across"), "S=1 text must be unchanged");
+        assert_eq!(base.shards.len(), 0);
+        // more chips than frames clamps to one frame per chip
+        let over = sys.run(&RunSpec::new("seizure").frames(2).shards(16)).unwrap();
+        assert_eq!(over.shards.len(), 2);
+    }
+
     /// Satellite: per-tenant attribution is window-invariant — the active
     /// rows are identical for any window, and the attributed total always
     /// re-sums to the schedule's energy even though tighter windows may
@@ -629,7 +958,8 @@ mod tests {
         let mut reference: Option<Vec<(String, f64)>> = None;
         for window in [1usize, 2, frames, 32] {
             let r = sys.run(&RunSpec::new("mixed").frames(frames).window(window)).unwrap();
-            assert_eq!(r.result.window, window);
+            // oversized windows clamp to the stream length
+            assert_eq!(r.result.window, window.min(frames));
             let attributed: f64 = r.tenants.iter().map(|t| t.energy_mj).sum();
             assert!(
                 (attributed - r.result.energy_mj).abs() < 1e-6 * r.result.energy_mj,

@@ -22,7 +22,13 @@
 //!   reproduces the materialized `Scheduler::run(graph.repeat(frames))`
 //!   makespan/energy bitwise, bounded windows complete within the
 //!   serialization bound, and the peak resident job count depends on the
-//!   window — not the stream length.
+//!   window — not the stream length;
+//! * steady-state fast-forward: the compiled replay path
+//!   (`StreamScheduler::run`) is bitwise identical — time, energy per
+//!   category, per-engine busy time, overlap, residency — to the live
+//!   windowed path (`StreamScheduler::run_live`) on random graphs and on
+//!   every rung of every registered workload, and it genuinely engages
+//!   (replays most of the stream) on the periodic §IV workloads.
 
 use fulmine::coordinator::{
     facedet, seizure, surveillance, ExecConfig, GraphBuilder, Tiling,
@@ -248,6 +254,108 @@ fn prop_windowed_stream_parity_and_bounds() {
                 assert!(win.peak_resident_jobs <= window * g.len(), "seed {seed}");
             }
         }
+    }
+}
+
+/// Tentpole parity (steady-state fast-forward): `StreamScheduler::run`
+/// (compiled template + replay) is bitwise identical to the live windowed
+/// path on random graphs — including graphs with tenant segments,
+/// co-residency, relocks and clock-scaled movers — across stream depths
+/// and windows. Random graphs rarely settle into a periodic steady state;
+/// when they do, the replayed result must still be indistinguishable.
+#[test]
+fn prop_fast_forward_matches_live_on_random_graphs() {
+    for seed in 0..40u64 {
+        let g = random_graph_with(9000 + seed, seed % 2 == 0);
+        for (frames, window) in [(1usize, 1usize), (2, 8), (7, 2), (40, 3), (60, 4)] {
+            let live = StreamScheduler::run_live(&g, frames, window);
+            let ff = StreamScheduler::run(&g, frames, window);
+            assert_results_match(&format!("seed {seed} f{frames} w{window}"), &ff, &live);
+            assert_eq!(ff.peak_resident_jobs, live.peak_resident_jobs, "seed {seed}");
+            assert_eq!(live.fast_forwarded_frames, 0, "live path must never replay");
+        }
+    }
+}
+
+/// Tentpole acceptance: on every rung of every registered workload the
+/// fast-forward path reproduces the live windowed scheduler bitwise —
+/// and on the periodic §IV streams it genuinely engages, replaying most
+/// of the frames (this is where the simulator's order-of-magnitude
+/// jobs/s win at `--frames 4096` comes from; `bench_scheduler` records
+/// the trajectory).
+#[test]
+fn fast_forward_bitwise_identical_on_all_workload_rungs() {
+    let reg = Registry::builtin();
+    for name in reg.names() {
+        let w = reg.resolve(name).unwrap();
+        for rung in w.rungs() {
+            let g = frame_graph(w, rung.cfg).unwrap();
+            let (frames, window) = if g.len() > 500 { (12usize, 2usize) } else { (40, 4) };
+            let live = StreamScheduler::run_live(&g, frames, window);
+            let ff = StreamScheduler::run(&g, frames, window);
+            assert_results_match(&format!("{name}/{}", rung.label), &ff, &live);
+            assert_eq!(
+                ff.peak_resident_jobs, live.peak_resident_jobs,
+                "{name}/{}",
+                rung.label
+            );
+        }
+        // the periodic best-rung stream must actually fast-forward
+        let rung = *w.rungs().last().unwrap();
+        let g = frame_graph(w, rung.cfg).unwrap();
+        let (frames, window) = if g.len() > 500 { (12usize, 2usize) } else { (40, 4) };
+        let ff = StreamScheduler::run(&g, frames, window);
+        assert!(
+            ff.fast_forwarded_frames > 0,
+            "{name}: steady state never engaged over {frames} frames"
+        );
+        assert!(ff.fast_forwarded_frames < frames, "{name}: warmup cannot be replayed");
+    }
+}
+
+/// Satellite edge cases: streams shorter than the detection warmup run
+/// fully live (and bitwise identically), and the default-window CLI path
+/// clamps oversized windows without changing the schedule.
+#[test]
+fn fast_forward_warmup_and_clamp_edges() {
+    let cfg = ExecConfig::ladder().last().unwrap().cfg;
+    let g = seizure::window_graph(cfg);
+    for frames in [1usize, 2, 4] {
+        for window in [1usize, 3, DEFAULT_STREAM_WINDOW] {
+            let live = StreamScheduler::run_live(&g, frames, window);
+            let ff = StreamScheduler::run(&g, frames, window);
+            assert_results_match(&format!("short f{frames} w{window}"), &ff, &live);
+            assert_eq!(ff.fast_forwarded_frames, 0, "f{frames} w{window}: nothing to replay");
+        }
+    }
+    // oversized window ≡ clamped window, bitwise
+    let wide = StreamScheduler::run(&g, 5, 4096);
+    let exact = StreamScheduler::run(&g, 5, 5);
+    assert_results_match("window clamp", &wide, &exact);
+}
+
+/// Satellite edge case: a mode-override variant mid-stream breaks the
+/// period — the scheduler falls back to live execution around it (bitwise
+/// equal to the never-fast-forwarded run), then re-engages once the
+/// variant retires.
+#[test]
+fn fast_forward_variant_fallback_on_workload_graph() {
+    let cfg = ExecConfig::ladder().last().unwrap().cfg;
+    let base = seizure::window_graph(cfg);
+    let mut variant = base.clone();
+    for j in &mut variant.jobs {
+        j.duration_s *= 2.0;
+    }
+    let frames = 48usize;
+    let vats: [(usize, &JobGraph); 1] = [(19, &variant)];
+    for window in [2usize, 4] {
+        let live = StreamScheduler::run_with_variants_live(&base, frames, window, &vats);
+        let ff = StreamScheduler::run_with_variants(&base, frames, window, &vats);
+        assert_results_match(&format!("variant w{window}"), &ff, &live);
+        assert!(
+            ff.fast_forwarded_frames > 0,
+            "w{window}: must re-engage after the variant frame retires"
+        );
     }
 }
 
