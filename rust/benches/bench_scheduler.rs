@@ -14,8 +14,10 @@
 //! (compiled templates + steady-state fast-forward) against the live
 //! windowed path (fast-forward disabled — the PR 4 semantics) and the
 //! materialized paths (indexed dispatch and the legacy linear scan), and
-//! a `shard_scaling` section with jobs/s at S = {1, 2, 4} simulated SoCs
-//! — the machine-readable perf trajectory CI tracks across PRs.
+//! a `shard_scaling` section with jobs/s at S = {1, 2, 4} simulated SoCs,
+//! and a `fleet_scaling` section with the class-deduplicated fleet
+//! runner's chips/s and dedup speedup at {1k, 100k, 1M} chips — the
+//! machine-readable perf trajectory CI tracks across PRs.
 //!
 //! Uses `fulmine::bench_support` (the offline crate set has no criterion).
 
@@ -25,7 +27,7 @@ use fulmine::hwce::golden::WeightPrec;
 use fulmine::json::Json;
 use fulmine::report;
 use fulmine::soc::sched::{Engine, Scheduler, StreamScheduler, DEFAULT_STREAM_WINDOW};
-use fulmine::system::{RunSpec, ShardedStream, SocSystem};
+use fulmine::system::{FleetSpec, RunSpec, ShardedStream, SocSystem};
 use fulmine::workload::frame_graph;
 use std::time::Instant;
 
@@ -216,10 +218,52 @@ fn main() {
         ]));
     }
 
+    // Fleet scaling: class-deduplicated simulation of N chips over the
+    // standard workload x rung x traffic mix. Wall-clock is dominated by
+    // the distinct *classes* (plus K parity samples each), not the chip
+    // count, so throughput in chips/s grows with N — the headline row is
+    // a million chips, with the dedup speedup vs simulating every chip
+    // live (estimated from the measured per-class live cost).
+    println!("\n== fleet scaling: class-deduplicated chips/s ==");
+    println!(
+        "{:>9} {:>8} {:>6} {:>10} {:>14} {:>14} {:>10}",
+        "chips", "classes", "live", "wall [s]", "chips/s", "naive est [s]", "speedup"
+    );
+    let mut fleet_rows: Vec<Json> = Vec::new();
+    let mut fleet_1m_speedup = 0.0f64;
+    for chips in [1_000usize, 100_000, 1_000_000] {
+        let rep = sys.fleet(&FleetSpec::mixed(chips, 32)).unwrap();
+        println!(
+            "{chips:>9} {:>8} {:>6} {:>10.4} {:>14.0} {:>14.2} {:>9.1}x",
+            rep.classes.len(),
+            rep.live_chips,
+            rep.wall_s,
+            rep.chips_per_s,
+            rep.naive_est_wall_s,
+            rep.dedup_speedup
+        );
+        fleet_rows.push(Json::obj(vec![
+            ("chips", Json::num(chips as f64)),
+            ("class_count", Json::num(rep.classes.len() as f64)),
+            ("live_chips", Json::num(rep.live_chips as f64)),
+            ("parity_checked", Json::num(rep.parity_checked as f64)),
+            ("wall_s", Json::num(rep.wall_s)),
+            ("chips_per_s", Json::num(rep.chips_per_s)),
+            ("naive_est_wall_s", Json::num(rep.naive_est_wall_s)),
+            ("dedup_speedup", Json::num(rep.dedup_speedup)),
+        ]));
+        if chips == 1_000_000 {
+            fleet_1m_speedup = rep.dedup_speedup;
+        }
+    }
+    println!("fleet dedup speedup at 1M chips: {fleet_1m_speedup:.1}x vs per-chip simulation");
+
     let doc = Json::obj(vec![
         ("rungs", Json::Arr(rows)),
         ("stream_scaling", Json::Arr(scaling_rows)),
         ("shard_scaling", Json::Arr(shard_rows)),
+        ("fleet_scaling", Json::Arr(fleet_rows)),
+        ("fleet_1m_dedup_speedup", Json::num(fleet_1m_speedup)),
         ("windowed_vs_scan_jobs_per_s", Json::num(vs_scan_64)),
         ("windowed_4096_vs_scan_64_jobs_per_s", Json::num(deep_vs_scan)),
         ("windowed_ff_vs_live_4096_jobs_per_s", Json::num(ff_vs_live_4096)),

@@ -9,7 +9,8 @@
 use crate::apps::params::{gen_params, xorshift_i16};
 use crate::report::{self, PAPER_ARTIFACTS};
 use crate::runtime::{default_artifact_dir, Runtime, TensorI16};
-use crate::system::{RunSpec, RungSel, SocSystem};
+use crate::system::{FleetSpec, RunSpec, RungSel, SocSystem};
+use crate::traffic::Traffic;
 use anyhow::{anyhow, bail, Result};
 
 pub const USAGE: &str = "usage: fulmine <command>
@@ -21,13 +22,24 @@ commands:
   workloads     list the registered workloads
   ladder <workload> [--json]
                 run every ladder rung of a workload (one frame each)
-  stream <workload> [--frames N] [--window K] [--shards S] [--config RUNG] [--json]
+  stream <workload> [--frames N] [--window K] [--shards S] [--config RUNG]
+         [--traffic MODEL] [--json]
                 pipeline N frames through the bounded-window streaming
                 scheduler: at most K frames in flight (default 8, clamped
                 to N), so memory stays O(K) however large N is; with
                 --shards S the frames split across S simulated SoCs on
                 parallel host threads (near-linear throughput scaling)
-                (RUNG: ladder index or label substring, default best)
+                (RUNG: ladder index or label substring, default best;
+                MODEL: backtoback | periodic:RATE_HZ | bursty:BURST:RATE_HZ
+                | poisson:RATE_HZ[:SEED] — when frames arrive at the chip)
+  fleet [--chips N] [--frames F] [--sample K] [--threads T] [--json]
+                simulate a fleet of N endpoints (default 1000) spread over
+                every workload x rung x traffic model: chips dedup into
+                simulation-identical classes, each class runs once and
+                scales to its population (K random members per class
+                re-run live and must match bitwise; default K=3), with
+                energy/latency/utilization percentiles across the fleet —
+                --chips 1000000 completes in seconds
   ablations [--json]
                 run the surveillance design-choice sweep
   artifacts     list and compile the AOT artifacts (PJRT smoke test)
@@ -49,8 +61,11 @@ pub enum Command {
         window: Option<usize>,
         shards: usize,
         rung: Option<String>,
+        traffic: Traffic,
         json: bool,
     },
+    /// Class-deduplicated fleet simulation over the standard mix.
+    Fleet { chips: usize, frames: usize, sample: usize, threads: usize, json: bool },
     /// The surveillance ablation sweep.
     Ablations { json: bool },
     /// PJRT artifact listing/compilation.
@@ -74,6 +89,7 @@ pub fn parse(args: &[String]) -> Result<Command> {
         }
         "ladder" => parse_ladder(rest),
         "stream" => parse_stream(rest),
+        "fleet" => parse_fleet(rest),
         "ablations" => {
             let json = parse_json_flag(cmd, rest)?;
             Ok(Command::Ablations { json })
@@ -128,6 +144,7 @@ fn parse_stream(args: &[String]) -> Result<Command> {
     let mut window: Option<usize> = None;
     let mut shards = 1usize;
     let mut rung: Option<String> = None;
+    let mut traffic = Traffic::BackToBack;
     let mut json = false;
     let mut it = args[1..].iter();
     while let Some(flag) = it.next() {
@@ -159,11 +176,58 @@ fn parse_stream(args: &[String]) -> Result<Command> {
                 let v = it.next().ok_or_else(|| anyhow!("--config needs a value"))?;
                 rung = Some(v.clone());
             }
+            "--traffic" => {
+                let v = it.next().ok_or_else(|| anyhow!("--traffic needs a value"))?;
+                traffic = Traffic::parse(v)?;
+            }
             "--json" => json = true,
             other => bail!("unknown stream flag {other:?}"),
         }
     }
-    Ok(Command::Stream { workload, frames, window, shards, rung, json })
+    Ok(Command::Stream { workload, frames, window, shards, rung, traffic, json })
+}
+
+/// Parse the `fleet` subcommand's flags: `[--chips N] [--frames F]
+/// [--sample K] [--threads T] [--json]`.
+fn parse_fleet(args: &[String]) -> Result<Command> {
+    let mut chips = 1000usize;
+    let mut frames = 32usize;
+    let mut sample = 3usize;
+    let mut threads = 0usize;
+    let mut json = false;
+    let mut it = args.iter();
+    while let Some(flag) = it.next() {
+        match flag.as_str() {
+            "--chips" => {
+                let v = it.next().ok_or_else(|| anyhow!("--chips needs a value"))?;
+                chips = v.parse().map_err(|_| anyhow!("bad --chips value {v:?}"))?;
+                if chips == 0 {
+                    bail!("--chips must be at least 1 (an empty fleet simulates nothing)");
+                }
+            }
+            "--frames" => {
+                let v = it.next().ok_or_else(|| anyhow!("--frames needs a value"))?;
+                frames = v.parse().map_err(|_| anyhow!("bad --frames value {v:?}"))?;
+                if frames == 0 {
+                    bail!("--frames must be at least 1 (a stream of 0 frames schedules nothing)");
+                }
+            }
+            "--sample" => {
+                let v = it.next().ok_or_else(|| anyhow!("--sample needs a value"))?;
+                sample = v.parse().map_err(|_| anyhow!("bad --sample value {v:?}"))?;
+                if sample == 0 {
+                    bail!("--sample must be at least 1 (the class representative)");
+                }
+            }
+            "--threads" => {
+                let v = it.next().ok_or_else(|| anyhow!("--threads needs a value"))?;
+                threads = v.parse().map_err(|_| anyhow!("bad --threads value {v:?}"))?;
+            }
+            "--json" => json = true,
+            other => bail!("unknown fleet flag {other:?}"),
+        }
+    }
+    Ok(Command::Fleet { chips, frames, sample, threads, json })
 }
 
 /// Execute a parsed command, printing its output to stdout.
@@ -188,11 +252,12 @@ pub fn dispatch(cmd: &Command) -> Result<()> {
                 print!("{}", ladder.render_text());
             }
         }
-        Command::Stream { workload, frames, window, shards, rung, json } => {
+        Command::Stream { workload, frames, window, shards, rung, traffic, json } => {
             let mut spec = RunSpec::new(workload)
                 .frames(*frames)
                 .shards(*shards)
-                .rung(RungSel::parse(rung.as_deref()));
+                .rung(RungSel::parse(rung.as_deref()))
+                .traffic(traffic.clone());
             if let Some(w) = window {
                 spec = spec.window(*w);
             }
@@ -201,6 +266,17 @@ pub fn dispatch(cmd: &Command) -> Result<()> {
                 println!("{}", run.to_json().render());
             } else {
                 print!("{}", run.render_text());
+            }
+        }
+        Command::Fleet { chips, frames, sample, threads, json } => {
+            let fleet = FleetSpec::mixed(*chips, *frames)
+                .sample_k(*sample)
+                .threads(*threads);
+            let report = SocSystem::new().fleet(&fleet)?;
+            if *json {
+                println!("{}", report.to_json().render());
+            } else {
+                print!("{}", report.render_text());
             }
         }
         Command::Ablations { json } => {
@@ -283,6 +359,7 @@ mod tests {
                 window: None,
                 shards: 1,
                 rung: None,
+                traffic: Traffic::BackToBack,
                 json: false
             }
         );
@@ -295,6 +372,7 @@ mod tests {
                 window: None,
                 shards: 1,
                 rung: Some("hwce".into()),
+                traffic: Traffic::BackToBack,
                 json: true
             }
         );
@@ -307,6 +385,7 @@ mod tests {
                 window: Some(16),
                 shards: 1,
                 rung: None,
+                traffic: Traffic::BackToBack,
                 json: false
             }
         );
@@ -319,6 +398,7 @@ mod tests {
                 window: None,
                 shards: 4,
                 rung: None,
+                traffic: Traffic::BackToBack,
                 json: false
             }
         );
@@ -354,6 +434,7 @@ mod tests {
                 window: Some(512),
                 shards: 2,
                 rung: None,
+                traffic: Traffic::BackToBack,
                 json: false
             }
         );
@@ -409,6 +490,76 @@ mod tests {
         );
         assert!(parse(&argv(&["ladder"])).is_err());
         assert!(parse(&argv(&["ablations", "--verbose"])).is_err());
+    }
+
+    /// `--traffic` accepts every model grammar [`Traffic::parse`] knows and
+    /// rejects garbage at parse time, before any simulation starts.
+    #[test]
+    fn parses_traffic_models() {
+        assert_eq!(
+            parse(&argv(&["stream", "seizure", "--traffic", "periodic:30"])).unwrap(),
+            Command::Stream {
+                workload: "seizure".into(),
+                frames: 8,
+                window: None,
+                shards: 1,
+                rung: None,
+                traffic: Traffic::Periodic { rate_hz: 30.0 },
+                json: false
+            }
+        );
+        assert_eq!(
+            parse(&argv(&["stream", "seizure", "--traffic", "poisson:20:7"])).unwrap(),
+            Command::Stream {
+                workload: "seizure".into(),
+                frames: 8,
+                window: None,
+                shards: 1,
+                rung: None,
+                traffic: Traffic::Poisson { rate_hz: 20.0, seed: 7 },
+                json: false
+            }
+        );
+        assert!(parse(&argv(&["stream", "seizure", "--traffic"])).is_err());
+        assert!(parse(&argv(&["stream", "seizure", "--traffic", "warp:9"])).is_err());
+        assert!(parse(&argv(&["stream", "seizure", "--traffic", "periodic:0"])).is_err());
+    }
+
+    /// Bare `fleet` gets the documented defaults; every flag overrides its
+    /// field; zero-valued knobs are rejected with actionable messages.
+    #[test]
+    fn parses_fleet_flags() {
+        assert_eq!(
+            parse(&argv(&["fleet"])).unwrap(),
+            Command::Fleet { chips: 1000, frames: 32, sample: 3, threads: 0, json: false }
+        );
+        assert_eq!(
+            parse(&argv(&[
+                "fleet", "--chips", "1000000", "--frames", "16", "--sample", "2", "--threads",
+                "4", "--json",
+            ]))
+            .unwrap(),
+            Command::Fleet { chips: 1_000_000, frames: 16, sample: 2, threads: 4, json: true }
+        );
+        let e = parse(&argv(&["fleet", "--chips", "0"])).unwrap_err().to_string();
+        assert!(e.contains("--chips must be at least 1"), "{e}");
+        let e = parse(&argv(&["fleet", "--sample", "0"])).unwrap_err().to_string();
+        assert!(e.contains("--sample must be at least 1"), "{e}");
+        assert!(parse(&argv(&["fleet", "--frames", "0"])).is_err());
+        assert!(parse(&argv(&["fleet", "--bogus"])).is_err());
+    }
+
+    /// A tiny fleet dispatches end-to-end through the real CLI path —
+    /// class dedup, parity sampling, and report rendering included.
+    #[test]
+    fn small_fleet_dispatches_end_to_end() {
+        let cmd = parse(&argv(&["fleet", "--chips", "8", "--frames", "2", "--sample", "1"]))
+            .unwrap();
+        assert_eq!(
+            cmd,
+            Command::Fleet { chips: 8, frames: 2, sample: 1, threads: 0, json: false }
+        );
+        assert!(dispatch(&cmd).is_ok(), "small fleet must simulate cleanly");
     }
 
     #[test]

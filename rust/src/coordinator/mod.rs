@@ -324,6 +324,20 @@ pub fn stream_graph_windowed(
     window: usize,
     eq_ops_per_frame: u64,
 ) -> StreamResult {
+    stream_graph_traffic(label, graph, frames, window, eq_ops_per_frame, &[])
+}
+
+/// [`stream_graph_windowed`] under a traffic model: `release[f]` gates
+/// frame `f`'s start ([`StreamScheduler::run_traffic`]); an empty slice is
+/// the back-to-back path, bit for bit.
+pub fn stream_graph_traffic(
+    label: &str,
+    graph: &JobGraph,
+    frames: usize,
+    window: usize,
+    eq_ops_per_frame: u64,
+    release: &[f64],
+) -> StreamResult {
     assert!(frames >= 1, "streaming needs at least one frame");
     // A window wider than the stream clamps to it: the rolling window
     // could never fill the extra slots, and the report should say what
@@ -331,7 +345,7 @@ pub fn stream_graph_windowed(
     let window = window.min(frames);
     let single = Scheduler::run(graph);
     let analytic = graph.analytic();
-    let res = StreamScheduler::run(graph, frames, window);
+    let res = StreamScheduler::run_traffic(graph, frames, window, release);
     let energy_mj = res.ledger.total_mj();
     StreamResult {
         label: label.to_string(),

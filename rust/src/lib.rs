@@ -65,6 +65,21 @@
 //! report the resulting frames/s, pJ/op, engine utilization, peak
 //! resident job count and fast-forwarded frame share.
 //!
+//! Frames need not arrive back-to-back: a [`traffic::Traffic`] model
+//! (periodic, bursty, or seeded-Poisson — deterministic release tables,
+//! no wall-clock) gates admission via
+//! [`soc::sched::StreamScheduler::run_traffic`], and fast-forward still
+//! engages on gap-dominated steady states (release waits are recorded
+//! frame-relative and re-proven during replay). On top of that,
+//! [`system::Fleet`] simulates entire *fleets*: a [`system::FleetSpec`]
+//! describes per-chip populations over workload × rung × traffic
+//! classes, identical chips dedup into classes simulated once and scaled
+//! analytically to their population (via [`report::merge`]), with K
+//! random members per class re-run live and checked **bitwise** against
+//! the scaled representative — `fulmine fleet --chips 1000000` completes
+//! in seconds and reports fleet-wide p50/p95/p99 energy, latency and
+//! utilization percentiles ([`system::FleetReport`]).
+//!
 //! ## Public surface: workloads and the `SocSystem` façade
 //!
 //! Scenarios are first-class: anything the SoC can run implements
@@ -108,4 +123,5 @@ pub mod report;
 pub mod runtime;
 pub mod soc;
 pub mod system;
+pub mod traffic;
 pub mod workload;

@@ -9,6 +9,8 @@
 //! footers) is this module's only remaining job.
 
 use crate::coordinator::{facedet, seizure, surveillance, UseCaseResult};
+use crate::energy::EnergyLedger;
+use crate::soc::sched::{SchedResult, N_ENGINES};
 use crate::crypto::sponge::SpongeConfig;
 use crate::hwce::golden::WeightPrec;
 use crate::hwce::timing::{analytic_cycles_per_px, simulate_tile_cycles};
@@ -25,6 +27,106 @@ use std::fmt::Write as _;
 
 const MODES: [OperatingMode; 3] =
     [OperatingMode::CryCnnSw, OperatingMode::KecCnnSw, OperatingMode::Sw];
+
+/// Roll-up of scheduler results across concurrently running chips — the
+/// one merge rule shared by [`crate::system::ShardedStream`] (S shards of
+/// one stream) and the [`crate::system::Fleet`] aggregator (C chips per
+/// dedup class, each weighted by its class population). Energy, busy
+/// time, overlap, co-residency and relocks *sum* across chips; elapsed
+/// time is the slowest chip's makespan (chips run concurrently); peak
+/// residency is the per-chip maximum (each chip bounds its own memory).
+/// Idle/standby energy accrues per chip over *its own* makespan — a chip
+/// that drains early deep-sleeps (§II power modes) rather than leaking
+/// until the slowest chip finishes — so merged energy is exactly the sum
+/// of the member energies.
+#[derive(Debug, Clone)]
+pub struct Merged {
+    /// Summed energy; `elapsed_s` pinned to [`Merged::time_s`].
+    pub ledger: EnergyLedger,
+    pub busy_s: [f64; N_ENGINES],
+    pub overlap_s: f64,
+    pub coresidency_s: f64,
+    pub mode_switches: u64,
+    pub peak_resident_jobs: usize,
+    pub total_jobs: usize,
+    pub fast_forwarded_frames: usize,
+    /// Slowest member's makespan.
+    pub time_s: f64,
+    /// Total chips absorbed (populations included).
+    pub chips: usize,
+}
+
+impl Merged {
+    /// The identity element: absorbing into an empty merge copies the
+    /// member (merging S=1 is identity — property-tested).
+    pub fn empty() -> Self {
+        Merged {
+            ledger: EnergyLedger::new(),
+            busy_s: [0.0; N_ENGINES],
+            overlap_s: 0.0,
+            coresidency_s: 0.0,
+            mode_switches: 0,
+            peak_resident_jobs: 0,
+            total_jobs: 0,
+            fast_forwarded_frames: 0,
+            time_s: 0.0,
+            chips: 0,
+        }
+    }
+
+    /// Fold one scheduler result in, weighted by `chips` identical chips
+    /// running it concurrently (`chips == 1` is the plain shard merge;
+    /// the fleet path scales a class representative to its population).
+    pub fn absorb(&mut self, r: &SchedResult, chips: usize) {
+        let w = chips as f64;
+        if chips == 1 {
+            self.ledger.merge(&r.ledger);
+        } else {
+            self.ledger.merge(&r.ledger.scaled(w));
+        }
+        for e in 0..N_ENGINES {
+            self.busy_s[e] += r.busy_s[e] * w;
+        }
+        self.overlap_s += r.overlap_s * w;
+        self.coresidency_s += r.coresidency_s * w;
+        self.mode_switches += r.mode_switches * chips as u64;
+        self.peak_resident_jobs = self.peak_resident_jobs.max(r.peak_resident_jobs);
+        self.total_jobs += r.n_jobs * chips;
+        self.fast_forwarded_frames += r.fast_forwarded_frames * chips;
+        self.time_s = self.time_s.max(r.makespan_s);
+        self.chips += chips;
+        // chips run concurrently: elapsed time is the slowest member, not
+        // the sum `EnergyLedger::merge` accumulated
+        self.ledger.elapsed_s = self.time_s;
+    }
+
+    /// Fold another roll-up in (the associativity seam: merging partial
+    /// merges equals one flat merge on every summed field).
+    pub fn combine(&mut self, other: &Merged) {
+        self.ledger.merge(&other.ledger);
+        for e in 0..N_ENGINES {
+            self.busy_s[e] += other.busy_s[e];
+        }
+        self.overlap_s += other.overlap_s;
+        self.coresidency_s += other.coresidency_s;
+        self.mode_switches += other.mode_switches;
+        self.peak_resident_jobs = self.peak_resident_jobs.max(other.peak_resident_jobs);
+        self.total_jobs += other.total_jobs;
+        self.fast_forwarded_frames += other.fast_forwarded_frames;
+        self.time_s = self.time_s.max(other.time_s);
+        self.chips += other.chips;
+        self.ledger.elapsed_s = self.time_s;
+    }
+}
+
+/// Merge `(result, chips)` pairs into one fleet-level roll-up.
+pub fn merge<'a>(parts: impl IntoIterator<Item = (&'a SchedResult, usize)>) -> Merged {
+    let mut m = Merged::empty();
+    for (r, chips) in parts {
+        m.absorb(r, chips);
+    }
+    m
+}
 
 /// Table I: power modes (encoded constants, printed verbatim).
 pub fn table1() -> String {
@@ -496,6 +598,125 @@ mod tests {
             assert!(paper_artifact(name).is_some(), "{name}");
         }
         assert!(paper_artifact("fig99").is_none());
+    }
+
+    use crate::energy::Category;
+
+    /// Synthetic scheduler result with dyadic (k/8) field values: float
+    /// sums of dyadics this small are exact, so the merge identity and
+    /// associativity properties below hold *bitwise*, not approximately.
+    fn synth_result(i: usize) -> SchedResult {
+        let d = |k: usize| (((i * 7 + k * 3) % 32) as f64) * 0.125;
+        let mut ledger = EnergyLedger::new();
+        for (k, cat) in Category::all().into_iter().enumerate() {
+            ledger.charge_mj(cat, d(k));
+        }
+        let makespan = d(1) + 4.0;
+        ledger.elapsed_s = makespan;
+        let mut busy_s = [0.0f64; N_ENGINES];
+        for (e, b) in busy_s.iter_mut().enumerate() {
+            *b = d(e + 7);
+        }
+        SchedResult {
+            ledger,
+            makespan_s: makespan,
+            mode_switches: (i % 5) as u64,
+            busy_s,
+            n_jobs: 10 + i,
+            overlap_s: d(2),
+            coresidency_s: d(3),
+            peak_resident_jobs: 3 + (i % 4),
+            fast_forwarded_frames: i % 9,
+        }
+    }
+
+    fn assert_merged_bitwise_eq(a: &crate::report::Merged, b: &crate::report::Merged) {
+        for cat in Category::all() {
+            assert_eq!(
+                a.ledger.energy_mj(cat).to_bits(),
+                b.ledger.energy_mj(cat).to_bits(),
+                "{cat:?}"
+            );
+        }
+        assert_eq!(a.ledger.elapsed_s.to_bits(), b.ledger.elapsed_s.to_bits());
+        for e in 0..N_ENGINES {
+            assert_eq!(a.busy_s[e].to_bits(), b.busy_s[e].to_bits(), "engine {e}");
+        }
+        assert_eq!(a.overlap_s.to_bits(), b.overlap_s.to_bits());
+        assert_eq!(a.coresidency_s.to_bits(), b.coresidency_s.to_bits());
+        assert_eq!(a.mode_switches, b.mode_switches);
+        assert_eq!(a.peak_resident_jobs, b.peak_resident_jobs);
+        assert_eq!(a.total_jobs, b.total_jobs);
+        assert_eq!(a.fast_forwarded_frames, b.fast_forwarded_frames);
+        assert_eq!(a.time_s.to_bits(), b.time_s.to_bits());
+        assert_eq!(a.chips, b.chips);
+    }
+
+    /// Property: merging a single result is the identity (every field
+    /// survives bitwise, elapsed pinned to the makespan).
+    #[test]
+    fn merge_of_one_is_identity() {
+        for i in 0..24 {
+            let r = synth_result(i);
+            let m = crate::report::merge([(&r, 1usize)]);
+            for cat in Category::all() {
+                assert_eq!(
+                    m.ledger.energy_mj(cat).to_bits(),
+                    r.ledger.energy_mj(cat).to_bits()
+                );
+            }
+            assert_eq!(m.ledger.elapsed_s.to_bits(), r.makespan_s.to_bits());
+            for e in 0..N_ENGINES {
+                assert_eq!(m.busy_s[e].to_bits(), r.busy_s[e].to_bits());
+            }
+            assert_eq!(m.overlap_s.to_bits(), r.overlap_s.to_bits());
+            assert_eq!(m.coresidency_s.to_bits(), r.coresidency_s.to_bits());
+            assert_eq!(m.mode_switches, r.mode_switches);
+            assert_eq!(m.peak_resident_jobs, r.peak_resident_jobs);
+            assert_eq!(m.total_jobs, r.n_jobs);
+            assert_eq!(m.fast_forwarded_frames, r.fast_forwarded_frames);
+            assert_eq!(m.time_s.to_bits(), r.makespan_s.to_bits());
+            assert_eq!(m.chips, 1);
+        }
+    }
+
+    /// Property: the merge is associative on the energy/busy/relock sums —
+    /// combining partial merges in any grouping equals one flat merge.
+    #[test]
+    fn merge_is_associative() {
+        for base in 0..8 {
+            let (a, b, c) =
+                (synth_result(base), synth_result(base + 11), synth_result(base + 23));
+            let flat = crate::report::merge([(&a, 1usize), (&b, 1), (&c, 1)]);
+            let sa = crate::report::merge([(&a, 1usize)]);
+            let sb = crate::report::merge([(&b, 1usize)]);
+            let sc = crate::report::merge([(&c, 1usize)]);
+            // (a ⊕ b) ⊕ c
+            let mut left = sa.clone();
+            left.combine(&sb);
+            left.combine(&sc);
+            // a ⊕ (b ⊕ c)
+            let mut bc = sb.clone();
+            bc.combine(&sc);
+            let mut right = sa.clone();
+            right.combine(&bc);
+            assert_merged_bitwise_eq(&left, &right);
+            assert_merged_bitwise_eq(&left, &flat);
+        }
+    }
+
+    /// Property: a population of C identical chips absorbed at once equals
+    /// C separate absorbs (the fleet's analytic scaling is exactly the
+    /// naive per-chip merge, bitwise on dyadic inputs).
+    #[test]
+    fn merge_population_scaling_matches_repeated_absorb() {
+        let r = synth_result(5);
+        let scaled = crate::report::merge([(&r, 3usize)]);
+        let repeated = crate::report::merge([(&r, 1usize), (&r, 1), (&r, 1)]);
+        assert_merged_bitwise_eq(&scaled, &repeated);
+        assert_eq!(scaled.chips, 3);
+        assert_eq!(scaled.total_jobs, 3 * r.n_jobs);
+        assert_eq!(scaled.mode_switches, 3 * r.mode_switches);
     }
 
     #[test]

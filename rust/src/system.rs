@@ -26,7 +26,7 @@
 //! makespan is the slowest shard's, and throughput scales near-linearly.
 
 use crate::coordinator::{
-    share, stream_graph_windowed, ExecConfig, ModeOverrides, Rung, StreamResult, Tiling,
+    share, stream_graph_traffic, ExecConfig, ModeOverrides, Rung, StreamResult, Tiling,
     UseCaseResult,
 };
 use crate::energy::{Category, EnergyLedger};
@@ -35,9 +35,13 @@ use crate::json::Json;
 use crate::soc::sched::{
     CompiledFrame, Engine, JobGraph, SchedResult, Scheduler, StreamScheduler, N_ENGINES,
 };
+use crate::traffic::Traffic;
 use crate::workload::{frame_graph, Registry, Workload};
 use anyhow::{anyhow, bail, Result};
+use std::collections::BTreeMap;
 use std::fmt::Write as _;
+use std::sync::atomic::{AtomicUsize, Ordering as AtomicOrdering};
+use std::sync::Mutex;
 use std::time::Instant;
 
 /// How a [`RunSpec`] selects a ladder rung.
@@ -86,6 +90,10 @@ pub struct RunSpec {
     /// simulated on parallel host threads ([`ShardedStream`]) and the
     /// report carries per-shard statistics.
     pub shards: usize,
+    /// Frame-arrival model gating the stream ([`Traffic::BackToBack`] by
+    /// default — the PR 5 semantics). Sharded runs regenerate the model
+    /// per chip: every chip is an independent sensor starting at `t = 0`.
+    pub traffic: Traffic,
 }
 
 impl RunSpec {
@@ -97,6 +105,7 @@ impl RunSpec {
             overrides: ModeOverrides::default(),
             window: None,
             shards: 1,
+            traffic: Traffic::BackToBack,
         }
     }
 
@@ -122,6 +131,11 @@ impl RunSpec {
 
     pub fn shards(mut self, shards: usize) -> Self {
         self.shards = shards;
+        self
+    }
+
+    pub fn traffic(mut self, traffic: Traffic) -> Self {
+        self.traffic = traffic;
         self
     }
 }
@@ -173,22 +187,45 @@ impl ShardedStream {
         window: usize,
         shards: usize,
     ) -> Vec<(SchedResult, ShardStat)> {
+        Self::run_traffic(graph, frames, window, shards, &Traffic::BackToBack)
+    }
+
+    /// [`ShardedStream::run`] under a traffic model: each chip regenerates
+    /// the arrival schedule for *its own* share (chips are independent
+    /// sensors, each starting at `t = 0`), so an S-way split of a seeded
+    /// model is reproducible whatever S is. Back-to-back traffic is
+    /// bitwise identical to [`ShardedStream::run`].
+    pub fn run_traffic(
+        graph: &JobGraph,
+        frames: usize,
+        window: usize,
+        shards: usize,
+        traffic: &Traffic,
+    ) -> Vec<(SchedResult, ShardStat)> {
         assert!(frames >= 1, "sharded streaming needs at least one frame");
         assert!(window >= 1, "sharded streaming needs at least one in-flight frame of window");
         assert!(shards >= 1, "sharded streaming needs at least one chip");
+        traffic.validate().expect("invalid traffic model");
         let shards = shards.min(frames);
         let template = CompiledFrame::compile(graph);
         let analytic_s = graph.analytic().makespan_s;
         let bound_s = graph.serialized_bound();
         let shares: Vec<usize> = (0..shards).map(|s| share(frames, shards, s)).collect();
+        let releases: Vec<Vec<f64>> = shares.iter().map(|&f| traffic.release_times(f)).collect();
         let results: Vec<(SchedResult, f64)> = std::thread::scope(|scope| {
             let template = &template;
             let handles: Vec<_> = shares
                 .iter()
-                .map(|&f| {
+                .zip(&releases)
+                .map(|(&f, rel)| {
                     scope.spawn(move || {
                         let t0 = Instant::now();
-                        let r = StreamScheduler::run_compiled(template, f, window.min(f));
+                        let r = StreamScheduler::run_compiled_traffic(
+                            template,
+                            f,
+                            window.min(f),
+                            rel,
+                        );
                         (r, t0.elapsed().as_secs_f64())
                     })
                 })
@@ -202,6 +239,10 @@ impl ShardedStream {
             .into_iter()
             .enumerate()
             .map(|(i, (r, wall_s))| {
+                // Gaps push the bound out: every frame has arrived by the
+                // last release, after which serial execution is the worst
+                // case (back-to-back's last release is 0 — unchanged).
+                let last_rel = releases[i].last().copied().unwrap_or(0.0);
                 let stat = ShardStat {
                     shard: i,
                     frames: shares[i],
@@ -212,7 +253,7 @@ impl ShardedStream {
                     fast_forwarded_frames: r.fast_forwarded_frames,
                     wall_s,
                     analytic_est_s: analytic_s * shares[i] as f64,
-                    serialized_bound_s: bound_s * shares[i] as f64,
+                    serialized_bound_s: last_rel + bound_s * shares[i] as f64,
                 };
                 (r, stat)
             })
@@ -220,14 +261,11 @@ impl ShardedStream {
     }
 }
 
-/// Merge per-shard scheduler results into one [`StreamResult`]: energy,
-/// busy time, overlap and relocks sum across chips; the makespan is the
-/// slowest shard's (chips run concurrently); peak residency is the
-/// per-chip maximum (each chip bounds its own memory). Idle/standby
-/// energy accrues per chip over *its own* makespan — a chip that drains
-/// its share early enters deep sleep (§II power modes) rather than
-/// leaking until the slowest shard finishes — which keeps the invariant
-/// that the merged energy is exactly the sum of the shard energies.
+/// Merge per-shard scheduler results into one [`StreamResult`] via the
+/// shared [`crate::report::merge`] rule (energy/busy/overlap/relocks sum,
+/// makespan = slowest shard, peak residency = per-chip max, per-chip
+/// idle/standby — see [`crate::report::Merged`]), then package the stream
+/// presentation around it.
 fn merge_sharded(
     label: &str,
     graph: &JobGraph,
@@ -238,52 +276,588 @@ fn merge_sharded(
 ) -> StreamResult {
     let single = Scheduler::run(graph);
     let analytic = graph.analytic();
-    let mut ledger = EnergyLedger::new();
-    let mut busy_s = [0.0f64; N_ENGINES];
-    let (mut overlap_s, mut coresidency_s) = (0.0f64, 0.0f64);
-    let mut mode_switches = 0u64;
-    let (mut peak, mut total_jobs, mut ff) = (0usize, 0usize, 0usize);
-    let mut time_s = 0.0f64;
-    let mut max_share = 0usize;
-    for (r, st) in parts {
-        max_share = max_share.max(st.frames);
-        ledger.merge(&r.ledger);
-        for e in 0..N_ENGINES {
-            busy_s[e] += r.busy_s[e];
-        }
-        overlap_s += r.overlap_s;
-        coresidency_s += r.coresidency_s;
-        mode_switches += r.mode_switches;
-        peak = peak.max(r.peak_resident_jobs);
-        total_jobs += r.n_jobs;
-        ff += r.fast_forwarded_frames;
-        time_s = time_s.max(r.makespan_s);
-    }
-    // chips run concurrently: elapsed time is the slowest shard, not the
-    // sum `EnergyLedger::merge` accumulated
-    ledger.elapsed_s = time_s;
-    let energy_mj = ledger.total_mj();
+    let max_share = parts.iter().map(|(_, st)| st.frames).max().unwrap_or(0);
+    let m = crate::report::merge(parts.iter().map(|(r, _)| (r, 1usize)));
+    let energy_mj = m.ledger.total_mj();
     StreamResult {
         label: label.to_string(),
         frames,
-        time_s,
-        fps: frames as f64 / time_s,
+        time_s: m.time_s,
+        fps: frames as f64 / m.time_s,
         energy_mj,
         pj_per_op: energy_mj * 1e9 / (eq_ops_per_frame as f64 * frames as f64),
         single_frame_s: single.makespan_s,
         single_frame_analytic_s: analytic.makespan_s,
-        speedup: single.makespan_s * frames as f64 / time_s,
-        mode_switches,
-        busy_s,
-        overlap_s,
-        coresidency_s,
+        speedup: single.makespan_s * frames as f64 / m.time_s,
+        mode_switches: m.mode_switches,
+        busy_s: m.busy_s,
+        overlap_s: m.overlap_s,
+        coresidency_s: m.coresidency_s,
         // each chip clamps to its own share; report the widest window any
         // shard actually ran with
         window: window.min(max_share),
-        peak_resident_jobs: peak,
-        total_jobs,
-        fast_forwarded_frames: ff,
-        ledger,
+        peak_resident_jobs: m.peak_resident_jobs,
+        total_jobs: m.total_jobs,
+        fast_forwarded_frames: m.fast_forwarded_frames,
+        ledger: m.ledger,
+    }
+}
+
+// ---- fleet-scale simulation -------------------------------------------
+
+/// One homogeneous population of a [`Fleet`]: `chips` endpoints all
+/// running the same [`RunSpec`] (workload, rung, frames, window, traffic
+/// phase). Chips of one group are simulation-identical by construction —
+/// the dedup layer simulates the whole group once.
+#[derive(Debug, Clone)]
+pub struct FleetGroup {
+    pub spec: RunSpec,
+    pub chips: usize,
+}
+
+/// A fleet request: chip populations plus the dedup-validation knobs.
+#[derive(Debug, Clone)]
+pub struct FleetSpec {
+    pub groups: Vec<FleetGroup>,
+    /// Live simulations per class, the class representative included: the
+    /// remaining `sample_k − 1` randomly sampled members re-run through
+    /// the fast-forward-disabled live path and must match the scaled
+    /// representative *bitwise*. Total live chips ≤ classes × sample_k.
+    pub sample_k: usize,
+    /// Host worker threads over classes (0 = available parallelism).
+    pub threads: usize,
+}
+
+impl FleetSpec {
+    pub fn new(groups: Vec<FleetGroup>) -> Self {
+        FleetSpec { groups, sample_k: 3, threads: 0 }
+    }
+
+    pub fn sample_k(mut self, sample_k: usize) -> Self {
+        self.sample_k = sample_k;
+        self
+    }
+
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    /// The standard heterogeneous mix `fulmine fleet` runs: `chips`
+    /// endpoints spread near-evenly over every built-in workload × two
+    /// rungs (worst, best) × four traffic models (back-to-back, periodic
+    /// at the workload's native sensor rate, 4-frame bursts, Poisson
+    /// triggers with a per-template pooled seed). Pooled seeds keep the
+    /// class count at the template count (~32) rather than one class per
+    /// chip — the dedup invariant the whole fleet runner rests on.
+    pub fn mixed(chips: usize, frames: usize) -> FleetSpec {
+        assert!(chips >= 1, "a fleet needs at least one chip");
+        assert!(frames >= 1, "fleet chips need at least one frame");
+        let registry = Registry::builtin();
+        let mut specs: Vec<RunSpec> = Vec::new();
+        let mut seed = 0u64;
+        for w in registry.iter() {
+            let rate = w.native_rate_hz();
+            for rung in [RungSel::Best, RungSel::Index(0)] {
+                let traffics = [
+                    Traffic::BackToBack,
+                    Traffic::Periodic { rate_hz: rate },
+                    Traffic::Bursty { burst: 4, rate_hz: rate / 4.0 },
+                    {
+                        seed += 1;
+                        Traffic::Poisson { rate_hz: rate, seed }
+                    },
+                ];
+                for t in traffics {
+                    specs.push(
+                        RunSpec::new(w.name()).frames(frames).rung(rung.clone()).traffic(t),
+                    );
+                }
+            }
+        }
+        let n = specs.len();
+        let groups = specs
+            .into_iter()
+            .enumerate()
+            .map(|(i, spec)| FleetGroup { spec, chips: share(chips, n, i) })
+            .filter(|g| g.chips > 0)
+            .collect();
+        FleetSpec::new(groups)
+    }
+}
+
+/// Aggregate statistics of one simulated chip class (all per-chip values —
+/// every member of the class reproduces them bitwise).
+#[derive(Debug, Clone)]
+pub struct ClassStat {
+    /// The dedup key: workload | resolved config | frames | window |
+    /// traffic phase.
+    pub key: String,
+    pub workload: String,
+    pub rung: String,
+    /// Human description of the traffic model.
+    pub traffic: String,
+    /// Population this class was scaled to.
+    pub chips: usize,
+    pub frames: usize,
+    /// Per-chip stream makespan (s).
+    pub makespan_s: f64,
+    /// Per-chip energy (mJ).
+    pub energy_mj: f64,
+    pub fps: f64,
+    /// Mean engine utilization of one chip (Σ busy / (makespan × engines)).
+    pub utilization: f64,
+    pub fast_forwarded_frames: usize,
+    /// Live simulations charged to this class (representative + parity
+    /// samples).
+    pub live_runs: usize,
+    /// Member indices (0..chips) sampled for the live parity check.
+    pub sampled_members: Vec<usize>,
+    /// Host wall-clock of the class representative's simulation (s).
+    pub wall_s: f64,
+}
+
+/// p50/p95/p99 of a per-chip metric across the whole fleet (weighted
+/// nearest-rank over classes — every chip of a class contributes its
+/// class's value).
+#[derive(Debug, Clone, Copy)]
+pub struct Pct {
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+/// Outcome of a [`Fleet::run`]: the roll-up (total energy, fleet
+/// makespan), per-chip percentiles, per-class statistics, and the dedup
+/// accounting (live chips vs population, parity checks, estimated naive
+/// cost).
+#[derive(Debug, Clone)]
+pub struct FleetReport {
+    /// Total chip population simulated (by class scaling).
+    pub chips: usize,
+    pub sample_k: usize,
+    /// Chips actually simulated live (≤ classes × sample_k).
+    pub live_chips: usize,
+    /// Sampled live-vs-scaled bitwise comparisons performed.
+    pub parity_checked: usize,
+    /// Comparisons that failed (a successful run reports 0 — failures
+    /// abort with an error instead).
+    pub parity_failures: usize,
+    pub classes: Vec<ClassStat>,
+    pub total_frames: u64,
+    /// Fleet-total energy (J).
+    pub energy_j: f64,
+    /// Slowest chip's makespan (chips run concurrently).
+    pub makespan_s: f64,
+    pub energy_mj_per_chip: Pct,
+    pub latency_s: Pct,
+    pub utilization: Pct,
+    /// Host wall-clock of the whole fleet run (s).
+    pub wall_s: f64,
+    pub chips_per_s: f64,
+    /// Estimated cost of simulating every chip individually: Σ class
+    /// representative wall × population.
+    pub naive_est_wall_s: f64,
+    /// `naive_est_wall_s / wall_s` — the class-dedup win.
+    pub dedup_speedup: f64,
+}
+
+/// Weighted nearest-rank percentile: the smallest value whose cumulative
+/// chip population reaches `⌈q × total⌉`.
+fn weighted_percentile(vals: &mut [(f64, usize)], q: f64, total: usize) -> f64 {
+    vals.sort_by(|a, b| a.0.total_cmp(&b.0));
+    let rank = ((q * total as f64).ceil() as usize).max(1);
+    let mut cum = 0usize;
+    for &(v, w) in vals.iter() {
+        cum += w;
+        if cum >= rank {
+            return v;
+        }
+    }
+    vals.last().map_or(f64::NAN, |&(v, _)| v)
+}
+
+fn pct(vals: &mut [(f64, usize)], total: usize) -> Pct {
+    Pct {
+        p50: weighted_percentile(vals, 0.50, total),
+        p95: weighted_percentile(vals, 0.95, total),
+        p99: weighted_percentile(vals, 0.99, total),
+    }
+}
+
+/// Bitwise equality of two scheduler results (everything except the
+/// fast-forward counter, which legitimately differs between the replay
+/// and live paths).
+fn sched_bitwise_eq(a: &SchedResult, b: &SchedResult) -> bool {
+    if a.makespan_s.to_bits() != b.makespan_s.to_bits()
+        || a.mode_switches != b.mode_switches
+        || a.n_jobs != b.n_jobs
+        || a.peak_resident_jobs != b.peak_resident_jobs
+        || a.overlap_s.to_bits() != b.overlap_s.to_bits()
+        || a.coresidency_s.to_bits() != b.coresidency_s.to_bits()
+    {
+        return false;
+    }
+    for e in 0..N_ENGINES {
+        if a.busy_s[e].to_bits() != b.busy_s[e].to_bits() {
+            return false;
+        }
+    }
+    Category::all()
+        .into_iter()
+        .all(|c| a.ledger.energy_mj(c).to_bits() == b.ledger.energy_mj(c).to_bits())
+}
+
+/// The fleet runner: simulates a heterogeneous population of Fulmine
+/// endpoints in O(distinct chip classes) instead of O(chips).
+///
+/// Chips are grouped by (workload, resolved configuration, frame count,
+/// window, traffic phase) — members of a class are simulation-identical
+/// by construction (deterministic scheduler, seeded traffic), so each
+/// class is simulated **once** (classes sharded across host threads) and
+/// scaled analytically to its population through the shared
+/// [`crate::report::merge`] rule. The scaling claim is *checked, not
+/// assumed*: per class, `sample_k − 1` randomly sampled members re-run
+/// through the fast-forward-disabled live scheduler path and must match
+/// the representative bitwise ([`FleetReport::parity_checked`] /
+/// [`FleetReport::parity_failures`]); a mismatch aborts the run. That
+/// makes `fulmine fleet --chips 1000000` a seconds-scale operation whose
+/// cost tracks the ~32 classes of [`FleetSpec::mixed`], not the million
+/// chips.
+pub struct Fleet;
+
+/// A deduplicated chip class, resolved and ready to simulate.
+struct FleetClass {
+    key: String,
+    workload: String,
+    rung: String,
+    traffic: Traffic,
+    graph: JobGraph,
+    frames: usize,
+    window: usize,
+    release: Vec<f64>,
+    chips: usize,
+}
+
+/// Per-class simulation outcome (filled by the worker pool).
+struct ClassOutcome {
+    result: SchedResult,
+    wall_s: f64,
+    live_runs: usize,
+    parity_runs: usize,
+    parity_ok: bool,
+    sampled: Vec<usize>,
+}
+
+impl Fleet {
+    /// Execute `fleet` against `sys`'s registry. See the type docs for the
+    /// dedup/parity contract.
+    pub fn run(sys: &SocSystem, fleet: &FleetSpec) -> Result<FleetReport> {
+        if fleet.groups.iter().all(|g| g.chips == 0) {
+            bail!("fleet needs at least one chip");
+        }
+        if fleet.sample_k == 0 {
+            bail!("--sample must be at least 1 (the class representative)");
+        }
+        let t_fleet = Instant::now();
+
+        // Class dedup: resolve each group and merge identical classes.
+        let mut index: BTreeMap<String, usize> = BTreeMap::new();
+        let mut classes: Vec<FleetClass> = Vec::new();
+        for g in &fleet.groups {
+            if g.chips == 0 {
+                continue;
+            }
+            if g.spec.shards != 1 {
+                bail!("fleet chips are single SoCs — use more chips, not shards");
+            }
+            if g.spec.window == Some(0) {
+                bail!("--window must be at least 1");
+            }
+            g.spec.traffic.validate()?;
+            let (w, rung) = sys.resolve(&g.spec)?;
+            let window = g
+                .spec
+                .window
+                .unwrap_or(crate::soc::sched::DEFAULT_STREAM_WINDOW)
+                .min(g.spec.frames);
+            let key = format!(
+                "{}|{:?}|f{}|w{}|{}",
+                w.name(),
+                rung.cfg,
+                g.spec.frames,
+                window,
+                g.spec.traffic.key()
+            );
+            match index.get(&key) {
+                Some(&ci) => classes[ci].chips += g.chips,
+                None => {
+                    let graph = frame_graph(w, rung.cfg)?;
+                    let release = g.spec.traffic.release_times(g.spec.frames);
+                    index.insert(key.clone(), classes.len());
+                    classes.push(FleetClass {
+                        key,
+                        workload: w.name().to_string(),
+                        rung: rung.label.to_string(),
+                        traffic: g.spec.traffic.clone(),
+                        graph,
+                        frames: g.spec.frames,
+                        window,
+                        release,
+                        chips: g.chips,
+                    });
+                }
+            }
+        }
+        let total_chips: usize = classes.iter().map(|c| c.chips).sum();
+
+        // Simulate each class once (plus parity samples), classes sharded
+        // across host worker threads as in `ShardedStream`.
+        let threads = if fleet.threads == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            fleet.threads
+        }
+        .min(classes.len())
+        .max(1);
+        let next = AtomicUsize::new(0);
+        let slots: Vec<Mutex<Option<ClassOutcome>>> =
+            classes.iter().map(|_| Mutex::new(None)).collect();
+        std::thread::scope(|scope| {
+            for _ in 0..threads {
+                scope.spawn(|| loop {
+                    let ci = next.fetch_add(1, AtomicOrdering::Relaxed);
+                    if ci >= classes.len() {
+                        break;
+                    }
+                    let c = &classes[ci];
+                    let cf = CompiledFrame::compile(&c.graph);
+                    let t0 = Instant::now();
+                    let r = StreamScheduler::run_compiled_traffic(
+                        &cf, c.frames, c.window, &c.release,
+                    );
+                    let wall_s = t0.elapsed().as_secs_f64();
+                    // Sampled live-vs-scaled parity: random members re-run
+                    // through the ff-disabled live path, bitwise-compared
+                    // against the representative the population scaling
+                    // used. Deterministically seeded per class.
+                    let live_n = fleet.sample_k.min(c.chips);
+                    let mut rng = crate::traffic::Xorshift64Star::new(
+                        0x5EED ^ ((ci as u64) << 20) ^ c.chips as u64,
+                    );
+                    let mut sampled = Vec::new();
+                    let mut parity_ok = true;
+                    for _ in 1..live_n {
+                        sampled.push((rng.next_u64() % c.chips as u64) as usize);
+                        let live = StreamScheduler::run_traffic_live(
+                            &c.graph, c.frames, c.window, &c.release,
+                        );
+                        parity_ok &= sched_bitwise_eq(&r, &live);
+                    }
+                    *slots[ci].lock().expect("class slot poisoned") = Some(ClassOutcome {
+                        result: r,
+                        wall_s,
+                        live_runs: live_n,
+                        parity_runs: live_n.saturating_sub(1),
+                        parity_ok,
+                        sampled,
+                    });
+                });
+            }
+        });
+        let outcomes: Vec<ClassOutcome> = slots
+            .into_iter()
+            .map(|m| m.into_inner().expect("class slot poisoned").expect("class simulated"))
+            .collect();
+
+        // Roll up: population-scaled merge + per-chip percentiles.
+        let mut merged = crate::report::Merged::empty();
+        let mut stats: Vec<ClassStat> = Vec::new();
+        let (mut live_chips, mut parity_checked, mut parity_failures) = (0usize, 0usize, 0usize);
+        let mut naive_est_wall_s = 0.0f64;
+        let mut total_frames = 0u64;
+        let (mut e_vals, mut l_vals, mut u_vals) =
+            (Vec::new(), Vec::new(), Vec::new());
+        for (c, o) in classes.iter().zip(&outcomes) {
+            merged.absorb(&o.result, c.chips);
+            live_chips += o.live_runs;
+            parity_checked += o.parity_runs;
+            if !o.parity_ok {
+                parity_failures += 1;
+            }
+            naive_est_wall_s += o.wall_s * c.chips as f64;
+            total_frames += (c.frames * c.chips) as u64;
+            let energy_mj = o.result.ledger.total_mj();
+            let busy: f64 = o.result.busy_s.iter().sum();
+            let utilization = busy / (o.result.makespan_s * N_ENGINES as f64);
+            e_vals.push((energy_mj, c.chips));
+            l_vals.push((o.result.makespan_s, c.chips));
+            u_vals.push((utilization, c.chips));
+            stats.push(ClassStat {
+                key: c.key.clone(),
+                workload: c.workload.clone(),
+                rung: c.rung.clone(),
+                traffic: c.traffic.describe(),
+                chips: c.chips,
+                frames: c.frames,
+                makespan_s: o.result.makespan_s,
+                energy_mj,
+                fps: c.frames as f64 / o.result.makespan_s,
+                utilization,
+                fast_forwarded_frames: o.result.fast_forwarded_frames,
+                live_runs: o.live_runs,
+                sampled_members: o.sampled.clone(),
+                wall_s: o.wall_s,
+            });
+        }
+        if parity_failures > 0 {
+            bail!(
+                "sampled live-vs-scaled parity failed for {parity_failures} of {} classes — \
+                 class scaling would have misreported the fleet",
+                classes.len()
+            );
+        }
+        let wall_s = t_fleet.elapsed().as_secs_f64().max(1e-9);
+        Ok(FleetReport {
+            chips: total_chips,
+            sample_k: fleet.sample_k,
+            live_chips,
+            parity_checked,
+            parity_failures,
+            total_frames,
+            energy_j: merged.ledger.total_mj() / 1e3,
+            makespan_s: merged.time_s,
+            energy_mj_per_chip: pct(&mut e_vals, total_chips),
+            latency_s: pct(&mut l_vals, total_chips),
+            utilization: pct(&mut u_vals, total_chips),
+            wall_s,
+            chips_per_s: total_chips as f64 / wall_s,
+            naive_est_wall_s,
+            dedup_speedup: naive_est_wall_s / wall_s,
+            classes: stats,
+        })
+    }
+}
+
+impl FleetReport {
+    /// The `fulmine fleet` text report.
+    pub fn render_text(&self) -> String {
+        let mut s = String::new();
+        writeln!(
+            s,
+            "== fleet: {} chips in {} classes ==",
+            self.chips,
+            self.classes.len()
+        )
+        .unwrap();
+        writeln!(
+            s,
+            "simulated live: {} chips ({} classes, sample-K {}) | parity checks {} | failures {}",
+            self.live_chips,
+            self.classes.len(),
+            self.sample_k,
+            self.parity_checked,
+            self.parity_failures
+        )
+        .unwrap();
+        writeln!(
+            s,
+            "fleet energy {:.3} J over {} frames | slowest chip {:.4} s",
+            self.energy_j, self.total_frames, self.makespan_s
+        )
+        .unwrap();
+        writeln!(
+            s,
+            "host: {:.3} s wall ({:.3e} chips/s) | naive per-chip est {:.1} s | dedup speedup {:.0}x",
+            self.wall_s, self.chips_per_s, self.naive_est_wall_s, self.dedup_speedup
+        )
+        .unwrap();
+        writeln!(s, "{:<14} {:>9} {:>9} {:>9}", "per chip", "p50", "p95", "p99").unwrap();
+        for (name, p) in [
+            ("energy [mJ]", self.energy_mj_per_chip),
+            ("latency [s]", self.latency_s),
+            ("utilization", self.utilization),
+        ] {
+            writeln!(s, "{name:<14} {:>9.4} {:>9.4} {:>9.4}", p.p50, p.p95, p.p99).unwrap();
+        }
+        writeln!(
+            s,
+            "{:<14} {:<10} {:<22} {:>9} {:>8} {:>9} {:>10} {:>6}",
+            "workload", "rung", "traffic", "chips", "fps", "mJ/chip", "util", "ff"
+        )
+        .unwrap();
+        for c in &self.classes {
+            writeln!(
+                s,
+                "{:<14} {:<10} {:<22} {:>9} {:>8.3} {:>9.4} {:>9.1}% {:>6}",
+                c.workload,
+                c.rung,
+                c.traffic,
+                c.chips,
+                c.fps,
+                c.energy_mj,
+                c.utilization * 100.0,
+                c.fast_forwarded_frames
+            )
+            .unwrap();
+        }
+        s
+    }
+
+    pub fn to_json(&self) -> Json {
+        let pct_json = |p: &Pct| {
+            Json::obj(vec![
+                ("p50", Json::num(p.p50)),
+                ("p95", Json::num(p.p95)),
+                ("p99", Json::num(p.p99)),
+            ])
+        };
+        Json::obj(vec![
+            ("chips", Json::num(self.chips as f64)),
+            ("class_count", Json::num(self.classes.len() as f64)),
+            ("sample_k", Json::num(self.sample_k as f64)),
+            ("live_chips", Json::num(self.live_chips as f64)),
+            ("parity_checked", Json::num(self.parity_checked as f64)),
+            ("parity_failures", Json::num(self.parity_failures as f64)),
+            ("total_frames", Json::num(self.total_frames as f64)),
+            ("energy_j", Json::num(self.energy_j)),
+            ("makespan_s", Json::num(self.makespan_s)),
+            ("wall_s", Json::num(self.wall_s)),
+            ("chips_per_s", Json::num(self.chips_per_s)),
+            ("naive_est_wall_s", Json::num(self.naive_est_wall_s)),
+            ("dedup_speedup", Json::num(self.dedup_speedup)),
+            ("energy_mj_per_chip", pct_json(&self.energy_mj_per_chip)),
+            ("latency_s", pct_json(&self.latency_s)),
+            ("utilization", pct_json(&self.utilization)),
+            (
+                "classes",
+                Json::Arr(
+                    self.classes
+                        .iter()
+                        .map(|c| {
+                            Json::obj(vec![
+                                ("key", Json::string(&c.key)),
+                                ("workload", Json::string(&c.workload)),
+                                ("rung", Json::string(&c.rung)),
+                                ("traffic", Json::string(&c.traffic)),
+                                ("chips", Json::num(c.chips as f64)),
+                                ("frames", Json::num(c.frames as f64)),
+                                ("makespan_s", Json::num(c.makespan_s)),
+                                ("energy_mj", Json::num(c.energy_mj)),
+                                ("fps", Json::num(c.fps)),
+                                ("utilization", Json::num(c.utilization)),
+                                (
+                                    "fast_forwarded_frames",
+                                    Json::num(c.fast_forwarded_frames as f64),
+                                ),
+                                ("live_runs", Json::num(c.live_runs as f64)),
+                                ("wall_s", Json::num(c.wall_s)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
     }
 }
 
@@ -523,7 +1097,7 @@ impl RunReport {
     }
 }
 
-fn breakdown_json(ledger: &crate::energy::EnergyLedger) -> Json {
+fn breakdown_json(ledger: &EnergyLedger) -> Json {
     Json::Obj(
         Category::all()
             .iter()
@@ -681,6 +1255,11 @@ impl SocSystem {
         Ok((w, rung))
     }
 
+    /// Run a chip fleet with class deduplication — see [`Fleet::run`].
+    pub fn fleet(&self, spec: &FleetSpec) -> Result<FleetReport> {
+        Fleet::run(self, spec)
+    }
+
     /// Schedule one frame of the spec's workload and return the Fig.
     /// 10/11/12-style result (the spec's `frames` is ignored here).
     pub fn run_frame(&self, spec: &RunSpec) -> Result<UseCaseResult> {
@@ -702,16 +1281,19 @@ impl SocSystem {
         if spec.shards == 0 {
             bail!("--shards must be at least 1 (no chips schedule no frames)");
         }
+        spec.traffic.validate()?;
         let g = frame_graph(w, rung.cfg)?;
         let window = spec.window.unwrap_or(crate::soc::sched::DEFAULT_STREAM_WINDOW);
         let (result, shards) = if spec.shards > 1 {
-            let parts = ShardedStream::run(&g, spec.frames, window, spec.shards);
+            let parts =
+                ShardedStream::run_traffic(&g, spec.frames, window, spec.shards, &spec.traffic);
             let result =
                 merge_sharded(w.name(), &g, spec.frames, window, w.eq_ops(), &parts);
             (result, parts.into_iter().map(|(_, st)| st).collect())
         } else {
+            let release = spec.traffic.release_times(spec.frames);
             (
-                stream_graph_windowed(w.name(), &g, spec.frames, window, w.eq_ops()),
+                stream_graph_traffic(w.name(), &g, spec.frames, window, w.eq_ops(), &release),
                 Vec::new(),
             )
         };
@@ -978,5 +1560,212 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// Satellite (traffic tests): a seeded Poisson run replays bitwise
+    /// across invocations, and — since every chip regenerates its model
+    /// from t = 0 — an equal S-way split makes all shards bitwise equal
+    /// to each other and to the single-chip run of one share.
+    #[test]
+    fn poisson_traffic_reproducible_across_runs_and_shards() {
+        let sys = SocSystem::new();
+        let poisson = Traffic::Poisson { rate_hz: 2.0, seed: 9 };
+        let spec = RunSpec::new("seizure").frames(12).traffic(poisson.clone());
+        let a = sys.run(&spec).unwrap();
+        let b = sys.run(&spec).unwrap();
+        assert_eq!(a.result.time_s.to_bits(), b.result.time_s.to_bits());
+        assert_eq!(a.result.energy_mj.to_bits(), b.result.energy_mj.to_bits());
+        let sharded = sys.run(&spec.clone().shards(3)).unwrap();
+        let again = sys.run(&spec.clone().shards(3)).unwrap();
+        assert_eq!(
+            sharded.result.energy_mj.to_bits(),
+            again.result.energy_mj.to_bits(),
+            "sharded Poisson must replay bitwise"
+        );
+        assert_eq!(sharded.shards.len(), 3);
+        // 12 frames over 3 chips: identical 4-frame shares, identical chips
+        let single_share =
+            sys.run(&RunSpec::new("seizure").frames(4).traffic(poisson)).unwrap();
+        for st in &sharded.shards {
+            assert_eq!(st.frames, 4);
+            assert_eq!(st.time_s.to_bits(), sharded.shards[0].time_s.to_bits());
+            assert_eq!(st.energy_mj.to_bits(), sharded.shards[0].energy_mj.to_bits());
+            assert_eq!(
+                st.time_s.to_bits(),
+                single_share.result.time_s.to_bits(),
+                "a shard is exactly the single-chip run of its share"
+            );
+        }
+    }
+
+    /// Satellite (traffic tests): traffic gaps change the schedule but
+    /// not the work — per-tenant active rows stay bitwise
+    /// window-invariant and the attributed total still re-sums to the
+    /// schedule's energy on gap-inserted streams.
+    #[test]
+    fn gap_inserted_streams_keep_attribution_window_invariant() {
+        let sys = SocSystem::new();
+        let frames = 6usize;
+        let mut reference: Option<Vec<(String, f64)>> = None;
+        for window in [1usize, 2, frames] {
+            let r = sys
+                .run(
+                    &RunSpec::new("mixed")
+                        .frames(frames)
+                        .window(window)
+                        .traffic(Traffic::Periodic { rate_hz: 0.5 }),
+                )
+                .unwrap();
+            let attributed: f64 = r.tenants.iter().map(|t| t.energy_mj).sum();
+            assert!(
+                (attributed - r.result.energy_mj).abs() < 1e-6 * r.result.energy_mj,
+                "window {window}: attributed {attributed} vs {}",
+                r.result.energy_mj
+            );
+            let active: Vec<(String, f64)> =
+                r.tenants.iter().map(|t| (t.name.clone(), t.active_mj)).collect();
+            match &reference {
+                None => reference = Some(active),
+                Some(base) => {
+                    for ((n0, a0), (n1, a1)) in base.iter().zip(&active) {
+                        assert_eq!(n0, n1);
+                        assert_eq!(a0.to_bits(), a1.to_bits(), "{n0} active vs window");
+                    }
+                }
+            }
+        }
+        // gap-dominated single-tenant stream: makespan is release-driven
+        let gapped = sys
+            .run(
+                &RunSpec::new("seizure")
+                    .frames(4)
+                    .traffic(Traffic::Periodic { rate_hz: 0.25 }),
+            )
+            .unwrap();
+        assert!(
+            gapped.result.time_s >= 3.0 / 0.25,
+            "4 frames at 0.25 Hz must span at least the last release: {}",
+            gapped.result.time_s
+        );
+    }
+
+    #[test]
+    fn weighted_percentile_nearest_rank() {
+        let total = 4usize;
+        let mut v = vec![(3.0, 1usize), (1.0, 1), (4.0, 1), (2.0, 1)];
+        assert_eq!(weighted_percentile(&mut v, 0.50, total), 2.0);
+        assert_eq!(weighted_percentile(&mut v, 0.95, total), 4.0);
+        assert_eq!(weighted_percentile(&mut v, 0.25, total), 1.0);
+        // population weighting: 97 cheap chips, 3 expensive ones
+        let mut w = vec![(1.0, 97usize), (10.0, 3)];
+        assert_eq!(weighted_percentile(&mut w, 0.50, 100), 1.0);
+        assert_eq!(weighted_percentile(&mut w, 0.95, 100), 1.0);
+        assert_eq!(weighted_percentile(&mut w, 0.99, 100), 10.0);
+    }
+
+    /// Tentpole: the fleet runner dedups chips into classes (live work
+    /// tracks the class count, not the population), every class passes its
+    /// sampled live-vs-scaled parity check, and the roll-up is coherent.
+    #[test]
+    fn fleet_dedups_classes_and_passes_parity() {
+        let sys = SocSystem::new();
+        let fleet = FleetSpec::mixed(64, 4);
+        let n_groups = fleet.groups.len();
+        let report = sys.fleet(&fleet).unwrap();
+        assert_eq!(report.chips, 64);
+        assert_eq!(report.classes.len(), n_groups, "mixed templates are all distinct");
+        assert!(report.classes.len() < report.chips, "dedup must beat per-chip simulation");
+        assert!(report.live_chips <= report.classes.len() * report.sample_k);
+        assert!(report.parity_checked >= report.classes.len(), "every class sampled");
+        assert_eq!(report.parity_failures, 0);
+        let pop: usize = report.classes.iter().map(|c| c.chips).sum();
+        assert_eq!(pop, 64, "class populations partition the fleet");
+        assert_eq!(report.total_frames, 64 * 4);
+        assert!(report.energy_j > 0.0);
+        for p in [report.energy_mj_per_chip, report.latency_s, report.utilization] {
+            assert!(p.p50 <= p.p95 && p.p95 <= p.p99, "percentiles must be ordered");
+        }
+        assert!(report.makespan_s >= report.latency_s.p99, "fleet makespan is the slowest chip");
+        let text = report.render_text();
+        assert!(text.contains("64 chips"), "{text}");
+        assert!(text.contains("dedup speedup"), "{text}");
+        let json = report.to_json().render();
+        for key in [
+            "\"chips\"",
+            "\"class_count\"",
+            "\"live_chips\"",
+            "\"parity_checked\"",
+            "\"parity_failures\"",
+            "\"dedup_speedup\"",
+            "\"chips_per_s\"",
+            "\"energy_mj_per_chip\"",
+        ] {
+            assert!(json.contains(key), "missing {key} in {json}");
+        }
+    }
+
+    /// Class scaling is honest: a 5-chip single-class fleet reports 5× the
+    /// single-chip energy, every member simulates live (sample_k ≥
+    /// population), and duplicate groups merge into one class.
+    #[test]
+    fn fleet_population_scaling_matches_single_runs() {
+        let sys = SocSystem::new();
+        let spec = RunSpec::new("seizure")
+            .frames(3)
+            .traffic(Traffic::Periodic { rate_hz: 2.0 });
+        let single = sys.run(&spec).unwrap();
+        let fleet = FleetSpec::new(vec![
+            FleetGroup { spec: spec.clone(), chips: 2 },
+            FleetGroup { spec: spec.clone(), chips: 3 },
+        ])
+        .sample_k(5);
+        let report = sys.fleet(&fleet).unwrap();
+        assert_eq!(report.classes.len(), 1, "identical groups merge into one class");
+        assert_eq!(report.chips, 5);
+        assert_eq!(report.classes[0].chips, 5);
+        assert_eq!(report.live_chips, 5, "sample_k covers the whole population");
+        assert_eq!(report.parity_failures, 0);
+        let expect_j = 5.0 * single.result.energy_mj / 1e3;
+        assert!(
+            (report.energy_j - expect_j).abs() < 1e-12 * (1.0 + expect_j),
+            "scaled fleet energy {} vs 5x single {}",
+            report.energy_j,
+            expect_j
+        );
+        assert_eq!(report.makespan_s.to_bits(), single.result.time_s.to_bits());
+        assert_eq!(report.latency_s.p50.to_bits(), single.result.time_s.to_bits());
+        assert_eq!(report.latency_s.p99.to_bits(), single.result.time_s.to_bits());
+    }
+
+    #[test]
+    fn fleet_rejects_bad_specs() {
+        let sys = SocSystem::new();
+        let e = sys
+            .fleet(&FleetSpec::new(vec![FleetGroup {
+                spec: RunSpec::new("seizure").shards(2),
+                chips: 4,
+            }]))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("more chips"), "{e}");
+        let e = sys
+            .fleet(&FleetSpec::new(vec![FleetGroup {
+                spec: RunSpec::new("seizure"),
+                chips: 0,
+            }]))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("at least one chip"), "{e}");
+        let e = sys
+            .fleet(
+                &FleetSpec::new(vec![FleetGroup {
+                    spec: RunSpec::new("seizure"),
+                    chips: 1,
+                }])
+                .sample_k(0),
+            )
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("--sample"), "{e}");
     }
 }

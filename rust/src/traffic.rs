@@ -1,0 +1,315 @@
+//! Per-chip traffic models: when do frames *arrive* at an endpoint?
+//!
+//! The §IV use cases stream back-to-back — each frame's input is assumed
+//! resident the moment the window has room. A deployed endpoint is paced
+//! by its sensor instead: a camera delivers frames at a fixed rate, an
+//! EEG front-end in windowed bursts, an event-driven trigger at random
+//! (Poisson) instants. A [`Traffic`] model turns those arrival processes
+//! into a deterministic *release table* — `release[f]` is the earliest
+//! simulated time frame `f` may start — which
+//! [`crate::soc::sched::StreamScheduler::run_traffic`] enforces as
+//! admission gates and [`crate::system::Fleet`] uses as part of the chip
+//! class key (two chips with the same workload, rung *and* traffic phase
+//! are simulation-identical).
+//!
+//! Everything is seeded and wall-clock free: a [`Traffic::Poisson`] model
+//! carries its own xorshift64* seed, so the same spec replays bitwise on
+//! any host, any thread count, any run.
+
+use anyhow::{bail, Result};
+
+/// A deterministic frame-arrival process. Times are simulated seconds;
+/// frame 0 always releases at `t = 0` (the stream starts when the first
+/// sample is in).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Traffic {
+    /// Every frame is ready immediately (the PR 5 semantics): the window,
+    /// not the sensor, is the only admission limit.
+    BackToBack,
+    /// Fixed-rate sensor: frame `f` releases at `f / rate_hz`. A rate the
+    /// pipeline cannot sustain leaves the scheduler input-starved
+    /// (gap-dominated); a rate faster than the frame makespan degrades to
+    /// back-to-back — releases in the past gate nothing.
+    Periodic { rate_hz: f64 },
+    /// Windowed acquisition: frames arrive `burst` at a time, bursts at
+    /// `rate_hz` (frame `f` releases at `⌊f / burst⌋ / rate_hz`). Models
+    /// e.g. an EEG front-end handing over one multi-channel window per
+    /// acquisition period.
+    Bursty { burst: usize, rate_hz: f64 },
+    /// Event-driven trigger: exponential inter-arrival gaps with mean
+    /// `1 / rate_hz`, drawn from a seeded xorshift64* stream. Fully
+    /// deterministic — the same `(rate_hz, seed)` yields the same release
+    /// table everywhere.
+    Poisson { rate_hz: f64, seed: u64 },
+}
+
+impl Traffic {
+    /// Validate the model parameters (finite positive rates, non-zero
+    /// burst).
+    pub fn validate(&self) -> Result<()> {
+        let rate = match *self {
+            Traffic::BackToBack => return Ok(()),
+            Traffic::Periodic { rate_hz } => rate_hz,
+            Traffic::Bursty { burst, rate_hz } => {
+                if burst == 0 {
+                    bail!("bursty traffic needs a burst of at least 1 frame");
+                }
+                rate_hz
+            }
+            Traffic::Poisson { rate_hz, .. } => rate_hz,
+        };
+        if !(rate.is_finite() && rate > 0.0) {
+            bail!("traffic rate must be finite and > 0 Hz, got {rate}");
+        }
+        Ok(())
+    }
+
+    /// The release table for a `frames`-long stream: non-decreasing,
+    /// `release[0] == 0`. [`Traffic::BackToBack`] returns an empty table
+    /// (the scheduler's no-gating fast path).
+    pub fn release_times(&self, frames: usize) -> Vec<f64> {
+        match *self {
+            Traffic::BackToBack => Vec::new(),
+            Traffic::Periodic { rate_hz } => {
+                (0..frames).map(|f| f as f64 / rate_hz).collect()
+            }
+            Traffic::Bursty { burst, rate_hz } => {
+                (0..frames).map(|f| (f / burst) as f64 / rate_hz).collect()
+            }
+            Traffic::Poisson { rate_hz, seed } => {
+                let mut rng = Xorshift64Star::new(seed);
+                let mut t = 0.0f64;
+                (0..frames)
+                    .map(|f| {
+                        if f > 0 {
+                            t += -rng.next_unit().ln() / rate_hz;
+                        }
+                        t
+                    })
+                    .collect()
+            }
+        }
+    }
+
+    /// True for the ungated model (callers may skip release-table work).
+    pub fn is_back_to_back(&self) -> bool {
+        matches!(self, Traffic::BackToBack)
+    }
+
+    /// Canonical class-key fragment: distinct models (including distinct
+    /// Poisson seeds — different phase, different schedule) map to
+    /// distinct keys, bit-exactly (`f64::to_bits`, not display rounding).
+    pub fn key(&self) -> String {
+        match *self {
+            Traffic::BackToBack => "b2b".into(),
+            Traffic::Periodic { rate_hz } => format!("per:{:016x}", rate_hz.to_bits()),
+            Traffic::Bursty { burst, rate_hz } => {
+                format!("bur:{burst}:{:016x}", rate_hz.to_bits())
+            }
+            Traffic::Poisson { rate_hz, seed } => {
+                format!("poi:{:016x}:{seed:016x}", rate_hz.to_bits())
+            }
+        }
+    }
+
+    /// Human-readable description for reports.
+    pub fn describe(&self) -> String {
+        match *self {
+            Traffic::BackToBack => "back-to-back".into(),
+            Traffic::Periodic { rate_hz } => format!("periodic {rate_hz} Hz"),
+            Traffic::Bursty { burst, rate_hz } => {
+                format!("bursty {burst}x @ {rate_hz} Hz")
+            }
+            Traffic::Poisson { rate_hz, seed } => {
+                format!("poisson {rate_hz} Hz (seed {seed})")
+            }
+        }
+    }
+
+    /// Parse a CLI spec: `backtoback`/`b2b`, `periodic:RATE`,
+    /// `bursty:BURST:RATE`, `poisson:RATE[:SEED]` (seed defaults to 1).
+    pub fn parse(s: &str) -> Result<Traffic> {
+        let parts: Vec<&str> = s.split(':').collect();
+        let t = match parts[0] {
+            "backtoback" | "b2b" => {
+                if parts.len() != 1 {
+                    bail!("back-to-back traffic takes no parameters: {s}");
+                }
+                Traffic::BackToBack
+            }
+            "periodic" => {
+                if parts.len() != 2 {
+                    bail!("expected periodic:RATE_HZ, got {s}");
+                }
+                Traffic::Periodic { rate_hz: parse_rate(parts[1])? }
+            }
+            "bursty" => {
+                if parts.len() != 3 {
+                    bail!("expected bursty:BURST:RATE_HZ, got {s}");
+                }
+                let burst: usize = parts[1]
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("bad burst count {}", parts[1]))?;
+                Traffic::Bursty { burst, rate_hz: parse_rate(parts[2])? }
+            }
+            "poisson" => {
+                if parts.len() < 2 || parts.len() > 3 {
+                    bail!("expected poisson:RATE_HZ[:SEED], got {s}");
+                }
+                let seed = match parts.get(2) {
+                    Some(p) => p
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad poisson seed {p}"))?,
+                    None => 1,
+                };
+                Traffic::Poisson { rate_hz: parse_rate(parts[1])?, seed }
+            }
+            other => bail!(
+                "unknown traffic model '{other}' (expected backtoback, periodic, bursty or poisson)"
+            ),
+        };
+        t.validate()?;
+        Ok(t)
+    }
+}
+
+fn parse_rate(s: &str) -> Result<f64> {
+    s.parse::<f64>()
+        .map_err(|_| anyhow::anyhow!("bad rate '{s}' (Hz)"))
+}
+
+/// xorshift64* — tiny, seeded, statistically adequate for inter-arrival
+/// draws, and (unlike `rand`) dependency-free. Zero seeds are remapped so
+/// the state never sticks. Crate-internal: the fleet runner reuses it for
+/// parity-sample member selection.
+pub(crate) struct Xorshift64Star {
+    state: u64,
+}
+
+impl Xorshift64Star {
+    pub(crate) fn new(seed: u64) -> Self {
+        Xorshift64Star {
+            state: if seed == 0 { 0x9E37_79B9_7F4A_7C15 } else { seed },
+        }
+    }
+
+    pub(crate) fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545_F491_4F6C_DD1D)
+    }
+
+    /// Uniform in (0, 1] — the `+1` keeps `ln` off zero.
+    fn next_unit(&mut self) -> f64 {
+        ((self.next_u64() >> 11) + 1) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn back_to_back_is_empty() {
+        assert!(Traffic::BackToBack.release_times(64).is_empty());
+        assert!(Traffic::BackToBack.is_back_to_back());
+    }
+
+    #[test]
+    fn periodic_release_times() {
+        let r = Traffic::Periodic { rate_hz: 4.0 }.release_times(4);
+        assert_eq!(r, vec![0.0, 0.25, 0.5, 0.75]);
+    }
+
+    #[test]
+    fn bursty_release_times_group_frames() {
+        let r = Traffic::Bursty { burst: 3, rate_hz: 2.0 }.release_times(7);
+        assert_eq!(r, vec![0.0, 0.0, 0.0, 0.5, 0.5, 0.5, 1.0]);
+    }
+
+    #[test]
+    fn release_tables_start_at_zero_and_never_decrease() {
+        let models = [
+            Traffic::Periodic { rate_hz: 7.3 },
+            Traffic::Bursty { burst: 5, rate_hz: 0.9 },
+            Traffic::Poisson { rate_hz: 3.0, seed: 42 },
+        ];
+        for m in models {
+            let r = m.release_times(257);
+            assert_eq!(r[0], 0.0, "{m:?}");
+            for w in r.windows(2) {
+                assert!(w[1] >= w[0], "{m:?} decreased: {w:?}");
+            }
+            assert!(r.iter().all(|x| x.is_finite()));
+        }
+    }
+
+    #[test]
+    fn poisson_is_reproducible_and_seed_sensitive() {
+        let a = Traffic::Poisson { rate_hz: 5.0, seed: 7 }.release_times(100);
+        let b = Traffic::Poisson { rate_hz: 5.0, seed: 7 }.release_times(100);
+        assert_eq!(
+            a.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            b.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            "same seed must replay bitwise"
+        );
+        let c = Traffic::Poisson { rate_hz: 5.0, seed: 8 }.release_times(100);
+        assert_ne!(a, c, "different seeds must differ");
+        // A prefix is a prefix: the table for fewer frames is the head of
+        // the longer table (shard splits rely on per-chip regeneration,
+        // not table slicing, but prefix stability keeps the two equal).
+        let d = Traffic::Poisson { rate_hz: 5.0, seed: 7 }.release_times(40);
+        assert_eq!(&a[..40], &d[..]);
+    }
+
+    #[test]
+    fn poisson_zero_seed_is_remapped() {
+        let r = Traffic::Poisson { rate_hz: 1.0, seed: 0 }.release_times(10);
+        assert!(r[9] > 0.0, "zero seed must still draw gaps");
+    }
+
+    #[test]
+    fn parse_round_trips() {
+        assert_eq!(Traffic::parse("b2b").unwrap(), Traffic::BackToBack);
+        assert_eq!(Traffic::parse("backtoback").unwrap(), Traffic::BackToBack);
+        assert_eq!(
+            Traffic::parse("periodic:2.5").unwrap(),
+            Traffic::Periodic { rate_hz: 2.5 }
+        );
+        assert_eq!(
+            Traffic::parse("bursty:4:0.5").unwrap(),
+            Traffic::Bursty { burst: 4, rate_hz: 0.5 }
+        );
+        assert_eq!(
+            Traffic::parse("poisson:3:99").unwrap(),
+            Traffic::Poisson { rate_hz: 3.0, seed: 99 }
+        );
+        assert_eq!(
+            Traffic::parse("poisson:3").unwrap(),
+            Traffic::Poisson { rate_hz: 3.0, seed: 1 }
+        );
+        assert!(Traffic::parse("periodic:-1").is_err());
+        assert!(Traffic::parse("periodic:0").is_err());
+        assert!(Traffic::parse("bursty:0:1").is_err());
+        assert!(Traffic::parse("warp:9").is_err());
+        assert!(Traffic::parse("b2b:1").is_err());
+    }
+
+    #[test]
+    fn keys_distinguish_models_and_seeds() {
+        let models = [
+            Traffic::BackToBack,
+            Traffic::Periodic { rate_hz: 2.0 },
+            Traffic::Periodic { rate_hz: 2.5 },
+            Traffic::Bursty { burst: 4, rate_hz: 2.0 },
+            Traffic::Poisson { rate_hz: 2.0, seed: 1 },
+            Traffic::Poisson { rate_hz: 2.0, seed: 2 },
+        ];
+        let keys: std::collections::BTreeSet<String> =
+            models.iter().map(|m| m.key()).collect();
+        assert_eq!(keys.len(), models.len(), "class keys must be injective");
+    }
+}

@@ -55,6 +55,14 @@ pub trait Workload {
     fn tenants(&self) -> Vec<(String, u64)> {
         vec![(self.name().to_string(), self.eq_ops())]
     }
+
+    /// The workload's natural sensor frame rate (Hz): the arrival rate a
+    /// deployed endpoint sees — what paces the [`crate::traffic::Traffic`]
+    /// models [`crate::system::FleetSpec::mixed`] builds. Defaults to
+    /// 1 Hz for workloads without a natural cadence.
+    fn native_rate_hz(&self) -> f64 {
+        1.0
+    }
 }
 
 /// Build one frame of `w` at `cfg` as a standalone job graph.
@@ -81,6 +89,10 @@ impl Workload for Surveillance {
     fn eq_ops(&self) -> u64 {
         surveillance::eq_ops()
     }
+    fn native_rate_hz(&self) -> f64 {
+        // §IV-A: one secured inference every ~2 s of the 7-min flight.
+        0.5
+    }
 }
 
 /// §IV-B: local face detection with secured remote recognition (Fig. 11).
@@ -99,6 +111,10 @@ impl Workload for FaceDetection {
     }
     fn eq_ops(&self) -> u64 {
         facedet::eq_ops()
+    }
+    fn native_rate_hz(&self) -> f64 {
+        // §IV-B: always-on camera trigger, a few frames per second.
+        2.0
     }
 }
 
@@ -121,6 +137,10 @@ impl Workload for SeizureDetection {
     }
     fn rungs(&self) -> Vec<Rung> {
         seizure::rung_configs()
+    }
+    fn native_rate_hz(&self) -> f64 {
+        // §IV-C: one 23-channel EEG window every 0.5 s.
+        2.0
     }
 }
 
@@ -179,6 +199,16 @@ impl Workload for MixedStream {
     }
     fn eq_ops(&self) -> u64 {
         self.tenants.iter().map(|t| t.eq_ops()).sum()
+    }
+    fn native_rate_hz(&self) -> f64 {
+        // A shared chip is paced by its slowest sensor: a mixed frame
+        // carries one frame of every tenant.
+        let slowest = self
+            .tenants
+            .iter()
+            .map(|t| t.native_rate_hz())
+            .fold(f64::INFINITY, f64::min);
+        if slowest.is_finite() { slowest } else { 1.0 }
     }
     fn tenants(&self) -> Vec<(String, u64)> {
         // Aggregate by name: segments of repeated tenants merge the same way.
