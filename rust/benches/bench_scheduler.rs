@@ -16,8 +16,11 @@
 //! materialized paths (indexed dispatch and the legacy linear scan), and
 //! a `shard_scaling` section with jobs/s at S = {1, 2, 4} simulated SoCs,
 //! and a `fleet_scaling` section with the class-deduplicated fleet
-//! runner's chips/s and dedup speedup at {1k, 100k, 1M} chips — the
-//! machine-readable perf trajectory CI tracks across PRs.
+//! runner's chips/s and dedup speedup at {1k, 100k, 1M} chips, and a
+//! `policy` section with energy-per-day and battery-life rows for every
+//! workload × sleep policy at a 1 Hz duty cycle (CI guards the
+//! oracle ≤ lookahead ≤ greedy energy ordering) — the machine-readable
+//! perf trajectory CI tracks across PRs.
 //!
 //! Uses `fulmine::bench_support` (the offline crate set has no criterion).
 
@@ -26,8 +29,10 @@ use fulmine::coordinator::{surveillance, ExecConfig};
 use fulmine::hwce::golden::WeightPrec;
 use fulmine::json::Json;
 use fulmine::report;
+use fulmine::soc::pm::{self, PolicyKind};
 use fulmine::soc::sched::{Engine, Scheduler, StreamScheduler, DEFAULT_STREAM_WINDOW};
 use fulmine::system::{FleetSpec, RunSpec, ShardedStream, SocSystem};
+use fulmine::traffic::Traffic;
 use fulmine::workload::frame_graph;
 use std::time::Instant;
 
@@ -258,11 +263,59 @@ fn main() {
     }
     println!("fleet dedup speedup at 1M chips: {fleet_1m_speedup:.1}x vs per-chip simulation");
 
+    // Power-state policies: every workload duty-cycled at 1 Hz (a gap-
+    // dominated sensor cadence) under the three sleep policies. The rows
+    // carry the battery extrapolation CI guards: per workload, lookahead
+    // must never burn more energy per day than greedy, and the
+    // clairvoyant oracle lower-bounds both.
+    println!("\n== power policies: energy/day at periodic:1, 64 frames ==");
+    println!(
+        "{:<14} {:<10} {:>10} {:>11} {:>11} {:>8} {:>7}",
+        "workload", "policy", "E [mJ]", "mJ/day", "batt [d]", "sleep%", "wakes"
+    );
+    let mut policy_rows: Vec<Json> = Vec::new();
+    for name in sys.registry().names() {
+        for policy in [PolicyKind::Greedy, PolicyKind::Lookahead, PolicyKind::Oracle] {
+            let r = sys
+                .run(
+                    &RunSpec::new(name)
+                        .frames(64)
+                        .traffic(Traffic::Periodic { rate_hz: 1.0 })
+                        .policy(Some(policy)),
+                )
+                .unwrap()
+                .result;
+            let epd = pm::energy_per_day_mj(r.energy_mj, r.time_s);
+            let batt = pm::battery_days(r.energy_mj, r.time_s);
+            let sleep_frac = r.sleep_s / r.time_s;
+            println!(
+                "{name:<14} {:<10} {:>10.4} {epd:>11.3} {batt:>11.2} {:>7.1}% {:>7}",
+                policy.name(),
+                r.energy_mj,
+                sleep_frac * 100.0,
+                r.wake_transitions
+            );
+            policy_rows.push(Json::obj(vec![
+                ("workload", Json::string(name)),
+                ("policy", Json::string(policy.name())),
+                ("traffic", Json::string("periodic:1")),
+                ("frames", Json::num(64.0)),
+                ("energy_mj", Json::num(r.energy_mj)),
+                ("epd_mj_per_day", Json::num(epd)),
+                ("battery_days", Json::num(batt)),
+                ("sleep_fraction", Json::num(sleep_frac)),
+                ("deep_sleep_s", Json::num(r.deep_sleep_s)),
+                ("wake_transitions", Json::num(r.wake_transitions as f64)),
+            ]));
+        }
+    }
+
     let doc = Json::obj(vec![
         ("rungs", Json::Arr(rows)),
         ("stream_scaling", Json::Arr(scaling_rows)),
         ("shard_scaling", Json::Arr(shard_rows)),
         ("fleet_scaling", Json::Arr(fleet_rows)),
+        ("policy", Json::Arr(policy_rows)),
         ("fleet_1m_dedup_speedup", Json::num(fleet_1m_speedup)),
         ("windowed_vs_scan_jobs_per_s", Json::num(vs_scan_64)),
         ("windowed_4096_vs_scan_64_jobs_per_s", Json::num(deep_vs_scan)),

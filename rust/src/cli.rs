@@ -9,6 +9,7 @@
 use crate::apps::params::{gen_params, xorshift_i16};
 use crate::report::{self, PAPER_ARTIFACTS};
 use crate::runtime::{default_artifact_dir, Runtime, TensorI16};
+use crate::soc::pm::PolicyKind;
 use crate::system::{FleetSpec, RunSpec, RungSel, SocSystem};
 use crate::traffic::Traffic;
 use anyhow::{anyhow, bail, Result};
@@ -23,7 +24,7 @@ commands:
   ladder <workload> [--json]
                 run every ladder rung of a workload (one frame each)
   stream <workload> [--frames N] [--window K] [--shards S] [--config RUNG]
-         [--traffic MODEL] [--json]
+         [--traffic MODEL] [--policy P] [--json]
                 pipeline N frames through the bounded-window streaming
                 scheduler: at most K frames in flight (default 8, clamped
                 to N), so memory stays O(K) however large N is; with
@@ -31,15 +32,20 @@ commands:
                 parallel host threads (near-linear throughput scaling)
                 (RUNG: ladder index or label substring, default best;
                 MODEL: backtoback | periodic:RATE_HZ | bursty:BURST:RATE_HZ
-                | poisson:RATE_HZ[:SEED] — when frames arrive at the chip)
-  fleet [--chips N] [--frames F] [--sample K] [--threads T] [--json]
+                | poisson:RATE_HZ[:SEED] — when frames arrive at the chip;
+                P: greedy | lookahead | oracle — duty-cycle idle gaps
+                through the Table I sleep ladder and report battery life;
+                oracle reads future arrivals, so it needs a --traffic model)
+  fleet [--chips N] [--frames F] [--sample K] [--threads T] [--policy P]
+        [--json]
                 simulate a fleet of N endpoints (default 1000) spread over
                 every workload x rung x traffic model: chips dedup into
                 simulation-identical classes, each class runs once and
                 scales to its population (K random members per class
                 re-run live and must match bitwise; default K=3), with
                 energy/latency/utilization percentiles across the fleet —
-                --chips 1000000 completes in seconds
+                --chips 1000000 completes in seconds; --policy P manages
+                every chip's idle gaps and adds battery-life percentiles
   ablations [--json]
                 run the surveillance design-choice sweep
   artifacts     list and compile the AOT artifacts (PJRT smoke test)
@@ -62,10 +68,18 @@ pub enum Command {
         shards: usize,
         rung: Option<String>,
         traffic: Traffic,
+        policy: Option<PolicyKind>,
         json: bool,
     },
     /// Class-deduplicated fleet simulation over the standard mix.
-    Fleet { chips: usize, frames: usize, sample: usize, threads: usize, json: bool },
+    Fleet {
+        chips: usize,
+        frames: usize,
+        sample: usize,
+        threads: usize,
+        policy: Option<PolicyKind>,
+        json: bool,
+    },
     /// The surveillance ablation sweep.
     Ablations { json: bool },
     /// PJRT artifact listing/compilation.
@@ -145,6 +159,7 @@ fn parse_stream(args: &[String]) -> Result<Command> {
     let mut shards = 1usize;
     let mut rung: Option<String> = None;
     let mut traffic = Traffic::BackToBack;
+    let mut policy: Option<PolicyKind> = None;
     let mut json = false;
     let mut it = args[1..].iter();
     while let Some(flag) = it.next() {
@@ -180,11 +195,21 @@ fn parse_stream(args: &[String]) -> Result<Command> {
                 let v = it.next().ok_or_else(|| anyhow!("--traffic needs a value"))?;
                 traffic = Traffic::parse(v)?;
             }
+            "--policy" => {
+                let v = it.next().ok_or_else(|| anyhow!("--policy needs a value"))?;
+                policy = Some(PolicyKind::parse(v)?);
+            }
             "--json" => json = true,
             other => bail!("unknown stream flag {other:?}"),
         }
     }
-    Ok(Command::Stream { workload, frames, window, shards, rung, traffic, json })
+    if policy == Some(PolicyKind::Oracle) && matches!(traffic, Traffic::BackToBack) {
+        bail!(
+            "--policy oracle reads the future release table, which a back-to-back \
+             stream does not have — pick a --traffic model (or use greedy/lookahead)"
+        );
+    }
+    Ok(Command::Stream { workload, frames, window, shards, rung, traffic, policy, json })
 }
 
 /// Parse the `fleet` subcommand's flags: `[--chips N] [--frames F]
@@ -194,6 +219,7 @@ fn parse_fleet(args: &[String]) -> Result<Command> {
     let mut frames = 32usize;
     let mut sample = 3usize;
     let mut threads = 0usize;
+    let mut policy: Option<PolicyKind> = None;
     let mut json = false;
     let mut it = args.iter();
     while let Some(flag) = it.next() {
@@ -223,11 +249,15 @@ fn parse_fleet(args: &[String]) -> Result<Command> {
                 let v = it.next().ok_or_else(|| anyhow!("--threads needs a value"))?;
                 threads = v.parse().map_err(|_| anyhow!("bad --threads value {v:?}"))?;
             }
+            "--policy" => {
+                let v = it.next().ok_or_else(|| anyhow!("--policy needs a value"))?;
+                policy = Some(PolicyKind::parse(v)?);
+            }
             "--json" => json = true,
             other => bail!("unknown fleet flag {other:?}"),
         }
     }
-    Ok(Command::Fleet { chips, frames, sample, threads, json })
+    Ok(Command::Fleet { chips, frames, sample, threads, policy, json })
 }
 
 /// Execute a parsed command, printing its output to stdout.
@@ -252,12 +282,13 @@ pub fn dispatch(cmd: &Command) -> Result<()> {
                 print!("{}", ladder.render_text());
             }
         }
-        Command::Stream { workload, frames, window, shards, rung, traffic, json } => {
+        Command::Stream { workload, frames, window, shards, rung, traffic, policy, json } => {
             let mut spec = RunSpec::new(workload)
                 .frames(*frames)
                 .shards(*shards)
                 .rung(RungSel::parse(rung.as_deref()))
-                .traffic(traffic.clone());
+                .traffic(traffic.clone())
+                .policy(*policy);
             if let Some(w) = window {
                 spec = spec.window(*w);
             }
@@ -268,10 +299,11 @@ pub fn dispatch(cmd: &Command) -> Result<()> {
                 print!("{}", run.render_text());
             }
         }
-        Command::Fleet { chips, frames, sample, threads, json } => {
+        Command::Fleet { chips, frames, sample, threads, policy, json } => {
             let fleet = FleetSpec::mixed(*chips, *frames)
                 .sample_k(*sample)
-                .threads(*threads);
+                .threads(*threads)
+                .policy(*policy);
             let report = SocSystem::new().fleet(&fleet)?;
             if *json {
                 println!("{}", report.to_json().render());
@@ -360,6 +392,7 @@ mod tests {
                 shards: 1,
                 rung: None,
                 traffic: Traffic::BackToBack,
+                policy: None,
                 json: false
             }
         );
@@ -373,6 +406,7 @@ mod tests {
                 shards: 1,
                 rung: Some("hwce".into()),
                 traffic: Traffic::BackToBack,
+                policy: None,
                 json: true
             }
         );
@@ -386,6 +420,7 @@ mod tests {
                 shards: 1,
                 rung: None,
                 traffic: Traffic::BackToBack,
+                policy: None,
                 json: false
             }
         );
@@ -399,6 +434,7 @@ mod tests {
                 shards: 4,
                 rung: None,
                 traffic: Traffic::BackToBack,
+                policy: None,
                 json: false
             }
         );
@@ -435,6 +471,7 @@ mod tests {
                 shards: 2,
                 rung: None,
                 traffic: Traffic::BackToBack,
+                policy: None,
                 json: false
             }
         );
@@ -505,6 +542,7 @@ mod tests {
                 shards: 1,
                 rung: None,
                 traffic: Traffic::Periodic { rate_hz: 30.0 },
+                policy: None,
                 json: false
             }
         );
@@ -517,6 +555,7 @@ mod tests {
                 shards: 1,
                 rung: None,
                 traffic: Traffic::Poisson { rate_hz: 20.0, seed: 7 },
+                policy: None,
                 json: false
             }
         );
@@ -525,13 +564,92 @@ mod tests {
         assert!(parse(&argv(&["stream", "seizure", "--traffic", "periodic:0"])).is_err());
     }
 
+    /// Satellite (policy flag): `--policy` parses the three policy names
+    /// on both subcommands, rejects unknown names with the expected list,
+    /// and refuses `--policy oracle` on a back-to-back stream (no release
+    /// table to read the future from).
+    #[test]
+    fn parses_policy_flags_and_rejects_bad_ones() {
+        let cmd =
+            parse(&argv(&["stream", "seizure", "--traffic", "periodic:2", "--policy", "lookahead"]))
+                .unwrap();
+        match cmd {
+            Command::Stream { policy, .. } => assert_eq!(policy, Some(PolicyKind::Lookahead)),
+            other => panic!("expected stream, got {other:?}"),
+        }
+        let cmd = parse(&argv(&["fleet", "--chips", "4", "--policy", "oracle"])).unwrap();
+        match cmd {
+            Command::Fleet { policy, .. } => assert_eq!(policy, Some(PolicyKind::Oracle)),
+            other => panic!("expected fleet, got {other:?}"),
+        }
+        // unknown policy names name the accepted set
+        for args in [
+            vec!["stream", "seizure", "--policy", "eager"],
+            vec!["fleet", "--policy", "eager"],
+        ] {
+            let e = parse(&argv(&args)).unwrap_err().to_string();
+            assert!(e.contains("greedy|lookahead|oracle"), "{e}");
+        }
+        assert!(parse(&argv(&["stream", "seizure", "--policy"])).is_err());
+        // oracle needs future arrivals: back-to-back streams are rejected
+        let e = parse(&argv(&["stream", "seizure", "--policy", "oracle"]))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("release table"), "{e}");
+        assert!(
+            parse(&argv(&["stream", "seizure", "--policy", "oracle", "--traffic", "poisson:2"]))
+                .is_ok(),
+            "oracle with a traffic model is fine (flag order must not matter)"
+        );
+        // greedy/lookahead work on back-to-back streams (stall spans only)
+        assert!(parse(&argv(&["stream", "seizure", "--policy", "greedy"])).is_ok());
+    }
+
+    /// Satellite (seed grammar): the CLI accepts `poisson:RATE:SEED` and
+    /// the seedless `poisson:RATE` (seed defaults to 1), and rejects a
+    /// malformed seed before any simulation starts.
+    #[test]
+    fn poisson_seed_grammar_round_trips_through_cli() {
+        let cmd = parse(&argv(&["stream", "seizure", "--traffic", "poisson:3"])).unwrap();
+        match cmd {
+            Command::Stream { traffic, .. } => {
+                assert_eq!(traffic, Traffic::Poisson { rate_hz: 3.0, seed: 1 });
+            }
+            other => panic!("expected stream, got {other:?}"),
+        }
+        let e = parse(&argv(&["stream", "seizure", "--traffic", "poisson:3:nope"]))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("seed"), "{e}");
+        assert!(parse(&argv(&["stream", "seizure", "--traffic", "poisson:"])).is_err());
+    }
+
+    /// A managed stream dispatches end-to-end through the real CLI path
+    /// (policy plumbed into the spec, battery line rendered).
+    #[test]
+    fn policy_stream_dispatches_end_to_end() {
+        let cmd = parse(&argv(&[
+            "stream", "seizure", "--frames", "4", "--traffic", "periodic:2", "--policy",
+            "lookahead",
+        ]))
+        .unwrap();
+        assert!(dispatch(&cmd).is_ok(), "managed stream must simulate cleanly");
+    }
+
     /// Bare `fleet` gets the documented defaults; every flag overrides its
     /// field; zero-valued knobs are rejected with actionable messages.
     #[test]
     fn parses_fleet_flags() {
         assert_eq!(
             parse(&argv(&["fleet"])).unwrap(),
-            Command::Fleet { chips: 1000, frames: 32, sample: 3, threads: 0, json: false }
+            Command::Fleet {
+                chips: 1000,
+                frames: 32,
+                sample: 3,
+                threads: 0,
+                policy: None,
+                json: false
+            }
         );
         assert_eq!(
             parse(&argv(&[
@@ -539,7 +657,14 @@ mod tests {
                 "4", "--json",
             ]))
             .unwrap(),
-            Command::Fleet { chips: 1_000_000, frames: 16, sample: 2, threads: 4, json: true }
+            Command::Fleet {
+                chips: 1_000_000,
+                frames: 16,
+                sample: 2,
+                threads: 4,
+                policy: None,
+                json: true
+            }
         );
         let e = parse(&argv(&["fleet", "--chips", "0"])).unwrap_err().to_string();
         assert!(e.contains("--chips must be at least 1"), "{e}");
@@ -557,7 +682,14 @@ mod tests {
             .unwrap();
         assert_eq!(
             cmd,
-            Command::Fleet { chips: 8, frames: 2, sample: 1, threads: 0, json: false }
+            Command::Fleet {
+                chips: 8,
+                frames: 2,
+                sample: 1,
+                threads: 0,
+                policy: None,
+                json: false
+            }
         );
         assert!(dispatch(&cmd).is_ok(), "small fleet must simulate cleanly");
     }

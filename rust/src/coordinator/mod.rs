@@ -54,6 +54,7 @@ use crate::hwce::golden::WeightPrec;
 use crate::hwcrypt;
 use crate::kernels_sw::crypto_cost;
 use crate::soc::opmodes::{OperatingMode, OperatingPoint};
+use crate::soc::pm::PolicyKind;
 use crate::soc::power::Component;
 use crate::soc::sched::{
     Engine, Job, JobGraph, JobId, Scheduler, StreamScheduler, DEFAULT_STREAM_WINDOW, N_CORES,
@@ -298,6 +299,14 @@ pub struct StreamResult {
     /// live dispatch — a simulator-performance statistic; replayed frames
     /// are bitwise identical to live execution.
     pub fast_forwarded_frames: usize,
+    /// Sleep/DVFS policy managing idle spans (`None` = unmanaged).
+    pub policy: Option<PolicyKind>,
+    /// Simulated time in policy-managed idle spans (s) — 0 unmanaged.
+    pub sleep_s: f64,
+    /// Portion of [`StreamResult::sleep_s`] in the deep-sleep rung.
+    pub deep_sleep_s: f64,
+    /// Wake-up transitions the policy charged.
+    pub wake_transitions: u64,
     pub ledger: EnergyLedger,
 }
 
@@ -338,6 +347,22 @@ pub fn stream_graph_traffic(
     eq_ops_per_frame: u64,
     release: &[f64],
 ) -> StreamResult {
+    stream_graph_traffic_pm(label, graph, frames, window, eq_ops_per_frame, release, None)
+}
+
+/// [`stream_graph_traffic`] with idle spans managed by a sleep/DVFS
+/// policy ([`crate::soc::pm`]): accounting-only — the schedule is
+/// bitwise the unmanaged one; idle-span energy and the sleep statistics
+/// change.
+pub fn stream_graph_traffic_pm(
+    label: &str,
+    graph: &JobGraph,
+    frames: usize,
+    window: usize,
+    eq_ops_per_frame: u64,
+    release: &[f64],
+    policy: Option<PolicyKind>,
+) -> StreamResult {
     assert!(frames >= 1, "streaming needs at least one frame");
     // A window wider than the stream clamps to it: the rolling window
     // could never fill the extra slots, and the report should say what
@@ -345,7 +370,13 @@ pub fn stream_graph_traffic(
     let window = window.min(frames);
     let single = Scheduler::run(graph);
     let analytic = graph.analytic();
-    let res = StreamScheduler::run_traffic(graph, frames, window, release);
+    let res = StreamScheduler::run_compiled_traffic_pm(
+        &crate::soc::sched::CompiledFrame::compile(graph),
+        frames,
+        window,
+        release,
+        policy,
+    );
     let energy_mj = res.ledger.total_mj();
     StreamResult {
         label: label.to_string(),
@@ -365,6 +396,10 @@ pub fn stream_graph_traffic(
         peak_resident_jobs: res.peak_resident_jobs,
         total_jobs: res.n_jobs,
         fast_forwarded_frames: res.fast_forwarded_frames,
+        policy,
+        sleep_s: res.sleep_s,
+        deep_sleep_s: res.deep_sleep_s,
+        wake_transitions: res.wake_transitions,
         ledger: res.ledger,
     }
 }

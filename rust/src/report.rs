@@ -50,6 +50,13 @@ pub struct Merged {
     pub peak_resident_jobs: usize,
     pub total_jobs: usize,
     pub fast_forwarded_frames: usize,
+    /// Summed managed (sleep/retention) residency across chips (s) — see
+    /// [`crate::soc::pm`]. Zero when no power policy ran.
+    pub sleep_s: f64,
+    /// Summed deep-sleep residency across chips (s).
+    pub deep_sleep_s: f64,
+    /// Summed wake transitions across chips.
+    pub wake_transitions: u64,
     /// Slowest member's makespan.
     pub time_s: f64,
     /// Total chips absorbed (populations included).
@@ -69,6 +76,9 @@ impl Merged {
             peak_resident_jobs: 0,
             total_jobs: 0,
             fast_forwarded_frames: 0,
+            sleep_s: 0.0,
+            deep_sleep_s: 0.0,
+            wake_transitions: 0,
             time_s: 0.0,
             chips: 0,
         }
@@ -93,6 +103,9 @@ impl Merged {
         self.peak_resident_jobs = self.peak_resident_jobs.max(r.peak_resident_jobs);
         self.total_jobs += r.n_jobs * chips;
         self.fast_forwarded_frames += r.fast_forwarded_frames * chips;
+        self.sleep_s += r.sleep_s * w;
+        self.deep_sleep_s += r.deep_sleep_s * w;
+        self.wake_transitions += r.wake_transitions * chips as u64;
         self.time_s = self.time_s.max(r.makespan_s);
         self.chips += chips;
         // chips run concurrently: elapsed time is the slowest member, not
@@ -113,6 +126,9 @@ impl Merged {
         self.peak_resident_jobs = self.peak_resident_jobs.max(other.peak_resident_jobs);
         self.total_jobs += other.total_jobs;
         self.fast_forwarded_frames += other.fast_forwarded_frames;
+        self.sleep_s += other.sleep_s;
+        self.deep_sleep_s += other.deep_sleep_s;
+        self.wake_transitions += other.wake_transitions;
         self.time_s = self.time_s.max(other.time_s);
         self.chips += other.chips;
         self.ledger.elapsed_s = self.time_s;
@@ -627,6 +643,9 @@ mod tests {
             coresidency_s: d(3),
             peak_resident_jobs: 3 + (i % 4),
             fast_forwarded_frames: i % 9,
+            sleep_s: d(4),
+            deep_sleep_s: d(5),
+            wake_transitions: (i % 7) as u64,
         }
     }
 
@@ -648,6 +667,9 @@ mod tests {
         assert_eq!(a.peak_resident_jobs, b.peak_resident_jobs);
         assert_eq!(a.total_jobs, b.total_jobs);
         assert_eq!(a.fast_forwarded_frames, b.fast_forwarded_frames);
+        assert_eq!(a.sleep_s.to_bits(), b.sleep_s.to_bits());
+        assert_eq!(a.deep_sleep_s.to_bits(), b.deep_sleep_s.to_bits());
+        assert_eq!(a.wake_transitions, b.wake_transitions);
         assert_eq!(a.time_s.to_bits(), b.time_s.to_bits());
         assert_eq!(a.chips, b.chips);
     }
@@ -675,6 +697,9 @@ mod tests {
             assert_eq!(m.peak_resident_jobs, r.peak_resident_jobs);
             assert_eq!(m.total_jobs, r.n_jobs);
             assert_eq!(m.fast_forwarded_frames, r.fast_forwarded_frames);
+            assert_eq!(m.sleep_s.to_bits(), r.sleep_s.to_bits());
+            assert_eq!(m.deep_sleep_s.to_bits(), r.deep_sleep_s.to_bits());
+            assert_eq!(m.wake_transitions, r.wake_transitions);
             assert_eq!(m.time_s.to_bits(), r.makespan_s.to_bits());
             assert_eq!(m.chips, 1);
         }
@@ -717,6 +742,7 @@ mod tests {
         assert_eq!(scaled.chips, 3);
         assert_eq!(scaled.total_jobs, 3 * r.n_jobs);
         assert_eq!(scaled.mode_switches, 3 * r.mode_switches);
+        assert_eq!(scaled.wake_transitions, 3 * r.wake_transitions);
     }
 
     #[test]

@@ -5,6 +5,7 @@
 //! ([`sched`]) that the coordinator use cases run on.
 
 pub mod opmodes;
+pub mod pm;
 pub mod power;
 pub mod sched;
 pub mod udma;

@@ -1,0 +1,427 @@
+//! Power-state management: duty-cycled sleep across inter-frame gaps and
+//! cluster stalls, driven by a pluggable DVFS/sleep policy (§II-A,
+//! Table I; the exemplar end-node behaviour is Vega's state-retentive
+//! sleep + cognitive wake-up).
+//!
+//! ## The problem this subsystem owns
+//!
+//! Traffic models ([`crate::traffic::Traffic`]) gate frame admission, so
+//! a `Periodic{1 Hz}` seizure chip is ~99 % idle — yet without
+//! management the scheduler bills that idle time at the *active-idle*
+//! leakage floor (cluster + SOC leak, exactly Table I's "idle, FLL off"
+//! rung) for the whole makespan. This module wires the
+//! [`PowerMode`] ladder into the scheduler: every span in which the
+//! chip (or just the cluster) has nothing running is re-billed at the
+//! power state a [`PolicyKind`] chooses, with the wake-up transition
+//! charged on re-entry.
+//!
+//! ## Billing model
+//!
+//! A managed span of length `T` seconds resting in rung `m` (power
+//! `p_m` mW, wake-up time `w_m` s) costs
+//!
+//! ```text
+//! E_m(T) = p_m · (T − w_m) + p_burn · w_m        [mJ]
+//! ```
+//!
+//! — the chip sleeps at `p_m` and spends the final `w_m` of the span
+//! waking back up at the *burn* power `p_burn`, which we pin to the
+//! "idle, FLL on" rung (600 + 510 µW): during wake-up the FLL is
+//! relocking and both domains are clock-gated but powered, which is
+//! precisely what that Table I row describes. Descending into a rung is
+//! free (clock/power gating is a write to the PMU); waking is not.
+//!
+//! **Break-even rule.** Against staying in the shallowest rung
+//! (`E_on(T) = p_on · T`, since its burn equals its resting power),
+//! rung `m` wins exactly when
+//!
+//! ```text
+//! p_m (T − w_m) + p_on w_m < p_on T   ⟺   T > w_m
+//! ```
+//!
+//! — *a sleep rung pays for itself iff the span exceeds its wake-up
+//! time.* This collapse (burn = `p_on`) is why the greedy thresholds
+//! below are the wake times themselves.
+//!
+//! ## Policies
+//!
+//! * **greedy** — no knowledge of the span length (a real PMU without a
+//!   timer hint): rest in "idle, FLL on", descend to "idle, FLL off"
+//!   after idling `w_off`, to deep sleep after `w_deep` (the ski-rental
+//!   heuristic: descend to a rung once you have idled its wake time;
+//!   2-competitive against the clairvoyant policy).
+//! * **lookahead** — knows the span: full-chip gaps read the *next*
+//!   release time from the traffic table, cluster stalls read the
+//!   compiled frame's remaining work. Picks the single rung minimizing
+//!   `E_m(T)` — by the break-even rule, the deepest rung whose wake
+//!   time fits.
+//! * **oracle** — whole-table lower bound: every managed span rests at
+//!   deep-sleep power with free wake-up. No real PMU achieves it; it
+//!   bounds what any policy could save.
+//!
+//! Per span, `E_oracle ≤ E_lookahead ≤ E_greedy` holds *algebraically*
+//! (proved in the tests over both domains): lookahead's chosen rung is
+//! one of greedy's stages minus the descent overhead, and the oracle
+//! drops both the surcharge and the shallow stages.
+//!
+//! ## Scheduler contract
+//!
+//! [`gap_bill`] / [`stall_bill`] are pure functions of (policy, span) —
+//! the scheduler calls them with identical float operations at
+//! identical structural points in the live loop and in fast-forward
+//! replay, so sleep accounting stays inside the cycle proof and replay
+//! remains bitwise identical to live execution (the fleet dedup parity
+//! guarantee).
+//!
+//! Full-chip gaps gate both domains and (in deep sleep) the external-
+//! memory rails; cluster stalls manage only the cluster domain while
+//! the SOC keeps serving uDMA traffic.
+
+use crate::soc::power::PowerMode;
+use anyhow::{bail, Result};
+
+/// Reference battery for energy-per-day reporting: a 225 mAh / 3 V
+/// lithium coin cell (CR2032 class) = 675 mWh.
+pub const BATTERY_MWH: f64 = 675.0;
+
+/// `BATTERY_MWH` in millijoules (1 mWh = 3.6 J = 3600 mJ).
+pub const BATTERY_MJ: f64 = BATTERY_MWH * 3600.0;
+
+/// Seconds per day, for energy-per-day extrapolation.
+pub const SECONDS_PER_DAY: f64 = 86400.0;
+
+/// Average-power → deployment-lifetime reporting: extrapolate a run's
+/// mean power to a day, and that to days on [`BATTERY_MWH`].
+pub fn energy_per_day_mj(energy_mj: f64, makespan_s: f64) -> f64 {
+    energy_mj / makespan_s * SECONDS_PER_DAY
+}
+
+pub fn battery_days(energy_mj: f64, makespan_s: f64) -> f64 {
+    BATTERY_MJ / energy_per_day_mj(energy_mj, makespan_s)
+}
+
+/// Which DVFS/sleep policy manages idle spans. Selected with
+/// `stream`/`fleet --policy`; `None` at the scheduler level means
+/// unmanaged (the pre-PM billing: active-idle leakage throughout).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum PolicyKind {
+    /// Staged descent without span knowledge (ski-rental thresholds).
+    Greedy,
+    /// Span-aware single-rung choice (next release / remaining work).
+    Lookahead,
+    /// Whole-table lower bound: deep-sleep power, free wake-up.
+    Oracle,
+}
+
+impl PolicyKind {
+    /// Parse a CLI `--policy` name.
+    pub fn parse(s: &str) -> Result<PolicyKind> {
+        match s {
+            "greedy" => Ok(PolicyKind::Greedy),
+            "lookahead" => Ok(PolicyKind::Lookahead),
+            "oracle" => Ok(PolicyKind::Oracle),
+            _ => bail!("unknown policy {s:?} (expected greedy|lookahead|oracle)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            PolicyKind::Greedy => "greedy",
+            PolicyKind::Lookahead => "lookahead",
+            PolicyKind::Oracle => "oracle",
+        }
+    }
+
+    fn policy(self) -> &'static dyn Policy {
+        match self {
+            PolicyKind::Greedy => &Greedy,
+            PolicyKind::Lookahead => &Lookahead,
+            PolicyKind::Oracle => &Oracle,
+        }
+    }
+}
+
+/// Which power domain a managed span covers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Domain {
+    /// Full-chip inter-frame gap: cluster + SOC rest together, deep
+    /// sleep additionally gates the external-memory standby rails.
+    Chip,
+    /// In-frame cluster stall (uDMA/ext-mem still busy): only the
+    /// cluster side of the ladder applies.
+    Cluster,
+}
+
+/// What a policy charges for one managed span.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Bill {
+    /// Energy across the span, wake-up transition included (mJ).
+    pub energy_mj: f64,
+    /// Seconds of the span spent in deep sleep — the portion for which
+    /// a full-chip gap also gates the external-memory standby rails.
+    pub deep_s: f64,
+    /// Whether a wake-up transition was paid (the span descended below
+    /// the shallowest rung).
+    pub woke: bool,
+}
+
+/// The sleep ladder a domain exposes: three rungs, shallow → deep.
+/// Powers and wake times come from the Table I encoding in
+/// [`PowerMode`] — this module adds no constants of its own.
+#[derive(Debug, Clone, Copy)]
+struct Ladder {
+    /// Resting power per rung, mW: [FLL-on idle, FLL-off idle, deep].
+    p_mw: [f64; 3],
+    /// Wake-up time per rung, s.
+    wake_s: [f64; 3],
+}
+
+const RUNGS: [PowerMode; 3] =
+    [PowerMode::IdleFllOn, PowerMode::IdleFllOff, PowerMode::DeepSleep];
+
+impl Domain {
+    fn ladder(self) -> Ladder {
+        let mut p_mw = [0.0; 3];
+        let mut wake_s = [0.0; 3];
+        for (i, m) in RUNGS.into_iter().enumerate() {
+            let (cl_uw, soc_uw) = m.static_power_uw();
+            let (cl_us, soc_us) = m.wakeup_us();
+            match self {
+                Domain::Chip => {
+                    p_mw[i] = (cl_uw + soc_uw) * 1e-3;
+                    wake_s[i] = cl_us.max(soc_us) * 1e-6;
+                }
+                Domain::Cluster => {
+                    p_mw[i] = cl_uw * 1e-3;
+                    wake_s[i] = cl_us * 1e-6;
+                }
+            }
+        }
+        Ladder { p_mw, wake_s }
+    }
+
+    /// The power the *unmanaged* scheduler bills across this domain's
+    /// idle spans (the leakage floor `charge_overheads` charges over
+    /// the whole makespan) — what a policy's bill replaces.
+    pub fn baseline_mw(self, cluster_leak_mw: f64, soc_leak_mw: f64) -> f64 {
+        match self {
+            Domain::Chip => cluster_leak_mw + soc_leak_mw,
+            Domain::Cluster => cluster_leak_mw,
+        }
+    }
+}
+
+/// One rung's span cost: rest at `p_mw`, spend the final `wake_s`
+/// relocking at the burn power (the FLL-on idle rung).
+fn rung_mj(l: &Ladder, rung: usize, span_s: f64) -> f64 {
+    l.p_mw[rung] * (span_s - l.wake_s[rung]) + l.p_mw[0] * l.wake_s[rung]
+}
+
+/// A sleep policy: bills one managed idle span of a domain. The
+/// implementations are stateless — all state a policy may consult
+/// (span length, domain) is in the call, which is what lets the
+/// scheduler re-issue the exact computation during fast-forward replay.
+pub trait Policy {
+    fn name(&self) -> &'static str;
+    /// Cost of an idle span of `span_s` seconds in `domain`.
+    fn bill(&self, domain: Domain, span_s: f64) -> Bill;
+}
+
+/// Staged descent: FLL-on for the first `w_off`, FLL-off until
+/// `w_deep`, deep sleep beyond — thresholds are the rungs' own wake
+/// times (see the break-even rule in the module docs).
+pub struct Greedy;
+
+impl Policy for Greedy {
+    fn name(&self) -> &'static str {
+        "greedy"
+    }
+
+    fn bill(&self, domain: Domain, span_s: f64) -> Bill {
+        let l = domain.ladder();
+        let (t1, t2) = (l.wake_s[1], l.wake_s[2]);
+        if span_s <= t1 {
+            Bill { energy_mj: l.p_mw[0] * span_s, deep_s: 0.0, woke: false }
+        } else if span_s <= t2 {
+            Bill {
+                energy_mj: l.p_mw[0] * t1
+                    + l.p_mw[1] * (span_s - t1)
+                    + (l.p_mw[0] - l.p_mw[1]) * l.wake_s[1],
+                deep_s: 0.0,
+                woke: true,
+            }
+        } else {
+            Bill {
+                energy_mj: l.p_mw[0] * t1
+                    + l.p_mw[1] * (t2 - t1)
+                    + l.p_mw[2] * (span_s - t2)
+                    + (l.p_mw[0] - l.p_mw[2]) * l.wake_s[2],
+                deep_s: span_s - t2,
+                woke: true,
+            }
+        }
+    }
+}
+
+/// Span-aware: the deepest rung whose wake time fits (equivalently,
+/// the rung minimizing `E_m(T)` — the break-even rule makes the two
+/// statements the same).
+pub struct Lookahead;
+
+impl Policy for Lookahead {
+    fn name(&self) -> &'static str {
+        "lookahead"
+    }
+
+    fn bill(&self, domain: Domain, span_s: f64) -> Bill {
+        let l = domain.ladder();
+        let mut best = Bill { energy_mj: l.p_mw[0] * span_s, deep_s: 0.0, woke: false };
+        if span_s > l.wake_s[1] {
+            let e = rung_mj(&l, 1, span_s);
+            if e < best.energy_mj {
+                best = Bill { energy_mj: e, deep_s: 0.0, woke: true };
+            }
+        }
+        if span_s > l.wake_s[2] {
+            let e = rung_mj(&l, 2, span_s);
+            if e < best.energy_mj {
+                best = Bill { energy_mj: e, deep_s: span_s - l.wake_s[2], woke: true };
+            }
+        }
+        best
+    }
+}
+
+/// The lower bound: deep-sleep power over the whole span, free wake.
+pub struct Oracle;
+
+impl Policy for Oracle {
+    fn name(&self) -> &'static str {
+        "oracle"
+    }
+
+    fn bill(&self, domain: Domain, span_s: f64) -> Bill {
+        let l = domain.ladder();
+        Bill { energy_mj: l.p_mw[2] * span_s, deep_s: span_s, woke: false }
+    }
+}
+
+/// Bill a full-chip inter-frame gap (both domains managed).
+pub fn gap_bill(kind: PolicyKind, span_s: f64) -> Bill {
+    kind.policy().bill(Domain::Chip, span_s)
+}
+
+/// Bill an in-frame cluster stall (cluster domain only).
+pub fn stall_bill(kind: PolicyKind, span_s: f64) -> Bill {
+    kind.policy().bill(Domain::Cluster, span_s)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_policy_names() {
+        assert_eq!(PolicyKind::parse("greedy").unwrap(), PolicyKind::Greedy);
+        assert_eq!(PolicyKind::parse("lookahead").unwrap(), PolicyKind::Lookahead);
+        assert_eq!(PolicyKind::parse("oracle").unwrap(), PolicyKind::Oracle);
+        assert!(PolicyKind::parse("eager").is_err());
+        for k in [PolicyKind::Greedy, PolicyKind::Lookahead, PolicyKind::Oracle] {
+            assert_eq!(PolicyKind::parse(k.name()).unwrap(), k);
+        }
+    }
+
+    #[test]
+    fn ladder_matches_table1() {
+        let chip = Domain::Chip.ladder();
+        // Table I totals: 600+510, 210+120, 0.01+120 µW.
+        assert!((chip.p_mw[0] - 1.11).abs() < 1e-12);
+        assert!((chip.p_mw[1] - 0.33).abs() < 1e-12);
+        assert!((chip.p_mw[2] - 0.12001).abs() < 1e-12);
+        // Wake times: 20 µs / 300 µs / 3 ms after unit normalization.
+        for (got, want) in chip.wake_s.into_iter().zip([20e-6, 300e-6, 3000e-6]) {
+            assert!((got - want).abs() < 1e-12, "wake {got} != {want}");
+        }
+        let cl = Domain::Cluster.ladder();
+        assert!((cl.p_mw[0] - 0.6).abs() < 1e-12);
+        assert!((cl.p_mw[1] - 0.21).abs() < 1e-12);
+        assert!(cl.p_mw[2] < 1e-4);
+    }
+
+    /// The break-even rule: a rung beats staying FLL-on exactly when the
+    /// span exceeds its wake time.
+    #[test]
+    fn break_even_is_the_wake_time() {
+        for domain in [Domain::Chip, Domain::Cluster] {
+            let l = domain.ladder();
+            for rung in 1..3 {
+                let w = l.wake_s[rung];
+                assert!(rung_mj(&l, rung, w * 0.999) > l.p_mw[0] * (w * 0.999));
+                assert!(rung_mj(&l, rung, w * 1.001) < l.p_mw[0] * (w * 1.001));
+                // At exactly the wake time the two are equal by algebra.
+                assert!((rung_mj(&l, rung, w) - l.p_mw[0] * w).abs() < 1e-15);
+            }
+        }
+    }
+
+    /// Per-span policy ordering, the acceptance invariant: for every
+    /// span length and both domains, oracle ≤ lookahead ≤ greedy.
+    #[test]
+    fn per_span_ordering_oracle_lookahead_greedy() {
+        // Sweep spans from sub-wake to multi-second, log-spaced, plus
+        // the exact thresholds where the piecewise forms meet.
+        let mut spans: Vec<f64> = (0..200).map(|i| 1e-6 * 1.12f64.powi(i)).collect();
+        spans.extend([20e-6, 300e-6, 3000e-6, 1.0, 86400.0]);
+        for domain in [Domain::Chip, Domain::Cluster] {
+            for &t in &spans {
+                let g = Greedy.bill(domain, t).energy_mj;
+                let la = Lookahead.bill(domain, t).energy_mj;
+                let o = Oracle.bill(domain, t).energy_mj;
+                assert!(
+                    o <= la + 1e-15 && la <= g + 1e-12,
+                    "{domain:?} span {t}: oracle {o} lookahead {la} greedy {g}"
+                );
+            }
+        }
+    }
+
+    /// Long gaps converge: all policies approach deep-sleep power, and
+    /// all beat the unmanaged active-idle baseline.
+    #[test]
+    fn long_gaps_sleep_below_baseline() {
+        let t = 1.0; // a 1 Hz sensor's inter-frame gap
+        let base = 0.33 * t; // cluster+soc leak floor, mJ
+        for k in [PolicyKind::Greedy, PolicyKind::Lookahead, PolicyKind::Oracle] {
+            let b = gap_bill(k, t);
+            assert!(b.energy_mj < base, "{k:?} {b:?}");
+            assert!(b.energy_mj > 0.0);
+            assert!(b.deep_s > 0.9 * t, "{k:?} should rest deep: {b:?}");
+        }
+        assert!(gap_bill(PolicyKind::Greedy, t).woke);
+        assert!(gap_bill(PolicyKind::Lookahead, t).woke);
+        assert!(!gap_bill(PolicyKind::Oracle, t).woke);
+    }
+
+    /// Short spans: nobody can beat FLL-on, greedy and lookahead agree,
+    /// and no wake-up is charged.
+    #[test]
+    fn short_spans_rest_shallow() {
+        let t = 10e-6;
+        let g = gap_bill(PolicyKind::Greedy, t);
+        let la = gap_bill(PolicyKind::Lookahead, t);
+        assert_eq!(g, la);
+        assert!(!g.woke);
+        assert_eq!(g.deep_s, 0.0);
+        assert!((g.energy_mj - 1.11 * t).abs() < 1e-15);
+    }
+
+    #[test]
+    fn battery_reporting_roundtrips() {
+        // A chip averaging exactly 1 mW: 86.4 J/day, 675 mWh / 86.4 J.
+        let epd = energy_per_day_mj(1.0, 1.0);
+        assert!((epd - 86400.0).abs() < 1e-9);
+        let days = battery_days(1.0, 1.0);
+        assert!((days - BATTERY_MJ / 86400.0).abs() < 1e-9);
+        assert!((days - 28.125).abs() < 1e-9);
+    }
+}

@@ -135,6 +135,7 @@
 
 use crate::energy::{Category, EnergyLedger};
 use crate::soc::opmodes::{OperatingMode, OperatingPoint, MODE_SWITCH_S, V_NOM};
+use crate::soc::pm::{self, PolicyKind};
 use crate::soc::power::{Component, PowerModel, FLASH_STANDBY_MW, FRAM_STANDBY_MW};
 use std::cmp::Ordering;
 use std::collections::{BTreeSet, BinaryHeap, VecDeque};
@@ -541,6 +542,9 @@ impl JobGraph {
             coresidency_s: 0.0,
             peak_resident_jobs: self.jobs.len(),
             fast_forwarded_frames: 0,
+            sleep_s: 0.0,
+            deep_sleep_s: 0.0,
+            wake_transitions: 0,
         }
     }
 
@@ -646,6 +650,18 @@ pub struct SchedResult {
     /// identical to live execution — this is a performance statistic, not
     /// an accuracy knob.
     pub fast_forwarded_frames: usize,
+    /// Simulated time spent in policy-managed idle spans (full-chip
+    /// inter-frame gaps plus cluster stalls) — 0 without a `--policy`.
+    /// The managed energy replaces the active-idle leakage floor in the
+    /// ledger's `Idle` category (see [`crate::soc::pm`]).
+    pub sleep_s: f64,
+    /// Portion of [`SchedResult::sleep_s`] resting in the deep-sleep
+    /// rung; for full-chip gaps it also gates the external-memory
+    /// standby rails out of the `ExtMem` category.
+    pub deep_sleep_s: f64,
+    /// Wake-up transitions charged by the policy (spans that descended
+    /// below the FLL-on idle rung).
+    pub wake_transitions: u64,
 }
 
 impl SchedResult {
@@ -1072,6 +1088,12 @@ struct FfUndo {
     sweep: OverlapSweep,
     running: Vec<RunEntry>,
     pending_release: Vec<usize>,
+    pm_gap_s: f64,
+    pm_gap_mj: f64,
+    pm_stall_s: f64,
+    pm_stall_mj: f64,
+    pm_deep_s: f64,
+    pm_wakes: u64,
 }
 
 /// The shared event-driven execution core: schedules `frames` instances of
@@ -1139,6 +1161,23 @@ struct ExecCore<'c> {
     bails: usize,
     ff_frames: usize,
     running: Vec<RunEntry>,
+    // --- power-state management (accounting only — never timing) ---
+    /// Sleep/DVFS policy managing idle spans (`None` = unmanaged: the
+    /// pre-PM billing, active-idle leakage across the whole makespan).
+    policy: Option<PolicyKind>,
+    /// Total full-chip gap time under management (s).
+    pm_gap_s: f64,
+    /// Policy-billed energy across those gaps (mJ).
+    pm_gap_mj: f64,
+    /// Total cluster-stall time under management (s).
+    pm_stall_s: f64,
+    /// Policy-billed cluster energy across those stalls (mJ).
+    pm_stall_mj: f64,
+    /// Deep-sleep residency within full-chip gaps (s) — gates the
+    /// external-memory standby rails.
+    pm_deep_s: f64,
+    /// Wake-up transitions charged.
+    pm_wakes: u64,
 }
 
 impl<'c> ExecCore<'c> {
@@ -1191,6 +1230,13 @@ impl<'c> ExecCore<'c> {
             bails: 0,
             ff_frames: 0,
             running: Vec::new(),
+            policy: None,
+            pm_gap_s: 0.0,
+            pm_gap_mj: 0.0,
+            pm_stall_s: 0.0,
+            pm_stall_mj: 0.0,
+            pm_deep_s: 0.0,
+            pm_wakes: 0,
         }
     }
 
@@ -1548,6 +1594,40 @@ impl<'c> ExecCore<'c> {
         }
     }
 
+    // ---- power-state management ----------------------------------------
+
+    /// Bill the idle span `[self.t, t_next)` before simulated time
+    /// advances to the next event. Classification reads the *pre-event*
+    /// engine state (events mutate it only after time advances):
+    /// `busy_mask == 0` means nothing ran anywhere — a full-chip
+    /// inter-frame gap, necessarily terminated by a traffic release —
+    /// while `mode_locked_running == 0` with busy SOC movers is a
+    /// cluster stall (only the cluster domain can rest). Called at the
+    /// same structural point in live execution and in fast-forward
+    /// replay with identical float operations, so sleep accounting
+    /// stays inside the cycle proof and replay remains bitwise
+    /// identical to live.
+    #[inline]
+    fn pm_account(&mut self, t_next: f64) {
+        let Some(kind) = self.policy else { return };
+        let dt = t_next - self.t;
+        if dt <= 0.0 {
+            return;
+        }
+        if self.busy_mask == 0 {
+            let b = pm::gap_bill(kind, dt);
+            self.pm_gap_s += dt;
+            self.pm_gap_mj += b.energy_mj;
+            self.pm_deep_s += b.deep_s;
+            self.pm_wakes += b.woke as u64;
+        } else if self.mode_locked_running == 0 {
+            let b = pm::stall_bill(kind, dt);
+            self.pm_stall_s += dt;
+            self.pm_stall_mj += b.energy_mj;
+            self.pm_wakes += b.woke as u64;
+        }
+    }
+
     // ---- steady-state replay -------------------------------------------
 
     fn save_floats(&self) -> FfUndo {
@@ -1569,6 +1649,12 @@ impl<'c> ExecCore<'c> {
             sweep: self.sweep.clone(),
             running: self.running.clone(),
             pending_release: self.pending_release.clone(),
+            pm_gap_s: self.pm_gap_s,
+            pm_gap_mj: self.pm_gap_mj,
+            pm_stall_s: self.pm_stall_s,
+            pm_stall_mj: self.pm_stall_mj,
+            pm_deep_s: self.pm_deep_s,
+            pm_wakes: self.pm_wakes,
         }
     }
 
@@ -1590,6 +1676,12 @@ impl<'c> ExecCore<'c> {
         self.sweep = u.sweep;
         self.running = u.running;
         self.pending_release = u.pending_release;
+        self.pm_gap_s = u.pm_gap_s;
+        self.pm_gap_mj = u.pm_gap_mj;
+        self.pm_stall_s = u.pm_stall_s;
+        self.pm_stall_mj = u.pm_stall_mj;
+        self.pm_deep_s = u.pm_deep_s;
+        self.pm_wakes = u.pm_wakes;
     }
 
     /// The next completion among the in-flight jobs, under exactly the
@@ -1698,6 +1790,7 @@ impl<'c> ExecCore<'c> {
                         }
                     }
                     let r = self.running.swap_remove(bi);
+                    self.pm_account(r.end);
                     self.t = r.end;
                     self.makespan = self.makespan.max(r.end);
                     self.sweep.drain_until(r.end);
@@ -1755,6 +1848,7 @@ impl<'c> ExecCore<'c> {
                         }
                     }
                     self.pending_release.swap_remove(pi);
+                    self.pm_account(r);
                     self.t = r;
                     self.makespan = self.makespan.max(r);
                     self.sweep.drain_until(r);
@@ -1866,6 +1960,7 @@ impl<'c> ExecCore<'c> {
             }
             // Advance simulated time to the next completion or release.
             let Some(ev) = self.heap.pop() else { break };
+            self.pm_account(ev.t);
             self.t = ev.t;
             self.makespan = self.makespan.max(ev.t);
             self.sweep.drain_until(ev.t);
@@ -1910,6 +2005,27 @@ impl<'c> ExecCore<'c> {
             ledger.charge_mj(cat, self.cats[i]);
         }
         charge_overheads(&mut ledger, self.base.vdd, self.base.ext_mem_present, makespan);
+        if self.policy.is_some() {
+            // Replace the active-idle leakage floor `charge_overheads`
+            // billed across the managed spans with the policy's bill
+            // (both domains across full-chip gaps, cluster only across
+            // stalls), and gate the external-memory standby rails for
+            // the deep-sleep portion of the gaps. Pure accumulator
+            // arithmetic at run end — identical on the live and
+            // fast-forward paths because the accumulators are.
+            let leak_op = OperatingPoint::new(OperatingMode::Sw, self.base.vdd);
+            let cl_mw = PowerModel::active_mw(Component::ClusterLeak, leak_op);
+            let soc_mw = PowerModel::active_mw(Component::SocLeak, leak_op);
+            let delta = (self.pm_gap_mj - (cl_mw + soc_mw) * self.pm_gap_s)
+                + (self.pm_stall_mj - cl_mw * self.pm_stall_s);
+            ledger.charge_mj(Category::Idle, delta);
+            if self.base.ext_mem_present {
+                ledger.charge_mj(
+                    Category::ExtMem,
+                    -((FLASH_STANDBY_MW + FRAM_STANDBY_MW) * self.pm_deep_s),
+                );
+            }
+        }
         SchedResult {
             ledger,
             makespan_s: makespan,
@@ -1920,6 +2036,9 @@ impl<'c> ExecCore<'c> {
             coresidency_s,
             peak_resident_jobs: self.peak_live,
             fast_forwarded_frames: self.ff_frames,
+            sleep_s: self.pm_gap_s + self.pm_stall_s,
+            deep_sleep_s: self.pm_deep_s,
+            wake_transitions: self.pm_wakes,
         }
     }
 }
@@ -2066,6 +2185,9 @@ impl Scheduler {
             coresidency_s,
             peak_resident_jobs: n,
             fast_forwarded_frames: 0,
+            sleep_s: 0.0,
+            deep_sleep_s: 0.0,
+            wake_transitions: 0,
         }
     }
 
@@ -2140,11 +2262,28 @@ impl StreamScheduler {
         window: usize,
         release: &[f64],
     ) -> SchedResult {
+        Self::run_compiled_traffic_pm(frame, frames, window, release, None)
+    }
+
+    /// [`StreamScheduler::run_compiled_traffic`] with idle spans managed
+    /// by a sleep/DVFS policy ([`crate::soc::pm`]). The policy is
+    /// accounting-only — dispatch order, makespan and every busy interval
+    /// are bitwise identical to the unmanaged run; only the idle-span
+    /// energy (and the sleep statistics of [`SchedResult`]) change.
+    /// `None` is exactly [`StreamScheduler::run_compiled_traffic`].
+    pub fn run_compiled_traffic_pm(
+        frame: &CompiledFrame,
+        frames: usize,
+        window: usize,
+        release: &[f64],
+        policy: Option<PolicyKind>,
+    ) -> SchedResult {
         assert!(frames >= 1, "streaming needs at least one frame");
         assert!(window >= 1, "streaming needs at least one in-flight frame of window");
         Self::check_release(release, frames);
         let mut core = ExecCore::new(frame, &[], frames, window, true);
         core.release = release;
+        core.policy = policy;
         core.run()
     }
 
@@ -2156,12 +2295,28 @@ impl StreamScheduler {
         window: usize,
         release: &[f64],
     ) -> SchedResult {
+        Self::run_traffic_live_pm(frame, frames, window, release, None)
+    }
+
+    /// [`StreamScheduler::run_traffic_live`] under a sleep/DVFS policy —
+    /// the bitwise parity reference for
+    /// [`StreamScheduler::run_compiled_traffic_pm`] (sleep accounting
+    /// must survive fast-forward unchanged; the fleet parity samples run
+    /// through here).
+    pub fn run_traffic_live_pm(
+        frame: &JobGraph,
+        frames: usize,
+        window: usize,
+        release: &[f64],
+        policy: Option<PolicyKind>,
+    ) -> SchedResult {
         assert!(frames >= 1, "streaming needs at least one frame");
         assert!(window >= 1, "streaming needs at least one in-flight frame of window");
         Self::check_release(release, frames);
         let cf = CompiledFrame::compile(frame);
         let mut core = ExecCore::new(&cf, &[], frames, window, false);
         core.release = release;
+        core.policy = policy;
         core.run()
     }
 
@@ -2809,6 +2964,9 @@ mod tests {
         }
         assert_eq!(a.overlap_s.to_bits(), b.overlap_s.to_bits(), "{label}: overlap");
         assert_eq!(a.coresidency_s.to_bits(), b.coresidency_s.to_bits(), "{label}: coresidency");
+        assert_eq!(a.sleep_s.to_bits(), b.sleep_s.to_bits(), "{label}: sleep");
+        assert_eq!(a.deep_sleep_s.to_bits(), b.deep_sleep_s.to_bits(), "{label}: deep sleep");
+        assert_eq!(a.wake_transitions, b.wake_transitions, "{label}: wake transitions");
     }
 
     /// A tiled-pipeline-shaped frame (fetch → decrypt → conv → epilogue →
@@ -3104,6 +3262,132 @@ mod tests {
             }
         }
         assert_eq!(engaged, 10, "saturated Poisson streams must all engage");
+    }
+
+    // ---- power-state management ----------------------------------------
+
+    const POLICIES: [PolicyKind; 3] =
+        [PolicyKind::Greedy, PolicyKind::Lookahead, PolicyKind::Oracle];
+
+    /// Acceptance bar: sleep/wake accounting is bitwise identical
+    /// between the live and fast-forward paths, per policy × traffic
+    /// shape — the managed spans are part of the frame-relative cycle
+    /// proof, so the fleet dedup parity guarantee survives `--policy`.
+    #[test]
+    fn policy_accounting_matches_live_per_policy_and_traffic() {
+        let g = flash_frame(1);
+        let cf = CompiledFrame::compile(&g);
+        let tables: Vec<(String, Vec<f64>)> = [
+            Traffic::Periodic { rate_hz: 512.0 },
+            Traffic::Periodic { rate_hz: 64.0 },
+            Traffic::Bursty { burst: 6, rate_hz: 16.0 },
+            Traffic::Poisson { rate_hz: 200.0, seed: 3 },
+            Traffic::Poisson { rate_hz: 2048.0, seed: 9 },
+        ]
+        .into_iter()
+        .map(|t| (t.describe(), t.release_times(64)))
+        .collect();
+        for policy in POLICIES {
+            for (name, rel) in &tables {
+                let live =
+                    StreamScheduler::run_traffic_live_pm(&g, 64, 8, rel, Some(policy));
+                let ff = StreamScheduler::run_compiled_traffic_pm(
+                    &cf, 64, 8, rel, Some(policy),
+                );
+                assert_bitwise(&ff, &live, &format!("{policy:?} over {name}"));
+                assert_eq!(live.fast_forwarded_frames, 0);
+                assert!(live.sleep_s > 0.0, "{policy:?} over {name} never slept");
+            }
+        }
+        // The gap-dominated periodic stream must still engage under
+        // management (the accounting rides the existing cycle proof).
+        let rel = Traffic::Periodic { rate_hz: 512.0 }.release_times(64);
+        for policy in POLICIES {
+            let ff =
+                StreamScheduler::run_compiled_traffic_pm(&cf, 64, 8, &rel, Some(policy));
+            assert!(
+                ff.fast_forwarded_frames >= 40,
+                "{policy:?}: only {} frames replayed",
+                ff.fast_forwarded_frames
+            );
+        }
+    }
+
+    /// A policy is accounting-only: the schedule (makespan, busy time,
+    /// relocks, overlap) is bitwise the unmanaged one — only the idle
+    /// billing and the sleep statistics differ.
+    #[test]
+    fn policy_never_changes_the_schedule() {
+        let g = flash_frame(3);
+        let rel = Traffic::Periodic { rate_hz: 128.0 }.release_times(48);
+        let cf = CompiledFrame::compile(&g);
+        let base = StreamScheduler::run_compiled_traffic(&cf, 48, 8, &rel);
+        assert_eq!(base.sleep_s, 0.0);
+        assert_eq!(base.wake_transitions, 0);
+        for policy in POLICIES {
+            let run =
+                StreamScheduler::run_compiled_traffic_pm(&cf, 48, 8, &rel, Some(policy));
+            assert_eq!(run.makespan_s.to_bits(), base.makespan_s.to_bits(), "{policy:?}");
+            assert_eq!(run.mode_switches, base.mode_switches);
+            assert_eq!(run.overlap_s.to_bits(), base.overlap_s.to_bits());
+            for e in Engine::ALL {
+                assert_eq!(run.busy_s[e.index()].to_bits(), base.busy_s[e.index()].to_bits());
+            }
+            assert!(run.sleep_s > 0.0, "{policy:?} never slept");
+        }
+    }
+
+    /// The policy energy ordering on a gap-dominated stream: the oracle
+    /// bounds lookahead from below, greedy from above, and every policy
+    /// beats the unmanaged active-idle billing.
+    #[test]
+    fn policy_energy_ordering_on_gapped_stream() {
+        let g = flash_frame(1);
+        // 8 Hz sensor on a ~1 ms frame: ≈99 % of the makespan is gap,
+        // far past every rung's baseline break-even.
+        let rel = Traffic::Periodic { rate_hz: 8.0 }.release_times(64);
+        let cf = CompiledFrame::compile(&g);
+        let unmanaged = StreamScheduler::run_compiled_traffic(&cf, 64, 8, &rel);
+        let e = |p| {
+            StreamScheduler::run_compiled_traffic_pm(&cf, 64, 8, &rel, Some(p))
+                .ledger
+                .total_mj()
+        };
+        let (greedy, lookahead, oracle) =
+            (e(PolicyKind::Greedy), e(PolicyKind::Lookahead), e(PolicyKind::Oracle));
+        assert!(
+            oracle <= lookahead && lookahead <= greedy,
+            "oracle {oracle} lookahead {lookahead} greedy {greedy}"
+        );
+        assert!(
+            greedy < unmanaged.ledger.total_mj(),
+            "gap-dominated duty cycling must beat active idle: greedy {greedy} vs {}",
+            unmanaged.ledger.total_mj()
+        );
+        // Sleep statistics: nearly the whole makespan rests, mostly deep.
+        let run = StreamScheduler::run_compiled_traffic_pm(
+            &cf, 64, 8, &rel, Some(PolicyKind::Lookahead),
+        );
+        assert!(run.sleep_s > 0.9 * run.makespan_s, "slept {} of {}", run.sleep_s, run.makespan_s);
+        assert!(run.deep_sleep_s > 0.8 * run.sleep_s);
+        // One wake per inter-frame gap (63) plus one FLL relock per
+        // cluster-stall span (64 serial flash transfers).
+        assert_eq!(run.wake_transitions, 127);
+    }
+
+    /// Back-to-back streams have no full-chip gaps: policies may only
+    /// re-bill cluster stalls (the serial flash chain stalls the cluster
+    /// for its whole runtime), and the totals stay ordered.
+    #[test]
+    fn policy_on_back_to_back_bills_stalls_only() {
+        let g = flash_frame(1);
+        let cf = CompiledFrame::compile(&g);
+        for policy in POLICIES {
+            let run = StreamScheduler::run_compiled_traffic_pm(&cf, 64, 8, &[], Some(policy));
+            let live = StreamScheduler::run_traffic_live_pm(&g, 64, 8, &[], Some(policy));
+            assert_bitwise(&run, &live, &format!("{policy:?} b2b"));
+            assert_eq!(run.deep_sleep_s, 0.0, "{policy:?}: no full-chip gap exists");
+        }
     }
 
     #[test]

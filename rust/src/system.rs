@@ -26,12 +26,13 @@
 //! makespan is the slowest shard's, and throughput scales near-linearly.
 
 use crate::coordinator::{
-    share, stream_graph_traffic, ExecConfig, ModeOverrides, Rung, StreamResult, Tiling,
+    share, stream_graph_traffic_pm, ExecConfig, ModeOverrides, Rung, StreamResult, Tiling,
     UseCaseResult,
 };
 use crate::energy::{Category, EnergyLedger};
 use crate::hwce::golden::WeightPrec;
 use crate::json::Json;
+use crate::soc::pm::{self, PolicyKind};
 use crate::soc::sched::{
     CompiledFrame, Engine, JobGraph, SchedResult, Scheduler, StreamScheduler, N_ENGINES,
 };
@@ -94,6 +95,10 @@ pub struct RunSpec {
     /// default — the PR 5 semantics). Sharded runs regenerate the model
     /// per chip: every chip is an independent sensor starting at `t = 0`.
     pub traffic: Traffic,
+    /// Power-state policy managing idle spans ([`crate::soc::pm`]).
+    /// `None` (the default) bills gaps at the historical FLL-on idle
+    /// floor — bitwise identical to pre-policy runs.
+    pub policy: Option<PolicyKind>,
 }
 
 impl RunSpec {
@@ -106,6 +111,7 @@ impl RunSpec {
             window: None,
             shards: 1,
             traffic: Traffic::BackToBack,
+            policy: None,
         }
     }
 
@@ -136,6 +142,11 @@ impl RunSpec {
 
     pub fn traffic(mut self, traffic: Traffic) -> Self {
         self.traffic = traffic;
+        self
+    }
+
+    pub fn policy(mut self, policy: Option<PolicyKind>) -> Self {
+        self.policy = policy;
         self
     }
 }
@@ -202,6 +213,20 @@ impl ShardedStream {
         shards: usize,
         traffic: &Traffic,
     ) -> Vec<(SchedResult, ShardStat)> {
+        Self::run_traffic_pm(graph, frames, window, shards, traffic, None)
+    }
+
+    /// [`ShardedStream::run_traffic`] with an optional power-state policy
+    /// ([`crate::soc::pm`]) applied identically on every chip. `None` is
+    /// bitwise identical to [`ShardedStream::run_traffic`].
+    pub fn run_traffic_pm(
+        graph: &JobGraph,
+        frames: usize,
+        window: usize,
+        shards: usize,
+        traffic: &Traffic,
+        policy: Option<PolicyKind>,
+    ) -> Vec<(SchedResult, ShardStat)> {
         assert!(frames >= 1, "sharded streaming needs at least one frame");
         assert!(window >= 1, "sharded streaming needs at least one in-flight frame of window");
         assert!(shards >= 1, "sharded streaming needs at least one chip");
@@ -220,11 +245,12 @@ impl ShardedStream {
                 .map(|(&f, rel)| {
                     scope.spawn(move || {
                         let t0 = Instant::now();
-                        let r = StreamScheduler::run_compiled_traffic(
+                        let r = StreamScheduler::run_compiled_traffic_pm(
                             template,
                             f,
                             window.min(f),
                             rel,
+                            policy,
                         );
                         (r, t0.elapsed().as_secs_f64())
                     })
@@ -273,6 +299,7 @@ fn merge_sharded(
     window: usize,
     eq_ops_per_frame: u64,
     parts: &[(SchedResult, ShardStat)],
+    policy: Option<PolicyKind>,
 ) -> StreamResult {
     let single = Scheduler::run(graph);
     let analytic = graph.analytic();
@@ -299,6 +326,10 @@ fn merge_sharded(
         peak_resident_jobs: m.peak_resident_jobs,
         total_jobs: m.total_jobs,
         fast_forwarded_frames: m.fast_forwarded_frames,
+        policy,
+        sleep_s: m.sleep_s,
+        deep_sleep_s: m.deep_sleep_s,
+        wake_transitions: m.wake_transitions,
         ledger: m.ledger,
     }
 }
@@ -326,11 +357,16 @@ pub struct FleetSpec {
     pub sample_k: usize,
     /// Host worker threads over classes (0 = available parallelism).
     pub threads: usize,
+    /// Power-state policy applied fleet-wide ([`crate::soc::pm`]): every
+    /// chip manages its idle gaps under the same policy, and the report
+    /// gains battery-life percentiles. `None` = the historical always-on
+    /// idle floor.
+    pub policy: Option<PolicyKind>,
 }
 
 impl FleetSpec {
     pub fn new(groups: Vec<FleetGroup>) -> Self {
-        FleetSpec { groups, sample_k: 3, threads: 0 }
+        FleetSpec { groups, sample_k: 3, threads: 0, policy: None }
     }
 
     pub fn sample_k(mut self, sample_k: usize) -> Self {
@@ -340,6 +376,11 @@ impl FleetSpec {
 
     pub fn threads(mut self, threads: usize) -> Self {
         self.threads = threads;
+        self
+    }
+
+    pub fn policy(mut self, policy: Option<PolicyKind>) -> Self {
+        self.policy = policy;
         self
     }
 
@@ -407,6 +448,16 @@ pub struct ClassStat {
     pub fps: f64,
     /// Mean engine utilization of one chip (Σ busy / (makespan × engines)).
     pub utilization: f64,
+    /// Power-state policy this class ran under (`"none"` when unmanaged).
+    pub policy: String,
+    /// Per-chip managed (sleep/retention) residency (s).
+    pub sleep_s: f64,
+    /// Per-chip deep-sleep residency (s).
+    pub deep_sleep_s: f64,
+    /// Per-chip duty-cycled energy draw extrapolated to a day (mJ/day).
+    pub epd_mj_per_day: f64,
+    /// Days a [`pm::BATTERY_MWH`] coin cell sustains this class's chips.
+    pub battery_days: f64,
     pub fast_forwarded_frames: usize,
     /// Live simulations charged to this class (representative + parity
     /// samples).
@@ -449,9 +500,14 @@ pub struct FleetReport {
     pub energy_j: f64,
     /// Slowest chip's makespan (chips run concurrently).
     pub makespan_s: f64,
+    /// Power-state policy the fleet ran under (`"none"` when unmanaged).
+    pub policy: String,
     pub energy_mj_per_chip: Pct,
     pub latency_s: Pct,
     pub utilization: Pct,
+    /// Days a [`pm::BATTERY_MWH`] coin cell sustains a chip at its class's
+    /// duty-cycled draw (weighted percentiles across the population).
+    pub battery_days: Pct,
     /// Host wall-clock of the whole fleet run (s).
     pub wall_s: f64,
     pub chips_per_s: f64,
@@ -495,6 +551,9 @@ fn sched_bitwise_eq(a: &SchedResult, b: &SchedResult) -> bool {
         || a.peak_resident_jobs != b.peak_resident_jobs
         || a.overlap_s.to_bits() != b.overlap_s.to_bits()
         || a.coresidency_s.to_bits() != b.coresidency_s.to_bits()
+        || a.sleep_s.to_bits() != b.sleep_s.to_bits()
+        || a.deep_sleep_s.to_bits() != b.deep_sleep_s.to_bits()
+        || a.wake_transitions != b.wake_transitions
     {
         return false;
     }
@@ -581,13 +640,16 @@ impl Fleet {
                 .window
                 .unwrap_or(crate::soc::sched::DEFAULT_STREAM_WINDOW)
                 .min(g.spec.frames);
+            // The fleet-wide policy is part of the key: a future mixed-
+            // policy fleet must not merge chips across policies.
             let key = format!(
-                "{}|{:?}|f{}|w{}|{}",
+                "{}|{:?}|f{}|w{}|{}|p:{}",
                 w.name(),
                 rung.cfg,
                 g.spec.frames,
                 window,
-                g.spec.traffic.key()
+                g.spec.traffic.key(),
+                fleet.policy.map_or("none", |p| p.name()),
             );
             match index.get(&key) {
                 Some(&ci) => classes[ci].chips += g.chips,
@@ -633,8 +695,8 @@ impl Fleet {
                     let c = &classes[ci];
                     let cf = CompiledFrame::compile(&c.graph);
                     let t0 = Instant::now();
-                    let r = StreamScheduler::run_compiled_traffic(
-                        &cf, c.frames, c.window, &c.release,
+                    let r = StreamScheduler::run_compiled_traffic_pm(
+                        &cf, c.frames, c.window, &c.release, fleet.policy,
                     );
                     let wall_s = t0.elapsed().as_secs_f64();
                     // Sampled live-vs-scaled parity: random members re-run
@@ -649,8 +711,8 @@ impl Fleet {
                     let mut parity_ok = true;
                     for _ in 1..live_n {
                         sampled.push((rng.next_u64() % c.chips as u64) as usize);
-                        let live = StreamScheduler::run_traffic_live(
-                            &c.graph, c.frames, c.window, &c.release,
+                        let live = StreamScheduler::run_traffic_live_pm(
+                            &c.graph, c.frames, c.window, &c.release, fleet.policy,
                         );
                         parity_ok &= sched_bitwise_eq(&r, &live);
                     }
@@ -676,8 +738,9 @@ impl Fleet {
         let (mut live_chips, mut parity_checked, mut parity_failures) = (0usize, 0usize, 0usize);
         let mut naive_est_wall_s = 0.0f64;
         let mut total_frames = 0u64;
-        let (mut e_vals, mut l_vals, mut u_vals) =
-            (Vec::new(), Vec::new(), Vec::new());
+        let (mut e_vals, mut l_vals, mut u_vals, mut b_vals) =
+            (Vec::new(), Vec::new(), Vec::new(), Vec::new());
+        let policy_name = fleet.policy.map_or("none", |p| p.name()).to_string();
         for (c, o) in classes.iter().zip(&outcomes) {
             merged.absorb(&o.result, c.chips);
             live_chips += o.live_runs;
@@ -690,9 +753,12 @@ impl Fleet {
             let energy_mj = o.result.ledger.total_mj();
             let busy: f64 = o.result.busy_s.iter().sum();
             let utilization = busy / (o.result.makespan_s * N_ENGINES as f64);
+            let epd = pm::energy_per_day_mj(energy_mj, o.result.makespan_s);
+            let battery = pm::battery_days(energy_mj, o.result.makespan_s);
             e_vals.push((energy_mj, c.chips));
             l_vals.push((o.result.makespan_s, c.chips));
             u_vals.push((utilization, c.chips));
+            b_vals.push((battery, c.chips));
             stats.push(ClassStat {
                 key: c.key.clone(),
                 workload: c.workload.clone(),
@@ -704,6 +770,11 @@ impl Fleet {
                 energy_mj,
                 fps: c.frames as f64 / o.result.makespan_s,
                 utilization,
+                policy: policy_name.clone(),
+                sleep_s: o.result.sleep_s,
+                deep_sleep_s: o.result.deep_sleep_s,
+                epd_mj_per_day: epd,
+                battery_days: battery,
                 fast_forwarded_frames: o.result.fast_forwarded_frames,
                 live_runs: o.live_runs,
                 sampled_members: o.sampled.clone(),
@@ -727,9 +798,11 @@ impl Fleet {
             total_frames,
             energy_j: merged.ledger.total_mj() / 1e3,
             makespan_s: merged.time_s,
+            policy: policy_name,
             energy_mj_per_chip: pct(&mut e_vals, total_chips),
             latency_s: pct(&mut l_vals, total_chips),
             utilization: pct(&mut u_vals, total_chips),
+            battery_days: pct(&mut b_vals, total_chips),
             wall_s,
             chips_per_s: total_chips as f64 / wall_s,
             naive_est_wall_s,
@@ -762,8 +835,8 @@ impl FleetReport {
         .unwrap();
         writeln!(
             s,
-            "fleet energy {:.3} J over {} frames | slowest chip {:.4} s",
-            self.energy_j, self.total_frames, self.makespan_s
+            "fleet energy {:.3} J over {} frames | slowest chip {:.4} s | policy {}",
+            self.energy_j, self.total_frames, self.makespan_s, self.policy
         )
         .unwrap();
         writeln!(
@@ -777,19 +850,20 @@ impl FleetReport {
             ("energy [mJ]", self.energy_mj_per_chip),
             ("latency [s]", self.latency_s),
             ("utilization", self.utilization),
+            ("battery [d]", self.battery_days),
         ] {
             writeln!(s, "{name:<14} {:>9.4} {:>9.4} {:>9.4}", p.p50, p.p95, p.p99).unwrap();
         }
         writeln!(
             s,
-            "{:<14} {:<10} {:<22} {:>9} {:>8} {:>9} {:>10} {:>6}",
-            "workload", "rung", "traffic", "chips", "fps", "mJ/chip", "util", "ff"
+            "{:<14} {:<10} {:<22} {:>9} {:>8} {:>9} {:>10} {:>10} {:>6}",
+            "workload", "rung", "traffic", "chips", "fps", "mJ/chip", "util", "batt [d]", "ff"
         )
         .unwrap();
         for c in &self.classes {
             writeln!(
                 s,
-                "{:<14} {:<10} {:<22} {:>9} {:>8.3} {:>9.4} {:>9.1}% {:>6}",
+                "{:<14} {:<10} {:<22} {:>9} {:>8.3} {:>9.4} {:>9.1}% {:>10.2} {:>6}",
                 c.workload,
                 c.rung,
                 c.traffic,
@@ -797,6 +871,7 @@ impl FleetReport {
                 c.fps,
                 c.energy_mj,
                 c.utilization * 100.0,
+                c.battery_days,
                 c.fast_forwarded_frames
             )
             .unwrap();
@@ -826,9 +901,11 @@ impl FleetReport {
             ("chips_per_s", Json::num(self.chips_per_s)),
             ("naive_est_wall_s", Json::num(self.naive_est_wall_s)),
             ("dedup_speedup", Json::num(self.dedup_speedup)),
+            ("policy", Json::string(&self.policy)),
             ("energy_mj_per_chip", pct_json(&self.energy_mj_per_chip)),
             ("latency_s", pct_json(&self.latency_s)),
             ("utilization", pct_json(&self.utilization)),
+            ("battery_days", pct_json(&self.battery_days)),
             (
                 "classes",
                 Json::Arr(
@@ -846,6 +923,11 @@ impl FleetReport {
                                 ("energy_mj", Json::num(c.energy_mj)),
                                 ("fps", Json::num(c.fps)),
                                 ("utilization", Json::num(c.utilization)),
+                                ("policy", Json::string(&c.policy)),
+                                ("sleep_s", Json::num(c.sleep_s)),
+                                ("deep_sleep_s", Json::num(c.deep_sleep_s)),
+                                ("epd_mj_per_day", Json::num(c.epd_mj_per_day)),
+                                ("battery_days", Json::num(c.battery_days)),
                                 (
                                     "fast_forwarded_frames",
                                     Json::num(c.fast_forwarded_frames as f64),
@@ -950,6 +1032,26 @@ impl RunReport {
             r.mode_switches
         )
         .unwrap();
+        if let Some(p) = r.policy {
+            writeln!(
+                s,
+                "policy {}: slept {:>9.4} s ({:.1}% of makespan, {:.4} s deep, {} wakes)",
+                p.name(),
+                r.sleep_s,
+                r.sleep_s / r.time_s * 100.0,
+                r.deep_sleep_s,
+                r.wake_transitions
+            )
+            .unwrap();
+            writeln!(
+                s,
+                "duty-cycled draw {:>9.3} mJ/day -> {:.2} days on a {} mWh cell",
+                pm::energy_per_day_mj(r.energy_mj, r.time_s),
+                pm::battery_days(r.energy_mj, r.time_s),
+                pm::BATTERY_MWH
+            )
+            .unwrap();
+        }
         if self.tenants.len() > 1 {
             for t in &self.tenants {
                 writeln!(
@@ -1045,6 +1147,15 @@ impl RunReport {
             ("peak_resident_jobs", Json::num(r.peak_resident_jobs as f64)),
             ("total_jobs", Json::num(r.total_jobs as f64)),
             ("fast_forwarded_frames", Json::num(r.fast_forwarded_frames as f64)),
+            (
+                "policy",
+                r.policy.map_or(Json::Null, |p| Json::string(p.name())),
+            ),
+            ("sleep_s", Json::num(r.sleep_s)),
+            ("deep_sleep_s", Json::num(r.deep_sleep_s)),
+            ("wake_transitions", Json::num(r.wake_transitions as f64)),
+            ("epd_mj_per_day", Json::num(pm::energy_per_day_mj(r.energy_mj, r.time_s))),
+            ("battery_days", Json::num(pm::battery_days(r.energy_mj, r.time_s))),
             ("shard_count", Json::num(self.shards.len().max(1) as f64)),
             (
                 "shards",
@@ -1285,15 +1396,19 @@ impl SocSystem {
         let g = frame_graph(w, rung.cfg)?;
         let window = spec.window.unwrap_or(crate::soc::sched::DEFAULT_STREAM_WINDOW);
         let (result, shards) = if spec.shards > 1 {
-            let parts =
-                ShardedStream::run_traffic(&g, spec.frames, window, spec.shards, &spec.traffic);
-            let result =
-                merge_sharded(w.name(), &g, spec.frames, window, w.eq_ops(), &parts);
+            let parts = ShardedStream::run_traffic_pm(
+                &g, spec.frames, window, spec.shards, &spec.traffic, spec.policy,
+            );
+            let result = merge_sharded(
+                w.name(), &g, spec.frames, window, w.eq_ops(), &parts, spec.policy,
+            );
             (result, parts.into_iter().map(|(_, st)| st).collect())
         } else {
             let release = spec.traffic.release_times(spec.frames);
             (
-                stream_graph_traffic(w.name(), &g, spec.frames, window, w.eq_ops(), &release),
+                stream_graph_traffic_pm(
+                    w.name(), &g, spec.frames, window, w.eq_ops(), &release, spec.policy,
+                ),
                 Vec::new(),
             )
         };
@@ -1735,6 +1850,94 @@ mod tests {
         assert_eq!(report.makespan_s.to_bits(), single.result.time_s.to_bits());
         assert_eq!(report.latency_s.p50.to_bits(), single.result.time_s.to_bits());
         assert_eq!(report.latency_s.p99.to_bits(), single.result.time_s.to_bits());
+    }
+
+    /// Tentpole (power policy): a managed gapped stream keeps the exact
+    /// unmanaged schedule (timing is bitwise identical — the policy only
+    /// re-bills idle spans), spends most of the makespan asleep, saves
+    /// energy, and surfaces the battery extrapolation in text and JSON.
+    #[test]
+    fn policy_rebills_gaps_without_touching_the_schedule() {
+        let sys = SocSystem::new();
+        let spec = RunSpec::new("seizure")
+            .frames(8)
+            .traffic(Traffic::Periodic { rate_hz: 2.0 });
+        let base = sys.run(&spec).unwrap();
+        let managed = sys.run(&spec.clone().policy(Some(PolicyKind::Lookahead))).unwrap();
+        assert_eq!(base.result.time_s.to_bits(), managed.result.time_s.to_bits());
+        assert_eq!(base.result.mode_switches, managed.result.mode_switches);
+        assert_eq!(base.result.sleep_s, 0.0, "unmanaged runs report no sleep");
+        assert!(managed.result.sleep_s > 0.9 * managed.result.time_s, "gap-dominated");
+        assert!(managed.result.deep_sleep_s > 0.0);
+        assert!(managed.result.energy_mj < base.result.energy_mj, "sleep must save energy");
+        let text = managed.render_text();
+        assert!(text.contains("policy lookahead"), "{text}");
+        assert!(text.contains("days on a"), "{text}");
+        assert!(!base.render_text().contains("policy"), "unmanaged text unchanged");
+        let json = managed.to_json().render();
+        assert!(json.contains("\"policy\":\"lookahead\""), "{json}");
+        assert!(json.contains("\"battery_days\""), "{json}");
+        // sharded managed run: chip-local gaps re-bill per chip and sum
+        let sharded = sys
+            .run(&spec.clone().frames(8).shards(2).policy(Some(PolicyKind::Lookahead)))
+            .unwrap();
+        assert!(sharded.result.sleep_s > 0.0);
+        let e_sum: f64 = sharded.shards.iter().map(|s| s.energy_mj).sum();
+        assert!((e_sum - sharded.result.energy_mj).abs() < 1e-9 * (1.0 + e_sum));
+    }
+
+    /// Tentpole (fleet policy): a managed fleet passes the sampled
+    /// live-vs-scaled bitwise parity (sleep accounting included via
+    /// `sched_bitwise_eq`), reports battery-life percentiles, and orders
+    /// oracle ≤ lookahead ≤ greedy ≤ unmanaged on total energy.
+    #[test]
+    fn fleet_policy_parity_and_energy_ordering() {
+        let sys = SocSystem::new();
+        let groups = || {
+            vec![
+                FleetGroup {
+                    spec: RunSpec::new("seizure")
+                        .frames(4)
+                        .traffic(Traffic::Periodic { rate_hz: 2.0 }),
+                    chips: 5,
+                },
+                FleetGroup {
+                    spec: RunSpec::new("facedet")
+                        .frames(3)
+                        .traffic(Traffic::Poisson { rate_hz: 1.0, seed: 7 }),
+                    chips: 4,
+                },
+            ]
+        };
+        let run = |policy: Option<PolicyKind>| {
+            sys.fleet(&FleetSpec::new(groups()).sample_k(3).policy(policy)).unwrap()
+        };
+        let base = run(None);
+        let greedy = run(Some(PolicyKind::Greedy));
+        let lookahead = run(Some(PolicyKind::Lookahead));
+        let oracle = run(Some(PolicyKind::Oracle));
+        for (r, name) in
+            [(&base, "none"), (&greedy, "greedy"), (&lookahead, "lookahead"), (&oracle, "oracle")]
+        {
+            assert_eq!(r.parity_failures, 0, "{name} parity");
+            assert_eq!(r.policy, name);
+            assert!(r.classes.iter().all(|c| c.policy == name && c.key.contains(name)));
+        }
+        assert!(oracle.energy_j <= lookahead.energy_j);
+        assert!(lookahead.energy_j <= greedy.energy_j);
+        assert!(greedy.energy_j < base.energy_j, "gapped chips must save under management");
+        // battery life moves the other way: deeper sleep → more days
+        assert!(lookahead.battery_days.p50 >= greedy.battery_days.p50);
+        for c in &lookahead.classes {
+            assert!(c.sleep_s > 0.0 && c.battery_days > 0.0 && c.epd_mj_per_day > 0.0);
+        }
+        let text = lookahead.render_text();
+        assert!(text.contains("policy lookahead"), "{text}");
+        assert!(text.contains("battery [d]"), "{text}");
+        let json = lookahead.to_json().render();
+        assert!(json.contains("\"policy\":\"lookahead\""), "{json}");
+        assert!(json.contains("\"battery_days\""), "{json}");
+        assert!(json.contains("\"epd_mj_per_day\""), "{json}");
     }
 
     #[test]
