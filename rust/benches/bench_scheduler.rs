@@ -17,6 +17,10 @@
 //! a `shard_scaling` section with jobs/s at S = {1, 2, 4} simulated SoCs,
 //! and a `fleet_scaling` section with the class-deduplicated fleet
 //! runner's chips/s and dedup speedup at {1k, 100k, 1M} chips, and a
+//! `fleet_hetero_scaling` section repeating those depths with *every*
+//! chip perturbed (seeded service-time drift + traffic phase jitter,
+//! the parametric-family path — headline key
+//! `fleet_hetero_1m_dedup_speedup`), and a
 //! `policy` section with energy-per-day and battery-life rows for every
 //! workload × sleep policy at a 1 Hz duty cycle (CI guards the
 //! oracle ≤ lookahead ≤ greedy energy ordering) — the machine-readable
@@ -263,6 +267,56 @@ fn main() {
     }
     println!("fleet dedup speedup at 1M chips: {fleet_1m_speedup:.1}x vs per-chip simulation");
 
+    // Heterogeneous fleet scaling: the same mix, but *every* chip
+    // perturbed — seeded service-time drift of ±1% and up to 10 ms of
+    // traffic phase per chip. PR 6's exact dedup would degrade to
+    // O(chips) here; parametric families keep the wall clock O(classes)
+    // by deriving members through the certified closed-form rescale
+    // (live fallback where the certificate refuses). The headline row is
+    // again a million chips, all distinct.
+    println!("\n== fleet hetero scaling: every chip perturbed (drift 1%, jitter 10ms) ==");
+    println!(
+        "{:>9} {:>8} {:>9} {:>9} {:>10} {:>14} {:>10}",
+        "chips", "classes", "members", "fallback", "wall [s]", "chips/s", "speedup"
+    );
+    let mut hetero_rows: Vec<Json> = Vec::new();
+    let mut hetero_1m_speedup = 0.0f64;
+    for chips in [1_000usize, 100_000, 1_000_000] {
+        let rep = sys
+            .fleet(&FleetSpec::mixed(chips, 32).drift(1.0).phase_jitter(0.01))
+            .unwrap();
+        assert_eq!(rep.parity_failures, 0, "hetero fleet parity must hold at {chips} chips");
+        println!(
+            "{chips:>9} {:>8} {:>9} {:>9} {:>10.4} {:>14.0} {:>9.1}x",
+            rep.classes.len(),
+            rep.members,
+            rep.live_fallbacks,
+            rep.wall_s,
+            rep.chips_per_s,
+            rep.dedup_speedup
+        );
+        hetero_rows.push(Json::obj(vec![
+            ("chips", Json::num(chips as f64)),
+            ("drift_pct", Json::num(rep.drift_pct)),
+            ("phase_jitter_s", Json::num(rep.phase_jitter_s)),
+            ("class_count", Json::num(rep.classes.len() as f64)),
+            ("members", Json::num(rep.members as f64)),
+            ("live_fallbacks", Json::num(rep.live_fallbacks as f64)),
+            ("live_chips", Json::num(rep.live_chips as f64)),
+            ("parity_checked", Json::num(rep.parity_checked as f64)),
+            ("wall_s", Json::num(rep.wall_s)),
+            ("chips_per_s", Json::num(rep.chips_per_s)),
+            ("naive_est_wall_s", Json::num(rep.naive_est_wall_s)),
+            ("dedup_speedup", Json::num(rep.dedup_speedup)),
+        ]));
+        if chips == 1_000_000 {
+            hetero_1m_speedup = rep.dedup_speedup;
+        }
+    }
+    println!(
+        "hetero fleet dedup speedup at 1M perturbed chips: {hetero_1m_speedup:.1}x vs per-chip simulation"
+    );
+
     // Power-state policies: every workload duty-cycled at 1 Hz (a gap-
     // dominated sensor cadence) under the three sleep policies. The rows
     // carry the battery extrapolation CI guards: per workload, lookahead
@@ -315,8 +369,10 @@ fn main() {
         ("stream_scaling", Json::Arr(scaling_rows)),
         ("shard_scaling", Json::Arr(shard_rows)),
         ("fleet_scaling", Json::Arr(fleet_rows)),
+        ("fleet_hetero_scaling", Json::Arr(hetero_rows)),
         ("policy", Json::Arr(policy_rows)),
         ("fleet_1m_dedup_speedup", Json::num(fleet_1m_speedup)),
+        ("fleet_hetero_1m_dedup_speedup", Json::num(hetero_1m_speedup)),
         ("windowed_vs_scan_jobs_per_s", Json::num(vs_scan_64)),
         ("windowed_4096_vs_scan_64_jobs_per_s", Json::num(deep_vs_scan)),
         ("windowed_ff_vs_live_4096_jobs_per_s", Json::num(ff_vs_live_4096)),

@@ -37,7 +37,7 @@ commands:
                 through the Table I sleep ladder and report battery life;
                 oracle reads future arrivals, so it needs a --traffic model)
   fleet [--chips N] [--frames F] [--sample K] [--threads T] [--policy P]
-        [--json]
+        [--drift PCT] [--phase-jitter S] [--json]
                 simulate a fleet of N endpoints (default 1000) spread over
                 every workload x rung x traffic model: chips dedup into
                 simulation-identical classes, each class runs once and
@@ -45,7 +45,14 @@ commands:
                 re-run live and must match bitwise; default K=3), with
                 energy/latency/utilization percentiles across the fleet —
                 --chips 1000000 completes in seconds; --policy P manages
-                every chip's idle gaps and adds battery-life percentiles
+                every chip's idle gaps and adds battery-life percentiles;
+                --drift PCT perturbs every chip's service times by a
+                seeded factor in ±PCT% and --phase-jitter S offsets each
+                chip's release table by a seeded phase in [0, S) seconds:
+                perturbed chips stay O(classes) — each family simulates
+                one representative and derives members by a certified
+                closed-form rescale (live fallback when the certificate
+                refuses, so results stay exact either way)
   ablations [--json]
                 run the surveillance design-choice sweep
   artifacts     list and compile the AOT artifacts (PJRT smoke test)
@@ -78,6 +85,8 @@ pub enum Command {
         sample: usize,
         threads: usize,
         policy: Option<PolicyKind>,
+        drift: f64,
+        phase_jitter: f64,
         json: bool,
     },
     /// The surveillance ablation sweep.
@@ -213,13 +222,15 @@ fn parse_stream(args: &[String]) -> Result<Command> {
 }
 
 /// Parse the `fleet` subcommand's flags: `[--chips N] [--frames F]
-/// [--sample K] [--threads T] [--json]`.
+/// [--sample K] [--threads T] [--drift PCT] [--phase-jitter S] [--json]`.
 fn parse_fleet(args: &[String]) -> Result<Command> {
     let mut chips = 1000usize;
     let mut frames = 32usize;
     let mut sample = 3usize;
     let mut threads = 0usize;
     let mut policy: Option<PolicyKind> = None;
+    let mut drift = 0.0f64;
+    let mut phase_jitter = 0.0f64;
     let mut json = false;
     let mut it = args.iter();
     while let Some(flag) = it.next() {
@@ -253,11 +264,26 @@ fn parse_fleet(args: &[String]) -> Result<Command> {
                 let v = it.next().ok_or_else(|| anyhow!("--policy needs a value"))?;
                 policy = Some(PolicyKind::parse(v)?);
             }
+            "--drift" => {
+                let v = it.next().ok_or_else(|| anyhow!("--drift needs a value"))?;
+                drift = v.parse().map_err(|_| anyhow!("bad --drift value {v:?}"))?;
+                if !(drift.is_finite() && (0.0..100.0).contains(&drift)) {
+                    bail!("--drift must be a percentage in [0, 100) (got {v:?})");
+                }
+            }
+            "--phase-jitter" => {
+                let v = it.next().ok_or_else(|| anyhow!("--phase-jitter needs a value"))?;
+                phase_jitter =
+                    v.parse().map_err(|_| anyhow!("bad --phase-jitter value {v:?}"))?;
+                if !(phase_jitter.is_finite() && phase_jitter >= 0.0) {
+                    bail!("--phase-jitter must be a non-negative seconds value (got {v:?})");
+                }
+            }
             "--json" => json = true,
             other => bail!("unknown fleet flag {other:?}"),
         }
     }
-    Ok(Command::Fleet { chips, frames, sample, threads, policy, json })
+    Ok(Command::Fleet { chips, frames, sample, threads, policy, drift, phase_jitter, json })
 }
 
 /// Execute a parsed command, printing its output to stdout.
@@ -299,11 +325,13 @@ pub fn dispatch(cmd: &Command) -> Result<()> {
                 print!("{}", run.render_text());
             }
         }
-        Command::Fleet { chips, frames, sample, threads, policy, json } => {
+        Command::Fleet { chips, frames, sample, threads, policy, drift, phase_jitter, json } => {
             let fleet = FleetSpec::mixed(*chips, *frames)
                 .sample_k(*sample)
                 .threads(*threads)
-                .policy(*policy);
+                .policy(*policy)
+                .drift(*drift)
+                .phase_jitter(*phase_jitter);
             let report = SocSystem::new().fleet(&fleet)?;
             if *json {
                 println!("{}", report.to_json().render());
@@ -648,6 +676,8 @@ mod tests {
                 sample: 3,
                 threads: 0,
                 policy: None,
+                drift: 0.0,
+                phase_jitter: 0.0,
                 json: false
             }
         );
@@ -663,6 +693,8 @@ mod tests {
                 sample: 2,
                 threads: 4,
                 policy: None,
+                drift: 0.0,
+                phase_jitter: 0.0,
                 json: true
             }
         );
@@ -672,6 +704,46 @@ mod tests {
         assert!(e.contains("--sample must be at least 1"), "{e}");
         assert!(parse(&argv(&["fleet", "--frames", "0"])).is_err());
         assert!(parse(&argv(&["fleet", "--bogus"])).is_err());
+    }
+
+    /// Satellite (heterogeneity flags): `--drift` and `--phase-jitter`
+    /// parse into the spec, and out-of-domain values are rejected at parse
+    /// time — the same domains [`FleetSpec`] re-checks at run time.
+    #[test]
+    fn parses_fleet_heterogeneity_flags() {
+        let cmd = parse(&argv(&[
+            "fleet", "--chips", "100", "--drift", "2.5", "--phase-jitter", "0.01",
+        ]))
+        .unwrap();
+        match cmd {
+            Command::Fleet { drift, phase_jitter, .. } => {
+                assert_eq!(drift, 2.5);
+                assert_eq!(phase_jitter, 0.01);
+            }
+            other => panic!("expected fleet, got {other:?}"),
+        }
+        let e = parse(&argv(&["fleet", "--drift", "-1"])).unwrap_err().to_string();
+        assert!(e.contains("--drift must be a percentage in [0, 100)"), "{e}");
+        let e = parse(&argv(&["fleet", "--drift", "100"])).unwrap_err().to_string();
+        assert!(e.contains("--drift must be a percentage in [0, 100)"), "{e}");
+        let e = parse(&argv(&["fleet", "--phase-jitter", "-0.5"])).unwrap_err().to_string();
+        assert!(e.contains("--phase-jitter must be a non-negative"), "{e}");
+        assert!(parse(&argv(&["fleet", "--drift"])).is_err());
+        assert!(parse(&argv(&["fleet", "--drift", "abc"])).is_err());
+        assert!(parse(&argv(&["fleet", "--phase-jitter", "nan"])).is_err());
+    }
+
+    /// A small heterogeneous fleet dispatches end-to-end through the real
+    /// CLI path — parametric families, member derivation, and the
+    /// "parametric:" report line included.
+    #[test]
+    fn heterogeneous_fleet_dispatches_end_to_end() {
+        let cmd = parse(&argv(&[
+            "fleet", "--chips", "8", "--frames", "2", "--sample", "1", "--drift", "1.5",
+            "--phase-jitter", "0.02",
+        ]))
+        .unwrap();
+        assert!(dispatch(&cmd).is_ok(), "heterogeneous fleet must simulate cleanly");
     }
 
     /// A tiny fleet dispatches end-to-end through the real CLI path —
@@ -688,6 +760,8 @@ mod tests {
                 sample: 1,
                 threads: 0,
                 policy: None,
+                drift: 0.0,
+                phase_jitter: 0.0,
                 json: false
             }
         );

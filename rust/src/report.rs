@@ -113,6 +113,17 @@ impl Merged {
         self.ledger.elapsed_s = self.time_s;
     }
 
+    /// Fold one scheduler result in after rescaling its time base by
+    /// `scale` — the parametric-fleet seam: a drift-α class member is
+    /// its representative with every duration (and therefore every
+    /// energy integral) multiplied by α. Defined as *exactly*
+    /// `absorb(&r.rescaled(scale), chips)` so the property tests can
+    /// pin the equivalence bitwise; `scale == 1.0` degenerates to the
+    /// plain absorb (multiplying by 1.0 is a float identity).
+    pub fn absorb_scaled(&mut self, r: &SchedResult, chips: usize, scale: f64) {
+        self.absorb(&r.rescaled(scale), chips);
+    }
+
     /// Fold another roll-up in (the associativity seam: merging partial
     /// merges equals one flat merge on every summed field).
     pub fn combine(&mut self, other: &Merged) {
@@ -743,6 +754,77 @@ mod tests {
         assert_eq!(scaled.total_jobs, 3 * r.n_jobs);
         assert_eq!(scaled.mode_switches, 3 * r.mode_switches);
         assert_eq!(scaled.wake_transitions, 3 * r.wake_transitions);
+    }
+
+    /// Property: `absorb_scaled` at scale 1.0 is bitwise the plain
+    /// absorb (x × 1.0 is a float identity), and at any scale it equals
+    /// absorbing a pre-rescaled result — the two ways a parametric
+    /// member can reach the roll-up must agree exactly.
+    #[test]
+    fn absorb_scaled_matches_absorb_of_rescaled() {
+        for i in 0..16 {
+            let r = synth_result(i);
+            // scale 1.0 degenerates to plain absorb
+            let mut plain = Merged::empty();
+            plain.absorb(&r, 4);
+            let mut unit = Merged::empty();
+            unit.absorb_scaled(&r, 4, 1.0);
+            assert_merged_bitwise_eq(&plain, &unit);
+            // general scales: absorb_scaled == absorb ∘ rescaled
+            for scale in [0.5, 2.0, 1.25, 0.875] {
+                let mut via_scaled = Merged::empty();
+                via_scaled.absorb_scaled(&r, 3, scale);
+                let mut via_rescale = Merged::empty();
+                via_rescale.absorb(&r.rescaled(scale), 3);
+                assert_merged_bitwise_eq(&via_scaled, &via_rescale);
+            }
+        }
+    }
+
+    /// Property: a population of C members at one power-of-two scale
+    /// absorbed at once equals C separate scaled absorbs — population
+    /// scaling and time-base scaling commute bitwise on dyadic inputs
+    /// (×2⁻¹ and ×2 are exact, so the sums stay exact).
+    #[test]
+    fn absorb_scaled_population_matches_repeated_members() {
+        let r = synth_result(9);
+        for scale in [0.5, 2.0] {
+            let mut pop = Merged::empty();
+            pop.absorb_scaled(&r, 3, scale);
+            let mut reps = Merged::empty();
+            for _ in 0..3 {
+                reps.absorb_scaled(&r, 1, scale);
+            }
+            assert_merged_bitwise_eq(&pop, &reps);
+            assert_eq!(pop.chips, 3);
+            assert_eq!(pop.time_s.to_bits(), (r.makespan_s * scale).to_bits());
+        }
+    }
+
+    /// Scaling stretches every time-integrated field linearly and leaves
+    /// counts alone (a drifted chip does the same *work* slower).
+    #[test]
+    fn rescaled_scales_times_and_energies_but_not_counts() {
+        let r = synth_result(3);
+        let s = r.rescaled(2.0);
+        assert_eq!(s.makespan_s.to_bits(), (r.makespan_s * 2.0).to_bits());
+        for cat in Category::all() {
+            assert_eq!(
+                s.ledger.energy_mj(cat).to_bits(),
+                (r.ledger.energy_mj(cat) * 2.0).to_bits(),
+                "{cat:?}"
+            );
+        }
+        for e in 0..N_ENGINES {
+            assert_eq!(s.busy_s[e].to_bits(), (r.busy_s[e] * 2.0).to_bits());
+        }
+        assert_eq!(s.sleep_s.to_bits(), (r.sleep_s * 2.0).to_bits());
+        assert_eq!(s.deep_sleep_s.to_bits(), (r.deep_sleep_s * 2.0).to_bits());
+        assert_eq!(s.n_jobs, r.n_jobs);
+        assert_eq!(s.mode_switches, r.mode_switches);
+        assert_eq!(s.wake_transitions, r.wake_transitions);
+        assert_eq!(s.peak_resident_jobs, r.peak_resident_jobs);
+        assert_eq!(s.fast_forwarded_frames, r.fast_forwarded_frames);
     }
 
     #[test]

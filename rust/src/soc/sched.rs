@@ -137,6 +137,7 @@ use crate::energy::{Category, EnergyLedger};
 use crate::soc::opmodes::{OperatingMode, OperatingPoint, MODE_SWITCH_S, V_NOM};
 use crate::soc::pm::{self, PolicyKind};
 use crate::soc::power::{Component, PowerModel, FLASH_STANDBY_MW, FRAM_STANDBY_MW};
+use crate::traffic::Perturb;
 use std::cmp::Ordering;
 use std::collections::{BTreeSet, BinaryHeap, VecDeque};
 
@@ -673,6 +674,36 @@ impl SchedResult {
             0.0
         }
     }
+
+    /// The result with every time- and energy-valued field scaled by
+    /// `scale` and every count (jobs, switches, wakes, peaks, replayed
+    /// frames) unchanged — the closed form for a chip whose time base runs
+    /// `scale` times slower but makes the identical decisions. Used by
+    /// [`crate::report::Merged::absorb_scaled`]; the policy-managed
+    /// members of a parametric fleet class go through the richer
+    /// [`ParamRep::member`] instead (sleep billing is not homogeneous in
+    /// the span length).
+    pub fn rescaled(&self, scale: f64) -> SchedResult {
+        assert!(scale.is_finite() && scale > 0.0, "rescale factor must be positive and finite");
+        let mut busy = self.busy_s;
+        for b in &mut busy {
+            *b *= scale;
+        }
+        SchedResult {
+            ledger: self.ledger.scaled(scale),
+            makespan_s: self.makespan_s * scale,
+            mode_switches: self.mode_switches,
+            busy_s: busy,
+            n_jobs: self.n_jobs,
+            overlap_s: self.overlap_s * scale,
+            coresidency_s: self.coresidency_s * scale,
+            peak_resident_jobs: self.peak_resident_jobs,
+            fast_forwarded_frames: self.fast_forwarded_frames,
+            sleep_s: self.sleep_s * scale,
+            deep_sleep_s: self.deep_sleep_s * scale,
+            wake_transitions: self.wake_transitions,
+        }
+    }
 }
 
 /// Completion event: min-heap by time (ties broken by job id) on top of
@@ -858,16 +889,20 @@ struct FrameSlot {
 /// job-structure and compiled paths): may a job emitted for `op` with
 /// service time `duration_s` be hosted at current mode `c` without a mode
 /// switch? Equal modes always; a subsumed mode only when the
-/// frequency-rescale penalty is cheaper than the FLL relock a private mode
-/// window would cost.
-fn co_resident_at(c: OperatingMode, op: OperatingPoint, duration_s: f64) -> bool {
+/// frequency-rescale penalty is cheaper than the FLL relock (`relock_s`,
+/// [`MODE_SWITCH_S`] on an undrifted chip) a private mode window would
+/// cost. Taking the relock as a parameter keeps the predicate invariant
+/// under a uniform time-base scale: a drifted chip stretches service
+/// times *and* its FLL relock by the same factor, so the comparison —
+/// and with it every dispatch decision — is unchanged.
+fn co_resident_at(c: OperatingMode, op: OperatingPoint, duration_s: f64, relock_s: f64) -> bool {
     if c == op.mode {
         return true;
     }
     if !c.supports(op.mode) {
         return false;
     }
-    hosted_duration(duration_s, op, c) - duration_s <= MODE_SWITCH_S
+    hosted_duration(duration_s, op, c) - duration_s <= relock_s
 }
 
 /// A frame template lowered to flat struct-of-arrays form: the hot-path
@@ -892,6 +927,10 @@ pub struct CompiledFrame {
     clock_scaled: Vec<bool>,
     op: Vec<OperatingPoint>,
     duration_s: Vec<f64>,
+    /// FLL relock interval of the hosting chip ([`MODE_SWITCH_S`] when
+    /// compiled; scaled together with `duration_s` by [`CompiledFrame::
+    /// rescaled`], since a drifted crystal stretches the relock too).
+    relock_s: f64,
     indeg0: Vec<u32>,
     roots: Vec<u32>,
     /// CSR successors: job `j`'s dependents are `succ[succ_off[j]..succ_off[j+1]]`.
@@ -919,6 +958,7 @@ impl CompiledFrame {
             clock_scaled: Vec::with_capacity(n),
             op: Vec::with_capacity(n),
             duration_s: Vec::with_capacity(n),
+            relock_s: MODE_SWITCH_S,
             indeg0: Vec::with_capacity(n),
             roots: Vec::new(),
             succ_off: vec![0u32; n + 1],
@@ -995,6 +1035,31 @@ impl CompiledFrame {
             && self.succ == other.succ
             && self.indeg0 == other.indeg0
     }
+
+    /// The template as hosted by a chip whose time base runs `alpha` times
+    /// slower than nominal (process/temperature drift): every service time,
+    /// every prefolded energy row (energy = power x duration, linear in
+    /// time) *and* the FLL relock interval scale by `alpha`. Because each
+    /// event time of a run is built from sums, maxima and comparisons of
+    /// exactly these inputs, scaling all of them uniformly scales every
+    /// event time by `alpha` in real arithmetic and leaves the decision
+    /// schedule untouched — the theorem the parametric fleet classes lean
+    /// on (see [`ParamRep`]).
+    pub fn rescaled(&self, alpha: f64) -> CompiledFrame {
+        assert!(
+            alpha.is_finite() && alpha > 0.0,
+            "rescale factor must be positive and finite"
+        );
+        let mut cf = self.clone();
+        for d in &mut cf.duration_s {
+            *d *= alpha;
+        }
+        for c in &mut cf.charge_mj {
+            *c *= alpha;
+        }
+        cf.relock_s = self.relock_s * alpha;
+        cf
+    }
 }
 
 /// Longest steady-state period the detector searches for (frames). The
@@ -1004,6 +1069,17 @@ impl CompiledFrame {
 /// searches up to 16 (a period-6 burst pattern provably escapes a k ≤ 4
 /// detector; see the `bursty_period6_*` test).
 const FF_MAX_PERIOD: usize = 16;
+
+/// Detector horizon of the stride/beat extension: periods in
+/// `FF_MAX_PERIOD+1 ..= FF_LONG_PERIOD` are tracked by O(1) per-cycle hash
+/// signatures instead of full op-log comparisons (rate-controlled streams
+/// settle on e.g. 30-frame GOP beats — far past the exact window, far too
+/// long for 64 deep `Vec<OpRec>` compares per cycle). A hash collision can
+/// at worst promote a false candidate: the confirm phase still checks the
+/// frame-relative snapshot fixpoint and every replayed cycle re-verifies
+/// op-for-op against live arithmetic, so collisions cost one bail, never
+/// correctness.
+const FF_LONG_PERIOD: usize = 64;
 
 /// Event-heap tag marking a frame-release (traffic arrival) event: the
 /// event's `job` is `RELEASE_TAG + frame`. Far above any real global job
@@ -1033,6 +1109,32 @@ enum OpRec {
     /// steady traffic beat (periodic, repeating burst) records a
     /// shift-invariant cycle and fast-forward still engages.
     Release { delta: u32 },
+}
+
+/// Order-sensitive 64-bit FNV-1a signature of a closed cycle's op log —
+/// the streak currency of the long-period detector (periods past
+/// [`FF_MAX_PERIOD`] compare one `u64` per candidate instead of a full
+/// `Vec<OpRec>`). Collisions are tolerated: see [`FF_LONG_PERIOD`].
+fn cycle_sig(ops: &[OpRec]) -> u64 {
+    fn mix(mut h: u64, v: u64) -> u64 {
+        for b in v.to_le_bytes() {
+            h = (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        h
+    }
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for op in ops {
+        h = match *op {
+            OpRec::Dispatch { delta, local, switch } => {
+                mix(mix(h, 1 | ((switch as u64) << 8)), ((delta as u64) << 32) | local as u64)
+            }
+            OpRec::Pop { delta, local } => mix(mix(h, 2), ((delta as u64) << 32) | local as u64),
+            OpRec::Retire => mix(h, 3),
+            OpRec::Admit => mix(h, 4),
+            OpRec::Release { delta } => mix(mix(h, 5), delta as u64),
+        };
+    }
+    h
 }
 
 /// Frame-relative snapshot of the discrete scheduler state at an
@@ -1094,6 +1196,309 @@ struct FfUndo {
     pm_stall_mj: f64,
     pm_deep_s: f64,
     pm_wakes: u64,
+    /// Span-profile rollback: `(len, copy of last record)` of the profile's
+    /// span list at the cycle boundary (`None` when no profile is being
+    /// recorded). Replayed cycles append/merge spans like live execution,
+    /// so a verification bail must un-record them too.
+    profile_spans: Option<(usize, Option<SpanRec>)>,
+}
+
+/// One run-length-compressed entry of a [`ProfileRec`]'s chronological
+/// idle-span log: `count` consecutive billed spans of identical kind and
+/// bit-identical length. Merging only *adjacent* equal spans preserves the
+/// chronological float-accumulation order, so a member derivation that
+/// walks the log re-billing each record `count` times reproduces the live
+/// accumulator sums bitwise (for exactly representable scales).
+#[derive(Debug, Clone, Copy, PartialEq)]
+struct SpanRec {
+    /// Full-chip gap (`true`) vs cluster stall (`false`).
+    gap: bool,
+    /// Span length in rep-chip seconds.
+    len_s: f64,
+    /// Consecutive repetitions.
+    count: u32,
+}
+
+/// Everything a parametric-class representative run records beyond its
+/// [`SchedResult`], so family members can be derived in closed form (see
+/// [`ParamRep`]): the chronological idle-span profile (policy billing is
+/// piecewise in span length — wake thresholds — so spans must be re-billed
+/// at the member's time base, not scaled), the leading `[0, r_0)` gap kept
+/// separate (a phase offset stretches exactly this span), and the
+/// schedule-invariance evidence for the certificate.
+#[derive(Debug, Clone)]
+struct ProfileRec {
+    /// Billed idle spans in chronological order, run-length compressed;
+    /// excludes the lead gap.
+    spans: Vec<SpanRec>,
+    /// Length of the pre-first-release full-chip gap `[0, r_0)` when one
+    /// was billed (`None`: the stream started busy at t = 0).
+    lead_gap_s: Option<f64>,
+    /// True while every traffic release observed live fired into a fully
+    /// idle chip (`busy_mask == 0`, FLL settled). A diagnostic, not a
+    /// precondition: the φ closed form rests on the uniform-shift theorem
+    /// (all releases shift together, and every event is downstream of a
+    /// release), which holds whether or not releases land on a busy chip.
+    release_anchored: bool,
+    /// Smallest relative gap between successive distinct event times seen
+    /// on the live heap — the certificate's headroom against f64 rounding
+    /// reordering events under a non-dyadic scale.
+    min_rel_margin: f64,
+    /// Smallest absolute gap (seconds) between successive distinct event
+    /// times — the extra headroom a phase offset needs: member events sit
+    /// at `α·(t + φ)`, so rounding there is proportional to `t + φ`, and
+    /// for early events (`t ≪ φ`) the flip risk is governed by `Δ/φ`, not
+    /// `Δ/t`.
+    min_abs_margin_s: f64,
+}
+
+impl ProfileRec {
+    fn new() -> ProfileRec {
+        ProfileRec {
+            spans: Vec::new(),
+            lead_gap_s: None,
+            release_anchored: true,
+            min_rel_margin: f64::INFINITY,
+            min_abs_margin_s: f64::INFINITY,
+        }
+    }
+}
+
+/// Relative event-spacing headroom the invariance certificate demands
+/// before deriving a member at a scale whose f64 arithmetic is *not*
+/// exact. A uniform scale perturbs each rounded event time by ~2⁻⁵²
+/// relative; 1e-9 is ≈ 4·10⁶ ulps of slack, so no comparison the
+/// scheduler makes can flip. Scales that are exact in f64 (power-of-two
+/// α with φ = 0) skip the margin check — their arithmetic distributes
+/// bitwise.
+const PARAM_MIN_MARGIN: f64 = 1e-9;
+
+/// Whether `x` is a positive power of two (mantissa bits all zero, normal
+/// range) — the scales for which `α·(a+b) == α·a + α·b` holds bitwise in
+/// f64, making member derivation exact rather than ~1e-9-accurate.
+pub(crate) fn exact_pow2(x: f64) -> bool {
+    x >= f64::MIN_POSITIVE && x.is_finite() && x.to_bits() & ((1u64 << 52) - 1) == 0
+}
+
+/// Certified outcome of a parametric-class representative run
+/// ([`StreamScheduler::run_param_rep`]): the representative's
+/// [`SchedResult`] plus the recorded evidence and raw accumulators needed
+/// to derive any family member — a chip with service-time drift `α` and
+/// traffic phase offset `φ` ([`Perturb`]) — in closed form, without
+/// re-simulating it.
+///
+/// **The scaling theorem.** [`CompiledFrame::rescaled`] multiplies every
+/// service time, every prefolded energy row and the FLL relock interval
+/// by α, and the member's release table is `(r + φ)·α` (the sensor
+/// sampling clock derives from the same drifted crystal). Every event
+/// time of a run is built from sums, maxima and order comparisons of
+/// exactly these inputs, so in real arithmetic every event time scales by
+/// α. The φ shift is rigid by the **uniform-shift theorem**: every
+/// release moves by the same αφ, every other event (completions, relock
+/// deadlines, admissions) is transitively downstream of a release —
+/// frame 0 releases at t = 0, nothing dispatches earlier, and
+/// `mode_ready_at` only ever advances from event times — so by induction
+/// every sum shifts, every `max` shifts, and every comparison between
+/// two shifted times is unchanged. This holds whether releases land on
+/// an idle or a busy chip ([`ProfileRec::release_anchored`] records the
+/// idle-landing diagnostic, but it is not a precondition). Hence no
+/// decision flips: the member makes bit-for-bit the same
+/// dispatch/pop/retire/admit decisions at event times `α·(t + φ)`, and
+/// all time- and energy-valued outputs follow in closed form. Idle-span
+/// *billing* is the one non-homogeneous piece (wake thresholds are
+/// absolute times — [`crate::soc::pm`]), so the rep records its
+/// chronological span profile and [`ParamRep::member`] re-bills each
+/// span at the member's time base; span lengths are shift-invariant, and
+/// the pre-first-release lead gap (the only interval pinned to t = 0)
+/// stretches to `α·(lead + φ)`.
+///
+/// **The certificate.** f64 rounds the scaled products, so
+/// [`ParamRep::certify`] demands observed event-spacing headroom before
+/// deriving at a scale whose arithmetic is not exact. Member events sit
+/// at `α·(t + φ)`, so rounding perturbs each by ~ε·(t + φ) and a pair of
+/// rep events Δ apart can flip only if `Δ/(t + φ)` falls to ~ε. With
+/// φ = 0 the recorded relative margin (min Δ/t) bounds that directly;
+/// with φ > 0 the certificate additionally needs the recorded *absolute*
+/// margin over φ (min Δ)/φ — for early events `t ≪ φ` the shift, not the
+/// event time, sets the rounding magnitude. `min(Δ/t, Δ/φ)/2 ≤
+/// Δ/(t + φ)` makes the pair of recorded minima a sound bound
+/// ([`PARAM_MIN_MARGIN`], demanded with the factor 2). Power-of-two α
+/// with φ = 0 (or a release-free stream, where φ is inert) skips the
+/// check — its arithmetic distributes bitwise. Rejected members are
+/// re-simulated live on the rescaled template — exact, just not O(1).
+/// Bit-equal event-time *ties* are taken to come from identical float
+/// computations on both sides of the scale (the symmetric parallel
+/// structure that produces every tie in these frame graphs); the fleet
+/// layer's sampled live re-runs cross-check that assumption per class.
+pub struct ParamRep {
+    result: SchedResult,
+    /// Flat per-category active-energy accumulators of the rep run
+    /// ([`cat_index`] order) — scaled and re-folded into a member ledger
+    /// with the exact tail arithmetic of [`ExecCore::run_full`].
+    cats: [f64; N_CATS],
+    vdd: f64,
+    ext_mem_present: bool,
+    policy: Option<PolicyKind>,
+    has_release: bool,
+    spans: Vec<SpanRec>,
+    lead_gap_s: Option<f64>,
+    release_anchored: bool,
+    min_rel_margin: f64,
+    min_abs_margin_s: f64,
+}
+
+impl ParamRep {
+    /// The representative's own result (the α = 1, φ = 0 member).
+    pub fn result(&self) -> &SchedResult {
+        &self.result
+    }
+
+    /// Worst relative event-spacing headroom observed by the rep run
+    /// (`∞` when no two live events were distinct-but-adjacent).
+    pub fn min_rel_margin(&self) -> f64 {
+        self.min_rel_margin
+    }
+
+    /// Smallest absolute gap (seconds) between successive distinct event
+    /// times of the rep run (`∞` when no two live events were
+    /// distinct-but-adjacent) — the headroom the φ > 0 certificate regime
+    /// measures against the phase offset.
+    pub fn min_abs_margin_s(&self) -> f64 {
+        self.min_abs_margin_s
+    }
+
+    /// Whether every live traffic release fired into a fully idle chip.
+    /// A diagnostic, not a precondition: the uniform-shift theorem makes
+    /// the φ closed form valid either way (see the type docs).
+    pub fn release_anchored(&self) -> bool {
+        self.release_anchored
+    }
+
+    /// The schedule-invariance certificate: may member `p` be derived in
+    /// closed form? Cheap (a handful of compares) — the expensive evidence
+    /// was gathered during the rep run.
+    pub fn certify(&self, p: &Perturb) -> bool {
+        if !(p.alpha.is_finite() && p.alpha > 0.0 && p.phase_s.is_finite() && p.phase_s >= 0.0) {
+            return false;
+        }
+        if p.is_identity() {
+            return true;
+        }
+        // φ only enters the arithmetic through the release table — a
+        // release-free stream ignores it entirely.
+        if exact_pow2(p.alpha) && (p.phase_s == 0.0 || !self.has_release) {
+            return true;
+        }
+        if p.phase_s > 0.0 && self.has_release {
+            // Shift regime: member events sit at α·(t + φ), so rounding
+            // there is ∝ (t + φ) and a rep pair Δ apart flips only when
+            // Δ/(t + φ) reaches ~ε. Bound it by the two recorded minima:
+            // min(Δ/t, Δ/φ)/2 ≤ Δ/(t + φ), hence the factor 2.
+            self.min_rel_margin.min(self.min_abs_margin_s / p.phase_s)
+                >= 2.0 * PARAM_MIN_MARGIN
+        } else {
+            self.min_rel_margin >= PARAM_MIN_MARGIN
+        }
+    }
+
+    /// Derive member `p`'s full [`SchedResult`] in closed form, or `None`
+    /// when the certificate refuses (caller falls back to a live run on
+    /// the rescaled template). Exact to the last bit for power-of-two α
+    /// with φ = 0; within ~[`PARAM_MIN_MARGIN`] relative otherwise.
+    pub fn member(&self, p: &Perturb) -> Option<SchedResult> {
+        if !self.certify(p) {
+            return None;
+        }
+        if p.is_identity() {
+            return Some(self.result.clone());
+        }
+        let a = p.alpha;
+        let phase = if self.has_release { p.phase_s } else { 0.0 };
+        let makespan = a * (self.result.makespan_s + phase);
+        let mut busy = self.result.busy_s;
+        for b in &mut busy {
+            *b *= a;
+        }
+        // Re-bill the idle-span profile at the member's time base: span
+        // lengths scale by α (and the lead gap stretches by the phase
+        // offset — or appears, when the rep started busy at t = 0 and the
+        // member's offset gates its first frame), but the *bill* of each
+        // span is the policy's piecewise function of the scaled length,
+        // re-evaluated per span in chronological accumulation order.
+        let (mut gap_s, mut gap_mj) = (0.0f64, 0.0f64);
+        let (mut stall_s, mut stall_mj) = (0.0f64, 0.0f64);
+        let mut deep_s = 0.0f64;
+        let mut wakes = 0u64;
+        if let Some(kind) = self.policy {
+            let lead = match self.lead_gap_s {
+                Some(l) => a * (l + phase),
+                None if phase > 0.0 => a * phase,
+                None => 0.0,
+            };
+            if lead > 0.0 {
+                let b = pm::gap_bill(kind, lead);
+                gap_s += lead;
+                gap_mj += b.energy_mj;
+                deep_s += b.deep_s;
+                wakes += b.woke as u64;
+            }
+            for s in &self.spans {
+                let len = a * s.len_s;
+                for _ in 0..s.count {
+                    if s.gap {
+                        let b = pm::gap_bill(kind, len);
+                        gap_s += len;
+                        gap_mj += b.energy_mj;
+                        deep_s += b.deep_s;
+                        wakes += b.woke as u64;
+                    } else {
+                        let b = pm::stall_bill(kind, len);
+                        stall_s += len;
+                        stall_mj += b.energy_mj;
+                        wakes += b.woke as u64;
+                    }
+                }
+            }
+        }
+        // Rebuild the ledger with the exact tail arithmetic of
+        // `ExecCore::run_full`, at the member's accumulators.
+        let mut ledger = EnergyLedger::new();
+        for (i, cat) in Category::all().into_iter().enumerate() {
+            ledger.charge_mj(cat, a * self.cats[i]);
+        }
+        charge_overheads(&mut ledger, self.vdd, self.ext_mem_present, makespan);
+        if self.policy.is_some() {
+            let leak_op = OperatingPoint::new(OperatingMode::Sw, self.vdd);
+            let cl_mw = PowerModel::active_mw(Component::ClusterLeak, leak_op);
+            let soc_mw = PowerModel::active_mw(Component::SocLeak, leak_op);
+            let delta =
+                (gap_mj - (cl_mw + soc_mw) * gap_s) + (stall_mj - cl_mw * stall_s);
+            ledger.charge_mj(Category::Idle, delta);
+            if self.ext_mem_present {
+                ledger.charge_mj(
+                    Category::ExtMem,
+                    -((FLASH_STANDBY_MW + FRAM_STANDBY_MW) * deep_s),
+                );
+            }
+        }
+        Some(SchedResult {
+            ledger,
+            makespan_s: makespan,
+            mode_switches: self.result.mode_switches,
+            busy_s: busy,
+            n_jobs: self.result.n_jobs,
+            overlap_s: a * self.result.overlap_s,
+            coresidency_s: a * self.result.coresidency_s,
+            peak_resident_jobs: self.result.peak_resident_jobs,
+            // replay engagement can shift by a cycle under a φ lead-in;
+            // this is a performance statistic, not a semantic output, and
+            // member parity checks deliberately exclude it.
+            fast_forwarded_frames: self.result.fast_forwarded_frames,
+            sleep_s: gap_s + stall_s,
+            deep_sleep_s: deep_s,
+            wake_transitions: wakes,
+        })
+    }
 }
 
 /// The shared event-driven execution core: schedules `frames` instances of
@@ -1119,8 +1524,9 @@ struct ExecCore<'c> {
     /// opens is admitted (slot, energy, live count) but its roots stay
     /// gated behind a [`RELEASE_TAG`] heap event.
     release: &'c [f64],
-    /// Runtime cap on the detector period (≤ [`FF_MAX_PERIOD`]); a test
-    /// hook proving the k ≤ 4 detector misses period-6 traffic beats.
+    /// Runtime cap on the detector period (≤ [`FF_LONG_PERIOD`]); a test
+    /// hook proving that a short detector misses longer traffic beats
+    /// (k ≤ 4 vs period 6; k ≤ 16 vs a 30-frame GOP).
     ff_max_period: usize,
     /// Admitted frames whose release event has not fired yet. Live
     /// execution keeps these in the event heap; replay scans this list
@@ -1156,6 +1562,12 @@ struct ExecCore<'c> {
     cur_ops: Vec<OpRec>,
     ring: VecDeque<Vec<OpRec>>,
     streak: [usize; FF_MAX_PERIOD + 1],
+    /// Cycle signatures parallel to `ring` ([`cycle_sig`]), bounded the
+    /// same way — the long-period detector's comparison ring.
+    sig_ring: VecDeque<u64>,
+    /// Hash-signature streaks for periods `FF_MAX_PERIOD+1 ..=
+    /// FF_LONG_PERIOD` (index = period; slots ≤ FF_MAX_PERIOD unused).
+    long_streak: [usize; FF_LONG_PERIOD + 1],
     confirm: Option<(usize, usize, RelSnapshot)>,
     engage: Option<(usize, Vec<OpRec>, RelSnapshot)>,
     bails: usize,
@@ -1178,6 +1590,10 @@ struct ExecCore<'c> {
     pm_deep_s: f64,
     /// Wake-up transitions charged.
     pm_wakes: u64,
+    /// Parametric-class recording (`Some` only under
+    /// [`StreamScheduler::run_param_rep`]): span profile + invariance
+    /// evidence for closed-form member derivation.
+    profile: Option<ProfileRec>,
 }
 
 impl<'c> ExecCore<'c> {
@@ -1200,7 +1616,7 @@ impl<'c> ExecCore<'c> {
             window,
             ff_enabled,
             release: &[],
-            ff_max_period: FF_MAX_PERIOD,
+            ff_max_period: FF_LONG_PERIOD,
             pending_release: Vec::new(),
             slots: VecDeque::new(),
             spare: Vec::new(),
@@ -1225,6 +1641,8 @@ impl<'c> ExecCore<'c> {
             cur_ops: Vec::new(),
             ring: VecDeque::new(),
             streak: [0; FF_MAX_PERIOD + 1],
+            sig_ring: VecDeque::new(),
+            long_streak: [0; FF_LONG_PERIOD + 1],
             confirm: None,
             engage: None,
             bails: 0,
@@ -1237,6 +1655,7 @@ impl<'c> ExecCore<'c> {
             pm_stall_mj: 0.0,
             pm_deep_s: 0.0,
             pm_wakes: 0,
+            profile: None,
         }
     }
 
@@ -1351,22 +1770,38 @@ impl<'c> ExecCore<'c> {
     /// the next loop head — exactly the recorded cycle boundary.
     fn close_cycle(&mut self) {
         let closed = std::mem::take(&mut self.cur_ops);
-        for k in 1..=self.ff_max_period {
+        // Exact op-log streaks up to FF_MAX_PERIOD; hash-signature streaks
+        // beyond (one u64 compare per candidate period instead of a deep
+        // Vec compare — the stride/beat extension for long GOP-style
+        // patterns). The signature ring is maintained strictly parallel
+        // to the op-log ring.
+        let sig = cycle_sig(&closed);
+        let short_max = self.ff_max_period.min(FF_MAX_PERIOD);
+        for k in 1..=short_max {
             if self.ring.len() >= k && closed == self.ring[self.ring.len() - k] {
                 self.streak[k] += 1;
             } else {
                 self.streak[k] = 0;
             }
         }
+        for k in (FF_MAX_PERIOD + 1)..=self.ff_max_period {
+            if self.sig_ring.len() >= k && sig == self.sig_ring[self.sig_ring.len() - k] {
+                self.long_streak[k] += 1;
+            } else {
+                self.long_streak[k] = 0;
+            }
+        }
         self.ring.push_back(closed);
+        self.sig_ring.push_back(sig);
         if self.ring.len() > self.ff_max_period + 1 {
             self.ring.pop_front();
+            self.sig_ring.pop_front();
         }
         if self.engage.is_some() {
             return;
         }
         if let Some((k, left, snap)) = self.confirm.take() {
-            if self.streak[k] > 0 {
+            if self.streak_of(k) > 0 {
                 if left > 1 {
                     self.confirm = Some((k, left - 1, snap));
                 } else {
@@ -1386,10 +1821,23 @@ impl<'c> ExecCore<'c> {
         }
         let need_extra = FF_BAIL_PENALTY * self.bails;
         for k in 1..=self.ff_max_period {
-            if self.streak[k] >= FF_STEADY_PERIODS * k + need_extra && self.guards_ok(k) {
+            if self.streak_of(k) >= FF_STEADY_PERIODS * k + need_extra && self.guards_ok(k) {
                 self.confirm = Some((k, k, self.capture_rel()));
                 break;
             }
+        }
+    }
+
+    /// Current repeat streak of period `k`: exact op-log streak inside the
+    /// short window, hash-signature streak beyond it. A long-period streak
+    /// can be inflated by a hash collision — harmless, because engagement
+    /// still requires the snapshot fixpoint and replay re-verifies every
+    /// op (a collision costs one bail, never correctness).
+    fn streak_of(&self, k: usize) -> usize {
+        if k <= FF_MAX_PERIOD {
+            self.streak[k]
+        } else {
+            self.long_streak[k]
         }
     }
 
@@ -1493,7 +1941,7 @@ impl<'c> ExecCore<'c> {
                 continue;
             }
             if let Some(c) = self.current_mode {
-                if co_resident_at(c, tpl.op[local], tpl.duration_s[local]) {
+                if co_resident_at(c, tpl.op[local], tpl.duration_s[local], tpl.relock_s) {
                     best_ml = Some((id, false));
                     break;
                 }
@@ -1542,7 +1990,7 @@ impl<'c> ExecCore<'c> {
                 // mode entry is free).
                 if self.current_mode.is_some() && self.current_mode != Some(tpl.op[local].mode) {
                     self.switches += 1;
-                    self.mode_ready_at = self.t + MODE_SWITCH_S;
+                    self.mode_ready_at = self.t + self.base.relock_s;
                 }
                 self.current_mode = Some(tpl.op[local].mode);
             } else {
@@ -1620,11 +2068,35 @@ impl<'c> ExecCore<'c> {
             self.pm_gap_mj += b.energy_mj;
             self.pm_deep_s += b.deep_s;
             self.pm_wakes += b.woke as u64;
+            self.record_span(true, dt);
         } else if self.mode_locked_running == 0 {
             let b = pm::stall_bill(kind, dt);
             self.pm_stall_s += dt;
             self.pm_stall_mj += b.energy_mj;
             self.pm_wakes += b.woke as u64;
+            self.record_span(false, dt);
+        }
+    }
+
+    /// Append a billed idle span to the parametric-class profile (no-op
+    /// without one). The pre-first-release gap `[0, r_0)` is kept out of
+    /// the run-length-compressed log under its own field: a member's phase
+    /// offset stretches exactly that span, so it must never merge with
+    /// later gaps of coincidentally equal length. Called from live
+    /// execution and fast-forward replay alike — the profile stays valid
+    /// across replayed cycles (bails are rolled back via [`FfUndo`]).
+    #[inline]
+    fn record_span(&mut self, gap: bool, dt: f64) {
+        let at_origin = self.t == 0.0;
+        if let Some(p) = &mut self.profile {
+            if gap && at_origin && p.spans.is_empty() && p.lead_gap_s.is_none() {
+                p.lead_gap_s = Some(dt);
+                return;
+            }
+            match p.spans.last_mut() {
+                Some(s) if s.gap == gap && s.len_s.to_bits() == dt.to_bits() => s.count += 1,
+                _ => p.spans.push(SpanRec { gap, len_s: dt, count: 1 }),
+            }
         }
     }
 
@@ -1655,6 +2127,10 @@ impl<'c> ExecCore<'c> {
             pm_stall_mj: self.pm_stall_mj,
             pm_deep_s: self.pm_deep_s,
             pm_wakes: self.pm_wakes,
+            profile_spans: self
+                .profile
+                .as_ref()
+                .map(|p| (p.spans.len(), p.spans.last().copied())),
         }
     }
 
@@ -1682,6 +2158,14 @@ impl<'c> ExecCore<'c> {
         self.pm_stall_mj = u.pm_stall_mj;
         self.pm_deep_s = u.pm_deep_s;
         self.pm_wakes = u.pm_wakes;
+        if let Some((len, last)) = u.profile_spans {
+            let p = self.profile.as_mut().expect("profile vanished during replay");
+            p.spans.truncate(len);
+            if let (Some(slot), Some(saved)) = (p.spans.last_mut(), last) {
+                // the bailed cycle may have merged into the boundary record
+                *slot = saved;
+            }
+        }
     }
 
     /// The next completion among the in-flight jobs, under exactly the
@@ -1738,7 +2222,7 @@ impl<'c> ExecCore<'c> {
                                 && self.current_mode != Some(base.op[local].mode)
                             {
                                 self.switches += 1;
-                                self.mode_ready_at = self.t + MODE_SWITCH_S;
+                                self.mode_ready_at = self.t + self.base.relock_s;
                             }
                             self.current_mode = Some(base.op[local].mode);
                         } else {
@@ -1896,6 +2380,8 @@ impl<'c> ExecCore<'c> {
         self.pending_release.clear();
         self.ring.clear();
         self.streak = [0; FF_MAX_PERIOD + 1];
+        self.sig_ring.clear();
+        self.long_streak = [0; FF_LONG_PERIOD + 1];
         self.confirm = None;
         self.cur_ops.clear();
     }
@@ -1947,6 +2433,15 @@ impl<'c> ExecCore<'c> {
     }
 
     fn run(mut self) -> SchedResult {
+        self.run_full().0
+    }
+
+    /// [`ExecCore::run`] returning, in addition to the result, the raw
+    /// flat category accumulators and the recorded parametric profile —
+    /// the material [`StreamScheduler::run_param_rep`] packages into a
+    /// [`ParamRep`] so family members can rebuild their ledgers with the
+    /// exact tail arithmetic below at a scaled time base.
+    fn run_full(mut self) -> (SchedResult, [f64; N_CATS], Option<ProfileRec>) {
         self.fill();
         loop {
             // A certified steady state replays here — exactly the
@@ -1960,6 +2455,25 @@ impl<'c> ExecCore<'c> {
             }
             // Advance simulated time to the next completion or release.
             let Some(ev) = self.heap.pop() else { break };
+            if let Some(p) = &mut self.profile {
+                // Certificate evidence: the relative headroom to the next
+                // distinct event time. A uniform time-base scale perturbs
+                // each f64 event time by ~1 ulp, so reordering would need
+                // two events closer than that — the certificate demands
+                // margins orders of magnitude wider (PARAM_MIN_MARGIN).
+                if let Some(next) = self.heap.peek() {
+                    if next.t > ev.t && next.t > 0.0 {
+                        let gap = next.t - ev.t;
+                        let m = gap / next.t;
+                        if m < p.min_rel_margin {
+                            p.min_rel_margin = m;
+                        }
+                        if gap < p.min_abs_margin_s {
+                            p.min_abs_margin_s = gap;
+                        }
+                    }
+                }
+            }
             self.pm_account(ev.t);
             self.t = ev.t;
             self.makespan = self.makespan.max(ev.t);
@@ -1968,6 +2482,16 @@ impl<'c> ExecCore<'c> {
                 // Traffic release: the gated frame's sensor data arrived;
                 // its roots become dispatchable now.
                 let frame = ev.job - RELEASE_TAG;
+                if self.busy_mask != 0 || self.mode_ready_at > ev.t {
+                    // Diagnostic only: record that this release landed on
+                    // a busy (or still-relocking) chip. The φ closed form
+                    // does not care — the uniform-shift theorem moves the
+                    // in-flight work and the release together (see
+                    // [`ProfileRec`] / [`ParamRep`]).
+                    if let Some(p) = &mut self.profile {
+                        p.release_anchored = false;
+                    }
+                }
                 if self.recording() {
                     self.cur_ops
                         .push(OpRec::Release { delta: (self.admitted - frame) as u32 });
@@ -2026,7 +2550,7 @@ impl<'c> ExecCore<'c> {
                 );
             }
         }
-        SchedResult {
+        let result = SchedResult {
             ledger,
             makespan_s: makespan,
             mode_switches: self.switches,
@@ -2039,7 +2563,8 @@ impl<'c> ExecCore<'c> {
             sleep_s: self.pm_gap_s + self.pm_stall_s,
             deep_sleep_s: self.pm_deep_s,
             wake_transitions: self.pm_wakes,
-        }
+        };
+        (result, self.cats, self.profile)
     }
 }
 
@@ -2196,7 +2721,7 @@ impl Scheduler {
     /// when the frequency-rescale penalty is cheaper than the FLL relock
     /// a private mode window would cost.
     fn co_resident(c: OperatingMode, job: &Job) -> bool {
-        co_resident_at(c, job.op, job.duration_s)
+        co_resident_at(c, job.op, job.duration_s, MODE_SWITCH_S)
     }
 }
 
@@ -2320,9 +2845,67 @@ impl StreamScheduler {
         core.run()
     }
 
+    /// [`StreamScheduler::run_traffic_live_pm`] over a pre-compiled
+    /// template — the live (fast-forward-disabled) parity reference the
+    /// fleet layer runs against *rescaled* templates when it samples
+    /// parametric family members.
+    pub fn run_compiled_traffic_live_pm(
+        frame: &CompiledFrame,
+        frames: usize,
+        window: usize,
+        release: &[f64],
+        policy: Option<PolicyKind>,
+    ) -> SchedResult {
+        assert!(frames >= 1, "streaming needs at least one frame");
+        assert!(window >= 1, "streaming needs at least one in-flight frame of window");
+        Self::check_release(release, frames);
+        let mut core = ExecCore::new(frame, &[], frames, window, false);
+        core.release = release;
+        core.policy = policy;
+        core.run()
+    }
+
+    /// [`StreamScheduler::run_compiled_traffic_pm`] as a parametric-class
+    /// *representative*: the identical simulation (fast-forward enabled,
+    /// bitwise-identical result), additionally recording the idle-span
+    /// profile and schedule-invariance evidence that let [`ParamRep`]
+    /// derive drift/phase family members in closed form.
+    pub fn run_param_rep(
+        frame: &CompiledFrame,
+        frames: usize,
+        window: usize,
+        release: &[f64],
+        policy: Option<PolicyKind>,
+    ) -> ParamRep {
+        assert!(frames >= 1, "streaming needs at least one frame");
+        assert!(window >= 1, "streaming needs at least one in-flight frame of window");
+        Self::check_release(release, frames);
+        let mut core = ExecCore::new(frame, &[], frames, window, true);
+        core.release = release;
+        core.policy = policy;
+        core.profile = Some(ProfileRec::new());
+        let (result, cats, profile) = core.run_full();
+        let p = profile.expect("representative run records a profile");
+        ParamRep {
+            result,
+            cats,
+            vdd: frame.vdd,
+            ext_mem_present: frame.ext_mem_present,
+            policy,
+            has_release: !release.is_empty(),
+            spans: p.spans,
+            lead_gap_s: p.lead_gap_s,
+            release_anchored: p.release_anchored,
+            min_rel_margin: p.min_rel_margin,
+            min_abs_margin_s: p.min_abs_margin_s,
+        }
+    }
+
     /// Test hook: [`StreamScheduler::run_traffic`] with the limit-cycle
-    /// detector capped at `max_period` — proves a k ≤ 4 detector misses
-    /// longer traffic beats (see `period_six_burst_needs_extended_detector`).
+    /// detector capped at `max_period` (≤ [`FF_LONG_PERIOD`]) — proves a
+    /// short detector misses longer traffic beats (k ≤ 4 vs period 6,
+    /// k ≤ 16 vs a 30-frame GOP; see the `*_needs_extended_detector`
+    /// tests).
     #[doc(hidden)]
     pub fn run_traffic_capped(
         frame: &JobGraph,
@@ -2338,7 +2921,7 @@ impl StreamScheduler {
         let cf = CompiledFrame::compile(frame);
         let mut core = ExecCore::new(&cf, &[], frames, window, true);
         core.release = release;
-        core.ff_max_period = max_period.min(FF_MAX_PERIOD);
+        core.ff_max_period = max_period.min(FF_LONG_PERIOD);
         core.run()
     }
 
@@ -2411,6 +2994,10 @@ impl StreamScheduler {
             assert!(
                 v.vdd == base.vdd && v.ext_mem_present == base.ext_mem_present,
                 "variant for frame {f} must share the template's supply and external memories"
+            );
+            assert!(
+                v.relock_s == base.relock_s,
+                "variant for frame {f} must share the template's FLL relock (time base)"
             );
         }
         ExecCore::new(&base, &compiled, frames, window, ff).run()
@@ -3236,6 +3823,205 @@ mod tests {
         );
         // last burst releases at 20/16 s and drains serially, bit-exactly
         assert_eq!(k16.makespan_s.to_bits(), (20.0 / 16.0 + 6.0 / 1024.0).to_bits());
+    }
+
+    /// Satellite pin: a 30-frame GOP-style burst beat (ROADMAP's
+    /// rate-control pattern) has period 30 — past the exact op-log window
+    /// (k ≤ [`FF_MAX_PERIOD`]) — and is certified by the hash-signature
+    /// stride detector (k ≤ [`FF_LONG_PERIOD`]), replaying whole periods
+    /// bitwise; a k ≤ 16 detector provably never engages. The window is
+    /// set wider than the burst so the admitted window always spans a
+    /// burst boundary and no shorter pseudo-period can certify.
+    #[test]
+    fn period_thirty_gop_needs_stride_detector() {
+        let g = flash_frame(1);
+        let traffic = Traffic::Bursty { burst: 30, rate_hz: 16.0 };
+        let rel = traffic.release_times(300);
+        let live = StreamScheduler::run_traffic_live(&g, 300, 32, &rel);
+        let k64 = StreamScheduler::run_traffic(&g, 300, 32, &rel);
+        assert_bitwise(&k64, &live, "gop k64");
+        assert!(
+            k64.fast_forwarded_frames >= 30,
+            "period-30 beat must replay in 30-frame blocks, got {}",
+            k64.fast_forwarded_frames
+        );
+        assert_eq!(k64.fast_forwarded_frames % 30, 0, "replay advances whole periods");
+        let k16 = StreamScheduler::run_traffic_capped(&g, 300, 32, &rel, 16);
+        assert_bitwise(&k16, &live, "gop k16");
+        assert_eq!(
+            k16.fast_forwarded_frames, 0,
+            "a k ≤ 16 detector cannot certify a period-30 GOP beat"
+        );
+        // last burst releases at 9/16 s and drains serially, bit-exactly
+        assert_eq!(k64.makespan_s.to_bits(), (9.0 / 16.0 + 30.0 / 1024.0).to_bits());
+    }
+
+    // ---- parametric-class representatives ------------------------------
+
+    /// Relative-tolerance comparison for members whose scale arithmetic
+    /// is not exact in f64 (non-power-of-two α or φ > 0 with non-dyadic
+    /// inputs): counts must match exactly, times and energies within
+    /// `tol` relative.
+    fn assert_close(a: &SchedResult, b: &SchedResult, tol: f64, label: &str) {
+        let close = |x: f64, y: f64| (x - y).abs() <= tol * x.abs().max(y.abs()).max(1e-12);
+        assert!(close(a.makespan_s, b.makespan_s), "{label}: makespan {} vs {}", a.makespan_s, b.makespan_s);
+        assert_eq!(a.mode_switches, b.mode_switches, "{label}: relocks");
+        assert_eq!(a.n_jobs, b.n_jobs, "{label}: job count");
+        assert_eq!(a.wake_transitions, b.wake_transitions, "{label}: wake transitions");
+        assert_eq!(a.peak_resident_jobs, b.peak_resident_jobs, "{label}: peak residency");
+        for cat in Category::all() {
+            assert!(
+                close(a.ledger.energy_mj(cat), b.ledger.energy_mj(cat)),
+                "{label}: {cat:?} energy {} vs {}",
+                a.ledger.energy_mj(cat),
+                b.ledger.energy_mj(cat)
+            );
+        }
+        for e in Engine::ALL {
+            assert!(close(a.busy_s[e.index()], b.busy_s[e.index()]), "{label}: {} busy", e.name());
+        }
+        assert!(close(a.sleep_s, b.sleep_s), "{label}: sleep");
+        assert!(close(a.deep_sleep_s, b.deep_sleep_s), "{label}: deep sleep");
+    }
+
+    /// Tentpole contract, exact half: a power-of-two drift (φ = 0) makes
+    /// the closed-form member derivation bitwise identical to live
+    /// execution on the rescaled template — for every policy, with the
+    /// representative running fast-forward and the reference running
+    /// live, so the span profile is proven correct through replay too.
+    #[test]
+    fn param_member_pow2_drift_is_bitwise_exact() {
+        let g = flash_frame(3);
+        let rel = Traffic::Periodic { rate_hz: 256.0 }.release_times(64);
+        let cf = CompiledFrame::compile(&g);
+        for policy in [None, Some(PolicyKind::Greedy), Some(PolicyKind::Lookahead), Some(PolicyKind::Oracle)] {
+            let rep = StreamScheduler::run_param_rep(&cf, 64, 8, &rel, policy);
+            assert!(rep.release_anchored(), "gap-dominated periodic traffic is anchored");
+            let ident = rep.member(&Perturb::IDENTITY).expect("identity always certifies");
+            assert_bitwise(&ident, rep.result(), "identity member");
+            for alpha in [0.5f64, 2.0] {
+                let p = Perturb { alpha, phase_s: 0.0 };
+                let derived = rep.member(&p).expect("power-of-two drift certifies");
+                let mut shifted = rel.clone();
+                p.apply(&mut shifted);
+                let live = StreamScheduler::run_compiled_traffic_live_pm(
+                    &cf.rescaled(alpha),
+                    64,
+                    8,
+                    &shifted,
+                    policy,
+                );
+                assert_bitwise(&derived, &live, &format!("alpha {alpha} policy {policy:?}"));
+            }
+        }
+    }
+
+    /// Tentpole contract, phase half: a release phase offset shifts the
+    /// whole schedule rigidly (uniform-shift theorem) — the closed form
+    /// matches live execution on the shifted table within the documented
+    /// tolerance, for a pure offset and for a general drift + phase
+    /// combination. (Not bitwise even for dyadic φ: the member folds φ in
+    /// after the event chain, live folds it in before, and f64 addition
+    /// is not associative — which is exactly why [`ParamRep::member`]
+    /// only claims bit-exactness at φ = 0.)
+    #[test]
+    fn param_member_phase_offset_matches_live() {
+        let g = flash_frame(3);
+        let rel = Traffic::Periodic { rate_hz: 256.0 }.release_times(64);
+        let cf = CompiledFrame::compile(&g);
+        for policy in [None, Some(PolicyKind::Lookahead)] {
+            let rep = StreamScheduler::run_param_rep(&cf, 64, 8, &rel, policy);
+            // dyadic pure phase: counts exact, numerics within tolerance
+            let p = Perturb { alpha: 1.0, phase_s: 1.0 / 1024.0 };
+            let derived = rep.member(&p).expect("margin-backed phase certifies");
+            let mut shifted = rel.clone();
+            p.apply(&mut shifted);
+            let live =
+                StreamScheduler::run_compiled_traffic_live_pm(&cf, 64, 8, &shifted, policy);
+            assert_close(&derived, &live, 1e-9, &format!("pure phase, policy {policy:?}"));
+            // general drift + phase: 1e-9 relative, counts exact
+            let p = Perturb { alpha: 1.5 + 1.0 / 4096.0, phase_s: 3.0 / 1048576.0 };
+            let derived = rep.member(&p).expect("wide margins certify");
+            let mut shifted = rel.clone();
+            p.apply(&mut shifted);
+            let live = StreamScheduler::run_compiled_traffic_live_pm(
+                &cf.rescaled(p.alpha),
+                64,
+                8,
+                &shifted,
+                policy,
+            );
+            assert_close(&derived, &live, 1e-9, &format!("drift+phase, policy {policy:?}"));
+        }
+    }
+
+    /// Satellite: the invariance certificate accepts what the
+    /// uniform-shift theorem covers and *rejects* what it cannot bound —
+    /// a phase offset into a busy chip still derives (and matches live),
+    /// but a phase offset dwarfing the absolute event margins is refused,
+    /// as is a non-exact drift when two events ran closer than the safety
+    /// margin — and the live fallback on the rescaled template stays
+    /// exact.
+    #[test]
+    fn param_certificate_rejects_unsafe_scales_and_falls_back() {
+        // saturated traffic: releases land while the chip is busy — the
+        // uniform-shift theorem still applies, so a modest phase offset
+        // certifies and the closed form matches a live run on the
+        // shifted table
+        let g = flash_frame(1);
+        let rel = Traffic::Periodic { rate_hz: 2048.0 }.release_times(32);
+        let cf = CompiledFrame::compile(&g);
+        let rep = StreamScheduler::run_param_rep(&cf, 32, 8, &rel, None);
+        assert!(!rep.release_anchored(), "saturated releases land on a busy chip");
+        let phased = Perturb { alpha: 1.0, phase_s: 1.0 / 4096.0 };
+        assert!(rep.certify(&phased), "busy-landing releases still shift rigidly");
+        let derived = rep.member(&phased).expect("certified phase derives");
+        let mut shifted = rel.clone();
+        phased.apply(&mut shifted);
+        let live =
+            StreamScheduler::run_compiled_traffic_live_pm(&cf, 32, 8, &shifted, None);
+        assert_close(&derived, &live, 1e-9, "phase into busy chip");
+        // ...but a phase offset so large it dwarfs the absolute event
+        // margins (Δ/φ below the bar) must be refused
+        let huge = Perturb { alpha: 1.0, phase_s: (1u64 << 30) as f64 };
+        assert!(
+            rep.min_abs_margin_s() / huge.phase_s < 2.0 * PARAM_MIN_MARGIN,
+            "test premise: the offset must dominate the margins"
+        );
+        assert!(!rep.certify(&huge), "margin-dwarfing phase must be refused");
+        assert!(rep.member(&huge).is_none(), "refused phase must fall back");
+        // pure power-of-two drift stays certifiable on the same rep
+        let halved = Perturb { alpha: 0.5, phase_s: 0.0 };
+        let derived = rep.member(&halved).expect("pure pow2 drift is exact");
+        let mut shifted = rel.clone();
+        halved.apply(&mut shifted);
+        let live =
+            StreamScheduler::run_compiled_traffic_live_pm(&cf.rescaled(0.5), 32, 8, &shifted, None);
+        assert_bitwise(&derived, &live, "drift on saturated traffic");
+
+        // two engines completing 1e-12 apart: margin below the safety bar
+        let mut tight = JobGraph::new();
+        tight.push(job(Engine::UdmaFram, OperatingMode::Sw, 1.0, &[]));
+        tight.push(job(Engine::UdmaFlash, OperatingMode::Sw, 1.0 + 1e-12, &[]));
+        let tcf = CompiledFrame::compile(&tight);
+        let trep = StreamScheduler::run_param_rep(&tcf, 16, 4, &[], None);
+        assert!(
+            trep.min_rel_margin() < PARAM_MIN_MARGIN,
+            "margin {} must flag the near-tie",
+            trep.min_rel_margin()
+        );
+        let drift = Perturb { alpha: 1.0 + 1.0 / 4096.0, phase_s: 0.0 };
+        assert!(!trep.certify(&drift), "non-exact drift over a near-tie must be refused");
+        assert!(trep.member(&drift).is_none());
+        // the fallback — a live run on the rescaled template — is exact
+        // and deterministic
+        let a = StreamScheduler::run_compiled_traffic_live_pm(&tcf.rescaled(drift.alpha), 16, 4, &[], None);
+        let b = StreamScheduler::run_compiled_traffic_live_pm(&tcf.rescaled(drift.alpha), 16, 4, &[], None);
+        assert_bitwise(&a, &b, "fallback determinism");
+        // while exact power-of-two scaling is exempt from the margin bar
+        let exact = trep.member(&halved).expect("pow2 is exact regardless of margin");
+        let lhalf = StreamScheduler::run_compiled_traffic_live_pm(&tcf.rescaled(0.5), 16, 4, &[], None);
+        assert_bitwise(&exact, &lhalf, "pow2 under near-tie margins");
     }
 
     /// Poisson traffic is aperiodic, so engagement is seed-dependent —

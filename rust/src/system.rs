@@ -34,9 +34,10 @@ use crate::hwce::golden::WeightPrec;
 use crate::json::Json;
 use crate::soc::pm::{self, PolicyKind};
 use crate::soc::sched::{
-    CompiledFrame, Engine, JobGraph, SchedResult, Scheduler, StreamScheduler, N_ENGINES,
+    exact_pow2, CompiledFrame, Engine, JobGraph, SchedResult, Scheduler, StreamScheduler,
+    N_ENGINES,
 };
-use crate::traffic::Traffic;
+use crate::traffic::{Perturb, Traffic};
 use crate::workload::{frame_graph, Registry, Workload};
 use anyhow::{anyhow, bail, Result};
 use std::collections::BTreeMap;
@@ -362,11 +363,33 @@ pub struct FleetSpec {
     /// gains battery-life percentiles. `None` = the historical always-on
     /// idle floor.
     pub policy: Option<PolicyKind>,
+    /// Per-chip process/temperature service-time drift amplitude, in
+    /// percent: chip `i` draws a deterministic scale factor
+    /// `α ∈ [1 − drift/100, 1 + drift/100]` ([`Perturb::derive`]) that
+    /// multiplies every service time (and the FLL relock). `0.0` =
+    /// homogeneous fleet (the historical behaviour).
+    pub drift_pct: f64,
+    /// Per-chip traffic phase offset amplitude, in seconds: chip `i`
+    /// draws a deterministic offset `φ ∈ [0, phase_jitter_s]` added to
+    /// every release time before the drift scale. `0.0` = all chips
+    /// phase-aligned.
+    pub phase_jitter_s: f64,
+    /// Seed for the per-chip perturbation derivation (chips keep their
+    /// α/φ across runs and shardings).
+    pub seed: u64,
 }
 
 impl FleetSpec {
     pub fn new(groups: Vec<FleetGroup>) -> Self {
-        FleetSpec { groups, sample_k: 3, threads: 0, policy: None }
+        FleetSpec {
+            groups,
+            sample_k: 3,
+            threads: 0,
+            policy: None,
+            drift_pct: 0.0,
+            phase_jitter_s: 0.0,
+            seed: 0xF1EE7,
+        }
     }
 
     pub fn sample_k(mut self, sample_k: usize) -> Self {
@@ -384,51 +407,86 @@ impl FleetSpec {
         self
     }
 
+    pub fn drift(mut self, drift_pct: f64) -> Self {
+        self.drift_pct = drift_pct;
+        self
+    }
+
+    pub fn phase_jitter(mut self, phase_jitter_s: f64) -> Self {
+        self.phase_jitter_s = phase_jitter_s;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
     /// The standard heterogeneous mix `fulmine fleet` runs: `chips`
     /// endpoints spread near-evenly over every built-in workload × two
     /// rungs (worst, best) × four traffic models (back-to-back, periodic
     /// at the workload's native sensor rate, 4-frame bursts, Poisson
-    /// triggers with a per-template pooled seed). Pooled seeds keep the
-    /// class count at the template count (~32) rather than one class per
-    /// chip — the dedup invariant the whole fleet runner rests on.
+    /// triggers). Poisson chips draw their seed from a bounded per-chip
+    /// pool rather than one pooled seed per template: sub-populations of
+    /// one template get genuinely distinct release tables (so the mixed
+    /// fleet exercises class sampling and the parametric path), while the
+    /// class count stays O(templates × pool) — the dedup invariant the
+    /// whole fleet runner rests on. The pool scales with per-template
+    /// population (1 for small fleets, the historical behaviour, up to 8).
     pub fn mixed(chips: usize, frames: usize) -> FleetSpec {
         assert!(chips >= 1, "a fleet needs at least one chip");
         assert!(frames >= 1, "fleet chips need at least one frame");
         let registry = Registry::builtin();
-        let mut specs: Vec<RunSpec> = Vec::new();
-        let mut seed = 0u64;
+        // Template list: `None` is a fully specified deterministic traffic
+        // model; `Some(rate)` is a Poisson template whose seed is spread
+        // over the pool below.
+        let mut templates: Vec<(RunSpec, Option<f64>)> = Vec::new();
         for w in registry.iter() {
             let rate = w.native_rate_hz();
             for rung in [RungSel::Best, RungSel::Index(0)] {
-                let traffics = [
+                for t in [
                     Traffic::BackToBack,
                     Traffic::Periodic { rate_hz: rate },
                     Traffic::Bursty { burst: 4, rate_hz: rate / 4.0 },
-                    {
-                        seed += 1;
-                        Traffic::Poisson { rate_hz: rate, seed }
-                    },
-                ];
-                for t in traffics {
-                    specs.push(
+                ] {
+                    templates.push((
                         RunSpec::new(w.name()).frames(frames).rung(rung.clone()).traffic(t),
-                    );
+                        None,
+                    ));
+                }
+                templates
+                    .push((RunSpec::new(w.name()).frames(frames).rung(rung.clone()), Some(rate)));
+            }
+        }
+        let n = templates.len();
+        let pool = (chips / (4 * n)).clamp(1, 8);
+        let mut seed = 0u64;
+        let mut groups: Vec<FleetGroup> = Vec::new();
+        for (i, (spec, poisson_rate)) in templates.into_iter().enumerate() {
+            let t_chips = share(chips, n, i);
+            match poisson_rate {
+                None => groups.push(FleetGroup { spec, chips: t_chips }),
+                Some(rate_hz) => {
+                    for k in 0..pool {
+                        seed += 1;
+                        groups.push(FleetGroup {
+                            spec: spec.clone().traffic(Traffic::Poisson { rate_hz, seed }),
+                            chips: share(t_chips, pool, k),
+                        });
+                    }
                 }
             }
         }
-        let n = specs.len();
-        let groups = specs
-            .into_iter()
-            .enumerate()
-            .map(|(i, spec)| FleetGroup { spec, chips: share(chips, n, i) })
-            .filter(|g| g.chips > 0)
-            .collect();
+        groups.retain(|g| g.chips > 0);
         FleetSpec::new(groups)
     }
 }
 
-/// Aggregate statistics of one simulated chip class (all per-chip values —
-/// every member of the class reproduces them bitwise).
+/// Aggregate statistics of one simulated chip class. Per-chip values are
+/// the *representative's* (the unperturbed α = 1, φ = 0 chip) — exact
+/// classes reproduce them bitwise on every member; parametric members
+/// spread around them, and that spread surfaces in the fleet-wide
+/// percentiles (which weight every distinct member).
 #[derive(Debug, Clone)]
 pub struct ClassStat {
     /// The dedup key: workload | resolved config | frames | window |
@@ -459,10 +517,17 @@ pub struct ClassStat {
     /// Days a [`pm::BATTERY_MWH`] coin cell sustains this class's chips.
     pub battery_days: f64,
     pub fast_forwarded_frames: usize,
+    /// Distinct parametric members (quantized α/φ buckets) this class
+    /// split into — 1 for a homogeneous fleet.
+    pub members: usize,
+    /// Members whose schedule-invariance certificate refused the
+    /// closed-form derivation and were re-simulated on the rescaled
+    /// template instead (exact, just not O(1)).
+    pub live_fallbacks: usize,
     /// Live simulations charged to this class (representative + parity
-    /// samples).
+    /// samples + certificate fallbacks).
     pub live_runs: usize,
-    /// Member indices (0..chips) sampled for the live parity check.
+    /// Member-bucket indices sampled for the live parity check.
     pub sampled_members: Vec<usize>,
     /// Host wall-clock of the class representative's simulation (s).
     pub wall_s: f64,
@@ -487,9 +552,21 @@ pub struct FleetReport {
     /// Total chip population simulated (by class scaling).
     pub chips: usize,
     pub sample_k: usize,
-    /// Chips actually simulated live (≤ classes × sample_k).
+    /// Per-chip drift amplitude the fleet ran with (percent).
+    pub drift_pct: f64,
+    /// Per-chip traffic phase jitter the fleet ran with (seconds).
+    pub phase_jitter_s: f64,
+    /// Distinct parametric members across all classes (== class count for
+    /// a homogeneous fleet).
+    pub members: usize,
+    /// Members re-simulated live because the schedule-invariance
+    /// certificate refused their closed-form derivation.
+    pub live_fallbacks: usize,
+    /// Chips actually simulated live (representatives + parity samples +
+    /// certificate fallbacks).
     pub live_chips: usize,
-    /// Sampled live-vs-scaled bitwise comparisons performed.
+    /// Sampled live-vs-derived comparisons performed (bitwise for exact
+    /// scales, tolerance-checked otherwise — counts always exact).
     pub parity_checked: usize,
     /// Comparisons that failed (a successful run reports 0 — failures
     /// abort with an error instead).
@@ -567,25 +644,83 @@ fn sched_bitwise_eq(a: &SchedResult, b: &SchedResult) -> bool {
         .all(|c| a.ledger.energy_mj(c).to_bits() == b.ledger.energy_mj(c).to_bits())
 }
 
+/// Relative tolerance for live-vs-derived parity on non-exact scales: a
+/// closed-form member and its live re-simulation compute the same real
+/// numbers through differently ordered f64 operations, so float fields
+/// agree to rounding (~1e-12 over these event counts; 1e-9 leaves three
+/// orders of slack) while every *decision* count must stay exact.
+const PARAM_TOL: f64 = 1e-9;
+
+/// Live-vs-derived parity for a non-exactly-representable scale: all
+/// decision-schedule counts bitwise (dispatch order, mode switches, wake
+/// transitions), all time/energy floats within `tol` relative.
+fn sched_close_eq(a: &SchedResult, b: &SchedResult, tol: f64) -> bool {
+    let close =
+        |x: f64, y: f64| (x - y).abs() <= tol * x.abs().max(y.abs()).max(1e-12);
+    a.mode_switches == b.mode_switches
+        && a.n_jobs == b.n_jobs
+        && a.peak_resident_jobs == b.peak_resident_jobs
+        && a.wake_transitions == b.wake_transitions
+        && close(a.makespan_s, b.makespan_s)
+        && close(a.overlap_s, b.overlap_s)
+        && close(a.coresidency_s, b.coresidency_s)
+        && close(a.sleep_s, b.sleep_s)
+        && close(a.deep_sleep_s, b.deep_sleep_s)
+        && (0..N_ENGINES).all(|e| close(a.busy_s[e], b.busy_s[e]))
+        && Category::all()
+            .into_iter()
+            .all(|c| close(a.ledger.energy_mj(c), b.ledger.energy_mj(c)))
+}
+
+/// The per-chip metrics the fleet percentiles aggregate: (energy [mJ],
+/// makespan [s], mean engine utilization, battery days).
+fn chip_metrics(r: &SchedResult) -> (f64, f64, f64, f64) {
+    let energy_mj = r.ledger.total_mj();
+    let busy: f64 = r.busy_s.iter().sum();
+    let utilization = busy / (r.makespan_s * N_ENGINES as f64);
+    let battery = pm::battery_days(energy_mj, r.makespan_s);
+    (energy_mj, r.makespan_s, utilization, battery)
+}
+
 /// The fleet runner: simulates a heterogeneous population of Fulmine
 /// endpoints in O(distinct chip classes) instead of O(chips).
 ///
-/// Chips are grouped by (workload, resolved configuration, frame count,
-/// window, traffic phase) — members of a class are simulation-identical
-/// by construction (deterministic scheduler, seeded traffic), so each
-/// class is simulated **once** (classes sharded across host threads) and
-/// scaled analytically to its population through the shared
-/// [`crate::report::merge`] rule. The scaling claim is *checked, not
-/// assumed*: per class, `sample_k − 1` randomly sampled members re-run
-/// through the fast-forward-disabled live scheduler path and must match
-/// the representative bitwise ([`FleetReport::parity_checked`] /
-/// [`FleetReport::parity_failures`]); a mismatch aborts the run. That
-/// makes `fulmine fleet --chips 1000000` a seconds-scale operation whose
-/// cost tracks the ~32 classes of [`FleetSpec::mixed`], not the million
-/// chips.
+/// The dedup key is **two-level**. The *family* level groups chips by
+/// (workload, resolved configuration, frame count, window, traffic
+/// phase, policy) — exactly the PR 6 class key — and each family is
+/// simulated **once** as a representative via
+/// [`StreamScheduler::run_param_rep`] (families sharded across host
+/// threads). The *member* level then splits a family's population by the
+/// deterministic per-chip perturbation ([`Perturb::derive`] from the
+/// fleet seed and global chip index): chips sharing one quantized
+/// (drift α, phase φ) bucket are one member. An exact class is the
+/// degenerate single-member (identity) family. Members are **derived,
+/// not simulated**: the representative's
+/// [`crate::soc::sched::ParamRep`] certificate
+/// ([`crate::soc::sched::ParamRep::certify`]) proves the member makes
+/// bit-for-bit the same dispatch/pop/retire/admit decisions on an
+/// α-scaled time base, and [`crate::soc::sched::ParamRep::member`] (or,
+/// for pure drift, the property-tested
+/// [`crate::report::Merged::absorb_scaled`] seam) produces its
+/// makespan/energy/busy/sleep in closed form. A member the certificate
+/// refuses is re-simulated live on the rescaled template — exact, just
+/// not O(1) — and counted in [`FleetReport::live_fallbacks`].
+///
+/// The scaling claim is *checked, not assumed*: per family, `sample_k −
+/// 1` randomly sampled member buckets re-run through the
+/// fast-forward-disabled live scheduler on the rescaled template and
+/// must match their derivation — bitwise where the scale is exactly
+/// representable (identity, power-of-two α with φ = 0, and fallbacks),
+/// decision counts bitwise plus floats within [`PARAM_TOL`] otherwise
+/// ([`FleetReport::parity_checked`] / [`FleetReport::parity_failures`]);
+/// a mismatch aborts the run. That keeps `fulmine fleet --chips 1000000
+/// --drift 1 --phase-jitter 0.02` — *every* chip perturbed — a
+/// seconds-scale operation: O(families) simulations plus O(members)
+/// closed-form derivations, never O(chips) scheduler runs.
 pub struct Fleet;
 
-/// A deduplicated chip class, resolved and ready to simulate.
+/// A deduplicated chip family, resolved and ready to simulate: the shared
+/// decision-schedule template plus its parametric member buckets.
 struct FleetClass {
     key: String,
     workload: String,
@@ -596,11 +731,25 @@ struct FleetClass {
     window: usize,
     release: Vec<f64>,
     chips: usize,
+    /// Parametric members, keyed by [`Perturb::key`] (deterministic
+    /// order): quantized perturbation → population.
+    members: BTreeMap<String, (Perturb, usize)>,
 }
 
 /// Per-class simulation outcome (filled by the worker pool).
 struct ClassOutcome {
+    /// The representative's (unperturbed) result.
     result: SchedResult,
+    /// Population roll-up over all derived members.
+    merged: crate::report::Merged,
+    /// Per distinct member: (metric value, member population) — the
+    /// fleet percentile inputs.
+    e_vals: Vec<(f64, usize)>,
+    l_vals: Vec<(f64, usize)>,
+    u_vals: Vec<(f64, usize)>,
+    b_vals: Vec<(f64, usize)>,
+    members: usize,
+    live_fallbacks: usize,
     wall_s: f64,
     live_runs: usize,
     parity_runs: usize,
@@ -618,11 +767,23 @@ impl Fleet {
         if fleet.sample_k == 0 {
             bail!("--sample must be at least 1 (the class representative)");
         }
+        if !(fleet.drift_pct.is_finite() && (0.0..100.0).contains(&fleet.drift_pct)) {
+            bail!("--drift must be a percentage in [0, 100)");
+        }
+        if !(fleet.phase_jitter_s.is_finite() && fleet.phase_jitter_s >= 0.0) {
+            bail!("--phase-jitter must be a non-negative seconds value");
+        }
+        let hetero = fleet.drift_pct > 0.0 || fleet.phase_jitter_s > 0.0;
         let t_fleet = Instant::now();
 
-        // Class dedup: resolve each group and merge identical classes.
+        // Family dedup: resolve each group and merge identical classes,
+        // then split each family's population into parametric members by
+        // the chips' deterministic perturbations (global chip index →
+        // quantized α/φ bucket). A homogeneous fleet skips the derivation
+        // and keeps the single identity member per family.
         let mut index: BTreeMap<String, usize> = BTreeMap::new();
         let mut classes: Vec<FleetClass> = Vec::new();
+        let mut next_chip = 0u64;
         for g in &fleet.groups {
             if g.chips == 0 {
                 continue;
@@ -651,8 +812,8 @@ impl Fleet {
                 g.spec.traffic.key(),
                 fleet.policy.map_or("none", |p| p.name()),
             );
-            match index.get(&key) {
-                Some(&ci) => classes[ci].chips += g.chips,
+            let ci = match index.get(&key) {
+                Some(&ci) => ci,
                 None => {
                     let graph = frame_graph(w, rung.cfg)?;
                     let release = g.spec.traffic.release_times(g.spec.frames);
@@ -666,10 +827,29 @@ impl Fleet {
                         frames: g.spec.frames,
                         window,
                         release,
-                        chips: g.chips,
+                        chips: 0,
+                        members: BTreeMap::new(),
                     });
+                    classes.len() - 1
                 }
+            };
+            let c = &mut classes[ci];
+            c.chips += g.chips;
+            if hetero {
+                for j in 0..g.chips as u64 {
+                    let p = Perturb::derive(
+                        fleet.seed,
+                        next_chip + j,
+                        fleet.drift_pct,
+                        fleet.phase_jitter_s,
+                    );
+                    c.members.entry(p.key()).or_insert((p, 0)).1 += 1;
+                }
+            } else {
+                c.members.entry(Perturb::IDENTITY.key()).or_insert((Perturb::IDENTITY, 0)).1 +=
+                    g.chips;
             }
+            next_chip += g.chips as u64;
         }
         let total_chips: usize = classes.iter().map(|c| c.chips).sum();
 
@@ -695,32 +875,97 @@ impl Fleet {
                     let c = &classes[ci];
                     let cf = CompiledFrame::compile(&c.graph);
                     let t0 = Instant::now();
-                    let r = StreamScheduler::run_compiled_traffic_pm(
+                    let rep = StreamScheduler::run_param_rep(
                         &cf, c.frames, c.window, &c.release, fleet.policy,
                     );
                     let wall_s = t0.elapsed().as_secs_f64();
-                    // Sampled live-vs-scaled parity: random members re-run
-                    // through the ff-disabled live path, bitwise-compared
-                    // against the representative the population scaling
-                    // used. Deterministically seeded per class.
+                    // A member's live reference: the α-rescaled template
+                    // with the (φ-shifted, α-scaled) release table —
+                    // fast-forward enabled for certificate fallbacks
+                    // (exact either way), disabled for parity samples
+                    // (the independent reference path).
+                    let live_member = |p: &Perturb, ff: bool| -> SchedResult {
+                        let mut rel = c.release.clone();
+                        p.apply(&mut rel);
+                        let scaled = cf.rescaled(p.alpha);
+                        if ff {
+                            StreamScheduler::run_compiled_traffic_pm(
+                                &scaled, c.frames, c.window, &rel, fleet.policy,
+                            )
+                        } else {
+                            StreamScheduler::run_compiled_traffic_live_pm(
+                                &scaled, c.frames, c.window, &rel, fleet.policy,
+                            )
+                        }
+                    };
+                    // Sampled live-vs-derived parity targets: random
+                    // member buckets, deterministically seeded per class.
                     let live_n = fleet.sample_k.min(c.chips);
+                    let n_buckets = c.members.len() as u64;
                     let mut rng = crate::traffic::Xorshift64Star::new(
                         0x5EED ^ ((ci as u64) << 20) ^ c.chips as u64,
                     );
-                    let mut sampled = Vec::new();
+                    let sampled: Vec<usize> =
+                        (1..live_n).map(|_| (rng.next_u64() % n_buckets) as usize).collect();
+                    let mut merged = crate::report::Merged::empty();
+                    let (mut e_vals, mut l_vals, mut u_vals, mut b_vals) =
+                        (Vec::new(), Vec::new(), Vec::new(), Vec::new());
+                    let mut live_fallbacks = 0usize;
+                    let mut parity_runs = 0usize;
                     let mut parity_ok = true;
-                    for _ in 1..live_n {
-                        sampled.push((rng.next_u64() % c.chips as u64) as usize);
-                        let live = StreamScheduler::run_traffic_live_pm(
-                            &c.graph, c.frames, c.window, &c.release, fleet.policy,
-                        );
-                        parity_ok &= sched_bitwise_eq(&r, &live);
+                    for (bi, (p, pop)) in c.members.values().enumerate() {
+                        let mut fallback = false;
+                        let pure_drift = fleet.policy.is_none() && p.phase_s == 0.0;
+                        let res = if p.is_identity() {
+                            rep.result().clone()
+                        } else if !rep.certify(p) {
+                            fallback = true;
+                            live_fallbacks += 1;
+                            live_member(p, true)
+                        } else if pure_drift {
+                            // pure drift with no billing is exactly the
+                            // representative on a rescaled time base
+                            rep.result().rescaled(p.alpha)
+                        } else {
+                            rep.member(p).expect("certified member derives")
+                        };
+                        for _ in sampled.iter().filter(|&&s| s == bi) {
+                            parity_runs += 1;
+                            let live = live_member(p, false);
+                            let exact = fallback
+                                || (exact_pow2(p.alpha) && p.phase_s == 0.0);
+                            parity_ok &= if exact {
+                                sched_bitwise_eq(&res, &live)
+                            } else {
+                                sched_close_eq(&res, &live, PARAM_TOL)
+                            };
+                        }
+                        if pure_drift && !fallback && !p.is_identity() {
+                            // through the extended report seam
+                            // (absorb_scaled ≡ absorb ∘ rescaled,
+                            // property-tested bitwise)
+                            merged.absorb_scaled(rep.result(), *pop, p.alpha);
+                        } else {
+                            merged.absorb(&res, *pop);
+                        }
+                        let (e, l, u, b) = chip_metrics(&res);
+                        e_vals.push((e, *pop));
+                        l_vals.push((l, *pop));
+                        u_vals.push((u, *pop));
+                        b_vals.push((b, *pop));
                     }
                     *slots[ci].lock().expect("class slot poisoned") = Some(ClassOutcome {
-                        result: r,
+                        result: rep.result().clone(),
+                        merged,
+                        e_vals,
+                        l_vals,
+                        u_vals,
+                        b_vals,
+                        members: c.members.len(),
+                        live_fallbacks,
                         wall_s,
-                        live_runs: live_n,
-                        parity_runs: live_n.saturating_sub(1),
+                        live_runs: 1 + parity_runs + live_fallbacks,
+                        parity_runs,
                         parity_ok,
                         sampled,
                     });
@@ -732,33 +977,35 @@ impl Fleet {
             .map(|m| m.into_inner().expect("class slot poisoned").expect("class simulated"))
             .collect();
 
-        // Roll up: population-scaled merge + per-chip percentiles.
+        // Roll up: combine the per-class population merges + per-member
+        // percentiles (every distinct parametric member contributes its
+        // own value, weighted by its bucket population).
         let mut merged = crate::report::Merged::empty();
         let mut stats: Vec<ClassStat> = Vec::new();
         let (mut live_chips, mut parity_checked, mut parity_failures) = (0usize, 0usize, 0usize);
+        let (mut members_total, mut fallbacks_total) = (0usize, 0usize);
         let mut naive_est_wall_s = 0.0f64;
         let mut total_frames = 0u64;
         let (mut e_vals, mut l_vals, mut u_vals, mut b_vals) =
             (Vec::new(), Vec::new(), Vec::new(), Vec::new());
         let policy_name = fleet.policy.map_or("none", |p| p.name()).to_string();
-        for (c, o) in classes.iter().zip(&outcomes) {
-            merged.absorb(&o.result, c.chips);
+        for (c, o) in classes.iter().zip(outcomes) {
+            merged.combine(&o.merged);
             live_chips += o.live_runs;
             parity_checked += o.parity_runs;
             if !o.parity_ok {
                 parity_failures += 1;
             }
+            members_total += o.members;
+            fallbacks_total += o.live_fallbacks;
             naive_est_wall_s += o.wall_s * c.chips as f64;
             total_frames += (c.frames * c.chips) as u64;
-            let energy_mj = o.result.ledger.total_mj();
-            let busy: f64 = o.result.busy_s.iter().sum();
-            let utilization = busy / (o.result.makespan_s * N_ENGINES as f64);
+            let (energy_mj, _, utilization, battery) = chip_metrics(&o.result);
             let epd = pm::energy_per_day_mj(energy_mj, o.result.makespan_s);
-            let battery = pm::battery_days(energy_mj, o.result.makespan_s);
-            e_vals.push((energy_mj, c.chips));
-            l_vals.push((o.result.makespan_s, c.chips));
-            u_vals.push((utilization, c.chips));
-            b_vals.push((battery, c.chips));
+            e_vals.extend(o.e_vals);
+            l_vals.extend(o.l_vals);
+            u_vals.extend(o.u_vals);
+            b_vals.extend(o.b_vals);
             stats.push(ClassStat {
                 key: c.key.clone(),
                 workload: c.workload.clone(),
@@ -776,8 +1023,10 @@ impl Fleet {
                 epd_mj_per_day: epd,
                 battery_days: battery,
                 fast_forwarded_frames: o.result.fast_forwarded_frames,
+                members: o.members,
+                live_fallbacks: o.live_fallbacks,
                 live_runs: o.live_runs,
-                sampled_members: o.sampled.clone(),
+                sampled_members: o.sampled,
                 wall_s: o.wall_s,
             });
         }
@@ -792,6 +1041,10 @@ impl Fleet {
         Ok(FleetReport {
             chips: total_chips,
             sample_k: fleet.sample_k,
+            drift_pct: fleet.drift_pct,
+            phase_jitter_s: fleet.phase_jitter_s,
+            members: members_total,
+            live_fallbacks: fallbacks_total,
             live_chips,
             parity_checked,
             parity_failures,
@@ -833,6 +1086,18 @@ impl FleetReport {
             self.parity_failures
         )
         .unwrap();
+        if self.drift_pct > 0.0 || self.phase_jitter_s > 0.0 {
+            writeln!(
+                s,
+                "parametric: drift ±{}% phase jitter {} s | {} members over {} families | {} live fallbacks",
+                self.drift_pct,
+                self.phase_jitter_s,
+                self.members,
+                self.classes.len(),
+                self.live_fallbacks
+            )
+            .unwrap();
+        }
         writeln!(
             s,
             "fleet energy {:.3} J over {} frames | slowest chip {:.4} s | policy {}",
@@ -891,6 +1156,10 @@ impl FleetReport {
             ("chips", Json::num(self.chips as f64)),
             ("class_count", Json::num(self.classes.len() as f64)),
             ("sample_k", Json::num(self.sample_k as f64)),
+            ("drift_pct", Json::num(self.drift_pct)),
+            ("phase_jitter_s", Json::num(self.phase_jitter_s)),
+            ("members", Json::num(self.members as f64)),
+            ("live_fallbacks", Json::num(self.live_fallbacks as f64)),
             ("live_chips", Json::num(self.live_chips as f64)),
             ("parity_checked", Json::num(self.parity_checked as f64)),
             ("parity_failures", Json::num(self.parity_failures as f64)),
@@ -932,6 +1201,8 @@ impl FleetReport {
                                     "fast_forwarded_frames",
                                     Json::num(c.fast_forwarded_frames as f64),
                                 ),
+                                ("members", Json::num(c.members as f64)),
+                                ("live_fallbacks", Json::num(c.live_fallbacks as f64)),
                                 ("live_runs", Json::num(c.live_runs as f64)),
                                 ("wall_s", Json::num(c.wall_s)),
                             ])
@@ -1970,5 +2241,166 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(e.contains("--sample"), "{e}");
+        let one_chip =
+            || FleetSpec::new(vec![FleetGroup { spec: RunSpec::new("seizure"), chips: 1 }]);
+        let e = sys.fleet(&one_chip().drift(-1.0)).unwrap_err().to_string();
+        assert!(e.contains("--drift"), "{e}");
+        let e = sys.fleet(&one_chip().drift(100.0)).unwrap_err().to_string();
+        assert!(e.contains("--drift"), "{e}");
+        let e = sys.fleet(&one_chip().phase_jitter(-0.5)).unwrap_err().to_string();
+        assert!(e.contains("--phase-jitter"), "{e}");
+    }
+
+    /// Satellite: the mixed fleet spreads Poisson seeds over a bounded
+    /// per-chip pool once a template holds enough population — chips of
+    /// one Poisson template genuinely differ (exercising class sampling)
+    /// while the class count stays O(templates × pool).
+    #[test]
+    fn mixed_fleet_spreads_poisson_seeds() {
+        // small fleets keep the historical single seed per template
+        let small = FleetSpec::mixed(64, 4);
+        let small_poisson: Vec<_> = small
+            .groups
+            .iter()
+            .filter(|g| matches!(g.spec.traffic, Traffic::Poisson { .. }))
+            .collect();
+        assert!(!small_poisson.is_empty());
+        // large fleets spread each Poisson template over an 8-seed pool
+        let big = FleetSpec::mixed(1_000_000, 4);
+        let big_poisson: Vec<_> = big
+            .groups
+            .iter()
+            .filter(|g| matches!(g.spec.traffic, Traffic::Poisson { .. }))
+            .collect();
+        assert_eq!(big_poisson.len(), 8 * small_poisson.len(), "8-seed pool per template");
+        let seeds: std::collections::BTreeSet<u64> = big_poisson
+            .iter()
+            .map(|g| match g.spec.traffic {
+                Traffic::Poisson { seed, .. } => seed,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(seeds.len(), big_poisson.len(), "seeds are distinct per sub-population");
+        let total: usize = big.groups.iter().map(|g| g.chips).sum();
+        assert_eq!(total, 1_000_000, "populations still partition the fleet");
+        assert!(big.groups.len() <= 4 * small.groups.len(), "class count stays bounded");
+    }
+
+    /// Tentpole (parametric classes): a fully perturbed fleet — every
+    /// chip drifted and phase-shifted — derives its members in closed
+    /// form, and the fleet percentiles match a per-chip live
+    /// materialization of the whole population.
+    #[test]
+    fn fleet_parametric_members_match_materialized_chips() {
+        let sys = SocSystem::new();
+        let spec =
+            RunSpec::new("seizure").frames(3).traffic(Traffic::Periodic { rate_hz: 2.0 });
+        let fleet = FleetSpec::new(vec![FleetGroup { spec: spec.clone(), chips: 12 }])
+            .sample_k(4)
+            .drift(2.0)
+            .phase_jitter(0.01);
+        let report = sys.fleet(&fleet).unwrap();
+        assert_eq!(report.chips, 12);
+        assert_eq!(report.classes.len(), 1, "one family");
+        assert!(report.members > 1, "perturbed chips split into parametric members");
+        assert_eq!(report.classes[0].members, report.members);
+        assert_eq!(report.parity_failures, 0);
+        assert!(report.classes[0].live_fallbacks <= report.members);
+        // Materialize every chip live on its rescaled template and compare
+        // the (per-member weighted) fleet percentiles against the per-chip
+        // ground truth.
+        let (w, rung) = sys.resolve(&spec).unwrap();
+        let graph = frame_graph(w, rung.cfg).unwrap();
+        let cf = CompiledFrame::compile(&graph);
+        let release = spec.traffic.release_times(3);
+        let window = crate::soc::sched::DEFAULT_STREAM_WINDOW.min(3);
+        let (mut e, mut l, mut u, mut b) = (Vec::new(), Vec::new(), Vec::new(), Vec::new());
+        for chip in 0..12u64 {
+            let p = Perturb::derive(fleet.seed, chip, fleet.drift_pct, fleet.phase_jitter_s);
+            let mut rel = release.clone();
+            p.apply(&mut rel);
+            let live = StreamScheduler::run_compiled_traffic_live_pm(
+                &cf.rescaled(p.alpha),
+                3,
+                window,
+                &rel,
+                None,
+            );
+            let (ce, cl, cu, cb) = chip_metrics(&live);
+            e.push((ce, 1usize));
+            l.push((cl, 1));
+            u.push((cu, 1));
+            b.push((cb, 1));
+        }
+        let close = |x: f64, y: f64, what: &str| {
+            assert!(
+                (x - y).abs() <= 1e-9 * x.abs().max(y.abs()).max(1e-12),
+                "{what}: {x} vs {y}"
+            );
+        };
+        for (got, vals, what) in [
+            (report.energy_mj_per_chip, &mut e, "energy"),
+            (report.latency_s, &mut l, "latency"),
+            (report.utilization, &mut u, "utilization"),
+            (report.battery_days, &mut b, "battery"),
+        ] {
+            let want = pct(vals, 12);
+            close(got.p50, want.p50, what);
+            close(got.p95, want.p95, what);
+            close(got.p99, want.p99, what);
+        }
+        // heterogeneity is real: the spread survives into the percentiles
+        assert!(report.latency_s.p99 > report.latency_s.p50, "drift+jitter spread the fleet");
+        let text = report.render_text();
+        assert!(text.contains("parametric: drift"), "{text}");
+        let json = report.to_json().render();
+        for key in ["\"drift_pct\"", "\"phase_jitter_s\"", "\"members\"", "\"live_fallbacks\""] {
+            assert!(json.contains(key), "missing {key} in {json}");
+        }
+    }
+
+    /// Parametric members under a power policy: the span re-billing
+    /// closed form survives the sampled live parity (sleep statistics
+    /// included), and battery percentiles stay meaningful.
+    #[test]
+    fn fleet_parametric_with_policy_keeps_parity() {
+        let sys = SocSystem::new();
+        let spec =
+            RunSpec::new("seizure").frames(4).traffic(Traffic::Periodic { rate_hz: 2.0 });
+        let fleet = FleetSpec::new(vec![FleetGroup { spec, chips: 9 }])
+            .sample_k(5)
+            .policy(Some(PolicyKind::Lookahead))
+            .drift(1.0)
+            .phase_jitter(0.05)
+            .seed(7);
+        let report = sys.fleet(&fleet).unwrap();
+        assert_eq!(report.parity_failures, 0, "billed members must match live re-runs");
+        assert!(report.members > 1);
+        assert_eq!(report.policy, "lookahead");
+        assert!(report.classes[0].sleep_s > 0.0, "gap-dominated class sleeps");
+        assert!(report.battery_days.p50 > 0.0);
+    }
+
+    /// Certificate fallback at fleet level: a phase jitter so large it
+    /// dwarfs the representative's absolute event margins (Δ/φ under the
+    /// bar) refuses the φ closed form, and the jittered members
+    /// re-simulate live — exact, counted, and still parity-clean.
+    #[test]
+    fn fleet_phase_fallback_when_certificate_refuses() {
+        let sys = SocSystem::new();
+        let spec =
+            RunSpec::new("seizure").frames(4).traffic(Traffic::Periodic { rate_hz: 2.0 });
+        let fleet = FleetSpec::new(vec![FleetGroup { spec, chips: 6 }])
+            .sample_k(3)
+            .phase_jitter(1e9)
+            .seed(3);
+        let report = sys.fleet(&fleet).unwrap();
+        assert!(
+            report.live_fallbacks > 0,
+            "a margin-dwarfing phase offset must refuse the closed form"
+        );
+        assert_eq!(report.parity_failures, 0, "fallback members are exact");
+        assert_eq!(report.chips, 6);
+        assert!(report.live_chips > 3, "fallbacks count as live work");
     }
 }

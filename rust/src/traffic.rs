@@ -178,6 +178,88 @@ fn parse_rate(s: &str) -> Result<f64> {
         .map_err(|_| anyhow::anyhow!("bad rate '{s}' (Hz)"))
 }
 
+/// Per-chip numeric perturbation of a shared traffic + frame template: a
+/// service-time scale `alpha` (process/temperature drift of the chip's
+/// clock tree — the whole chip-local time base, FLL relock included,
+/// stretches by `alpha`) and a sensor phase offset `phase_s` (start-up
+/// skew of the acquisition front-end, in pre-drift seconds). A member
+/// chip's release table is `(r + phase_s) * alpha` — drift also stretches
+/// the sensor schedule because the sampling clock derives from the same
+/// drifted crystal.
+///
+/// Both parameters are quantized to dyadic grids (`alpha` to 2⁻¹²,
+/// `phase_s` to 2⁻²⁰ s) so that perturbed chips dedup onto a bounded
+/// member-key space and so that test arithmetic can stay exactly
+/// representable. Two chips with equal [`Perturb::key`] are
+/// simulation-identical members of the same parametric family.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Perturb {
+    /// Service-time scale factor (1.0 = nominal silicon).
+    pub alpha: f64,
+    /// Sensor phase offset in pre-drift seconds (≥ 0).
+    pub phase_s: f64,
+}
+
+/// Quantization grid for the drift scale: multiples of 2⁻¹².
+const ALPHA_GRID: f64 = 4096.0;
+/// Quantization grid for the phase offset: multiples of 2⁻²⁰ s (~1 µs).
+const PHASE_GRID: f64 = 1048576.0;
+
+impl Perturb {
+    /// The nominal chip: no drift, no phase skew.
+    pub const IDENTITY: Perturb = Perturb { alpha: 1.0, phase_s: 0.0 };
+
+    pub fn is_identity(&self) -> bool {
+        self.alpha == 1.0 && self.phase_s == 0.0
+    }
+
+    /// Deterministically derive chip `chip`'s perturbation from the fleet
+    /// seed: `alpha` uniform in `1 ± drift_pct/100`, `phase_s` uniform in
+    /// `[0, jitter_s]`, both snapped to their dyadic grids. The same
+    /// `(seed, chip)` pair yields the same perturbation on any host.
+    pub fn derive(seed: u64, chip: u64, drift_pct: f64, jitter_s: f64) -> Perturb {
+        if drift_pct == 0.0 && jitter_s == 0.0 {
+            return Perturb::IDENTITY;
+        }
+        let mut rng = Xorshift64Star::new(
+            seed ^ chip.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ 0x5EED_D81F,
+        );
+        let u1 = rng.next_unit();
+        let u2 = rng.next_unit();
+        let alpha = if drift_pct > 0.0 {
+            let raw = 1.0 + drift_pct / 100.0 * (2.0 * u1 - 1.0);
+            ((raw * ALPHA_GRID).round() / ALPHA_GRID).max(1.0 / ALPHA_GRID)
+        } else {
+            1.0
+        };
+        let phase_s = if jitter_s > 0.0 {
+            (jitter_s * u2 * PHASE_GRID).round() / PHASE_GRID
+        } else {
+            0.0
+        };
+        Perturb { alpha, phase_s }
+    }
+
+    /// Canonical member-key fragment inside a parametric family — bit-exact
+    /// (`f64::to_bits`), injective over distinct quantized perturbations.
+    pub fn key(&self) -> String {
+        format!("a{:016x}:p{:016x}", self.alpha.to_bits(), self.phase_s.to_bits())
+    }
+
+    /// Apply the perturbation to a release table in place:
+    /// `r ← (r + phase_s) · alpha`. An empty table (back-to-back) stays
+    /// empty — phase skew is meaningless without a sensor schedule.
+    pub fn apply(&self, release: &mut [f64]) {
+        for r in release.iter_mut() {
+            *r = (*r + self.phase_s) * self.alpha;
+        }
+    }
+
+    pub fn describe(&self) -> String {
+        format!("alpha {:.6}, phase {:.6e} s", self.alpha, self.phase_s)
+    }
+}
+
 /// xorshift64* — tiny, seeded, statistically adequate for inter-arrival
 /// draws, and (unlike `rand`) dependency-free. Zero seeds are remapped so
 /// the state never sticks. Crate-internal: the fleet runner reuses it for
@@ -296,6 +378,44 @@ mod tests {
         assert!(Traffic::parse("bursty:0:1").is_err());
         assert!(Traffic::parse("warp:9").is_err());
         assert!(Traffic::parse("b2b:1").is_err());
+    }
+
+    #[test]
+    fn perturb_derivation_is_deterministic_and_quantized() {
+        let a = Perturb::derive(0xF1EE7, 42, 6.25, 0.0156_25);
+        let b = Perturb::derive(0xF1EE7, 42, 6.25, 0.0156_25);
+        assert_eq!(a.alpha.to_bits(), b.alpha.to_bits());
+        assert_eq!(a.phase_s.to_bits(), b.phase_s.to_bits());
+        // dyadic grids: alpha on 2⁻¹², phase on 2⁻²⁰ s
+        assert_eq!((a.alpha * 4096.0).fract(), 0.0);
+        assert_eq!((a.phase_s * 1048576.0).fract(), 0.0);
+        assert!(a.alpha >= 1.0 - 0.0625 && a.alpha <= 1.0 + 0.0625, "{}", a.alpha);
+        assert!(a.phase_s >= 0.0 && a.phase_s <= 0.015_625 + 1e-12);
+        // different chips draw different perturbations (w.h.p. — pinned)
+        let c = Perturb::derive(0xF1EE7, 43, 6.25, 0.015_625);
+        assert!(a != c, "adjacent chips should perturb differently");
+        // zero specs collapse to the identity member
+        assert_eq!(Perturb::derive(1, 2, 0.0, 0.0), Perturb::IDENTITY);
+        assert!(Perturb::IDENTITY.is_identity());
+        assert!(!a.is_identity());
+    }
+
+    #[test]
+    fn perturb_keys_are_injective_and_apply_shifts_then_scales() {
+        let mut keys = std::collections::BTreeSet::new();
+        for chip in 0..256u64 {
+            keys.insert(Perturb::derive(7, chip, 3.125, 0.01).key());
+        }
+        assert!(keys.len() > 64, "quantized members should still spread: {}", keys.len());
+        assert!(keys.insert(Perturb::IDENTITY.key()), "identity key must be distinct");
+
+        let p = Perturb { alpha: 0.5, phase_s: 0.25 };
+        let mut r = vec![0.0, 1.0, 2.0];
+        p.apply(&mut r);
+        assert_eq!(r, vec![0.125, 0.625, 1.125]);
+        let mut empty: Vec<f64> = Vec::new();
+        p.apply(&mut empty);
+        assert!(empty.is_empty());
     }
 
     #[test]
