@@ -23,13 +23,18 @@
 //! `fleet_hetero_1m_dedup_speedup`), and a
 //! `policy` section with energy-per-day and battery-life rows for every
 //! workload × sleep policy at a 1 Hz duty cycle (CI guards the
-//! oracle ≤ lookahead ≤ greedy energy ordering) — the machine-readable
+//! oracle ≤ lookahead ≤ greedy energy ordering), and a `fault_overhead`
+//! section with the same gap-dominated 512-frame stream run clean and
+//! under a seeded mixed fault model (headline key
+//! `fault_overhead_jobs_per_s_ratio` — the simulator-side cost of the
+//! fault machinery, guarded by CI) — the machine-readable
 //! perf trajectory CI tracks across PRs.
 //!
 //! Uses `fulmine::bench_support` (the offline crate set has no criterion).
 
 use fulmine::bench_support::{blackbox, measure, report_row};
 use fulmine::coordinator::{surveillance, ExecConfig};
+use fulmine::fault::{FaultModel, Recovery};
 use fulmine::hwce::golden::WeightPrec;
 use fulmine::json::Json;
 use fulmine::report;
@@ -364,6 +369,66 @@ fn main() {
         }
     }
 
+    // Fault-injection overhead: the same gap-dominated 512-frame stream
+    // run clean and under a seeded low-rate mixed fault model with retry
+    // recovery. The jobs/s ratio is the simulator-side cost of the fault
+    // machinery (plan build, per-frame variant dispatch, fast-forward
+    // suspension around faulted frames); both sides are measured in this
+    // run, so the ratio transfers across CI hardware. The reliability
+    // counters are deterministic model output — the seed 5 table fires
+    // 4 drops, 6 transients and 6 link losses over frames 0..512.
+    println!("\n== fault overhead: seizure x512 at periodic:2, clean vs mixed faults ==");
+    let fault_model = FaultModel {
+        drop_rate: 0.01,
+        transient_rate: 0.01,
+        brownout_rate: 0.002,
+        link_rate: 0.01,
+        seed: 5,
+    };
+    let fault_frames = 512usize;
+    let mut fault_rows: Vec<Json> = Vec::new();
+    let mut fault_jps = [0.0f64; 2];
+    for (i, faults) in [None, Some(fault_model)].into_iter().enumerate() {
+        let mode = if i == 0 { "clean" } else { "faulted" };
+        let spec = RunSpec::new("seizure")
+            .frames(fault_frames)
+            .traffic(Traffic::Periodic { rate_hz: 2.0 })
+            .faults(faults)
+            .recovery(Recovery::default());
+        let t = Instant::now();
+        let run = blackbox(sys.run(&spec).unwrap());
+        let wall_s = t.elapsed().as_secs_f64();
+        let r = &run.result;
+        let jps = r.total_jobs as f64 / wall_s.max(1e-12);
+        fault_jps[i] = jps;
+        println!(
+            "{mode:<8} wall {wall_s:>8.4} s | {jps:>10.0} jobs/s | avail {:.4} | \
+             {} dropped | {} retries | {} resets | ff {} | recovery {:.4} mJ",
+            r.availability(),
+            r.frames_dropped,
+            r.fault_retries,
+            r.chip_resets,
+            r.fast_forwarded_frames,
+            r.recovery_energy_mj
+        );
+        fault_rows.push(Json::obj(vec![
+            ("workload", Json::string("seizure")),
+            ("mode", Json::string(mode)),
+            ("frames", Json::num(fault_frames as f64)),
+            ("wall_s", Json::num(wall_s)),
+            ("jobs_per_s", Json::num(jps)),
+            ("availability", Json::num(r.availability())),
+            ("frames_dropped", Json::num(r.frames_dropped as f64)),
+            ("fault_retries", Json::num(r.fault_retries as f64)),
+            ("chip_resets", Json::num(r.chip_resets as f64)),
+            ("state_loss_frames", Json::num(r.state_loss_frames as f64)),
+            ("recovery_energy_mj", Json::num(r.recovery_energy_mj)),
+            ("fast_forwarded_frames", Json::num(r.fast_forwarded_frames as f64)),
+        ]));
+    }
+    let fault_overhead_ratio = fault_jps[1] / fault_jps[0].max(1e-12);
+    println!("faulted vs clean simulator throughput: {fault_overhead_ratio:.2}x jobs/s");
+
     let doc = Json::obj(vec![
         ("rungs", Json::Arr(rows)),
         ("stream_scaling", Json::Arr(scaling_rows)),
@@ -371,6 +436,8 @@ fn main() {
         ("fleet_scaling", Json::Arr(fleet_rows)),
         ("fleet_hetero_scaling", Json::Arr(hetero_rows)),
         ("policy", Json::Arr(policy_rows)),
+        ("fault_overhead", Json::Arr(fault_rows)),
+        ("fault_overhead_jobs_per_s_ratio", Json::num(fault_overhead_ratio)),
         ("fleet_1m_dedup_speedup", Json::num(fleet_1m_speedup)),
         ("fleet_hetero_1m_dedup_speedup", Json::num(hetero_1m_speedup)),
         ("windowed_vs_scan_jobs_per_s", Json::num(vs_scan_64)),

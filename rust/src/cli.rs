@@ -7,6 +7,7 @@
 //! the process boundary (usage on stderr, exit codes).
 
 use crate::apps::params::{gen_params, xorshift_i16};
+use crate::fault::{FaultModel, Recovery};
 use crate::report::{self, PAPER_ARTIFACTS};
 use crate::runtime::{default_artifact_dir, Runtime, TensorI16};
 use crate::soc::pm::PolicyKind;
@@ -24,7 +25,7 @@ commands:
   ladder <workload> [--json]
                 run every ladder rung of a workload (one frame each)
   stream <workload> [--frames N] [--window K] [--shards S] [--config RUNG]
-         [--traffic MODEL] [--policy P] [--json]
+         [--traffic MODEL] [--policy P] [--faults FM] [--recovery R] [--json]
                 pipeline N frames through the bounded-window streaming
                 scheduler: at most K frames in flight (default 8, clamped
                 to N), so memory stays O(K) however large N is; with
@@ -35,9 +36,17 @@ commands:
                 | poisson:RATE_HZ[:SEED] — when frames arrive at the chip;
                 P: greedy | lookahead | oracle — duty-cycle idle gaps
                 through the Table I sleep ladder and report battery life;
-                oracle reads future arrivals, so it needs a --traffic model)
+                oracle reads future arrivals, so it needs a --traffic model;
+                FM: none | drop:RATE[:SEED] | transient:RATE[:SEED]
+                | brownout:RATE[:SEED] | link:RATE[:SEED]
+                | mixed:DR:TR:BR:LR[:SEED] — seeded deterministic per-frame
+                faults, identical across runs, shards and threads;
+                R: retry[:MAX[:BACKOFF_S]] | degrade | reset — how the chip
+                answers a fault (default retry:3; needs --faults); faulted
+                runs add an availability/retry/reset reliability report)
   fleet [--chips N] [--frames F] [--sample K] [--threads T] [--policy P]
-        [--drift PCT] [--phase-jitter S] [--json]
+        [--drift PCT] [--phase-jitter S] [--faults FM] [--recovery R]
+        [--json]
                 simulate a fleet of N endpoints (default 1000) spread over
                 every workload x rung x traffic model: chips dedup into
                 simulation-identical classes, each class runs once and
@@ -52,9 +61,17 @@ commands:
                 perturbed chips stay O(classes) — each family simulates
                 one representative and derives members by a certified
                 closed-form rescale (live fallback when the certificate
-                refuses, so results stay exact either way)
+                refuses, so results stay exact either way); --faults FM
+                with --recovery R subjects every chip to the seeded fault
+                process and adds fleet-wide availability and
+                recovery-energy percentiles to the report
   ablations [--json]
                 run the surveillance design-choice sweep
+  faultsweep <workload> [--frames N] [--json]
+                stream N frames (default 256) once per fault-rate x
+                recovery-policy grid point and tabulate availability,
+                drops/retries/resets and recovery energy against the
+                fault-free baseline
   artifacts     list and compile the AOT artifacts (PJRT smoke test)
   infer <name>  execute one artifact with generated inputs, print a digest";
 
@@ -76,6 +93,8 @@ pub enum Command {
         rung: Option<String>,
         traffic: Traffic,
         policy: Option<PolicyKind>,
+        faults: Option<FaultModel>,
+        recovery: Option<Recovery>,
         json: bool,
     },
     /// Class-deduplicated fleet simulation over the standard mix.
@@ -87,10 +106,14 @@ pub enum Command {
         policy: Option<PolicyKind>,
         drift: f64,
         phase_jitter: f64,
+        faults: Option<FaultModel>,
+        recovery: Option<Recovery>,
         json: bool,
     },
     /// The surveillance ablation sweep.
     Ablations { json: bool },
+    /// The fault-rate x recovery-policy reliability sweep.
+    FaultSweep { workload: String, frames: usize, json: bool },
     /// PJRT artifact listing/compilation.
     Artifacts,
     /// Execute one AOT artifact.
@@ -113,6 +136,7 @@ pub fn parse(args: &[String]) -> Result<Command> {
         "ladder" => parse_ladder(rest),
         "stream" => parse_stream(rest),
         "fleet" => parse_fleet(rest),
+        "faultsweep" => parse_faultsweep(rest),
         "ablations" => {
             let json = parse_json_flag(cmd, rest)?;
             Ok(Command::Ablations { json })
@@ -169,6 +193,8 @@ fn parse_stream(args: &[String]) -> Result<Command> {
     let mut rung: Option<String> = None;
     let mut traffic = Traffic::BackToBack;
     let mut policy: Option<PolicyKind> = None;
+    let mut faults: Option<FaultModel> = None;
+    let mut recovery: Option<Recovery> = None;
     let mut json = false;
     let mut it = args[1..].iter();
     while let Some(flag) = it.next() {
@@ -208,6 +234,14 @@ fn parse_stream(args: &[String]) -> Result<Command> {
                 let v = it.next().ok_or_else(|| anyhow!("--policy needs a value"))?;
                 policy = Some(PolicyKind::parse(v)?);
             }
+            "--faults" => {
+                let v = it.next().ok_or_else(|| anyhow!("--faults needs a value"))?;
+                faults = Some(FaultModel::parse(v)?);
+            }
+            "--recovery" => {
+                let v = it.next().ok_or_else(|| anyhow!("--recovery needs a value"))?;
+                recovery = Some(Recovery::parse(v)?);
+            }
             "--json" => json = true,
             other => bail!("unknown stream flag {other:?}"),
         }
@@ -218,7 +252,27 @@ fn parse_stream(args: &[String]) -> Result<Command> {
              stream does not have — pick a --traffic model (or use greedy/lookahead)"
         );
     }
-    Ok(Command::Stream { workload, frames, window, shards, rung, traffic, policy, json })
+    let (faults, recovery) = check_fault_flags(faults, recovery)?;
+    Ok(Command::Stream {
+        workload, frames, window, shards, rung, traffic, policy, faults, recovery, json,
+    })
+}
+
+/// Cross-validate `--faults`/`--recovery`: a recovery policy without a
+/// fault model is a spec error, and `--faults none` is *exactly* an
+/// unfaulted run (it normalizes to no model at all, so the simulation
+/// takes the historical bitwise-identical path).
+fn check_fault_flags(
+    faults: Option<FaultModel>,
+    recovery: Option<Recovery>,
+) -> Result<(Option<FaultModel>, Option<Recovery>)> {
+    if recovery.is_some() && faults.is_none() {
+        bail!(
+            "--recovery without --faults has nothing to recover from — \
+             add a --faults model (or drop --recovery)"
+        );
+    }
+    Ok((faults.filter(|m| !m.is_none()), recovery))
 }
 
 /// Parse the `fleet` subcommand's flags: `[--chips N] [--frames F]
@@ -231,6 +285,8 @@ fn parse_fleet(args: &[String]) -> Result<Command> {
     let mut policy: Option<PolicyKind> = None;
     let mut drift = 0.0f64;
     let mut phase_jitter = 0.0f64;
+    let mut faults: Option<FaultModel> = None;
+    let mut recovery: Option<Recovery> = None;
     let mut json = false;
     let mut it = args.iter();
     while let Some(flag) = it.next() {
@@ -279,11 +335,47 @@ fn parse_fleet(args: &[String]) -> Result<Command> {
                     bail!("--phase-jitter must be a non-negative seconds value (got {v:?})");
                 }
             }
+            "--faults" => {
+                let v = it.next().ok_or_else(|| anyhow!("--faults needs a value"))?;
+                faults = Some(FaultModel::parse(v)?);
+            }
+            "--recovery" => {
+                let v = it.next().ok_or_else(|| anyhow!("--recovery needs a value"))?;
+                recovery = Some(Recovery::parse(v)?);
+            }
             "--json" => json = true,
             other => bail!("unknown fleet flag {other:?}"),
         }
     }
-    Ok(Command::Fleet { chips, frames, sample, threads, policy, drift, phase_jitter, json })
+    let (faults, recovery) = check_fault_flags(faults, recovery)?;
+    Ok(Command::Fleet {
+        chips, frames, sample, threads, policy, drift, phase_jitter, faults, recovery, json,
+    })
+}
+
+/// Parse the `faultsweep` subcommand: `<workload> [--frames N] [--json]`.
+fn parse_faultsweep(args: &[String]) -> Result<Command> {
+    let workload = args
+        .first()
+        .cloned()
+        .ok_or_else(|| anyhow!("faultsweep needs a workload; try `fulmine workloads`"))?;
+    let mut frames = 256usize;
+    let mut json = false;
+    let mut it = args[1..].iter();
+    while let Some(flag) = it.next() {
+        match flag.as_str() {
+            "--frames" => {
+                let v = it.next().ok_or_else(|| anyhow!("--frames needs a value"))?;
+                frames = v.parse().map_err(|_| anyhow!("bad --frames value {v:?}"))?;
+                if frames == 0 {
+                    bail!("--frames must be at least 1 (a stream of 0 frames schedules nothing)");
+                }
+            }
+            "--json" => json = true,
+            other => bail!("unknown faultsweep flag {other:?}"),
+        }
+    }
+    Ok(Command::FaultSweep { workload, frames, json })
 }
 
 /// Execute a parsed command, printing its output to stdout.
@@ -308,13 +400,26 @@ pub fn dispatch(cmd: &Command) -> Result<()> {
                 print!("{}", ladder.render_text());
             }
         }
-        Command::Stream { workload, frames, window, shards, rung, traffic, policy, json } => {
+        Command::Stream {
+            workload,
+            frames,
+            window,
+            shards,
+            rung,
+            traffic,
+            policy,
+            faults,
+            recovery,
+            json,
+        } => {
             let mut spec = RunSpec::new(workload)
                 .frames(*frames)
                 .shards(*shards)
                 .rung(RungSel::parse(rung.as_deref()))
                 .traffic(traffic.clone())
-                .policy(*policy);
+                .policy(*policy)
+                .faults(faults.clone())
+                .recovery(recovery.unwrap_or_default());
             if let Some(w) = window {
                 spec = spec.window(*w);
             }
@@ -325,13 +430,26 @@ pub fn dispatch(cmd: &Command) -> Result<()> {
                 print!("{}", run.render_text());
             }
         }
-        Command::Fleet { chips, frames, sample, threads, policy, drift, phase_jitter, json } => {
+        Command::Fleet {
+            chips,
+            frames,
+            sample,
+            threads,
+            policy,
+            drift,
+            phase_jitter,
+            faults,
+            recovery,
+            json,
+        } => {
             let fleet = FleetSpec::mixed(*chips, *frames)
                 .sample_k(*sample)
                 .threads(*threads)
                 .policy(*policy)
                 .drift(*drift)
-                .phase_jitter(*phase_jitter);
+                .phase_jitter(*phase_jitter)
+                .faults(faults.clone())
+                .recovery(recovery.unwrap_or_default());
             let report = SocSystem::new().fleet(&fleet)?;
             if *json {
                 println!("{}", report.to_json().render());
@@ -347,13 +465,23 @@ pub fn dispatch(cmd: &Command) -> Result<()> {
                 print!("{}", ablations.render_text());
             }
         }
+        Command::FaultSweep { workload, frames, json } => {
+            let sweep = SocSystem::new().fault_sweep(workload, *frames)?;
+            if *json {
+                println!("{}", sweep.to_json().render());
+            } else {
+                print!("{}", sweep.render_text());
+            }
+        }
         Command::Artifacts => {
             let mut rt = Runtime::open(default_artifact_dir())?;
             let names: Vec<String> = rt.artifact_names().iter().map(|s| s.to_string()).collect();
             for n in names {
                 let t = std::time::Instant::now();
                 rt.compile(&n)?;
-                let meta = rt.meta(&n).unwrap();
+                let meta = rt.meta(&n).ok_or_else(|| {
+                    anyhow!("artifact {n} compiled but has no manifest metadata")
+                })?;
                 println!(
                     "{n:<22} compiled in {:>7.1} ms   kind={} k={} simd={} inputs={}",
                     t.elapsed().as_secs_f64() * 1e3,
@@ -421,6 +549,8 @@ mod tests {
                 rung: None,
                 traffic: Traffic::BackToBack,
                 policy: None,
+                faults: None,
+                recovery: None,
                 json: false
             }
         );
@@ -435,6 +565,8 @@ mod tests {
                 rung: Some("hwce".into()),
                 traffic: Traffic::BackToBack,
                 policy: None,
+                faults: None,
+                recovery: None,
                 json: true
             }
         );
@@ -449,6 +581,8 @@ mod tests {
                 rung: None,
                 traffic: Traffic::BackToBack,
                 policy: None,
+                faults: None,
+                recovery: None,
                 json: false
             }
         );
@@ -463,6 +597,8 @@ mod tests {
                 rung: None,
                 traffic: Traffic::BackToBack,
                 policy: None,
+                faults: None,
+                recovery: None,
                 json: false
             }
         );
@@ -500,6 +636,8 @@ mod tests {
                 rung: None,
                 traffic: Traffic::BackToBack,
                 policy: None,
+                faults: None,
+                recovery: None,
                 json: false
             }
         );
@@ -571,6 +709,8 @@ mod tests {
                 rung: None,
                 traffic: Traffic::Periodic { rate_hz: 30.0 },
                 policy: None,
+                faults: None,
+                recovery: None,
                 json: false
             }
         );
@@ -584,6 +724,8 @@ mod tests {
                 rung: None,
                 traffic: Traffic::Poisson { rate_hz: 20.0, seed: 7 },
                 policy: None,
+                faults: None,
+                recovery: None,
                 json: false
             }
         );
@@ -678,6 +820,8 @@ mod tests {
                 policy: None,
                 drift: 0.0,
                 phase_jitter: 0.0,
+                faults: None,
+                recovery: None,
                 json: false
             }
         );
@@ -695,6 +839,8 @@ mod tests {
                 policy: None,
                 drift: 0.0,
                 phase_jitter: 0.0,
+                faults: None,
+                recovery: None,
                 json: true
             }
         );
@@ -762,10 +908,115 @@ mod tests {
                 policy: None,
                 drift: 0.0,
                 phase_jitter: 0.0,
+                faults: None,
+                recovery: None,
                 json: false
             }
         );
         assert!(dispatch(&cmd).is_ok(), "small fleet must simulate cleanly");
+    }
+
+    /// Satellite (fault flags): `--faults` accepts every model grammar
+    /// [`FaultModel::parse`] knows on both subcommands, `--recovery`
+    /// parses the three policies, and `--faults none` normalizes to *no
+    /// model at all* — bit-for-bit the same command as omitting the flag.
+    #[test]
+    fn parses_fault_and_recovery_flags() {
+        let cmd = parse(&argv(&[
+            "stream", "seizure", "--faults", "drop:0.05:7", "--recovery", "retry:5:0.001",
+        ]))
+        .unwrap();
+        match cmd {
+            Command::Stream { faults, recovery, .. } => {
+                let m = faults.expect("fault model parsed");
+                assert_eq!(m.drop_rate, 0.05);
+                assert_eq!(m.seed, 7);
+                assert_eq!(recovery, Some(Recovery::Retry { max: 5, backoff_s: 0.001 }));
+            }
+            other => panic!("expected stream, got {other:?}"),
+        }
+        let cmd = parse(&argv(&[
+            "fleet", "--chips", "16", "--faults", "mixed:0.01:0.02:0.001:0.005:3",
+            "--recovery", "degrade",
+        ]))
+        .unwrap();
+        match cmd {
+            Command::Fleet { faults, recovery, .. } => {
+                let m = faults.expect("fault model parsed");
+                assert_eq!(m.transient_rate, 0.02);
+                assert_eq!(m.seed, 3);
+                assert_eq!(recovery, Some(Recovery::Degrade));
+            }
+            other => panic!("expected fleet, got {other:?}"),
+        }
+        // `--faults none` IS the unfaulted command, not a third state
+        assert_eq!(
+            parse(&argv(&["stream", "seizure", "--faults", "none"])).unwrap(),
+            parse(&argv(&["stream", "seizure"])).unwrap()
+        );
+    }
+
+    /// Negative paths of the fault flags: missing values, malformed
+    /// models/policies, out-of-domain rates, and `--recovery` without a
+    /// fault model are all rejected at parse time with clear messages.
+    #[test]
+    fn rejects_bad_fault_and_recovery_flags() {
+        assert!(parse(&argv(&["stream", "seizure", "--faults"])).is_err());
+        assert!(parse(&argv(&["stream", "seizure", "--recovery"])).is_err());
+        assert!(parse(&argv(&["fleet", "--faults"])).is_err());
+        let e = parse(&argv(&["stream", "seizure", "--faults", "cosmic:0.1"]))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("unknown fault model"), "{e}");
+        let e = parse(&argv(&["stream", "seizure", "--faults", "drop:1.5"]))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("must be in [0, 1]"), "{e}");
+        let e = parse(&argv(&["stream", "seizure", "--faults", "drop:0.1", "--recovery", "pray"]))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("unknown recovery policy"), "{e}");
+        let e = parse(&argv(&["stream", "seizure", "--faults", "drop:0.1", "--recovery",
+            "retry:0"]))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("retry budget"), "{e}");
+        // a recovery policy with nothing to recover from is a spec error
+        for args in [
+            vec!["stream", "seizure", "--recovery", "retry"],
+            vec!["fleet", "--recovery", "reset"],
+        ] {
+            let e = parse(&argv(&args)).unwrap_err().to_string();
+            assert!(e.contains("--recovery without --faults"), "{e}");
+        }
+    }
+
+    /// A faulted stream dispatches end-to-end through the real CLI path —
+    /// fault plan built, recovery billed, reliability line rendered.
+    #[test]
+    fn faulted_stream_dispatches_end_to_end() {
+        let cmd = parse(&argv(&[
+            "stream", "seizure", "--frames", "16", "--faults", "mixed:0.1:0.1:0.02:0.05:5",
+            "--recovery", "retry:2:0.001",
+        ]))
+        .unwrap();
+        assert!(dispatch(&cmd).is_ok(), "faulted stream must simulate cleanly");
+    }
+
+    /// `faultsweep` parses its grammar, rejects garbage, and a small
+    /// sweep dispatches end-to-end.
+    #[test]
+    fn parses_and_dispatches_faultsweep() {
+        assert_eq!(
+            parse(&argv(&["faultsweep", "seizure", "--frames", "16", "--json"])).unwrap(),
+            Command::FaultSweep { workload: "seizure".into(), frames: 16, json: true }
+        );
+        let e = parse(&argv(&["faultsweep"])).unwrap_err().to_string();
+        assert!(e.contains("faultsweep needs a workload"), "{e}");
+        assert!(parse(&argv(&["faultsweep", "seizure", "--frames", "0"])).is_err());
+        assert!(parse(&argv(&["faultsweep", "seizure", "--bogus"])).is_err());
+        let cmd = parse(&argv(&["faultsweep", "seizure", "--frames", "16"])).unwrap();
+        assert!(dispatch(&cmd).is_ok(), "small fault sweep must simulate cleanly");
     }
 
     #[test]

@@ -307,7 +307,29 @@ pub struct StreamResult {
     pub deep_sleep_s: f64,
     /// Wake-up transitions the policy charged.
     pub wake_transitions: u64,
+    /// Frames whose output was lost to a fault (sensor dropouts, degraded
+    /// frames, exhausted retries) — 0 without a fault model.
+    pub frames_dropped: u64,
+    /// Retry executions beyond faulted frames' first attempts.
+    pub fault_retries: u64,
+    /// Full-chip resets (brown-outs plus watchdog resets).
+    pub chip_resets: u64,
+    /// Frames whose in-flight state a chip reset flushed.
+    pub state_loss_frames: u64,
+    /// Energy overhead of fault recovery (mJ): re-executed active energy
+    /// plus brown-out wake transitions.
+    pub recovery_energy_mj: f64,
     pub ledger: EnergyLedger,
+}
+
+impl StreamResult {
+    /// Fraction of frames whose output survived (1.0 fault-free).
+    pub fn availability(&self) -> f64 {
+        if self.frames == 0 {
+            return 1.0;
+        }
+        (self.frames as f64 - self.frames_dropped as f64) / self.frames as f64
+    }
 }
 
 /// Run `graph` single-frame and `frames`-deep (through the bounded-window
@@ -363,6 +385,27 @@ pub fn stream_graph_traffic_pm(
     release: &[f64],
     policy: Option<PolicyKind>,
 ) -> StreamResult {
+    stream_graph_faulted_pm(label, graph, frames, window, eq_ops_per_frame, release, policy, None)
+}
+
+/// [`stream_graph_traffic_pm`] under a fault-injection plan
+/// ([`crate::fault::FaultPlan`]): faulted frames execute their recovery
+/// variants through the scheduler's per-frame variant path, and the
+/// plan's reliability counters (plus the brown-out wake energy) attach
+/// to the packaged result. `None` routes through the *original*
+/// fault-free entry point — bitwise identical to a build without this
+/// module (the ISSUE 9 property).
+#[allow(clippy::too_many_arguments)]
+pub fn stream_graph_faulted_pm(
+    label: &str,
+    graph: &JobGraph,
+    frames: usize,
+    window: usize,
+    eq_ops_per_frame: u64,
+    release: &[f64],
+    policy: Option<PolicyKind>,
+    plan: Option<&crate::fault::FaultPlan>,
+) -> StreamResult {
     assert!(frames >= 1, "streaming needs at least one frame");
     // A window wider than the stream clamps to it: the rolling window
     // could never fill the extra slots, and the report should say what
@@ -370,13 +413,26 @@ pub fn stream_graph_traffic_pm(
     let window = window.min(frames);
     let single = Scheduler::run(graph);
     let analytic = graph.analytic();
-    let res = StreamScheduler::run_compiled_traffic_pm(
-        &crate::soc::sched::CompiledFrame::compile(graph),
-        frames,
-        window,
-        release,
-        policy,
-    );
+    let mut res = match plan {
+        None => StreamScheduler::run_compiled_traffic_pm(
+            &crate::soc::sched::CompiledFrame::compile(graph),
+            frames,
+            window,
+            release,
+            policy,
+        ),
+        Some(p) => StreamScheduler::run_with_variants_traffic_pm(
+            graph,
+            frames,
+            window,
+            &p.variant_refs(),
+            release,
+            policy,
+        ),
+    };
+    if let Some(p) = plan {
+        crate::fault::apply_stats(&mut res, &p.stats, 1.0);
+    }
     let energy_mj = res.ledger.total_mj();
     StreamResult {
         label: label.to_string(),
@@ -400,6 +456,11 @@ pub fn stream_graph_traffic_pm(
         sleep_s: res.sleep_s,
         deep_sleep_s: res.deep_sleep_s,
         wake_transitions: res.wake_transitions,
+        frames_dropped: res.frames_dropped,
+        fault_retries: res.fault_retries,
+        chip_resets: res.chip_resets,
+        state_loss_frames: res.state_loss_frames,
+        recovery_energy_mj: res.recovery_energy_mj,
         ledger: res.ledger,
     }
 }

@@ -1,0 +1,826 @@
+//! Deterministic fault injection and recovery for streamed endpoints.
+//!
+//! A deployed Fulmine endpoint fails in ways the fault-free simulator
+//! never sees: the sensor glitches and a frame simply never arrives, a
+//! soft error in TCDM or an engine corrupts a frame that must then
+//! re-execute, the battery browns out and the whole chip resets through
+//! the deep-sleep wake path, or the radio link at the encryption
+//! boundary drops and the CRY tail of a frame retries. A [`FaultModel`]
+//! turns per-class fault *rates* into a fully deterministic per-frame
+//! fault table — the same xorshift64* discipline as
+//! [`crate::traffic::Traffic`]: the draw for frame `f` depends only on
+//! `(model, f)`, so the same spec replays bitwise on any host, any
+//! shard split, any thread count.
+//!
+//! ## Integration: faults are per-frame variants
+//!
+//! No scheduler-core changes: a faulted frame compiles to a per-frame
+//! template *variant* ([`crate::soc::sched::StreamScheduler`]'s PR 5
+//! machinery) whose service times and prefolded energy rows carry the
+//! recovery cost — re-execution scales both duration and active energy
+//! (honest re-billing), recovery dead time (retry backoff, brown-out
+//! wake) stretches the frame's root jobs *without* scaling their active
+//! energy (the chip idles through it; only the makespan-proportional
+//! leakage grows), and a skipped frame is a zero-duration, zero-energy
+//! variant that flows through the window without scheduling work.
+//! Fast-forward suspends around faulted frames and re-engages after
+//! they retire, exactly as for any other variant; a run with
+//! `faults: None` never touches this module and stays bitwise identical
+//! to the pre-fault simulator (property-tested).
+//!
+//! Counters and the brown-out wake energy are computed here, in pure
+//! closed form over the fault table ([`FaultPlan::build`]), and
+//! attached to the finished [`SchedResult`] by [`apply_stats`] — the
+//! scheduler's cycle proof and replay machinery never see them.
+//!
+//! ## Recovery policies
+//!
+//! * [`Recovery::Retry`] — re-execute the faulted work, up to `max`
+//!   attempts with `backoff_s` of dead time per attempt; each retry may
+//!   fail again (drawn from the same per-frame stream), and a frame
+//!   that exhausts its retries is dropped *after* paying for every
+//!   attempt.
+//! * [`Recovery::Degrade`] — skip the frame, count it, keep streaming
+//!   (the right answer when freshness beats completeness).
+//! * [`Recovery::Reset`] — watchdog flush + restart: the frame
+//!   re-executes once after a full-chip reset (deep-sleep wake dead
+//!   time + wake energy via [`crate::soc::pm`]), and the in-flight
+//!   window's state is counted lost.
+//!
+//! A brown-out is a reset whatever the policy asks for — retrying
+//! cannot un-collapse a supply rail — though `degrade` declines the
+//! re-execution and drops the frame. A sensor dropout is always a skip:
+//! there is no data to retry.
+
+use crate::energy::Category;
+use crate::soc::pm;
+use crate::soc::sched::{Engine, JobGraph, SchedResult};
+use crate::traffic::{mix_seed, Xorshift64Star};
+use anyhow::{anyhow, bail, Result};
+
+/// Salt folded into the fault seed so the per-frame fault stream is
+/// independent of every other consumer of [`mix_seed`] (traffic phase,
+/// chip perturbations) even under equal user-facing seeds.
+const FAULT_SALT: u64 = 0xFA01_7D0C_ED5E_ED11;
+
+/// Hard cap on retry attempts — a watchdog bound, and it keeps the
+/// per-frame draw count O(1).
+pub const MAX_RETRIES: u32 = 64;
+
+/// Which fault struck a frame.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FrameFault {
+    /// Sensor dropout: the frame's data never arrives.
+    Drop,
+    /// Transient soft error (TCDM/engine): the frame completed but its
+    /// output is corrupt and the work must re-execute.
+    Transient,
+    /// Brown-out: full-chip reset through the deep-sleep wake path.
+    Brownout,
+    /// Link loss at the offload/encryption boundary: the CRY tail of
+    /// the frame retries.
+    Link,
+}
+
+impl FrameFault {
+    pub fn name(self) -> &'static str {
+        match self {
+            FrameFault::Drop => "drop",
+            FrameFault::Transient => "transient",
+            FrameFault::Brownout => "brownout",
+            FrameFault::Link => "link",
+        }
+    }
+}
+
+/// A seeded, per-frame-deterministic fault process over four fault
+/// classes. Rates are per-frame probabilities; the per-frame draw
+/// depends only on `(rates, seed, frame index)`, so fault tables are
+/// invariant across runs, shard splits and thread counts.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultModel {
+    /// P(sensor dropout) per frame.
+    pub drop_rate: f64,
+    /// P(transient soft error) per frame.
+    pub transient_rate: f64,
+    /// P(brown-out reset) per frame.
+    pub brownout_rate: f64,
+    /// P(link loss on the CRY tail) per frame.
+    pub link_rate: f64,
+    /// xorshift64* seed of the fault stream.
+    pub seed: u64,
+}
+
+impl FaultModel {
+    /// The fault-free model (`--faults none`): every rate zero. Running
+    /// with this model is bitwise identical to running without one.
+    pub fn none() -> FaultModel {
+        FaultModel {
+            drop_rate: 0.0,
+            transient_rate: 0.0,
+            brownout_rate: 0.0,
+            link_rate: 0.0,
+            seed: 1,
+        }
+    }
+
+    /// Whether no fault class can ever fire.
+    pub fn is_none(&self) -> bool {
+        self.total_rate() == 0.0
+    }
+
+    /// Sum of the class rates — the per-frame fault probability.
+    pub fn total_rate(&self) -> f64 {
+        self.drop_rate + self.transient_rate + self.brownout_rate + self.link_rate
+    }
+
+    /// Validate the rates: each finite and in `[0, 1]`, sum < 1 (the
+    /// no-fault bucket must keep positive measure — a fleet where every
+    /// frame faults is a spec error, not a simulation).
+    pub fn validate(&self) -> Result<()> {
+        for (name, r) in [
+            ("drop", self.drop_rate),
+            ("transient", self.transient_rate),
+            ("brownout", self.brownout_rate),
+            ("link", self.link_rate),
+        ] {
+            if !(r.is_finite() && (0.0..=1.0).contains(&r)) {
+                bail!("fault rate {name} must be in [0, 1], got {r}");
+            }
+        }
+        if self.total_rate() >= 1.0 {
+            bail!(
+                "fault rates sum to {} — every frame would fault; keep the sum below 1",
+                self.total_rate()
+            );
+        }
+        Ok(())
+    }
+
+    /// Canonical class-key fragment: distinct models (rates bit-exact
+    /// via `f64::to_bits`, distinct seeds) map to distinct keys.
+    pub fn key(&self) -> String {
+        format!(
+            "flt:{:016x}:{:016x}:{:016x}:{:016x}:{:016x}",
+            self.drop_rate.to_bits(),
+            self.transient_rate.to_bits(),
+            self.brownout_rate.to_bits(),
+            self.link_rate.to_bits(),
+            self.seed
+        )
+    }
+
+    /// Human-readable description for reports.
+    pub fn describe(&self) -> String {
+        if self.is_none() {
+            return "none".into();
+        }
+        format!(
+            "drop {} / transient {} / brownout {} / link {} (seed {})",
+            self.drop_rate, self.transient_rate, self.brownout_rate, self.link_rate, self.seed
+        )
+    }
+
+    /// Parse a CLI spec: `none`, `drop:RATE[:SEED]`,
+    /// `transient:RATE[:SEED]`, `brownout:RATE[:SEED]`,
+    /// `link:RATE[:SEED]`, or `mixed:DROP:TRANSIENT:BROWNOUT:LINK[:SEED]`
+    /// (seed defaults to 1).
+    pub fn parse(s: &str) -> Result<FaultModel> {
+        let parts: Vec<&str> = s.split(':').collect();
+        let seed_at = |idx: usize| -> Result<u64> {
+            match parts.get(idx) {
+                Some(p) => p.parse().map_err(|_| anyhow!("bad fault seed {p:?}")),
+                None => Ok(1),
+            }
+        };
+        let mut m = FaultModel::none();
+        match parts[0] {
+            "none" => {
+                if parts.len() != 1 {
+                    bail!("fault model 'none' takes no parameters: {s}");
+                }
+            }
+            kind @ ("drop" | "transient" | "brownout" | "link") => {
+                if parts.len() < 2 || parts.len() > 3 {
+                    bail!("expected {kind}:RATE[:SEED], got {s}");
+                }
+                let rate = parse_rate(parts[1])?;
+                match kind {
+                    "drop" => m.drop_rate = rate,
+                    "transient" => m.transient_rate = rate,
+                    "brownout" => m.brownout_rate = rate,
+                    _ => m.link_rate = rate,
+                }
+                m.seed = seed_at(2)?;
+            }
+            "mixed" => {
+                if parts.len() < 5 || parts.len() > 6 {
+                    bail!("expected mixed:DROP:TRANSIENT:BROWNOUT:LINK[:SEED], got {s}");
+                }
+                m.drop_rate = parse_rate(parts[1])?;
+                m.transient_rate = parse_rate(parts[2])?;
+                m.brownout_rate = parse_rate(parts[3])?;
+                m.link_rate = parse_rate(parts[4])?;
+                m.seed = seed_at(5)?;
+            }
+            other => bail!(
+                "unknown fault model '{other}' (expected none, drop, transient, brownout, link or mixed)"
+            ),
+        }
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// The per-frame draw stream for global frame `frame` — depends only
+    /// on `(seed, frame)`, never on how the stream is sharded.
+    fn frame_rng(&self, frame: u64) -> Xorshift64Star {
+        Xorshift64Star::new(mix_seed(self.seed ^ FAULT_SALT, frame))
+    }
+
+    /// One fault draw from an already-positioned per-frame stream:
+    /// cumulative bucketing of a single uniform draw, so the four class
+    /// rates partition the unit interval. `next_unit` is in `(0, 1]`,
+    /// so a zero-rate class can never fire.
+    fn draw(&self, rng: &mut Xorshift64Star) -> Option<FrameFault> {
+        let u = rng.next_unit();
+        let mut acc = self.drop_rate;
+        if u <= acc {
+            return Some(FrameFault::Drop);
+        }
+        acc += self.transient_rate;
+        if u <= acc {
+            return Some(FrameFault::Transient);
+        }
+        acc += self.brownout_rate;
+        if u <= acc {
+            return Some(FrameFault::Brownout);
+        }
+        acc += self.link_rate;
+        if u <= acc {
+            return Some(FrameFault::Link);
+        }
+        None
+    }
+
+    /// The fault (if any) striking global frame `frame`.
+    pub fn fault_at(&self, frame: usize) -> Option<FrameFault> {
+        if self.is_none() {
+            return None;
+        }
+        self.draw(&mut self.frame_rng(frame as u64))
+    }
+
+    /// Sparse fault table for global frames `[start, start + frames)`,
+    /// indexed *locally* (`0..frames`) — the form a shard consumes. The
+    /// union of shard tables over a partition of the global range equals
+    /// the unsharded table, re-indexed.
+    pub fn table(&self, start: usize, frames: usize) -> Vec<(usize, FrameFault)> {
+        if self.is_none() {
+            return Vec::new();
+        }
+        (0..frames)
+            .filter_map(|f| self.fault_at(start + f).map(|c| (f, c)))
+            .collect()
+    }
+}
+
+fn parse_rate(s: &str) -> Result<f64> {
+    s.parse::<f64>().map_err(|_| anyhow!("bad fault rate '{s}' (per-frame probability)"))
+}
+
+/// How the endpoint answers a fault.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Recovery {
+    /// Re-execute the faulted work, at most `max` attempts, `backoff_s`
+    /// of dead time before each; exhausting the budget drops the frame
+    /// (after paying for every attempt).
+    Retry { max: u32, backoff_s: f64 },
+    /// Skip the faulted frame, count it, keep streaming.
+    Degrade,
+    /// Watchdog flush + restart: pay a full chip reset and re-execute
+    /// the frame once.
+    Reset,
+}
+
+impl Default for Recovery {
+    /// The policy assumed when `--faults` is given without `--recovery`.
+    fn default() -> Self {
+        Recovery::Retry { max: 3, backoff_s: 0.0 }
+    }
+}
+
+impl Recovery {
+    pub fn validate(&self) -> Result<()> {
+        if let Recovery::Retry { max, backoff_s } = *self {
+            if max == 0 || max > MAX_RETRIES {
+                bail!("retry budget must be in 1..={MAX_RETRIES}, got {max}");
+            }
+            if !(backoff_s.is_finite() && backoff_s >= 0.0) {
+                bail!("retry backoff must be finite and >= 0 s, got {backoff_s}");
+            }
+        }
+        Ok(())
+    }
+
+    /// Canonical class-key fragment (bit-exact backoff).
+    pub fn key(&self) -> String {
+        match *self {
+            Recovery::Retry { max, backoff_s } => {
+                format!("retry:{max}:{:016x}", backoff_s.to_bits())
+            }
+            Recovery::Degrade => "degrade".into(),
+            Recovery::Reset => "reset".into(),
+        }
+    }
+
+    pub fn describe(&self) -> String {
+        match *self {
+            Recovery::Retry { max, backoff_s } => format!("retry (max {max}, backoff {backoff_s} s)"),
+            Recovery::Degrade => "degrade".into(),
+            Recovery::Reset => "reset".into(),
+        }
+    }
+
+    /// Parse a CLI spec: `retry[:MAX[:BACKOFF_S]]` (defaults 3, 0),
+    /// `degrade`, or `reset`.
+    pub fn parse(s: &str) -> Result<Recovery> {
+        let parts: Vec<&str> = s.split(':').collect();
+        let r = match parts[0] {
+            "retry" => {
+                if parts.len() > 3 {
+                    bail!("expected retry[:MAX[:BACKOFF_S]], got {s}");
+                }
+                let max = match parts.get(1) {
+                    Some(p) => p.parse().map_err(|_| anyhow!("bad retry budget {p:?}"))?,
+                    None => 3,
+                };
+                let backoff_s = match parts.get(2) {
+                    Some(p) => p
+                        .parse()
+                        .map_err(|_| anyhow!("bad retry backoff '{p}' (seconds)"))?,
+                    None => 0.0,
+                };
+                Recovery::Retry { max, backoff_s }
+            }
+            "degrade" => {
+                if parts.len() != 1 {
+                    bail!("recovery 'degrade' takes no parameters: {s}");
+                }
+                Recovery::Degrade
+            }
+            "reset" => {
+                if parts.len() != 1 {
+                    bail!("recovery 'reset' takes no parameters: {s}");
+                }
+                Recovery::Reset
+            }
+            other => bail!("unknown recovery policy '{other}' (expected retry, degrade or reset)"),
+        };
+        r.validate()?;
+        Ok(r)
+    }
+}
+
+/// Reliability counters of one faulted stream, computed in closed form
+/// over the fault table and attached to the finished [`SchedResult`]
+/// by [`apply_stats`]. Counters are per-stream (per-chip in a fleet);
+/// energies are in the stream's nominal time base and scale with a
+/// member chip's drift factor exactly like every other energy.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct FaultStats {
+    /// Frames struck by any fault class.
+    pub faulted_frames: u64,
+    /// Frames whose output was lost (sensor dropouts, degraded frames,
+    /// exhausted retry budgets) — the numerator of unavailability.
+    pub frames_dropped: u64,
+    /// Retry executions performed beyond each frame's first attempt.
+    pub fault_retries: u64,
+    /// Full-chip resets (brown-outs plus watchdog resets).
+    pub chip_resets: u64,
+    /// Frames whose in-flight state a chip reset flushed (bounded by
+    /// the streaming window per event).
+    pub state_loss_frames: u64,
+    /// Energy overhead of recovery (mJ): re-executed active energy plus
+    /// the brown-out wake transitions.
+    pub recovery_energy_mj: f64,
+    /// Portion of `recovery_energy_mj` that is wake-transition energy —
+    /// charged into the ledger's `Idle` category post-run (re-executed
+    /// active energy reaches the ledger through the variants).
+    pub wake_mj: f64,
+}
+
+impl FaultStats {
+    /// Fraction of frames whose output survived.
+    pub fn availability(&self, frames: usize) -> f64 {
+        if frames == 0 {
+            return 1.0;
+        }
+        (frames as f64 - self.frames_dropped as f64) / frames as f64
+    }
+}
+
+/// A faulted stream's compiled recovery plan: one variant [`JobGraph`]
+/// per faulted frame (local indices, ascending — the order
+/// [`crate::soc::sched::StreamScheduler::run_with_variants`] wants) and
+/// the closed-form reliability counters.
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    pub variants: Vec<(usize, JobGraph)>,
+    pub stats: FaultStats,
+}
+
+impl FaultPlan {
+    /// Build the plan for global frames `[start, start + frames)` of a
+    /// stream of `frame`-template frames admitted through a
+    /// `window`-deep in-flight window. Pure: depends only on the
+    /// arguments, so shards and threads agree by construction.
+    pub fn build(
+        model: &FaultModel,
+        recovery: Recovery,
+        frame: &JobGraph,
+        start: usize,
+        frames: usize,
+        window: usize,
+    ) -> FaultPlan {
+        let mut plan = FaultPlan { variants: Vec::new(), stats: FaultStats::default() };
+        if model.is_none() {
+            return plan;
+        }
+        let base_mj = frame.active_mj();
+        for f in 0..frames {
+            let mut rng = model.frame_rng((start + f) as u64);
+            let Some(fault) = model.draw(&mut rng) else { continue };
+            plan.stats.faulted_frames += 1;
+            let in_flight = window.min(frames - f);
+            let variant = match (fault, recovery) {
+                // No data arrived; nothing to retry, reset or degrade to.
+                (FrameFault::Drop, _) => {
+                    plan.stats.frames_dropped += 1;
+                    skip_variant(frame)
+                }
+                (FrameFault::Transient, Recovery::Retry { max, backoff_s }) => {
+                    let (execs, ok) = retry_attempts(&mut rng, model.transient_rate, max);
+                    plan.stats.fault_retries += (execs - 1) as u64;
+                    if !ok {
+                        plan.stats.frames_dropped += 1;
+                    }
+                    rework_variant(frame, execs as f64, (execs - 1) as f64 * backoff_s, false)
+                }
+                (FrameFault::Link, Recovery::Retry { max, backoff_s }) => {
+                    let (execs, ok) = retry_attempts(&mut rng, model.link_rate, max);
+                    plan.stats.fault_retries += (execs - 1) as u64;
+                    if !ok {
+                        plan.stats.frames_dropped += 1;
+                    }
+                    cry_rework_variant(frame, execs as f64, (execs - 1) as f64 * backoff_s)
+                }
+                (FrameFault::Transient | FrameFault::Link, Recovery::Degrade) => {
+                    plan.stats.frames_dropped += 1;
+                    skip_variant(frame)
+                }
+                // A watchdog reset answers transient/link faults under
+                // the reset policy; a brown-out *is* a reset whatever
+                // the policy (a supply collapse cannot be retried),
+                // except that degrade declines the re-execution.
+                (FrameFault::Brownout, Recovery::Degrade) => {
+                    plan.stats.frames_dropped += 1;
+                    plan.stats.chip_resets += 1;
+                    plan.stats.state_loss_frames += in_flight as u64;
+                    plan.stats.wake_mj += pm::brownout_wake_mj();
+                    dead_variant(frame, pm::brownout_dead_s())
+                }
+                (FrameFault::Transient | FrameFault::Link, Recovery::Reset)
+                | (FrameFault::Brownout, _) => {
+                    plan.stats.chip_resets += 1;
+                    plan.stats.state_loss_frames += in_flight as u64;
+                    plan.stats.wake_mj += pm::brownout_wake_mj();
+                    rework_variant(frame, 2.0, pm::brownout_dead_s(), false)
+                }
+            };
+            // Recovery overhead = the variant's extra active energy
+            // (never credit skipped frames' savings as overhead).
+            plan.stats.recovery_energy_mj += (variant.active_mj() - base_mj).max(0.0);
+            plan.variants.push((f, variant));
+        }
+        plan.stats.recovery_energy_mj += plan.stats.wake_mj;
+        plan
+    }
+
+    /// The variants as the borrow slice the scheduler entry points take.
+    pub fn variant_refs(&self) -> Vec<(usize, &JobGraph)> {
+        self.variants.iter().map(|(f, g)| (*f, g)).collect()
+    }
+}
+
+/// Attach a plan's counters to a finished result, with the wake energy
+/// charged into the ledger's `Idle` category and every energy scaled by
+/// the chip's time-base factor (`1.0` for a nominal chip; a drifted
+/// member's watchdog and wake intervals stretch with its crystal, the
+/// same convention as the FLL relock). Called identically on live runs
+/// and closed-form derived members, so fleet parity stays bitwise.
+pub fn apply_stats(r: &mut SchedResult, stats: &FaultStats, scale: f64) {
+    r.frames_dropped += stats.frames_dropped;
+    r.fault_retries += stats.fault_retries;
+    r.chip_resets += stats.chip_resets;
+    r.state_loss_frames += stats.state_loss_frames;
+    r.recovery_energy_mj += stats.recovery_energy_mj * scale;
+    if stats.wake_mj != 0.0 {
+        r.ledger.charge_mj(Category::Idle, stats.wake_mj * scale);
+    }
+}
+
+/// Retry loop over an already-positioned per-frame draw stream: the
+/// first execution has failed; each retry fails again with the class's
+/// rate. Returns (total executions, whether the frame finally
+/// succeeded). Deterministic: the draws continue the same per-frame
+/// stream the fault came from.
+fn retry_attempts(rng: &mut Xorshift64Star, rate: f64, max: u32) -> (u32, bool) {
+    let mut execs = 1u32;
+    for _ in 0..max.min(MAX_RETRIES) {
+        execs += 1;
+        if rng.next_unit() > rate {
+            return (execs, true);
+        }
+    }
+    (execs, false)
+}
+
+/// Whether a job runs on a HWCRYPT datapath — the CRY tail a link-loss
+/// retry re-executes.
+fn is_cry(engines: &[Engine]) -> bool {
+    engines.iter().any(|e| matches!(e, Engine::HwcryptAes | Engine::HwcryptKec))
+}
+
+/// The skipped frame: zero service time, zero active energy. It flows
+/// through the window (admission, retirement) without scheduling work.
+fn skip_variant(frame: &JobGraph) -> JobGraph {
+    let mut v = frame.clone();
+    for job in &mut v.jobs {
+        job.duration_s = 0.0;
+        for c in &mut job.charges {
+            c.2 = 0.0;
+        }
+    }
+    v
+}
+
+/// A dropped frame that still pays `dead_s` of recovery dead time (the
+/// brown-out wake under degrade): roots stretch by the dead time with
+/// their active energy zeroed like every other job's.
+fn dead_variant(frame: &JobGraph, dead_s: f64) -> JobGraph {
+    let mut v = skip_variant(frame);
+    for job in &mut v.jobs {
+        if job.deps.is_empty() {
+            job.duration_s = dead_s;
+        }
+    }
+    v
+}
+
+/// The re-executed frame: every job's service time and active energy
+/// scale by `factor` (`cry_only` restricts the scaling to HWCRYPT
+/// jobs), and `dead_s` of recovery dead time stretches the root jobs
+/// with their charge multiplicities compensated so the dead interval
+/// bills *no* active energy — the chip idles through a backoff or a
+/// wake, and only the makespan-proportional leakage grows.
+fn stretch_variant(frame: &JobGraph, factor: f64, dead_s: f64, cry_only: bool) -> JobGraph {
+    let mut v = frame.clone();
+    for job in &mut v.jobs {
+        if !cry_only || is_cry(&job.engines) {
+            job.duration_s *= factor;
+        }
+        if dead_s > 0.0 && job.deps.is_empty() {
+            let work = job.duration_s;
+            job.duration_s = work + dead_s;
+            let ratio = if work + dead_s > 0.0 { work / (work + dead_s) } else { 0.0 };
+            for c in &mut job.charges {
+                c.2 *= ratio;
+            }
+        }
+    }
+    v
+}
+
+fn rework_variant(frame: &JobGraph, factor: f64, dead_s: f64, cry_only: bool) -> JobGraph {
+    stretch_variant(frame, factor, dead_s, cry_only)
+}
+
+fn cry_rework_variant(frame: &JobGraph, factor: f64, dead_s: f64) -> JobGraph {
+    stretch_variant(frame, factor, dead_s, true)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::energy::Category;
+    use crate::soc::opmodes::{OperatingMode, OperatingPoint};
+    use crate::soc::power::Component;
+    use crate::soc::sched::Job;
+
+    fn graph() -> JobGraph {
+        let mut g = JobGraph::new();
+        let a = g.push(Job {
+            label: "sw",
+            engines: vec![Engine::Core(0)],
+            op: OperatingPoint::new(OperatingMode::Sw, 0.8),
+            duration_s: 0.25,
+            deps: vec![],
+            charges: vec![(Category::OtherSw, Component::Core, 1.0)],
+        });
+        g.push(Job {
+            label: "cry",
+            engines: vec![Engine::HwcryptAes],
+            op: OperatingPoint::new(OperatingMode::Sw, 0.8),
+            duration_s: 0.125,
+            deps: vec![a],
+            charges: vec![(Category::Crypto, Component::HwcryptAes, 1.0)],
+        });
+        g
+    }
+
+    fn model(rate: f64) -> FaultModel {
+        FaultModel { transient_rate: rate, seed: 7, ..FaultModel::none() }
+    }
+
+    #[test]
+    fn parse_round_trips_and_rejects() {
+        assert!(FaultModel::parse("none").unwrap().is_none());
+        let m = FaultModel::parse("drop:0.01:9").unwrap();
+        assert_eq!(m.drop_rate, 0.01);
+        assert_eq!(m.seed, 9);
+        let m = FaultModel::parse("transient:0.05").unwrap();
+        assert_eq!(m.transient_rate, 0.05);
+        assert_eq!(m.seed, 1);
+        let m = FaultModel::parse("mixed:0.01:0.02:0.003:0.04:5").unwrap();
+        assert_eq!(
+            (m.drop_rate, m.transient_rate, m.brownout_rate, m.link_rate, m.seed),
+            (0.01, 0.02, 0.003, 0.04, 5)
+        );
+        for bad in [
+            "none:1",
+            "drop",
+            "drop:x",
+            "drop:1.5",
+            "drop:-0.1",
+            "mixed:0.5:0.5:0.1:0.1",
+            "mixed:0.1:0.1",
+            "transient:0.1:badseed",
+            "gamma:0.1",
+        ] {
+            assert!(FaultModel::parse(bad).is_err(), "{bad} should be rejected");
+        }
+    }
+
+    #[test]
+    fn recovery_parse_round_trips_and_rejects() {
+        assert_eq!(Recovery::parse("retry").unwrap(), Recovery::Retry { max: 3, backoff_s: 0.0 });
+        assert_eq!(
+            Recovery::parse("retry:5:0.01").unwrap(),
+            Recovery::Retry { max: 5, backoff_s: 0.01 }
+        );
+        assert_eq!(Recovery::parse("degrade").unwrap(), Recovery::Degrade);
+        assert_eq!(Recovery::parse("reset").unwrap(), Recovery::Reset);
+        for bad in ["retry:0", "retry:999", "retry:2:-1", "retry:2:x", "retry:x", "degrade:1", "reset:x", "panic"] {
+            assert!(Recovery::parse(bad).is_err(), "{bad} should be rejected");
+        }
+    }
+
+    #[test]
+    fn fault_table_is_deterministic_and_seed_sensitive() {
+        let m = model(0.1);
+        assert_eq!(m.table(0, 512), m.table(0, 512), "same model must replay");
+        let other = FaultModel { seed: 8, ..m.clone() };
+        assert_ne!(m.table(0, 512), other.table(0, 512), "seeds must matter");
+        let t = m.table(0, 4096);
+        assert!(!t.is_empty(), "a 10% rate over 4096 frames must fire");
+        // roughly the expected count — the draw is one uniform per frame
+        assert!(t.len() > 256 && t.len() < 640, "{} faults at 10%", t.len());
+    }
+
+    #[test]
+    fn shard_tables_partition_the_global_table() {
+        let m = FaultModel {
+            drop_rate: 0.02,
+            transient_rate: 0.03,
+            brownout_rate: 0.01,
+            link_rate: 0.02,
+            seed: 42,
+        };
+        let whole = m.table(0, 300);
+        for splits in [2usize, 3, 4] {
+            let per = 300 / splits;
+            let mut joined = Vec::new();
+            for s in 0..splits {
+                for (f, c) in m.table(s * per, per) {
+                    joined.push((s * per + f, c));
+                }
+            }
+            assert_eq!(whole, joined, "{splits}-way shard split must agree");
+        }
+    }
+
+    #[test]
+    fn zero_rates_never_fire_and_keys_are_injective() {
+        assert!(FaultModel::none().table(0, 10_000).is_empty());
+        let keys: std::collections::BTreeSet<String> = [
+            FaultModel::none(),
+            model(0.1),
+            model(0.2),
+            FaultModel { seed: 9, ..model(0.1) },
+            FaultModel { link_rate: 0.1, ..FaultModel::none() },
+        ]
+        .iter()
+        .map(|m| m.key())
+        .collect();
+        assert_eq!(keys.len(), 5);
+        assert_ne!(Recovery::parse("retry:3:0").unwrap().key(), Recovery::Degrade.key());
+    }
+
+    #[test]
+    fn plan_counts_and_energies_are_consistent() {
+        let g = graph();
+        let m = model(0.1);
+        let plan = FaultPlan::build(&m, Recovery::default(), &g, 0, 1024, 8);
+        assert_eq!(plan.stats.faulted_frames as usize, plan.variants.len());
+        assert_eq!(plan.stats.faulted_frames as usize, m.table(0, 1024).len());
+        assert!(plan.stats.fault_retries >= plan.stats.faulted_frames, "each fault retries");
+        assert!(plan.stats.recovery_energy_mj > 0.0);
+        assert_eq!(plan.stats.chip_resets, 0, "transients under retry never reset");
+        // variants arrive sorted by frame, the order the scheduler wants
+        assert!(plan.variants.windows(2).all(|w| w[0].0 < w[1].0));
+        // a retried frame bills at least twice the base active energy
+        let base = g.active_mj();
+        let (_, v) = &plan.variants[0];
+        assert!(v.active_mj() >= 2.0 * base - 1e-12, "{} vs {base}", v.active_mj());
+    }
+
+    #[test]
+    fn degrade_skips_and_reset_bills_the_wake() {
+        let g = graph();
+        let m = model(0.1);
+        let degrade = FaultPlan::build(&m, Recovery::Degrade, &g, 0, 512, 8);
+        assert_eq!(degrade.stats.frames_dropped, degrade.stats.faulted_frames);
+        assert_eq!(degrade.stats.recovery_energy_mj, 0.0, "skips cost no recovery energy");
+        for (_, v) in &degrade.variants {
+            assert_eq!(v.active_mj(), 0.0);
+            assert!(v.jobs.iter().all(|j| j.duration_s == 0.0));
+        }
+        let reset = FaultPlan::build(&m, Recovery::Reset, &g, 0, 512, 8);
+        assert_eq!(reset.stats.chip_resets, reset.stats.faulted_frames);
+        assert!(reset.stats.wake_mj > 0.0);
+        assert!(reset.stats.state_loss_frames >= reset.stats.chip_resets);
+        // dead time stretches the roots but bills no extra active energy
+        let base = g.active_mj();
+        for (_, v) in &reset.variants {
+            assert!((v.active_mj() - 2.0 * base).abs() < 1e-9, "{} vs {}", v.active_mj(), 2.0 * base);
+            assert!(v.jobs[0].duration_s > 2.0 * g.jobs[0].duration_s);
+        }
+    }
+
+    #[test]
+    fn link_faults_rework_only_the_cry_tail() {
+        let g = graph();
+        let m = FaultModel { link_rate: 0.1, seed: 3, ..FaultModel::none() };
+        let plan = FaultPlan::build(&m, Recovery::default(), &g, 0, 512, 8);
+        assert!(!plan.variants.is_empty());
+        for (_, v) in &plan.variants {
+            assert_eq!(v.jobs[0].duration_s, g.jobs[0].duration_s, "SW phase untouched");
+            assert!(v.jobs[1].duration_s >= 2.0 * g.jobs[1].duration_s, "CRY tail retried");
+        }
+    }
+
+    #[test]
+    fn brownout_is_a_reset_under_every_policy() {
+        let g = graph();
+        let m = FaultModel { brownout_rate: 0.05, seed: 11, ..FaultModel::none() };
+        for rec in [Recovery::default(), Recovery::Reset, Recovery::Degrade] {
+            let plan = FaultPlan::build(&m, rec, &g, 0, 512, 8);
+            assert_eq!(plan.stats.chip_resets, plan.stats.faulted_frames, "{rec:?}");
+            assert!(plan.stats.wake_mj > 0.0, "{rec:?}");
+        }
+    }
+
+    #[test]
+    fn apply_stats_attaches_counters_and_wake_energy() {
+        let g = graph();
+        let mut r = crate::soc::sched::Scheduler::run(&g);
+        let before = r.ledger.total_mj();
+        let stats = FaultStats {
+            faulted_frames: 3,
+            frames_dropped: 1,
+            fault_retries: 2,
+            chip_resets: 1,
+            state_loss_frames: 4,
+            recovery_energy_mj: 0.5,
+            wake_mj: 0.125,
+        };
+        apply_stats(&mut r, &stats, 1.0);
+        assert_eq!(r.frames_dropped, 1);
+        assert_eq!(r.fault_retries, 2);
+        assert_eq!(r.chip_resets, 1);
+        assert_eq!(r.state_loss_frames, 4);
+        assert_eq!(r.recovery_energy_mj, 0.5);
+        assert!((r.ledger.total_mj() - before - 0.125).abs() < 1e-12);
+        assert!((stats.availability(4) - 0.75).abs() < 1e-12);
+    }
+}

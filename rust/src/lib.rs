@@ -113,6 +113,7 @@ pub mod coordinator;
 pub mod crypto;
 pub mod energy;
 pub mod extmem;
+pub mod fault;
 pub mod fixedpoint;
 pub mod hwce;
 pub mod hwcrypt;

@@ -57,6 +57,16 @@ pub struct Merged {
     pub deep_sleep_s: f64,
     /// Summed wake transitions across chips.
     pub wake_transitions: u64,
+    /// Summed frames dropped to faults across chips — see [`crate::fault`].
+    pub frames_dropped: u64,
+    /// Summed fault-recovery retry attempts across chips.
+    pub fault_retries: u64,
+    /// Summed brown-out / policy-forced chip resets across chips.
+    pub chip_resets: u64,
+    /// Summed in-flight frames lost to resets across chips.
+    pub state_loss_frames: u64,
+    /// Summed extra energy spent recovering from faults (mJ) across chips.
+    pub recovery_energy_mj: f64,
     /// Slowest member's makespan.
     pub time_s: f64,
     /// Total chips absorbed (populations included).
@@ -79,6 +89,11 @@ impl Merged {
             sleep_s: 0.0,
             deep_sleep_s: 0.0,
             wake_transitions: 0,
+            frames_dropped: 0,
+            fault_retries: 0,
+            chip_resets: 0,
+            state_loss_frames: 0,
+            recovery_energy_mj: 0.0,
             time_s: 0.0,
             chips: 0,
         }
@@ -106,6 +121,11 @@ impl Merged {
         self.sleep_s += r.sleep_s * w;
         self.deep_sleep_s += r.deep_sleep_s * w;
         self.wake_transitions += r.wake_transitions * chips as u64;
+        self.frames_dropped += r.frames_dropped * chips as u64;
+        self.fault_retries += r.fault_retries * chips as u64;
+        self.chip_resets += r.chip_resets * chips as u64;
+        self.state_loss_frames += r.state_loss_frames * chips as u64;
+        self.recovery_energy_mj += r.recovery_energy_mj * w;
         self.time_s = self.time_s.max(r.makespan_s);
         self.chips += chips;
         // chips run concurrently: elapsed time is the slowest member, not
@@ -140,6 +160,11 @@ impl Merged {
         self.sleep_s += other.sleep_s;
         self.deep_sleep_s += other.deep_sleep_s;
         self.wake_transitions += other.wake_transitions;
+        self.frames_dropped += other.frames_dropped;
+        self.fault_retries += other.fault_retries;
+        self.chip_resets += other.chip_resets;
+        self.state_loss_frames += other.state_loss_frames;
+        self.recovery_energy_mj += other.recovery_energy_mj;
         self.time_s = self.time_s.max(other.time_s);
         self.chips += other.chips;
         self.ledger.elapsed_s = self.time_s;
@@ -657,6 +682,11 @@ mod tests {
             sleep_s: d(4),
             deep_sleep_s: d(5),
             wake_transitions: (i % 7) as u64,
+            frames_dropped: (i % 3) as u64,
+            fault_retries: (i % 6) as u64,
+            chip_resets: (i % 2) as u64,
+            state_loss_frames: (i % 4) as u64,
+            recovery_energy_mj: d(6),
         }
     }
 
@@ -681,6 +711,11 @@ mod tests {
         assert_eq!(a.sleep_s.to_bits(), b.sleep_s.to_bits());
         assert_eq!(a.deep_sleep_s.to_bits(), b.deep_sleep_s.to_bits());
         assert_eq!(a.wake_transitions, b.wake_transitions);
+        assert_eq!(a.frames_dropped, b.frames_dropped);
+        assert_eq!(a.fault_retries, b.fault_retries);
+        assert_eq!(a.chip_resets, b.chip_resets);
+        assert_eq!(a.state_loss_frames, b.state_loss_frames);
+        assert_eq!(a.recovery_energy_mj.to_bits(), b.recovery_energy_mj.to_bits());
         assert_eq!(a.time_s.to_bits(), b.time_s.to_bits());
         assert_eq!(a.chips, b.chips);
     }
@@ -711,6 +746,11 @@ mod tests {
             assert_eq!(m.sleep_s.to_bits(), r.sleep_s.to_bits());
             assert_eq!(m.deep_sleep_s.to_bits(), r.deep_sleep_s.to_bits());
             assert_eq!(m.wake_transitions, r.wake_transitions);
+            assert_eq!(m.frames_dropped, r.frames_dropped);
+            assert_eq!(m.fault_retries, r.fault_retries);
+            assert_eq!(m.chip_resets, r.chip_resets);
+            assert_eq!(m.state_loss_frames, r.state_loss_frames);
+            assert_eq!(m.recovery_energy_mj.to_bits(), r.recovery_energy_mj.to_bits());
             assert_eq!(m.time_s.to_bits(), r.makespan_s.to_bits());
             assert_eq!(m.chips, 1);
         }
@@ -754,6 +794,8 @@ mod tests {
         assert_eq!(scaled.total_jobs, 3 * r.n_jobs);
         assert_eq!(scaled.mode_switches, 3 * r.mode_switches);
         assert_eq!(scaled.wake_transitions, 3 * r.wake_transitions);
+        assert_eq!(scaled.fault_retries, 3 * r.fault_retries);
+        assert_eq!(scaled.frames_dropped, 3 * r.frames_dropped);
     }
 
     /// Property: `absorb_scaled` at scale 1.0 is bitwise the plain
@@ -825,6 +867,13 @@ mod tests {
         assert_eq!(s.wake_transitions, r.wake_transitions);
         assert_eq!(s.peak_resident_jobs, r.peak_resident_jobs);
         assert_eq!(s.fast_forwarded_frames, r.fast_forwarded_frames);
+        // fault counters are events, not time: counts survive, the extra
+        // recovery energy stretches with the time base
+        assert_eq!(s.frames_dropped, r.frames_dropped);
+        assert_eq!(s.fault_retries, r.fault_retries);
+        assert_eq!(s.chip_resets, r.chip_resets);
+        assert_eq!(s.state_loss_frames, r.state_loss_frames);
+        assert_eq!(s.recovery_energy_mj.to_bits(), (r.recovery_energy_mj * 2.0).to_bits());
     }
 
     #[test]

@@ -100,6 +100,22 @@ pub fn battery_days(energy_mj: f64, makespan_s: f64) -> f64 {
     BATTERY_MJ / energy_per_day_mj(energy_mj, makespan_s)
 }
 
+/// Dead time of a brown-out recovery (s): the supply collapse drops the
+/// whole chip to the deep-sleep rung, and the watchdog restart pays the
+/// full deep-sleep wake-up transition before the flushed frame can
+/// re-execute ([`crate::fault`] bills this per reset event).
+pub fn brownout_dead_s() -> f64 {
+    Domain::Chip.ladder().wake_s[2]
+}
+
+/// Energy of that restart transition (mJ): the deep-sleep wake interval
+/// billed at the burn power (the FLL-on idle rung) — the same wake-tail
+/// arithmetic a managed span's bill charges.
+pub fn brownout_wake_mj() -> f64 {
+    let l = Domain::Chip.ladder();
+    l.p_mw[0] * l.wake_s[2]
+}
+
 /// Which DVFS/sleep policy manages idle spans. Selected with
 /// `stream`/`fleet --policy`; `None` at the scheduler level means
 /// unmanaged (the pre-PM billing: active-idle leakage throughout).

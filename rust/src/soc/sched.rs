@@ -546,6 +546,11 @@ impl JobGraph {
             sleep_s: 0.0,
             deep_sleep_s: 0.0,
             wake_transitions: 0,
+            frames_dropped: 0,
+            fault_retries: 0,
+            chip_resets: 0,
+            state_loss_frames: 0,
+            recovery_energy_mj: 0.0,
         }
     }
 
@@ -663,6 +668,21 @@ pub struct SchedResult {
     /// Wake-up transitions charged by the policy (spans that descended
     /// below the FLL-on idle rung).
     pub wake_transitions: u64,
+    /// Frames whose output was lost to a fault (sensor dropouts,
+    /// degraded frames, exhausted retry budgets) — see [`crate::fault`].
+    /// Always 0 without a fault model; the scheduler core never writes
+    /// these five fields, [`crate::fault::apply_stats`] attaches them
+    /// post-run.
+    pub frames_dropped: u64,
+    /// Retry executions performed beyond faulted frames' first attempts.
+    pub fault_retries: u64,
+    /// Full-chip resets (brown-outs plus watchdog resets).
+    pub chip_resets: u64,
+    /// Frames whose in-flight state a chip reset flushed.
+    pub state_loss_frames: u64,
+    /// Energy overhead of fault recovery (mJ): re-executed active energy
+    /// plus brown-out wake transitions.
+    pub recovery_energy_mj: f64,
 }
 
 impl SchedResult {
@@ -702,6 +722,11 @@ impl SchedResult {
             sleep_s: self.sleep_s * scale,
             deep_sleep_s: self.deep_sleep_s * scale,
             wake_transitions: self.wake_transitions,
+            frames_dropped: self.frames_dropped,
+            fault_retries: self.fault_retries,
+            chip_resets: self.chip_resets,
+            state_loss_frames: self.state_loss_frames,
+            recovery_energy_mj: self.recovery_energy_mj * scale,
         }
     }
 }
@@ -1497,6 +1522,16 @@ impl ParamRep {
             sleep_s: gap_s + stall_s,
             deep_sleep_s: deep_s,
             wake_transitions: wakes,
+            // Fault counters are attached *after* member derivation
+            // ([`crate::fault::apply_stats`] runs the same arithmetic on
+            // the rep, the derived members, and the live fallbacks), so
+            // the rep's fields here are zero; carry them with
+            // [`SchedResult::rescaled`]'s convention regardless.
+            frames_dropped: self.result.frames_dropped,
+            fault_retries: self.result.fault_retries,
+            chip_resets: self.result.chip_resets,
+            state_loss_frames: self.result.state_loss_frames,
+            recovery_energy_mj: a * self.result.recovery_energy_mj,
         })
     }
 }
@@ -2563,6 +2598,11 @@ impl<'c> ExecCore<'c> {
             sleep_s: self.pm_gap_s + self.pm_stall_s,
             deep_sleep_s: self.pm_deep_s,
             wake_transitions: self.pm_wakes,
+            frames_dropped: 0,
+            fault_retries: 0,
+            chip_resets: 0,
+            state_loss_frames: 0,
+            recovery_energy_mj: 0.0,
         };
         (result, self.cats, self.profile)
     }
@@ -2713,6 +2753,11 @@ impl Scheduler {
             sleep_s: 0.0,
             deep_sleep_s: 0.0,
             wake_transitions: 0,
+            frames_dropped: 0,
+            fault_retries: 0,
+            chip_resets: 0,
+            state_loss_frames: 0,
+            recovery_energy_mj: 0.0,
         }
     }
 
@@ -2955,7 +3000,7 @@ impl StreamScheduler {
         window: usize,
         variants: &[(usize, &JobGraph)],
     ) -> SchedResult {
-        Self::run_variants_inner(frame, frames, window, variants, true)
+        Self::run_variants_inner(frame, frames, window, variants, &[], None, true)
     }
 
     /// [`StreamScheduler::run_with_variants`] with fast-forward disabled —
@@ -2966,26 +3011,123 @@ impl StreamScheduler {
         window: usize,
         variants: &[(usize, &JobGraph)],
     ) -> SchedResult {
-        Self::run_variants_inner(frame, frames, window, variants, false)
+        Self::run_variants_inner(frame, frames, window, variants, &[], None, false)
     }
 
+    /// [`StreamScheduler::run_with_variants`] under a traffic model and an
+    /// optional sleep/DVFS policy — the faulted-stream entry point
+    /// ([`crate::fault::FaultPlan`] compiles each faulted frame into a
+    /// variant; empty `variants` is exactly
+    /// [`StreamScheduler::run_compiled_traffic_pm`] on the compiled
+    /// template).
+    pub fn run_with_variants_traffic_pm(
+        frame: &JobGraph,
+        frames: usize,
+        window: usize,
+        variants: &[(usize, &JobGraph)],
+        release: &[f64],
+        policy: Option<PolicyKind>,
+    ) -> SchedResult {
+        Self::run_variants_inner(frame, frames, window, variants, release, policy, true)
+    }
+
+    /// [`StreamScheduler::run_with_variants_traffic_pm`] with fast-forward
+    /// disabled — the bitwise parity reference for faulted streams.
+    pub fn run_with_variants_traffic_live_pm(
+        frame: &JobGraph,
+        frames: usize,
+        window: usize,
+        variants: &[(usize, &JobGraph)],
+        release: &[f64],
+        policy: Option<PolicyKind>,
+    ) -> SchedResult {
+        Self::run_variants_inner(frame, frames, window, variants, release, policy, false)
+    }
+
+    #[allow(clippy::too_many_arguments)]
     fn run_variants_inner(
         frame: &JobGraph,
         frames: usize,
         window: usize,
         variants: &[(usize, &JobGraph)],
+        release: &[f64],
+        policy: Option<PolicyKind>,
         ff: bool,
     ) -> SchedResult {
-        assert!(frames >= 1, "streaming needs at least one frame");
-        assert!(window >= 1, "streaming needs at least one in-flight frame of window");
         let base = CompiledFrame::compile(frame);
         let mut compiled: Vec<(usize, CompiledFrame)> =
             variants.iter().map(|&(f, g)| (f, CompiledFrame::compile(g))).collect();
         compiled.sort_by_key(|v| v.0);
-        for w in compiled.windows(2) {
-            assert!(w[0].0 != w[1].0, "duplicate variant for frame {}", w[0].0);
+        Self::run_compiled_variants_traffic_pm(&base, &compiled, frames, window, release, policy, ff)
+    }
+
+    /// The compiled variant path the fleet runner drives directly: the
+    /// base template and the variants arrive pre-compiled (and possibly
+    /// uniformly rescaled for a drifted family member), already sorted by
+    /// frame. `ff` selects replay vs the live parity reference.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_compiled_variants_traffic_pm(
+        base: &CompiledFrame,
+        variants: &[(usize, CompiledFrame)],
+        frames: usize,
+        window: usize,
+        release: &[f64],
+        policy: Option<PolicyKind>,
+        ff: bool,
+    ) -> SchedResult {
+        assert!(frames >= 1, "streaming needs at least one frame");
+        assert!(window >= 1, "streaming needs at least one in-flight frame of window");
+        Self::check_release(release, frames);
+        Self::check_variants(base, variants, frames);
+        let mut core = ExecCore::new(base, variants, frames, window, ff);
+        core.release = release;
+        core.policy = policy;
+        core.run()
+    }
+
+    /// [`StreamScheduler::run_param_rep`] with per-frame variants — the
+    /// parametric-class representative of a *faulted* stream. Variants
+    /// scale uniformly with the member drift factor exactly like the base
+    /// template (they are part of the scaled input set), so the
+    /// closed-form member derivation is unchanged.
+    pub fn run_param_rep_variants(
+        frame: &CompiledFrame,
+        variants: &[(usize, CompiledFrame)],
+        frames: usize,
+        window: usize,
+        release: &[f64],
+        policy: Option<PolicyKind>,
+    ) -> ParamRep {
+        assert!(frames >= 1, "streaming needs at least one frame");
+        assert!(window >= 1, "streaming needs at least one in-flight frame of window");
+        Self::check_release(release, frames);
+        Self::check_variants(frame, variants, frames);
+        let mut core = ExecCore::new(frame, variants, frames, window, true);
+        core.release = release;
+        core.policy = policy;
+        core.profile = Some(ProfileRec::new());
+        let (result, cats, profile) = core.run_full();
+        let p = profile.expect("representative run records a profile");
+        ParamRep {
+            result,
+            cats,
+            vdd: frame.vdd,
+            ext_mem_present: frame.ext_mem_present,
+            policy,
+            has_release: !release.is_empty(),
+            spans: p.spans,
+            lead_gap_s: p.lead_gap_s,
+            release_anchored: p.release_anchored,
+            min_rel_margin: p.min_rel_margin,
+            min_abs_margin_s: p.min_abs_margin_s,
         }
-        for (f, v) in &compiled {
+    }
+
+    fn check_variants(base: &CompiledFrame, variants: &[(usize, CompiledFrame)], frames: usize) {
+        for w in variants.windows(2) {
+            assert!(w[0].0 < w[1].0, "variants must be sorted by frame, without duplicates");
+        }
+        for (f, v) in variants {
             assert!(*f < frames, "variant frame {f} beyond the {frames}-frame stream");
             assert!(
                 base.structurally_eq(v),
@@ -3000,7 +3142,6 @@ impl StreamScheduler {
                 "variant for frame {f} must share the template's FLL relock (time base)"
             );
         }
-        ExecCore::new(&base, &compiled, frames, window, ff).run()
     }
 }
 
@@ -3554,6 +3695,15 @@ mod tests {
         assert_eq!(a.sleep_s.to_bits(), b.sleep_s.to_bits(), "{label}: sleep");
         assert_eq!(a.deep_sleep_s.to_bits(), b.deep_sleep_s.to_bits(), "{label}: deep sleep");
         assert_eq!(a.wake_transitions, b.wake_transitions, "{label}: wake transitions");
+        assert_eq!(a.frames_dropped, b.frames_dropped, "{label}: dropped frames");
+        assert_eq!(a.fault_retries, b.fault_retries, "{label}: fault retries");
+        assert_eq!(a.chip_resets, b.chip_resets, "{label}: chip resets");
+        assert_eq!(a.state_loss_frames, b.state_loss_frames, "{label}: state-loss frames");
+        assert_eq!(
+            a.recovery_energy_mj.to_bits(),
+            b.recovery_energy_mj.to_bits(),
+            "{label}: recovery energy"
+        );
     }
 
     /// A tiled-pipeline-shaped frame (fetch → decrypt → conv → epilogue →
@@ -3869,6 +4019,16 @@ mod tests {
         assert_eq!(a.n_jobs, b.n_jobs, "{label}: job count");
         assert_eq!(a.wake_transitions, b.wake_transitions, "{label}: wake transitions");
         assert_eq!(a.peak_resident_jobs, b.peak_resident_jobs, "{label}: peak residency");
+        assert_eq!(a.frames_dropped, b.frames_dropped, "{label}: dropped frames");
+        assert_eq!(a.fault_retries, b.fault_retries, "{label}: fault retries");
+        assert_eq!(a.chip_resets, b.chip_resets, "{label}: chip resets");
+        assert_eq!(a.state_loss_frames, b.state_loss_frames, "{label}: state-loss frames");
+        assert!(
+            close(a.recovery_energy_mj, b.recovery_energy_mj),
+            "{label}: recovery energy {} vs {}",
+            a.recovery_energy_mj,
+            b.recovery_energy_mj
+        );
         for cat in Category::all() {
             assert!(
                 close(a.ledger.energy_mj(cat), b.ledger.energy_mj(cat)),
@@ -4188,5 +4348,99 @@ mod tests {
     fn short_release_table_rejected() {
         let g = flash_frame(1);
         StreamScheduler::run_traffic(&g, 4, 2, &[0.0, 1.0]);
+    }
+
+    // ---- fault injection (crate::fault through the variant path) -------
+
+    /// Empty variants through the traffic entry point are exactly the
+    /// plain traffic path — the `faults: None` guarantee at the
+    /// scheduler boundary, per policy.
+    #[test]
+    fn empty_variants_traffic_is_the_plain_traffic_path() {
+        let g = flash_frame(2);
+        let rel = Traffic::Periodic { rate_hz: 256.0 }.release_times(48);
+        let cf = CompiledFrame::compile(&g);
+        for policy in [None, Some(PolicyKind::Lookahead)] {
+            let plain = StreamScheduler::run_compiled_traffic_pm(&cf, 48, 8, &rel, policy);
+            let faulted =
+                StreamScheduler::run_with_variants_traffic_pm(&g, 48, 8, &[], &rel, policy);
+            assert_bitwise(&faulted, &plain, &format!("no variants, policy {policy:?}"));
+            assert_eq!(faulted.fast_forwarded_frames, plain.fast_forwarded_frames);
+        }
+    }
+
+    /// A seeded faulted gap-dominated stream: fast-forward suspends
+    /// around every faulted frame, re-engages between them (ff share > 0
+    /// — the ISSUE 9 acceptance bar), and the result is bitwise the live
+    /// path's, per recovery policy.
+    #[test]
+    fn faulted_stream_replays_bitwise_and_reengages() {
+        use crate::fault::{FaultModel, FaultPlan, Recovery};
+        let g = flash_frame(1);
+        let frames = 256usize;
+        let rel = Traffic::Periodic { rate_hz: 512.0 }.release_times(frames);
+        let model = FaultModel::parse("mixed:0.005:0.02:0.002:0.01:7").unwrap();
+        for recovery in [Recovery::default(), Recovery::Degrade, Recovery::Reset] {
+            let plan = FaultPlan::build(&model, recovery, &g, 0, frames, 8);
+            assert!(!plan.variants.is_empty(), "the seeded table must fire");
+            let vats = plan.variant_refs();
+            for policy in [None, Some(PolicyKind::Lookahead)] {
+                let live = StreamScheduler::run_with_variants_traffic_live_pm(
+                    &g, frames, 8, &vats, &rel, policy,
+                );
+                let ff = StreamScheduler::run_with_variants_traffic_pm(
+                    &g, frames, 8, &vats, &rel, policy,
+                );
+                assert_bitwise(&ff, &live, &format!("{recovery:?} under {policy:?}"));
+                assert!(
+                    ff.fast_forwarded_frames > 0,
+                    "{recovery:?} under {policy:?}: replay must re-engage between faults"
+                );
+                assert!(ff.fast_forwarded_frames <= frames - plan.variants.len());
+            }
+        }
+    }
+
+    /// Faulted parametric representatives: a power-of-two drift member
+    /// derives bitwise even when the class stream carries fault variants
+    /// (the variants scale with the member like every other input), and
+    /// the identity member is the representative itself.
+    #[test]
+    fn param_rep_with_fault_variants_derives_members_bitwise() {
+        use crate::fault::{FaultModel, FaultPlan, Recovery};
+        let g = flash_frame(3);
+        let frames = 64usize;
+        let rel = Traffic::Periodic { rate_hz: 256.0 }.release_times(frames);
+        let cf = CompiledFrame::compile(&g);
+        let model = FaultModel::parse("transient:0.05:11").unwrap();
+        let plan = FaultPlan::build(&model, Recovery::default(), &g, 0, frames, 8);
+        assert!(!plan.variants.is_empty());
+        let compiled: Vec<(usize, CompiledFrame)> =
+            plan.variants.iter().map(|(f, v)| (*f, CompiledFrame::compile(v))).collect();
+        for policy in [None, Some(PolicyKind::Lookahead)] {
+            let rep = StreamScheduler::run_param_rep_variants(
+                &cf, &compiled, frames, 8, &rel, policy,
+            );
+            let ident = rep.member(&Perturb::IDENTITY).expect("identity always certifies");
+            assert_bitwise(&ident, rep.result(), "faulted identity member");
+            for alpha in [0.5f64, 2.0] {
+                let p = Perturb { alpha, phase_s: 0.0 };
+                let derived = rep.member(&p).expect("power-of-two drift certifies");
+                let scaled: Vec<(usize, CompiledFrame)> =
+                    compiled.iter().map(|(f, v)| (*f, v.rescaled(alpha))).collect();
+                let mut shifted = rel.clone();
+                p.apply(&mut shifted);
+                let live = StreamScheduler::run_compiled_variants_traffic_pm(
+                    &cf.rescaled(alpha),
+                    &scaled,
+                    frames,
+                    8,
+                    &shifted,
+                    policy,
+                    false,
+                );
+                assert_bitwise(&derived, &live, &format!("faulted alpha {alpha} {policy:?}"));
+            }
+        }
     }
 }

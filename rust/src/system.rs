@@ -26,10 +26,11 @@
 //! makespan is the slowest shard's, and throughput scales near-linearly.
 
 use crate::coordinator::{
-    share, stream_graph_traffic_pm, ExecConfig, ModeOverrides, Rung, StreamResult, Tiling,
+    share, stream_graph_faulted_pm, ExecConfig, ModeOverrides, Rung, StreamResult, Tiling,
     UseCaseResult,
 };
 use crate::energy::{Category, EnergyLedger};
+use crate::fault::{FaultModel, FaultPlan, Recovery};
 use crate::hwce::golden::WeightPrec;
 use crate::json::Json;
 use crate::soc::pm::{self, PolicyKind};
@@ -100,6 +101,13 @@ pub struct RunSpec {
     /// `None` (the default) bills gaps at the historical FLL-on idle
     /// floor — bitwise identical to pre-policy runs.
     pub policy: Option<PolicyKind>,
+    /// Deterministic fault-injection model ([`crate::fault`]). `None`
+    /// (the default) never touches the fault machinery and is bitwise
+    /// identical to the pre-fault simulator.
+    pub faults: Option<FaultModel>,
+    /// Recovery policy answering injected faults (3-attempt retry by
+    /// default; ignored when `faults` is `None`).
+    pub recovery: Recovery,
 }
 
 impl RunSpec {
@@ -113,6 +121,8 @@ impl RunSpec {
             shards: 1,
             traffic: Traffic::BackToBack,
             policy: None,
+            faults: None,
+            recovery: Recovery::default(),
         }
     }
 
@@ -148,6 +158,16 @@ impl RunSpec {
 
     pub fn policy(mut self, policy: Option<PolicyKind>) -> Self {
         self.policy = policy;
+        self
+    }
+
+    pub fn faults(mut self, faults: Option<FaultModel>) -> Self {
+        self.faults = faults;
+        self
+    }
+
+    pub fn recovery(mut self, recovery: Recovery) -> Self {
+        self.recovery = recovery;
         self
     }
 }
@@ -228,6 +248,25 @@ impl ShardedStream {
         traffic: &Traffic,
         policy: Option<PolicyKind>,
     ) -> Vec<(SchedResult, ShardStat)> {
+        Self::run_faulted(graph, frames, window, shards, traffic, policy, None)
+    }
+
+    /// [`ShardedStream::run_traffic_pm`] under a fault model: each shard
+    /// consumes the *global* fault table for its frame range (offset by
+    /// the preceding shards' shares — [`FaultModel::table`] partitions
+    /// exactly), so the union of shard faults equals the unsharded table
+    /// whatever S is; release times stay per-chip local as always.
+    /// `faults: None` is bitwise identical to
+    /// [`ShardedStream::run_traffic_pm`].
+    pub fn run_faulted(
+        graph: &JobGraph,
+        frames: usize,
+        window: usize,
+        shards: usize,
+        traffic: &Traffic,
+        policy: Option<PolicyKind>,
+        faults: Option<(&FaultModel, Recovery)>,
+    ) -> Vec<(SchedResult, ShardStat)> {
         assert!(frames >= 1, "sharded streaming needs at least one frame");
         assert!(window >= 1, "sharded streaming needs at least one in-flight frame of window");
         assert!(shards >= 1, "sharded streaming needs at least one chip");
@@ -238,21 +277,47 @@ impl ShardedStream {
         let bound_s = graph.serialized_bound();
         let shares: Vec<usize> = (0..shards).map(|s| share(frames, shards, s)).collect();
         let releases: Vec<Vec<f64>> = shares.iter().map(|&f| traffic.release_times(f)).collect();
+        // Per-shard recovery plans over the shard's global frame range:
+        // pure in (model, range), so the same spec faults the same frames
+        // however it is sharded or threaded.
+        let mut offset = 0usize;
+        let plans: Vec<Option<FaultPlan>> = shares
+            .iter()
+            .map(|&f| {
+                let start = offset;
+                offset += f;
+                faults.map(|(m, rec)| FaultPlan::build(m, rec, graph, start, f, window.min(f)))
+            })
+            .collect();
         let results: Vec<(SchedResult, f64)> = std::thread::scope(|scope| {
             let template = &template;
             let handles: Vec<_> = shares
                 .iter()
                 .zip(&releases)
-                .map(|(&f, rel)| {
+                .zip(&plans)
+                .map(|((&f, rel), plan)| {
                     scope.spawn(move || {
                         let t0 = Instant::now();
-                        let r = StreamScheduler::run_compiled_traffic_pm(
-                            template,
-                            f,
-                            window.min(f),
-                            rel,
-                            policy,
-                        );
+                        let mut r = match plan {
+                            None => StreamScheduler::run_compiled_traffic_pm(
+                                template,
+                                f,
+                                window.min(f),
+                                rel,
+                                policy,
+                            ),
+                            Some(p) => StreamScheduler::run_with_variants_traffic_pm(
+                                graph,
+                                f,
+                                window.min(f),
+                                &p.variant_refs(),
+                                rel,
+                                policy,
+                            ),
+                        };
+                        if let Some(p) = plan {
+                            crate::fault::apply_stats(&mut r, &p.stats, 1.0);
+                        }
                         (r, t0.elapsed().as_secs_f64())
                     })
                 })
@@ -331,6 +396,11 @@ fn merge_sharded(
         sleep_s: m.sleep_s,
         deep_sleep_s: m.deep_sleep_s,
         wake_transitions: m.wake_transitions,
+        frames_dropped: m.frames_dropped,
+        fault_retries: m.fault_retries,
+        chip_resets: m.chip_resets,
+        state_loss_frames: m.state_loss_frames,
+        recovery_energy_mj: m.recovery_energy_mj,
         ledger: m.ledger,
     }
 }
@@ -377,6 +447,19 @@ pub struct FleetSpec {
     /// Seed for the per-chip perturbation derivation (chips keep their
     /// α/φ across runs and shardings).
     pub seed: u64,
+    /// Deterministic fault-injection model applied fleet-wide
+    /// ([`crate::fault`]): every chip of a class draws the same
+    /// per-frame fault table. Joins the class dedup key; `None` is
+    /// bitwise the historical fault-free fleet.
+    pub faults: Option<FaultModel>,
+    /// Recovery policy answering injected faults (ignored when `faults`
+    /// is `None`).
+    pub recovery: Recovery,
+    /// Test-only: flip the low mantissa bit of every sampled parity
+    /// run's makespan, forcing the structured parity-mismatch error so
+    /// its reporting path can be exercised end to end.
+    #[doc(hidden)]
+    pub corrupt_parity: bool,
 }
 
 impl FleetSpec {
@@ -389,6 +472,9 @@ impl FleetSpec {
             drift_pct: 0.0,
             phase_jitter_s: 0.0,
             seed: 0xF1EE7,
+            faults: None,
+            recovery: Recovery::default(),
+            corrupt_parity: false,
         }
     }
 
@@ -419,6 +505,16 @@ impl FleetSpec {
 
     pub fn seed(mut self, seed: u64) -> Self {
         self.seed = seed;
+        self
+    }
+
+    pub fn faults(mut self, faults: Option<FaultModel>) -> Self {
+        self.faults = faults;
+        self
+    }
+
+    pub fn recovery(mut self, recovery: Recovery) -> Self {
+        self.recovery = recovery;
         self
     }
 
@@ -516,6 +612,17 @@ pub struct ClassStat {
     pub epd_mj_per_day: f64,
     /// Days a [`pm::BATTERY_MWH`] coin cell sustains this class's chips.
     pub battery_days: f64,
+    /// Fraction of this class's frames whose output survived faults
+    /// (1.0 for a fault-free fleet).
+    pub availability: f64,
+    /// Per-chip frames dropped to faults.
+    pub frames_dropped: u64,
+    /// Per-chip retry executions beyond first attempts.
+    pub fault_retries: u64,
+    /// Per-chip full resets (brown-outs plus watchdog resets).
+    pub chip_resets: u64,
+    /// Per-chip energy overhead of fault recovery (mJ).
+    pub recovery_energy_mj: f64,
     pub fast_forwarded_frames: usize,
     /// Distinct parametric members (quantized α/φ buckets) this class
     /// split into — 1 for a homogeneous fleet.
@@ -579,12 +686,32 @@ pub struct FleetReport {
     pub makespan_s: f64,
     /// Power-state policy the fleet ran under (`"none"` when unmanaged).
     pub policy: String,
+    /// Fault model the fleet ran under (`"none"` when fault-free).
+    pub faults: String,
+    /// Recovery policy answering faults (`"none"` when fault-free).
+    pub recovery: String,
+    /// Fleet-total frames dropped to faults.
+    pub frames_dropped: u64,
+    /// Fleet-total retry executions.
+    pub fault_retries: u64,
+    /// Fleet-total full-chip resets.
+    pub chip_resets: u64,
+    /// Fleet-total in-flight frames lost to resets.
+    pub state_loss_frames: u64,
+    /// Fleet-total energy overhead of fault recovery (J).
+    pub recovery_energy_j: f64,
     pub energy_mj_per_chip: Pct,
     pub latency_s: Pct,
     pub utilization: Pct,
     /// Days a [`pm::BATTERY_MWH`] coin cell sustains a chip at its class's
     /// duty-cycled draw (weighted percentiles across the population).
     pub battery_days: Pct,
+    /// Per-chip fraction of frames delivered despite faults (weighted
+    /// percentiles; all 1.0 for a fault-free fleet).
+    pub availability: Pct,
+    /// Per-chip fault-recovery energy overhead (mJ, weighted
+    /// percentiles).
+    pub recovery_mj_per_chip: Pct,
     /// Host wall-clock of the whole fleet run (s).
     pub wall_s: f64,
     pub chips_per_s: f64,
@@ -618,30 +745,56 @@ fn pct(vals: &mut [(f64, usize)], total: usize) -> Pct {
     }
 }
 
-/// Bitwise equality of two scheduler results (everything except the
+/// Bitwise comparison of two scheduler results (everything except the
 /// fast-forward counter, which legitimately differs between the replay
-/// and live paths).
-fn sched_bitwise_eq(a: &SchedResult, b: &SchedResult) -> bool {
-    if a.makespan_s.to_bits() != b.makespan_s.to_bits()
-        || a.mode_switches != b.mode_switches
-        || a.n_jobs != b.n_jobs
-        || a.peak_resident_jobs != b.peak_resident_jobs
-        || a.overlap_s.to_bits() != b.overlap_s.to_bits()
-        || a.coresidency_s.to_bits() != b.coresidency_s.to_bits()
-        || a.sleep_s.to_bits() != b.sleep_s.to_bits()
-        || a.deep_sleep_s.to_bits() != b.deep_sleep_s.to_bits()
-        || a.wake_transitions != b.wake_transitions
-    {
-        return false;
+/// and live paths). Returns the first mismatching field as
+/// `(field, expected_bits, got_bits)` — `None` means bitwise equal — so
+/// a fleet parity failure names exactly what diverged instead of a bare
+/// boolean.
+fn sched_bitwise_mismatch(
+    a: &SchedResult,
+    b: &SchedResult,
+) -> Option<(&'static str, u64, u64)> {
+    let floats = [
+        ("makespan_s", a.makespan_s, b.makespan_s),
+        ("overlap_s", a.overlap_s, b.overlap_s),
+        ("coresidency_s", a.coresidency_s, b.coresidency_s),
+        ("sleep_s", a.sleep_s, b.sleep_s),
+        ("deep_sleep_s", a.deep_sleep_s, b.deep_sleep_s),
+        ("recovery_energy_mj", a.recovery_energy_mj, b.recovery_energy_mj),
+    ];
+    for (name, x, y) in floats {
+        if x.to_bits() != y.to_bits() {
+            return Some((name, x.to_bits(), y.to_bits()));
+        }
+    }
+    let counts = [
+        ("mode_switches", a.mode_switches, b.mode_switches),
+        ("n_jobs", a.n_jobs as u64, b.n_jobs as u64),
+        ("peak_resident_jobs", a.peak_resident_jobs as u64, b.peak_resident_jobs as u64),
+        ("wake_transitions", a.wake_transitions, b.wake_transitions),
+        ("frames_dropped", a.frames_dropped, b.frames_dropped),
+        ("fault_retries", a.fault_retries, b.fault_retries),
+        ("chip_resets", a.chip_resets, b.chip_resets),
+        ("state_loss_frames", a.state_loss_frames, b.state_loss_frames),
+    ];
+    for (name, x, y) in counts {
+        if x != y {
+            return Some((name, x, y));
+        }
     }
     for e in 0..N_ENGINES {
         if a.busy_s[e].to_bits() != b.busy_s[e].to_bits() {
-            return false;
+            return Some(("busy_s", a.busy_s[e].to_bits(), b.busy_s[e].to_bits()));
         }
     }
-    Category::all()
-        .into_iter()
-        .all(|c| a.ledger.energy_mj(c).to_bits() == b.ledger.energy_mj(c).to_bits())
+    for c in Category::all() {
+        let (x, y) = (a.ledger.energy_mj(c), b.ledger.energy_mj(c));
+        if x.to_bits() != y.to_bits() {
+            return Some(("ledger_energy_mj", x.to_bits(), y.to_bits()));
+        }
+    }
+    None
 }
 
 /// Relative tolerance for live-vs-derived parity on non-exact scales: a
@@ -653,23 +806,56 @@ const PARAM_TOL: f64 = 1e-9;
 
 /// Live-vs-derived parity for a non-exactly-representable scale: all
 /// decision-schedule counts bitwise (dispatch order, mode switches, wake
-/// transitions), all time/energy floats within `tol` relative.
-fn sched_close_eq(a: &SchedResult, b: &SchedResult, tol: f64) -> bool {
+/// transitions, fault counters), all time/energy floats within `tol`
+/// relative. Same `(field, expected_bits, got_bits)` reporting shape as
+/// [`sched_bitwise_mismatch`].
+fn sched_close_mismatch(
+    a: &SchedResult,
+    b: &SchedResult,
+    tol: f64,
+) -> Option<(&'static str, u64, u64)> {
     let close =
         |x: f64, y: f64| (x - y).abs() <= tol * x.abs().max(y.abs()).max(1e-12);
-    a.mode_switches == b.mode_switches
-        && a.n_jobs == b.n_jobs
-        && a.peak_resident_jobs == b.peak_resident_jobs
-        && a.wake_transitions == b.wake_transitions
-        && close(a.makespan_s, b.makespan_s)
-        && close(a.overlap_s, b.overlap_s)
-        && close(a.coresidency_s, b.coresidency_s)
-        && close(a.sleep_s, b.sleep_s)
-        && close(a.deep_sleep_s, b.deep_sleep_s)
-        && (0..N_ENGINES).all(|e| close(a.busy_s[e], b.busy_s[e]))
-        && Category::all()
-            .into_iter()
-            .all(|c| close(a.ledger.energy_mj(c), b.ledger.energy_mj(c)))
+    let counts = [
+        ("mode_switches", a.mode_switches, b.mode_switches),
+        ("n_jobs", a.n_jobs as u64, b.n_jobs as u64),
+        ("peak_resident_jobs", a.peak_resident_jobs as u64, b.peak_resident_jobs as u64),
+        ("wake_transitions", a.wake_transitions, b.wake_transitions),
+        ("frames_dropped", a.frames_dropped, b.frames_dropped),
+        ("fault_retries", a.fault_retries, b.fault_retries),
+        ("chip_resets", a.chip_resets, b.chip_resets),
+        ("state_loss_frames", a.state_loss_frames, b.state_loss_frames),
+    ];
+    for (name, x, y) in counts {
+        if x != y {
+            return Some((name, x, y));
+        }
+    }
+    let floats = [
+        ("makespan_s", a.makespan_s, b.makespan_s),
+        ("overlap_s", a.overlap_s, b.overlap_s),
+        ("coresidency_s", a.coresidency_s, b.coresidency_s),
+        ("sleep_s", a.sleep_s, b.sleep_s),
+        ("deep_sleep_s", a.deep_sleep_s, b.deep_sleep_s),
+        ("recovery_energy_mj", a.recovery_energy_mj, b.recovery_energy_mj),
+    ];
+    for (name, x, y) in floats {
+        if !close(x, y) {
+            return Some((name, x.to_bits(), y.to_bits()));
+        }
+    }
+    for e in 0..N_ENGINES {
+        if !close(a.busy_s[e], b.busy_s[e]) {
+            return Some(("busy_s", a.busy_s[e].to_bits(), b.busy_s[e].to_bits()));
+        }
+    }
+    for c in Category::all() {
+        let (x, y) = (a.ledger.energy_mj(c), b.ledger.energy_mj(c));
+        if !close(x, y) {
+            return Some(("ledger_energy_mj", x.to_bits(), y.to_bits()));
+        }
+    }
+    None
 }
 
 /// The per-chip metrics the fleet percentiles aggregate: (energy [mJ],
@@ -748,12 +934,16 @@ struct ClassOutcome {
     l_vals: Vec<(f64, usize)>,
     u_vals: Vec<(f64, usize)>,
     b_vals: Vec<(f64, usize)>,
+    /// Per-member availability and recovery-energy percentile inputs.
+    a_vals: Vec<(f64, usize)>,
+    r_vals: Vec<(f64, usize)>,
     members: usize,
     live_fallbacks: usize,
     wall_s: f64,
     live_runs: usize,
     parity_runs: usize,
-    parity_ok: bool,
+    /// First live-vs-derived mismatch: (field, expected bits, got bits).
+    parity_fail: Option<(&'static str, u64, u64)>,
     sampled: Vec<usize>,
 }
 
@@ -773,8 +963,18 @@ impl Fleet {
         if !(fleet.phase_jitter_s.is_finite() && fleet.phase_jitter_s >= 0.0) {
             bail!("--phase-jitter must be a non-negative seconds value");
         }
+        if let Some(m) = &fleet.faults {
+            m.validate()?;
+            fleet.recovery.validate()?;
+        }
         let hetero = fleet.drift_pct > 0.0 || fleet.phase_jitter_s > 0.0;
         let t_fleet = Instant::now();
+        // The fault model and recovery policy join the dedup key: chips
+        // under different fault regimes must never merge into one class.
+        let fault_frag = match &fleet.faults {
+            None => "flt:none".to_string(),
+            Some(m) => format!("{}|r:{}", m.key(), fleet.recovery.key()),
+        };
 
         // Family dedup: resolve each group and merge identical classes,
         // then split each family's population into parametric members by
@@ -804,13 +1004,14 @@ impl Fleet {
             // The fleet-wide policy is part of the key: a future mixed-
             // policy fleet must not merge chips across policies.
             let key = format!(
-                "{}|{:?}|f{}|w{}|{}|p:{}",
+                "{}|{:?}|f{}|w{}|{}|p:{}|{}",
                 w.name(),
                 rung.cfg,
                 g.spec.frames,
                 window,
                 g.spec.traffic.key(),
                 fleet.policy.map_or("none", |p| p.name()),
+                fault_frag,
             );
             let ci = match index.get(&key) {
                 Some(&ci) => ci,
@@ -874,21 +1075,62 @@ impl Fleet {
                     }
                     let c = &classes[ci];
                     let cf = CompiledFrame::compile(&c.graph);
+                    // A faulted class compiles its recovery plan once:
+                    // per-frame variant templates plus the closed-form
+                    // reliability counters, pure in (model, frames,
+                    // window). Fault-free classes skip the machinery
+                    // entirely (the bitwise-identity property).
+                    let plan = fleet.faults.as_ref().map(|m| {
+                        FaultPlan::build(m, fleet.recovery, &c.graph, 0, c.frames, c.window)
+                    });
+                    let cvars: Vec<(usize, CompiledFrame)> = plan
+                        .as_ref()
+                        .map(|p| {
+                            p.variants
+                                .iter()
+                                .map(|(f, g)| (*f, CompiledFrame::compile(g)))
+                                .collect()
+                        })
+                        .unwrap_or_default();
                     let t0 = Instant::now();
-                    let rep = StreamScheduler::run_param_rep(
-                        &cf, c.frames, c.window, &c.release, fleet.policy,
-                    );
+                    let rep = match &plan {
+                        None => StreamScheduler::run_param_rep(
+                            &cf, c.frames, c.window, &c.release, fleet.policy,
+                        ),
+                        Some(_) => StreamScheduler::run_param_rep_variants(
+                            &cf, &cvars, c.frames, c.window, &c.release, fleet.policy,
+                        ),
+                    };
                     let wall_s = t0.elapsed().as_secs_f64();
+                    // The fault counters attach *after* every derivation
+                    // with one shared arithmetic (f64 addition does not
+                    // distribute over the α scaling, so both sides of a
+                    // parity comparison must add the same numbers in the
+                    // same order). The representative's own result gets
+                    // them at scale 1.
+                    let mut rep_res = rep.result().clone();
+                    if let Some(pl) = &plan {
+                        crate::fault::apply_stats(&mut rep_res, &pl.stats, 1.0);
+                    }
                     // A member's live reference: the α-rescaled template
-                    // with the (φ-shifted, α-scaled) release table —
-                    // fast-forward enabled for certificate fallbacks
-                    // (exact either way), disabled for parity samples
-                    // (the independent reference path).
+                    // (and α-rescaled fault variants) with the
+                    // (φ-shifted, α-scaled) release table — fast-forward
+                    // enabled for certificate fallbacks (exact either
+                    // way), disabled for parity samples (the independent
+                    // reference path).
                     let live_member = |p: &Perturb, ff: bool| -> SchedResult {
                         let mut rel = c.release.clone();
                         p.apply(&mut rel);
                         let scaled = cf.rescaled(p.alpha);
-                        if ff {
+                        let mut r = if let Some(pl) = &plan {
+                            let svars: Vec<(usize, CompiledFrame)> = cvars
+                                .iter()
+                                .map(|(f, v)| (*f, v.rescaled(p.alpha)))
+                                .collect();
+                            StreamScheduler::run_compiled_variants_traffic_pm(
+                                &scaled, &svars, c.frames, c.window, &rel, fleet.policy, ff,
+                            )
+                        } else if ff {
                             StreamScheduler::run_compiled_traffic_pm(
                                 &scaled, c.frames, c.window, &rel, fleet.policy,
                             )
@@ -896,7 +1138,11 @@ impl Fleet {
                             StreamScheduler::run_compiled_traffic_live_pm(
                                 &scaled, c.frames, c.window, &rel, fleet.policy,
                             )
+                        };
+                        if let Some(pl) = &plan {
+                            crate::fault::apply_stats(&mut r, &pl.stats, p.alpha);
                         }
+                        r
                     };
                     // Sampled live-vs-derived parity targets: random
                     // member buckets, deterministically seeded per class.
@@ -910,40 +1156,57 @@ impl Fleet {
                     let mut merged = crate::report::Merged::empty();
                     let (mut e_vals, mut l_vals, mut u_vals, mut b_vals) =
                         (Vec::new(), Vec::new(), Vec::new(), Vec::new());
+                    let (mut a_vals, mut r_vals) = (Vec::new(), Vec::new());
                     let mut live_fallbacks = 0usize;
                     let mut parity_runs = 0usize;
-                    let mut parity_ok = true;
+                    let mut parity_fail: Option<(&'static str, u64, u64)> = None;
                     for (bi, (p, pop)) in c.members.values().enumerate() {
                         let mut fallback = false;
                         let pure_drift = fleet.policy.is_none() && p.phase_s == 0.0;
                         let res = if p.is_identity() {
-                            rep.result().clone()
+                            rep_res.clone()
                         } else if !rep.certify(p) {
                             fallback = true;
                             live_fallbacks += 1;
                             live_member(p, true)
-                        } else if pure_drift {
-                            // pure drift with no billing is exactly the
-                            // representative on a rescaled time base
-                            rep.result().rescaled(p.alpha)
                         } else {
-                            rep.member(p).expect("certified member derives")
+                            let mut r = if pure_drift {
+                                // pure drift with no billing is exactly the
+                                // representative on a rescaled time base
+                                rep.result().rescaled(p.alpha)
+                            } else {
+                                rep.member(p).expect("certified member derives")
+                            };
+                            if let Some(pl) = &plan {
+                                crate::fault::apply_stats(&mut r, &pl.stats, p.alpha);
+                            }
+                            r
                         };
                         for _ in sampled.iter().filter(|&&s| s == bi) {
                             parity_runs += 1;
-                            let live = live_member(p, false);
+                            let mut live = live_member(p, false);
+                            if fleet.corrupt_parity {
+                                live.makespan_s =
+                                    f64::from_bits(live.makespan_s.to_bits() ^ 1);
+                            }
                             let exact = fallback
                                 || (exact_pow2(p.alpha) && p.phase_s == 0.0);
-                            parity_ok &= if exact {
-                                sched_bitwise_eq(&res, &live)
+                            let mismatch = if exact {
+                                sched_bitwise_mismatch(&res, &live)
                             } else {
-                                sched_close_eq(&res, &live, PARAM_TOL)
+                                sched_close_mismatch(&res, &live, PARAM_TOL)
                             };
+                            if parity_fail.is_none() {
+                                parity_fail = mismatch;
+                            }
                         }
-                        if pure_drift && !fallback && !p.is_identity() {
+                        if pure_drift && !fallback && !p.is_identity() && plan.is_none() {
                             // through the extended report seam
                             // (absorb_scaled ≡ absorb ∘ rescaled,
-                            // property-tested bitwise)
+                            // property-tested bitwise); a faulted class
+                            // must absorb the post-`apply_stats` result
+                            // instead, or the counters and wake energy
+                            // would never reach the roll-up
                             merged.absorb_scaled(rep.result(), *pop, p.alpha);
                         } else {
                             merged.absorb(&res, *pop);
@@ -953,20 +1216,27 @@ impl Fleet {
                         l_vals.push((l, *pop));
                         u_vals.push((u, *pop));
                         b_vals.push((b, *pop));
+                        a_vals.push((
+                            (c.frames as f64 - res.frames_dropped as f64) / c.frames as f64,
+                            *pop,
+                        ));
+                        r_vals.push((res.recovery_energy_mj, *pop));
                     }
                     *slots[ci].lock().expect("class slot poisoned") = Some(ClassOutcome {
-                        result: rep.result().clone(),
+                        result: rep_res,
                         merged,
                         e_vals,
                         l_vals,
                         u_vals,
                         b_vals,
+                        a_vals,
+                        r_vals,
                         members: c.members.len(),
                         live_fallbacks,
                         wall_s,
                         live_runs: 1 + parity_runs + live_fallbacks,
                         parity_runs,
-                        parity_ok,
+                        parity_fail,
                         sampled,
                     });
                 });
@@ -988,13 +1258,18 @@ impl Fleet {
         let mut total_frames = 0u64;
         let (mut e_vals, mut l_vals, mut u_vals, mut b_vals) =
             (Vec::new(), Vec::new(), Vec::new(), Vec::new());
+        let (mut a_vals, mut r_vals) = (Vec::new(), Vec::new());
+        let mut first_fail: Option<(String, &'static str, u64, u64)> = None;
         let policy_name = fleet.policy.map_or("none", |p| p.name()).to_string();
         for (c, o) in classes.iter().zip(outcomes) {
             merged.combine(&o.merged);
             live_chips += o.live_runs;
             parity_checked += o.parity_runs;
-            if !o.parity_ok {
+            if let Some((field, expected, got)) = o.parity_fail {
                 parity_failures += 1;
+                if first_fail.is_none() {
+                    first_fail = Some((c.key.clone(), field, expected, got));
+                }
             }
             members_total += o.members;
             fallbacks_total += o.live_fallbacks;
@@ -1006,6 +1281,8 @@ impl Fleet {
             l_vals.extend(o.l_vals);
             u_vals.extend(o.u_vals);
             b_vals.extend(o.b_vals);
+            a_vals.extend(o.a_vals);
+            r_vals.extend(o.r_vals);
             stats.push(ClassStat {
                 key: c.key.clone(),
                 workload: c.workload.clone(),
@@ -1022,6 +1299,12 @@ impl Fleet {
                 deep_sleep_s: o.result.deep_sleep_s,
                 epd_mj_per_day: epd,
                 battery_days: battery,
+                availability: (c.frames as f64 - o.result.frames_dropped as f64)
+                    / c.frames as f64,
+                frames_dropped: o.result.frames_dropped,
+                fault_retries: o.result.fault_retries,
+                chip_resets: o.result.chip_resets,
+                recovery_energy_mj: o.result.recovery_energy_mj,
                 fast_forwarded_frames: o.result.fast_forwarded_frames,
                 members: o.members,
                 live_fallbacks: o.live_fallbacks,
@@ -1030,10 +1313,11 @@ impl Fleet {
                 wall_s: o.wall_s,
             });
         }
-        if parity_failures > 0 {
+        if let Some((key, field, expected, got)) = first_fail {
             bail!(
                 "sampled live-vs-scaled parity failed for {parity_failures} of {} classes — \
-                 class scaling would have misreported the fleet",
+                 first mismatch in class '{key}': field `{field}` expected {expected:#018x}, \
+                 live run produced {got:#018x} — class scaling would have misreported the fleet",
                 classes.len()
             );
         }
@@ -1052,10 +1336,25 @@ impl Fleet {
             energy_j: merged.ledger.total_mj() / 1e3,
             makespan_s: merged.time_s,
             policy: policy_name,
+            faults: fleet
+                .faults
+                .as_ref()
+                .map_or_else(|| "none".to_string(), |m| m.describe()),
+            recovery: fleet
+                .faults
+                .as_ref()
+                .map_or_else(|| "none".to_string(), |_| fleet.recovery.describe()),
+            frames_dropped: merged.frames_dropped,
+            fault_retries: merged.fault_retries,
+            chip_resets: merged.chip_resets,
+            state_loss_frames: merged.state_loss_frames,
+            recovery_energy_j: merged.recovery_energy_mj / 1e3,
             energy_mj_per_chip: pct(&mut e_vals, total_chips),
             latency_s: pct(&mut l_vals, total_chips),
             utilization: pct(&mut u_vals, total_chips),
             battery_days: pct(&mut b_vals, total_chips),
+            availability: pct(&mut a_vals, total_chips),
+            recovery_mj_per_chip: pct(&mut r_vals, total_chips),
             wall_s,
             chips_per_s: total_chips as f64 / wall_s,
             naive_est_wall_s,
@@ -1104,6 +1403,20 @@ impl FleetReport {
             self.energy_j, self.total_frames, self.makespan_s, self.policy
         )
         .unwrap();
+        if self.faults != "none" {
+            writeln!(s, "faults: {} | recovery: {}", self.faults, self.recovery).unwrap();
+            writeln!(
+                s,
+                "reliability: {} frames dropped | {} retries | {} chip resets \
+                 ({} in-flight frames lost) | recovery energy {:.3} J",
+                self.frames_dropped,
+                self.fault_retries,
+                self.chip_resets,
+                self.state_loss_frames,
+                self.recovery_energy_j
+            )
+            .unwrap();
+        }
         writeln!(
             s,
             "host: {:.3} s wall ({:.3e} chips/s) | naive per-chip est {:.1} s | dedup speedup {:.0}x",
@@ -1118,6 +1431,14 @@ impl FleetReport {
             ("battery [d]", self.battery_days),
         ] {
             writeln!(s, "{name:<14} {:>9.4} {:>9.4} {:>9.4}", p.p50, p.p95, p.p99).unwrap();
+        }
+        if self.faults != "none" {
+            for (name, p) in [
+                ("availability", self.availability),
+                ("recovery [mJ]", self.recovery_mj_per_chip),
+            ] {
+                writeln!(s, "{name:<14} {:>9.4} {:>9.4} {:>9.4}", p.p50, p.p95, p.p99).unwrap();
+            }
         }
         writeln!(
             s,
@@ -1171,10 +1492,19 @@ impl FleetReport {
             ("naive_est_wall_s", Json::num(self.naive_est_wall_s)),
             ("dedup_speedup", Json::num(self.dedup_speedup)),
             ("policy", Json::string(&self.policy)),
+            ("faults", Json::string(&self.faults)),
+            ("recovery", Json::string(&self.recovery)),
+            ("frames_dropped", Json::num(self.frames_dropped as f64)),
+            ("fault_retries", Json::num(self.fault_retries as f64)),
+            ("chip_resets", Json::num(self.chip_resets as f64)),
+            ("state_loss_frames", Json::num(self.state_loss_frames as f64)),
+            ("recovery_energy_j", Json::num(self.recovery_energy_j)),
             ("energy_mj_per_chip", pct_json(&self.energy_mj_per_chip)),
             ("latency_s", pct_json(&self.latency_s)),
             ("utilization", pct_json(&self.utilization)),
             ("battery_days", pct_json(&self.battery_days)),
+            ("availability", pct_json(&self.availability)),
+            ("recovery_mj_per_chip", pct_json(&self.recovery_mj_per_chip)),
             (
                 "classes",
                 Json::Arr(
@@ -1197,6 +1527,11 @@ impl FleetReport {
                                 ("deep_sleep_s", Json::num(c.deep_sleep_s)),
                                 ("epd_mj_per_day", Json::num(c.epd_mj_per_day)),
                                 ("battery_days", Json::num(c.battery_days)),
+                                ("availability", Json::num(c.availability)),
+                                ("frames_dropped", Json::num(c.frames_dropped as f64)),
+                                ("fault_retries", Json::num(c.fault_retries as f64)),
+                                ("chip_resets", Json::num(c.chip_resets as f64)),
+                                ("recovery_energy_mj", Json::num(c.recovery_energy_mj)),
                                 (
                                     "fast_forwarded_frames",
                                     Json::num(c.fast_forwarded_frames as f64),
@@ -1264,6 +1599,10 @@ pub struct RunReport {
     /// The rung's configuration after overrides.
     pub cfg: ExecConfig,
     pub frames: usize,
+    /// Fault model the run was subjected to (`"none"` for clean runs).
+    pub faults: String,
+    /// Recovery policy in force (`"none"` when no faults were injected).
+    pub recovery: String,
     pub result: StreamResult,
     pub tenants: Vec<TenantRow>,
     /// Per-chip statistics of a sharded run (empty for a single SoC —
@@ -1320,6 +1659,21 @@ impl RunReport {
                 pm::energy_per_day_mj(r.energy_mj, r.time_s),
                 pm::battery_days(r.energy_mj, r.time_s),
                 pm::BATTERY_MWH
+            )
+            .unwrap();
+        }
+        if self.faults != "none" {
+            writeln!(s, "faults {} | recovery {}", self.faults, self.recovery).unwrap();
+            writeln!(
+                s,
+                "reliability: availability {:.4} | {} dropped | {} retries | {} resets \
+                 ({} in-flight lost) | recovery energy {:>8.4} mJ",
+                r.availability(),
+                r.frames_dropped,
+                r.fault_retries,
+                r.chip_resets,
+                r.state_loss_frames,
+                r.recovery_energy_mj
             )
             .unwrap();
         }
@@ -1425,6 +1779,14 @@ impl RunReport {
             ("sleep_s", Json::num(r.sleep_s)),
             ("deep_sleep_s", Json::num(r.deep_sleep_s)),
             ("wake_transitions", Json::num(r.wake_transitions as f64)),
+            ("faults", Json::string(&self.faults)),
+            ("recovery", Json::string(&self.recovery)),
+            ("availability", Json::num(r.availability())),
+            ("frames_dropped", Json::num(r.frames_dropped as f64)),
+            ("fault_retries", Json::num(r.fault_retries as f64)),
+            ("chip_resets", Json::num(r.chip_resets as f64)),
+            ("state_loss_frames", Json::num(r.state_loss_frames as f64)),
+            ("recovery_energy_mj", Json::num(r.recovery_energy_mj)),
             ("epd_mj_per_day", Json::num(pm::energy_per_day_mj(r.energy_mj, r.time_s))),
             ("battery_days", Json::num(pm::battery_days(r.energy_mj, r.time_s))),
             ("shard_count", Json::num(self.shards.len().max(1) as f64)),
@@ -1596,6 +1958,90 @@ impl AblationReport {
     }
 }
 
+/// One grid point of the `fulmine faultsweep` reliability table.
+#[derive(Debug, Clone)]
+pub struct FaultSweepRow {
+    pub faults: String,
+    pub recovery: String,
+    pub availability: f64,
+    pub frames_dropped: u64,
+    pub fault_retries: u64,
+    pub chip_resets: u64,
+    pub recovery_energy_mj: f64,
+    pub energy_mj: f64,
+    pub time_s: f64,
+}
+
+/// The fault-rate × recovery-policy sweep of one workload stream.
+#[derive(Debug, Clone)]
+pub struct FaultSweepReport {
+    pub workload: String,
+    pub frames: usize,
+    pub rows: Vec<FaultSweepRow>,
+}
+
+impl FaultSweepReport {
+    pub fn render_text(&self) -> String {
+        let mut s = String::new();
+        writeln!(
+            s,
+            "== faultsweep: {} over {} frames (rate x policy grid, shared fault seed) ==",
+            self.workload, self.frames
+        )
+        .unwrap();
+        writeln!(
+            s,
+            "{:<26} {:<26} {:>7} {:>7} {:>7} {:>7} {:>10} {:>10}",
+            "faults", "recovery", "avail", "drop", "retry", "reset", "rec [mJ]", "E [mJ]"
+        )
+        .unwrap();
+        for r in &self.rows {
+            writeln!(
+                s,
+                "{:<26} {:<26} {:>7.4} {:>7} {:>7} {:>7} {:>10.4} {:>10.3}",
+                r.faults,
+                r.recovery,
+                r.availability,
+                r.frames_dropped,
+                r.fault_retries,
+                r.chip_resets,
+                r.recovery_energy_mj,
+                r.energy_mj
+            )
+            .unwrap();
+        }
+        s
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("workload", Json::string(&self.workload)),
+            ("frames", Json::num(self.frames as f64)),
+            (
+                "rows",
+                Json::Arr(
+                    self.rows
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("faults", Json::string(&r.faults)),
+                                ("recovery", Json::string(&r.recovery)),
+                                ("availability", Json::num(r.availability)),
+                                ("frames_dropped", Json::num(r.frames_dropped as f64)),
+                                ("fault_retries", Json::num(r.fault_retries as f64)),
+                                ("chip_resets", Json::num(r.chip_resets as f64)),
+                                ("recovery_energy_mj", Json::num(r.recovery_energy_mj)),
+                                ("energy_mj", Json::num(r.energy_mj)),
+                                ("time_s", Json::num(r.time_s)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
 /// The façade over one simulated Fulmine SoC: a workload [`Registry`] plus
 /// the scheduling/attribution machinery to execute a [`RunSpec`].
 pub struct SocSystem {
@@ -1664,11 +2110,21 @@ impl SocSystem {
             bail!("--shards must be at least 1 (no chips schedule no frames)");
         }
         spec.traffic.validate()?;
+        if let Some(m) = &spec.faults {
+            m.validate()?;
+            spec.recovery.validate()?;
+        }
         let g = frame_graph(w, rung.cfg)?;
         let window = spec.window.unwrap_or(crate::soc::sched::DEFAULT_STREAM_WINDOW);
         let (result, shards) = if spec.shards > 1 {
-            let parts = ShardedStream::run_traffic_pm(
-                &g, spec.frames, window, spec.shards, &spec.traffic, spec.policy,
+            let parts = ShardedStream::run_faulted(
+                &g,
+                spec.frames,
+                window,
+                spec.shards,
+                &spec.traffic,
+                spec.policy,
+                spec.faults.as_ref().map(|m| (m, spec.recovery)),
             );
             let result = merge_sharded(
                 w.name(), &g, spec.frames, window, w.eq_ops(), &parts, spec.policy,
@@ -1676,9 +2132,19 @@ impl SocSystem {
             (result, parts.into_iter().map(|(_, st)| st).collect())
         } else {
             let release = spec.traffic.release_times(spec.frames);
+            let plan = spec.faults.as_ref().map(|m| {
+                FaultPlan::build(m, spec.recovery, &g, 0, spec.frames, window.min(spec.frames))
+            });
             (
-                stream_graph_traffic_pm(
-                    w.name(), &g, spec.frames, window, w.eq_ops(), &release, spec.policy,
+                stream_graph_faulted_pm(
+                    w.name(),
+                    &g,
+                    spec.frames,
+                    window,
+                    w.eq_ops(),
+                    &release,
+                    spec.policy,
+                    plan.as_ref(),
                 ),
                 Vec::new(),
             )
@@ -1745,6 +2211,14 @@ impl SocSystem {
             rung: rung.label.to_string(),
             cfg: rung.cfg,
             frames: spec.frames,
+            faults: spec
+                .faults
+                .as_ref()
+                .map_or_else(|| "none".to_string(), |m| m.describe()),
+            recovery: spec
+                .faults
+                .as_ref()
+                .map_or_else(|| "none".to_string(), |_| spec.recovery.describe()),
             result,
             tenants,
             shards,
@@ -1794,6 +2268,56 @@ impl SocSystem {
             rows.push((label.to_string(), self.run_frame(&spec)?));
         }
         Ok(AblationReport { rows })
+    }
+
+    /// The `fulmine faultsweep` grid: stream `frames` frames of the
+    /// workload once per fault-rate × recovery-policy point (plus a
+    /// fault-free baseline) and tabulate availability, drop/retry/reset
+    /// counts and recovery energy. All points share one fault seed, so
+    /// within a rate the *same frames* fault under every policy and the
+    /// rows differ only in how the chip answers.
+    pub fn fault_sweep(&self, workload: &str, frames: usize) -> Result<FaultSweepReport> {
+        const SEED: u64 = 9;
+        let rates = [0.01f64, 0.05];
+        let policies = [Recovery::default(), Recovery::Degrade, Recovery::Reset];
+        let mut points = vec![(FaultModel::none(), Recovery::default())];
+        for &r in &rates {
+            let model = FaultModel {
+                drop_rate: r,
+                transient_rate: r,
+                brownout_rate: r / 10.0,
+                link_rate: r,
+                seed: SEED,
+            };
+            for &p in &policies {
+                points.push((model.clone(), p));
+            }
+        }
+        let mut rows = Vec::new();
+        for (model, recovery) in points {
+            let spec = RunSpec::new(workload)
+                .frames(frames)
+                .faults((!model.is_none()).then(|| model.clone()))
+                .recovery(recovery);
+            let run = self.run(&spec)?;
+            let r = &run.result;
+            rows.push(FaultSweepRow {
+                faults: if model.is_none() {
+                    "none".to_string()
+                } else {
+                    format!("mixed @ {} (seed {})", model.drop_rate, model.seed)
+                },
+                recovery: if model.is_none() { "—".to_string() } else { recovery.describe() },
+                availability: r.availability(),
+                frames_dropped: r.frames_dropped,
+                fault_retries: r.fault_retries,
+                chip_resets: r.chip_resets,
+                recovery_energy_mj: r.recovery_energy_mj,
+                energy_mj: r.energy_mj,
+                time_s: r.time_s,
+            });
+        }
+        Ok(FaultSweepReport { workload: workload.to_string(), frames, rows })
     }
 }
 
@@ -2159,7 +2683,7 @@ mod tests {
 
     /// Tentpole (fleet policy): a managed fleet passes the sampled
     /// live-vs-scaled bitwise parity (sleep accounting included via
-    /// `sched_bitwise_eq`), reports battery-life percentiles, and orders
+    /// `sched_bitwise_mismatch`), reports battery-life percentiles, and orders
     /// oracle ≤ lookahead ≤ greedy ≤ unmanaged on total energy.
     #[test]
     fn fleet_policy_parity_and_energy_ordering() {

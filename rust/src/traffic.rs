@@ -205,6 +205,17 @@ const ALPHA_GRID: f64 = 4096.0;
 /// Quantization grid for the phase offset: multiples of 2⁻²⁰ s (~1 µs).
 const PHASE_GRID: f64 = 1048576.0;
 
+/// Mix a base seed with a per-item index into an independent RNG seed —
+/// the shared discipline for everything that derives one deterministic
+/// draw stream per chip or per frame ([`Perturb::derive`], the
+/// [`crate::fault::FaultModel`] per-frame fault draws): the golden-ratio
+/// multiply decorrelates adjacent indices, and because the result depends
+/// only on `(seed, index)` the derived stream is invariant across shard
+/// splits, thread counts and hosts.
+pub(crate) fn mix_seed(seed: u64, index: u64) -> u64 {
+    seed ^ index.wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
 impl Perturb {
     /// The nominal chip: no drift, no phase skew.
     pub const IDENTITY: Perturb = Perturb { alpha: 1.0, phase_s: 0.0 };
@@ -221,9 +232,7 @@ impl Perturb {
         if drift_pct == 0.0 && jitter_s == 0.0 {
             return Perturb::IDENTITY;
         }
-        let mut rng = Xorshift64Star::new(
-            seed ^ chip.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ 0x5EED_D81F,
-        );
+        let mut rng = Xorshift64Star::new(mix_seed(seed ^ 0x5EED_D81F, chip));
         let u1 = rng.next_unit();
         let u2 = rng.next_unit();
         let alpha = if drift_pct > 0.0 {
@@ -285,7 +294,7 @@ impl Xorshift64Star {
     }
 
     /// Uniform in (0, 1] — the `+1` keeps `ln` off zero.
-    fn next_unit(&mut self) -> f64 {
+    pub(crate) fn next_unit(&mut self) -> f64 {
         ((self.next_u64() >> 11) + 1) as f64 * (1.0 / (1u64 << 53) as f64)
     }
 }

@@ -1,0 +1,264 @@
+//! Fault-injection and recovery properties across the façade (ISSUE 9):
+//! a fault-free run is *bitwise identical* whether the fault machinery is
+//! absent (`faults: None`) or engaged with an all-zero model; seeded fault
+//! runs are deterministic across repeated runs, shard splits and host
+//! thread counts; fast-forward re-engages around faulted frames on
+//! gap-dominated streams; fleets report reliability percentiles; and a
+//! forced parity corruption surfaces the structured mismatch error.
+//!
+//! Fault counts asserted `> 0` below were pre-computed from the seeded
+//! fault tables (the per-frame draw depends only on `(model, frame)`), so
+//! they are properties of the chosen seeds, not of luck.
+
+use fulmine::coordinator::StreamResult;
+use fulmine::energy::Category;
+use fulmine::fault::{FaultModel, Recovery};
+use fulmine::json::Json;
+use fulmine::system::{FleetSpec, RunSpec, SocSystem};
+use fulmine::traffic::Traffic;
+
+/// `mixed:0.05:0.05:0.01:0.05:11` — over 64 frames this table holds 2
+/// drops, 5 transients, 1 brown-out and 2 link losses.
+fn mixed_model() -> FaultModel {
+    FaultModel {
+        drop_rate: 0.05,
+        transient_rate: 0.05,
+        brownout_rate: 0.01,
+        link_rate: 0.05,
+        seed: 11,
+    }
+}
+
+fn assert_stream_bitwise_eq(a: &StreamResult, b: &StreamResult, ctx: &str) {
+    for (field, x, y) in [
+        ("time_s", a.time_s, b.time_s),
+        ("fps", a.fps, b.fps),
+        ("energy_mj", a.energy_mj, b.energy_mj),
+        ("pj_per_op", a.pj_per_op, b.pj_per_op),
+        ("overlap_s", a.overlap_s, b.overlap_s),
+        ("coresidency_s", a.coresidency_s, b.coresidency_s),
+        ("sleep_s", a.sleep_s, b.sleep_s),
+        ("deep_sleep_s", a.deep_sleep_s, b.deep_sleep_s),
+        ("recovery_energy_mj", a.recovery_energy_mj, b.recovery_energy_mj),
+    ] {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: {field} {x} vs {y}");
+    }
+    assert_eq!(a.mode_switches, b.mode_switches, "{ctx}");
+    assert_eq!(a.wake_transitions, b.wake_transitions, "{ctx}");
+    assert_eq!(a.peak_resident_jobs, b.peak_resident_jobs, "{ctx}");
+    assert_eq!(a.total_jobs, b.total_jobs, "{ctx}");
+    assert_eq!(a.fast_forwarded_frames, b.fast_forwarded_frames, "{ctx}");
+    assert_eq!(a.frames_dropped, b.frames_dropped, "{ctx}");
+    assert_eq!(a.fault_retries, b.fault_retries, "{ctx}");
+    assert_eq!(a.chip_resets, b.chip_resets, "{ctx}");
+    assert_eq!(a.state_loss_frames, b.state_loss_frames, "{ctx}");
+    for (i, (x, y)) in a.busy_s.iter().zip(&b.busy_s).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: busy_s[{i}]");
+    }
+    for c in Category::all() {
+        assert_eq!(
+            a.ledger.energy_mj(c).to_bits(),
+            b.ledger.energy_mj(c).to_bits(),
+            "{ctx}: ledger {c:?}"
+        );
+    }
+}
+
+/// Tentpole property: an all-zero fault model routes through the variant
+/// machinery (plan built, `apply_stats` applied) yet is bitwise identical
+/// to the historical no-fault path — on the live path *and* with
+/// fast-forward engaged through a small window.
+#[test]
+fn zero_rate_fault_model_is_bitwise_identical_live_and_fast_forwarded() {
+    let sys = SocSystem::new();
+    let frames = 64usize;
+    for (window, label) in [(frames, "live"), (4, "fast-forwarded")] {
+        let clean = sys
+            .run(&RunSpec::new("seizure").frames(frames).window(window))
+            .unwrap();
+        let faulted = sys
+            .run(
+                &RunSpec::new("seizure")
+                    .frames(frames)
+                    .window(window)
+                    .faults(Some(FaultModel::none()))
+                    .recovery(Recovery::default()),
+            )
+            .unwrap();
+        assert_stream_bitwise_eq(&clean.result, &faulted.result, label);
+        assert_eq!(faulted.result.frames_dropped, 0, "{label}");
+        assert_eq!(faulted.result.availability(), 1.0, "{label}");
+    }
+    // the small window actually exercised the replay path
+    let ff = sys
+        .run(
+            &RunSpec::new("seizure")
+                .frames(frames)
+                .window(4)
+                .faults(Some(FaultModel::none())),
+        )
+        .unwrap();
+    assert!(
+        ff.result.fast_forwarded_frames > 0,
+        "a 64-frame back-to-back stream at window 4 must reach steady state"
+    );
+}
+
+/// Seeded fault runs are deterministic: repeating the identical spec —
+/// unsharded or split across 2 and 4 simulated chips — reproduces the
+/// whole report bit for bit (the JSON render is a faithful projection).
+#[test]
+fn seeded_fault_runs_are_deterministic_across_runs_and_shards() {
+    let sys = SocSystem::new();
+    for shards in [1usize, 2, 4] {
+        let spec = || {
+            RunSpec::new("seizure")
+                .frames(64)
+                .shards(shards)
+                .faults(Some(mixed_model()))
+                .recovery(Recovery::Retry { max: 2, backoff_s: 0.0005 })
+        };
+        let a = sys.run(&spec()).unwrap();
+        let b = sys.run(&spec()).unwrap();
+        assert_stream_bitwise_eq(&a.result, &b.result, &format!("shards {shards}"));
+        assert_eq!(
+            a.to_json().render(),
+            b.to_json().render(),
+            "shards {shards}: reports must replay bitwise"
+        );
+        // the table really fired (2 drops, 5 transients, 1 brown-out,
+        // 2 link losses over frames 0..64 of seed 11)
+        assert!(a.result.frames_dropped >= 2, "shards {shards}: {}", a.result.frames_dropped);
+        assert!(a.result.fault_retries > 0, "shards {shards}");
+        assert!(a.result.chip_resets > 0, "shards {shards}");
+        assert!(a.result.availability() < 1.0, "shards {shards}");
+    }
+}
+
+/// Acceptance: on a gap-dominated faulted stream the fast-forward path
+/// suspends around faulted frames and re-engages between them — replayed
+/// frames and retries coexist in one run, and recovery billed energy.
+#[test]
+fn gap_dominated_faulted_stream_fast_forwards_and_retries() {
+    let sys = SocSystem::new();
+    let model = FaultModel {
+        drop_rate: 0.01,
+        transient_rate: 0.01,
+        brownout_rate: 0.002,
+        link_rate: 0.01,
+        seed: 5,
+    };
+    let run = sys
+        .run(
+            &RunSpec::new("seizure")
+                .frames(512)
+                .traffic(Traffic::Periodic { rate_hz: 2.0 })
+                .faults(Some(model))
+                .recovery(Recovery::default()),
+        )
+        .unwrap();
+    let r = &run.result;
+    assert!(r.fast_forwarded_frames > 0, "fast-forward must re-engage between faults");
+    // seed 5 over frames 0..512: 4 drops, 6 transients, 6 link losses
+    assert!(r.fault_retries > 0, "retries {}", r.fault_retries);
+    assert!(r.frames_dropped >= 4, "dropped {}", r.frames_dropped);
+    assert!(r.recovery_energy_mj > 0.0);
+    assert!(r.availability() < 1.0 && r.availability() > 0.9, "{}", r.availability());
+    // reliability block surfaces in both renderings
+    let text = run.render_text();
+    assert!(text.contains("reliability:"), "{text}");
+    let json = Json::parse(&run.to_json().render()).unwrap();
+    let avail = json.get("availability").and_then(Json::as_f64).unwrap();
+    assert_eq!(avail.to_bits(), r.availability().to_bits());
+}
+
+/// A faulted fleet dedups, scales and reports reliability percentiles —
+/// identically for any host thread count — and `--faults`' counters
+/// survive the population scaling.
+#[test]
+fn faulted_fleet_reports_reliability_percentiles_thread_invariant() {
+    // mixed:0.25:0.2:0.05:0.1:1 over frames 0..8: 4 drops, 1 transient,
+    // 1 link loss — every chip of every class shares the table.
+    let model = FaultModel {
+        drop_rate: 0.25,
+        transient_rate: 0.2,
+        brownout_rate: 0.05,
+        link_rate: 0.1,
+        seed: 1,
+    };
+    let sys = SocSystem::new();
+    let spec = |threads: usize| {
+        FleetSpec::mixed(64, 8)
+            .sample_k(1)
+            .threads(threads)
+            .faults(Some(model.clone()))
+            .recovery(Recovery::Retry { max: 2, backoff_s: 0.001 })
+    };
+    let a = sys.fleet(&spec(1)).unwrap();
+    let b = sys.fleet(&spec(4)).unwrap();
+    assert_eq!(
+        a.to_json().render(),
+        b.to_json().render(),
+        "fleet reliability must not depend on host threads"
+    );
+    assert!(a.frames_dropped >= 4 * a.chips as u64, "dropped {}", a.frames_dropped);
+    assert!(a.fault_retries > 0);
+    assert!(a.recovery_energy_j > 0.0);
+    assert!(a.availability.p50 < 1.0 && a.availability.p50 > 0.0, "{}", a.availability.p50);
+    assert!(a.recovery_mj_per_chip.p99 >= a.recovery_mj_per_chip.p50);
+    for c in &a.classes {
+        assert!(c.availability < 1.0, "{}: every class shares the fault table", c.key);
+        assert!(c.frames_dropped >= 4, "{}", c.key);
+    }
+    // the reliability block renders, and the fault model joins the key
+    let text = a.render_text();
+    assert!(text.contains("reliability:"), "{text}");
+    assert!(a.classes.iter().all(|c| c.key.contains("flt:")), "fault model must key classes");
+    // and a fault-free fleet keeps the historical clean rendering
+    let clean = sys.fleet(&FleetSpec::mixed(64, 8).sample_k(1)).unwrap();
+    assert_eq!(clean.frames_dropped, 0);
+    assert!(!clean.render_text().contains("reliability:"));
+}
+
+/// Satellite (structured parity error): a forced bit-flip on every
+/// sampled parity run's makespan makes `Fleet::run` fail with the class
+/// key, the mismatching field and both bit patterns — not a blanket
+/// count.
+#[test]
+fn corrupted_parity_reports_class_field_and_bits() {
+    let mut fleet = FleetSpec::mixed(8, 2).sample_k(1);
+    fleet.corrupt_parity = true;
+    let e = SocSystem::new().fleet(&fleet).unwrap_err().to_string();
+    assert!(e.contains("parity failed"), "{e}");
+    assert!(e.contains("first mismatch in class '"), "{e}");
+    assert!(e.contains("`makespan_s`"), "{e}");
+    assert!(e.contains("expected 0x"), "{e}");
+    assert!(e.contains("live run produced 0x"), "{e}");
+}
+
+/// The fault-sweep grid runs end-to-end: the baseline row is fault-free,
+/// every faulted row loses availability or pays recovery energy, and
+/// within a rate the policies rank as designed (degrade drops the most
+/// frames; retry/reset pay recovery energy).
+#[test]
+fn fault_sweep_rows_are_consistent() {
+    let sweep = SocSystem::new().fault_sweep("seizure", 64).unwrap();
+    assert_eq!(sweep.rows.len(), 7, "baseline + 2 rates x 3 policies");
+    let base = &sweep.rows[0];
+    assert_eq!(base.faults, "none");
+    assert_eq!(base.availability, 1.0);
+    assert_eq!(base.recovery_energy_mj, 0.0);
+    for r in &sweep.rows[1..] {
+        assert!(
+            r.availability < 1.0 || r.recovery_energy_mj > 0.0,
+            "{}/{}: faults must cost something",
+            r.faults,
+            r.recovery
+        );
+        assert!(r.energy_mj > 0.0);
+    }
+    let text = sweep.render_text();
+    assert!(text.contains("faultsweep: seizure"), "{text}");
+    let json = Json::parse(&sweep.to_json().render()).unwrap();
+    assert_eq!(json.get("rows").and_then(Json::as_array).unwrap().len(), 7);
+}
