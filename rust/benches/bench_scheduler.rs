@@ -27,8 +27,12 @@
 //! section with the same gap-dominated 512-frame stream run clean and
 //! under a seeded mixed fault model (headline key
 //! `fault_overhead_jobs_per_s_ratio` — the simulator-side cost of the
-//! fault machinery, guarded by CI) — the machine-readable
-//! perf trajectory CI tracks across PRs.
+//! fault machinery, guarded by CI), and a `session_overhead` section
+//! with the 512-frame `secure_link` stream run over a perfect, a
+//! retransmission-regime (loss 0.1) and an outage-regime (loss 0.6)
+//! seeded channel (headline key `session_overhead_jobs_per_s_ratio` —
+//! the steady-state cost of the secure-link session machinery, guarded
+//! by CI) — the machine-readable perf trajectory CI tracks across PRs.
 //!
 //! Uses `fulmine::bench_support` (the offline crate set has no criterion).
 
@@ -38,6 +42,7 @@ use fulmine::fault::{FaultModel, Recovery};
 use fulmine::hwce::golden::WeightPrec;
 use fulmine::json::Json;
 use fulmine::report;
+use fulmine::session::{SessionModel, SessionRecovery};
 use fulmine::soc::pm::{self, PolicyKind};
 use fulmine::soc::sched::{Engine, Scheduler, StreamScheduler, DEFAULT_STREAM_WINDOW};
 use fulmine::system::{FleetSpec, RunSpec, ShardedStream, SocSystem};
@@ -429,6 +434,74 @@ fn main() {
     let fault_overhead_ratio = fault_jps[1] / fault_jps[0].max(1e-12);
     println!("faulted vs clean simulator throughput: {fault_overhead_ratio:.2}x jobs/s");
 
+    // Secure-link session overhead: the same 512-frame secure_link
+    // stream run over a perfect channel, a retransmission-regime channel
+    // (loss 0.1 — every loss recovered within the timer budget, ~48 of
+    // 512 frames carry variants, fast-forward stays engaged between
+    // them) and an outage-regime channel (loss 0.6 — frames exhaust the
+    // 8-send budget and resumption handshakes fire). The guarded ratio
+    // compares the retransmission regime against clean: that is the
+    // steady-state cost of the session machinery (plan build, per-frame
+    // variant dispatch, fast-forward suspension around handshake and
+    // retransmission frames). The outage row is reported for the perf
+    // trajectory but not guarded — at loss 0.6 most frames are
+    // variants, so its throughput is dominated by variant dispatch, not
+    // by a hot-path regression. Session counters are deterministic
+    // model output of the seed-7 channel tables.
+    println!("\n== session overhead: secure_link x512 at periodic:2, clean vs lossy channel ==");
+    let session_frames = 512usize;
+    let mut session_rows: Vec<Json> = Vec::new();
+    let mut session_jps = [0.0f64; 3];
+    for (i, (mode, loss)) in [
+        ("clean", None),
+        ("lossy-0.1", Some(SessionModel { loss_rate: 0.1, seed: 7 })),
+        ("outage-0.6", Some(SessionModel { loss_rate: 0.6, seed: 7 })),
+    ]
+    .into_iter()
+    .enumerate()
+    {
+        let spec = RunSpec::new("secure_link")
+            .frames(session_frames)
+            .traffic(Traffic::Periodic { rate_hz: 2.0 })
+            .loss(loss)
+            .session_recovery(SessionRecovery::default());
+        let t = Instant::now();
+        let run = blackbox(sys.run(&spec).unwrap());
+        let wall_s = t.elapsed().as_secs_f64();
+        let r = &run.result;
+        let ss = run.session.unwrap_or_default();
+        let jps = r.total_jobs as f64 / wall_s.max(1e-12);
+        session_jps[i] = jps;
+        println!(
+            "{mode:<10} wall {wall_s:>8.4} s | {jps:>10.0} jobs/s | avail {:.4} | \
+             {} retx | {} resumptions | {} dropped | ff {} | overhead {:.4} mJ",
+            r.availability(),
+            ss.retransmissions,
+            ss.resumptions,
+            ss.records_dropped,
+            r.fast_forwarded_frames,
+            ss.overhead_mj
+        );
+        session_rows.push(Json::obj(vec![
+            ("workload", Json::string("secure_link")),
+            ("mode", Json::string(mode)),
+            ("frames", Json::num(session_frames as f64)),
+            ("wall_s", Json::num(wall_s)),
+            ("jobs_per_s", Json::num(jps)),
+            ("availability", Json::num(r.availability())),
+            ("retransmissions", Json::num(ss.retransmissions as f64)),
+            ("resumptions", Json::num(ss.resumptions as f64)),
+            ("full_handshakes", Json::num(ss.full_handshakes as f64)),
+            ("records_dropped", Json::num(ss.records_dropped as f64)),
+            ("handshake_mj", Json::num(ss.handshake_mj)),
+            ("overhead_mj", Json::num(ss.overhead_mj)),
+            ("goodput_fps", Json::num(ss.goodput_fps(session_frames, r.time_s))),
+            ("fast_forwarded_frames", Json::num(r.fast_forwarded_frames as f64)),
+        ]));
+    }
+    let session_overhead_ratio = session_jps[1] / session_jps[0].max(1e-12);
+    println!("lossy (0.1) vs clean simulator throughput: {session_overhead_ratio:.2}x jobs/s");
+
     let doc = Json::obj(vec![
         ("rungs", Json::Arr(rows)),
         ("stream_scaling", Json::Arr(scaling_rows)),
@@ -438,6 +511,8 @@ fn main() {
         ("policy", Json::Arr(policy_rows)),
         ("fault_overhead", Json::Arr(fault_rows)),
         ("fault_overhead_jobs_per_s_ratio", Json::num(fault_overhead_ratio)),
+        ("session_overhead", Json::Arr(session_rows)),
+        ("session_overhead_jobs_per_s_ratio", Json::num(session_overhead_ratio)),
         ("fleet_1m_dedup_speedup", Json::num(fleet_1m_speedup)),
         ("fleet_hetero_1m_dedup_speedup", Json::num(hetero_1m_speedup)),
         ("windowed_vs_scan_jobs_per_s", Json::num(vs_scan_64)),

@@ -10,6 +10,7 @@ use crate::apps::params::{gen_params, xorshift_i16};
 use crate::fault::{FaultModel, Recovery};
 use crate::report::{self, PAPER_ARTIFACTS};
 use crate::runtime::{default_artifact_dir, Runtime, TensorI16};
+use crate::session::{BackendKind, SessionModel, SessionRecovery};
 use crate::soc::pm::PolicyKind;
 use crate::system::{FleetSpec, RunSpec, RungSel, SocSystem};
 use crate::traffic::Traffic;
@@ -25,7 +26,9 @@ commands:
   ladder <workload> [--json]
                 run every ladder rung of a workload (one frame each)
   stream <workload> [--frames N] [--window K] [--shards S] [--config RUNG]
-         [--traffic MODEL] [--policy P] [--faults FM] [--recovery R] [--json]
+         [--traffic MODEL] [--policy P] [--faults FM] [--recovery R]
+         [--loss RATE[:SEED]] [--session-recovery SR] [--crypto-backend CB]
+         [--json]
                 pipeline N frames through the bounded-window streaming
                 scheduler: at most K frames in flight (default 8, clamped
                 to N), so memory stays O(K) however large N is; with
@@ -43,9 +46,17 @@ commands:
                 faults, identical across runs, shards and threads;
                 R: retry[:MAX[:BACKOFF_S]] | degrade | reset — how the chip
                 answers a fault (default retry:3; needs --faults); faulted
-                runs add an availability/retry/reset reliability report)
+                runs add an availability/retry/reset reliability report;
+                --loss models a lossy secure-link channel (session
+                workloads only, exclusive with --faults): seeded per-frame
+                delivery draws, DTLS-style doubling retransmission backoff,
+                SR: full | resume | degrade — how the session re-enters
+                after an outage (default resume; needs --loss);
+                CB: hwcrypt | sw | insram — which crypto cost model prices
+                the record traffic, overriding the rung's native engine)
   fleet [--chips N] [--frames F] [--sample K] [--threads T] [--policy P]
         [--drift PCT] [--phase-jitter S] [--faults FM] [--recovery R]
+        [--loss RATE[:SEED]] [--session-recovery SR] [--crypto-backend CB]
         [--json]
                 simulate a fleet of N endpoints (default 1000) spread over
                 every workload x rung x traffic model: chips dedup into
@@ -64,7 +75,10 @@ commands:
                 refuses, so results stay exact either way); --faults FM
                 with --recovery R subjects every chip to the seeded fault
                 process and adds fleet-wide availability and
-                recovery-energy percentiles to the report
+                recovery-energy percentiles to the report; --loss switches
+                the fleet to the secure_link mix and subjects every chip
+                to the seeded lossy channel, adding handshake/record
+                energy split and availability/goodput percentiles
   ablations [--json]
                 run the surveillance design-choice sweep
   faultsweep <workload> [--frames N] [--json]
@@ -72,6 +86,12 @@ commands:
                 recovery-policy grid point and tabulate availability,
                 drops/retries/resets and recovery energy against the
                 fault-free baseline
+  sessionsweep [--frames N] [--json]
+                stream N secure_link frames (default 256) once per
+                crypto-backend x loss-rate x recovery-policy grid point
+                (shared channel seed) and tabulate availability, goodput,
+                retransmissions/resumptions and the handshake-vs-record
+                energy split
   artifacts     list and compile the AOT artifacts (PJRT smoke test)
   infer <name>  execute one artifact with generated inputs, print a digest";
 
@@ -95,9 +115,13 @@ pub enum Command {
         policy: Option<PolicyKind>,
         faults: Option<FaultModel>,
         recovery: Option<Recovery>,
+        loss: Option<SessionModel>,
+        session_recovery: Option<SessionRecovery>,
+        crypto_backend: Option<BackendKind>,
         json: bool,
     },
-    /// Class-deduplicated fleet simulation over the standard mix.
+    /// Class-deduplicated fleet simulation over the standard mix (or,
+    /// under `--loss`, the secure_link mix).
     Fleet {
         chips: usize,
         frames: usize,
@@ -108,12 +132,17 @@ pub enum Command {
         phase_jitter: f64,
         faults: Option<FaultModel>,
         recovery: Option<Recovery>,
+        loss: Option<SessionModel>,
+        session_recovery: Option<SessionRecovery>,
+        crypto_backend: Option<BackendKind>,
         json: bool,
     },
     /// The surveillance ablation sweep.
     Ablations { json: bool },
     /// The fault-rate x recovery-policy reliability sweep.
     FaultSweep { workload: String, frames: usize, json: bool },
+    /// The crypto-backend x loss-rate x recovery-policy session sweep.
+    SessionSweep { frames: usize, json: bool },
     /// PJRT artifact listing/compilation.
     Artifacts,
     /// Execute one AOT artifact.
@@ -137,6 +166,7 @@ pub fn parse(args: &[String]) -> Result<Command> {
         "stream" => parse_stream(rest),
         "fleet" => parse_fleet(rest),
         "faultsweep" => parse_faultsweep(rest),
+        "sessionsweep" => parse_sessionsweep(rest),
         "ablations" => {
             let json = parse_json_flag(cmd, rest)?;
             Ok(Command::Ablations { json })
@@ -195,6 +225,9 @@ fn parse_stream(args: &[String]) -> Result<Command> {
     let mut policy: Option<PolicyKind> = None;
     let mut faults: Option<FaultModel> = None;
     let mut recovery: Option<Recovery> = None;
+    let mut loss: Option<SessionModel> = None;
+    let mut session_recovery: Option<SessionRecovery> = None;
+    let mut crypto_backend: Option<BackendKind> = None;
     let mut json = false;
     let mut it = args[1..].iter();
     while let Some(flag) = it.next() {
@@ -242,6 +275,19 @@ fn parse_stream(args: &[String]) -> Result<Command> {
                 let v = it.next().ok_or_else(|| anyhow!("--recovery needs a value"))?;
                 recovery = Some(Recovery::parse(v)?);
             }
+            "--loss" => {
+                let v = it.next().ok_or_else(|| anyhow!("--loss needs a value"))?;
+                loss = Some(SessionModel::parse(v)?);
+            }
+            "--session-recovery" => {
+                let v =
+                    it.next().ok_or_else(|| anyhow!("--session-recovery needs a value"))?;
+                session_recovery = Some(SessionRecovery::parse(v)?);
+            }
+            "--crypto-backend" => {
+                let v = it.next().ok_or_else(|| anyhow!("--crypto-backend needs a value"))?;
+                crypto_backend = Some(BackendKind::parse(v)?);
+            }
             "--json" => json = true,
             other => bail!("unknown stream flag {other:?}"),
         }
@@ -253,8 +299,21 @@ fn parse_stream(args: &[String]) -> Result<Command> {
         );
     }
     let (faults, recovery) = check_fault_flags(faults, recovery)?;
+    check_session_flags(&loss, session_recovery, &faults)?;
     Ok(Command::Stream {
-        workload, frames, window, shards, rung, traffic, policy, faults, recovery, json,
+        workload,
+        frames,
+        window,
+        shards,
+        rung,
+        traffic,
+        policy,
+        faults,
+        recovery,
+        loss,
+        session_recovery,
+        crypto_backend,
+        json,
     })
 }
 
@@ -275,6 +334,30 @@ fn check_fault_flags(
     Ok((faults.filter(|m| !m.is_none()), recovery))
 }
 
+/// Cross-validate the secure-link flags: a session recovery policy
+/// without a channel is a spec error, and `--loss` with `--faults`
+/// would stack two failure processes on the same frames — rejected at
+/// parse time with the same message [`crate::system`] uses at run time.
+/// (`--loss 0` is *not* normalized away: a perfect channel still
+/// performs its frame-0 handshake, which the loss-free identity tests
+/// rely on.)
+fn check_session_flags(
+    loss: &Option<SessionModel>,
+    session_recovery: Option<SessionRecovery>,
+    faults: &Option<FaultModel>,
+) -> Result<()> {
+    if session_recovery.is_some() && loss.is_none() {
+        bail!(
+            "--session-recovery without --loss has no outage to recover from — \
+             add a --loss channel (or drop --session-recovery)"
+        );
+    }
+    if loss.is_some() && faults.is_some() {
+        bail!("--loss and --faults are mutually exclusive (one failure model per run)");
+    }
+    Ok(())
+}
+
 /// Parse the `fleet` subcommand's flags: `[--chips N] [--frames F]
 /// [--sample K] [--threads T] [--drift PCT] [--phase-jitter S] [--json]`.
 fn parse_fleet(args: &[String]) -> Result<Command> {
@@ -287,6 +370,9 @@ fn parse_fleet(args: &[String]) -> Result<Command> {
     let mut phase_jitter = 0.0f64;
     let mut faults: Option<FaultModel> = None;
     let mut recovery: Option<Recovery> = None;
+    let mut loss: Option<SessionModel> = None;
+    let mut session_recovery: Option<SessionRecovery> = None;
+    let mut crypto_backend: Option<BackendKind> = None;
     let mut json = false;
     let mut it = args.iter();
     while let Some(flag) = it.next() {
@@ -343,13 +429,39 @@ fn parse_fleet(args: &[String]) -> Result<Command> {
                 let v = it.next().ok_or_else(|| anyhow!("--recovery needs a value"))?;
                 recovery = Some(Recovery::parse(v)?);
             }
+            "--loss" => {
+                let v = it.next().ok_or_else(|| anyhow!("--loss needs a value"))?;
+                loss = Some(SessionModel::parse(v)?);
+            }
+            "--session-recovery" => {
+                let v =
+                    it.next().ok_or_else(|| anyhow!("--session-recovery needs a value"))?;
+                session_recovery = Some(SessionRecovery::parse(v)?);
+            }
+            "--crypto-backend" => {
+                let v = it.next().ok_or_else(|| anyhow!("--crypto-backend needs a value"))?;
+                crypto_backend = Some(BackendKind::parse(v)?);
+            }
             "--json" => json = true,
             other => bail!("unknown fleet flag {other:?}"),
         }
     }
     let (faults, recovery) = check_fault_flags(faults, recovery)?;
+    check_session_flags(&loss, session_recovery, &faults)?;
     Ok(Command::Fleet {
-        chips, frames, sample, threads, policy, drift, phase_jitter, faults, recovery, json,
+        chips,
+        frames,
+        sample,
+        threads,
+        policy,
+        drift,
+        phase_jitter,
+        faults,
+        recovery,
+        loss,
+        session_recovery,
+        crypto_backend,
+        json,
     })
 }
 
@@ -376,6 +488,29 @@ fn parse_faultsweep(args: &[String]) -> Result<Command> {
         }
     }
     Ok(Command::FaultSweep { workload, frames, json })
+}
+
+/// Parse the `sessionsweep` subcommand: `[--frames N] [--json]`. The
+/// workload is always secure_link — the only registered session
+/// workload — so it takes no positional argument.
+fn parse_sessionsweep(args: &[String]) -> Result<Command> {
+    let mut frames = 256usize;
+    let mut json = false;
+    let mut it = args.iter();
+    while let Some(flag) = it.next() {
+        match flag.as_str() {
+            "--frames" => {
+                let v = it.next().ok_or_else(|| anyhow!("--frames needs a value"))?;
+                frames = v.parse().map_err(|_| anyhow!("bad --frames value {v:?}"))?;
+                if frames == 0 {
+                    bail!("--frames must be at least 1 (a stream of 0 frames schedules nothing)");
+                }
+            }
+            "--json" => json = true,
+            other => bail!("unknown sessionsweep flag {other:?}"),
+        }
+    }
+    Ok(Command::SessionSweep { frames, json })
 }
 
 /// Execute a parsed command, printing its output to stdout.
@@ -410,6 +545,9 @@ pub fn dispatch(cmd: &Command) -> Result<()> {
             policy,
             faults,
             recovery,
+            loss,
+            session_recovery,
+            crypto_backend,
             json,
         } => {
             let mut spec = RunSpec::new(workload)
@@ -419,7 +557,10 @@ pub fn dispatch(cmd: &Command) -> Result<()> {
                 .traffic(traffic.clone())
                 .policy(*policy)
                 .faults(faults.clone())
-                .recovery(recovery.unwrap_or_default());
+                .recovery(recovery.unwrap_or_default())
+                .loss(loss.clone())
+                .session_recovery(session_recovery.unwrap_or_default())
+                .crypto_backend(*crypto_backend);
             if let Some(w) = window {
                 spec = spec.window(*w);
             }
@@ -440,16 +581,30 @@ pub fn dispatch(cmd: &Command) -> Result<()> {
             phase_jitter,
             faults,
             recovery,
+            loss,
+            session_recovery,
+            crypto_backend,
             json,
         } => {
-            let fleet = FleetSpec::mixed(*chips, *frames)
+            // A lossy channel only makes sense over session workloads, so
+            // `--loss` switches the population from the standard mix to
+            // the secure_link rung x traffic mix.
+            let base = if loss.is_some() {
+                FleetSpec::secure_link(*chips, *frames)
+            } else {
+                FleetSpec::mixed(*chips, *frames)
+            };
+            let fleet = base
                 .sample_k(*sample)
                 .threads(*threads)
                 .policy(*policy)
                 .drift(*drift)
                 .phase_jitter(*phase_jitter)
                 .faults(faults.clone())
-                .recovery(recovery.unwrap_or_default());
+                .recovery(recovery.unwrap_or_default())
+                .loss(loss.clone())
+                .session_recovery(session_recovery.unwrap_or_default())
+                .crypto_backend(*crypto_backend);
             let report = SocSystem::new().fleet(&fleet)?;
             if *json {
                 println!("{}", report.to_json().render());
@@ -467,6 +622,14 @@ pub fn dispatch(cmd: &Command) -> Result<()> {
         }
         Command::FaultSweep { workload, frames, json } => {
             let sweep = SocSystem::new().fault_sweep(workload, *frames)?;
+            if *json {
+                println!("{}", sweep.to_json().render());
+            } else {
+                print!("{}", sweep.render_text());
+            }
+        }
+        Command::SessionSweep { frames, json } => {
+            let sweep = SocSystem::new().session_sweep(*frames)?;
             if *json {
                 println!("{}", sweep.to_json().render());
             } else {
@@ -551,6 +714,9 @@ mod tests {
                 policy: None,
                 faults: None,
                 recovery: None,
+                loss: None,
+                session_recovery: None,
+                crypto_backend: None,
                 json: false
             }
         );
@@ -567,6 +733,9 @@ mod tests {
                 policy: None,
                 faults: None,
                 recovery: None,
+                loss: None,
+                session_recovery: None,
+                crypto_backend: None,
                 json: true
             }
         );
@@ -583,6 +752,9 @@ mod tests {
                 policy: None,
                 faults: None,
                 recovery: None,
+                loss: None,
+                session_recovery: None,
+                crypto_backend: None,
                 json: false
             }
         );
@@ -599,6 +771,9 @@ mod tests {
                 policy: None,
                 faults: None,
                 recovery: None,
+                loss: None,
+                session_recovery: None,
+                crypto_backend: None,
                 json: false
             }
         );
@@ -638,6 +813,9 @@ mod tests {
                 policy: None,
                 faults: None,
                 recovery: None,
+                loss: None,
+                session_recovery: None,
+                crypto_backend: None,
                 json: false
             }
         );
@@ -711,6 +889,9 @@ mod tests {
                 policy: None,
                 faults: None,
                 recovery: None,
+                loss: None,
+                session_recovery: None,
+                crypto_backend: None,
                 json: false
             }
         );
@@ -726,6 +907,9 @@ mod tests {
                 policy: None,
                 faults: None,
                 recovery: None,
+                loss: None,
+                session_recovery: None,
+                crypto_backend: None,
                 json: false
             }
         );
@@ -822,6 +1006,9 @@ mod tests {
                 phase_jitter: 0.0,
                 faults: None,
                 recovery: None,
+                loss: None,
+                session_recovery: None,
+                crypto_backend: None,
                 json: false
             }
         );
@@ -841,6 +1028,9 @@ mod tests {
                 phase_jitter: 0.0,
                 faults: None,
                 recovery: None,
+                loss: None,
+                session_recovery: None,
+                crypto_backend: None,
                 json: true
             }
         );
@@ -910,6 +1100,9 @@ mod tests {
                 phase_jitter: 0.0,
                 faults: None,
                 recovery: None,
+                loss: None,
+                session_recovery: None,
+                crypto_backend: None,
                 json: false
             }
         );
@@ -1017,6 +1210,138 @@ mod tests {
         assert!(parse(&argv(&["faultsweep", "seizure", "--bogus"])).is_err());
         let cmd = parse(&argv(&["faultsweep", "seizure", "--frames", "16"])).unwrap();
         assert!(dispatch(&cmd).is_ok(), "small fault sweep must simulate cleanly");
+    }
+
+    /// Satellite (session flags): `--loss` accepts the `RATE[:SEED]`
+    /// grammar on both subcommands, `--session-recovery` parses the
+    /// three policies, `--crypto-backend` the three cost models — and
+    /// `--loss 0` is *kept* (a perfect channel still handshakes at
+    /// frame 0), unlike `--faults none` which normalizes away.
+    #[test]
+    fn parses_session_flags() {
+        let cmd = parse(&argv(&[
+            "stream", "secure_link", "--loss", "0.1:7", "--session-recovery", "degrade",
+            "--crypto-backend", "insram",
+        ]))
+        .unwrap();
+        match cmd {
+            Command::Stream { loss, session_recovery, crypto_backend, .. } => {
+                let m = loss.expect("channel model parsed");
+                assert_eq!(m.loss_rate, 0.1);
+                assert_eq!(m.seed, 7);
+                assert_eq!(session_recovery, Some(SessionRecovery::Degrade));
+                assert_eq!(crypto_backend, Some(BackendKind::InSram));
+            }
+            other => panic!("expected stream, got {other:?}"),
+        }
+        let cmd = parse(&argv(&[
+            "fleet", "--chips", "16", "--loss", "0.2", "--crypto-backend", "sw",
+        ]))
+        .unwrap();
+        match cmd {
+            Command::Fleet { loss, session_recovery, crypto_backend, .. } => {
+                let m = loss.expect("channel model parsed");
+                assert_eq!(m.loss_rate, 0.2);
+                assert_eq!(m.seed, 1, "seed defaults to 1");
+                assert_eq!(session_recovery, None, "recovery defaults at dispatch time");
+                assert_eq!(crypto_backend, Some(BackendKind::Software));
+            }
+            other => panic!("expected fleet, got {other:?}"),
+        }
+        // `--loss 0` is a real (perfect) channel, not the absent one
+        let cmd = parse(&argv(&["stream", "secure_link", "--loss", "0"])).unwrap();
+        match cmd {
+            Command::Stream { loss, .. } => {
+                assert_eq!(loss, Some(SessionModel::lossless()));
+            }
+            other => panic!("expected stream, got {other:?}"),
+        }
+        // `--crypto-backend` stands alone: no channel required
+        assert!(parse(&argv(&["stream", "seizure", "--crypto-backend", "sw"])).is_ok());
+    }
+
+    /// Negative paths of the session flags: missing values, out-of-domain
+    /// rates, unknown policies/backends, `--session-recovery` without a
+    /// channel, and `--loss` stacked on `--faults` are all rejected at
+    /// parse time with clear messages.
+    #[test]
+    fn rejects_bad_session_flags() {
+        assert!(parse(&argv(&["stream", "secure_link", "--loss"])).is_err());
+        assert!(parse(&argv(&["stream", "secure_link", "--session-recovery"])).is_err());
+        assert!(parse(&argv(&["stream", "secure_link", "--crypto-backend"])).is_err());
+        assert!(parse(&argv(&["fleet", "--loss"])).is_err());
+        let e = parse(&argv(&["stream", "secure_link", "--loss", "1.5"]))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("must be in [0, 1)"), "{e}");
+        let e = parse(&argv(&["stream", "secure_link", "--loss", "1"]))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("must be in [0, 1)"), "{e}");
+        assert!(parse(&argv(&["stream", "secure_link", "--loss", "abc"])).is_err());
+        assert!(parse(&argv(&["stream", "secure_link", "--loss", "0.1:nope"])).is_err());
+        let e = parse(&argv(&[
+            "stream", "secure_link", "--loss", "0.1", "--session-recovery", "pray",
+        ]))
+        .unwrap_err()
+        .to_string();
+        assert!(e.contains("unknown session recovery"), "{e}");
+        let e = parse(&argv(&["stream", "secure_link", "--crypto-backend", "quantum"]))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("unknown crypto backend"), "{e}");
+        // a recovery policy with no channel to recover is a spec error
+        for args in [
+            vec!["stream", "secure_link", "--session-recovery", "resume"],
+            vec!["fleet", "--session-recovery", "full"],
+        ] {
+            let e = parse(&argv(&args)).unwrap_err().to_string();
+            assert!(e.contains("--session-recovery without --loss"), "{e}");
+        }
+        // one failure model per run: a lossy channel excludes frame faults
+        for args in [
+            vec!["stream", "secure_link", "--loss", "0.1", "--faults", "drop:0.1"],
+            vec!["fleet", "--faults", "drop:0.1", "--loss", "0.1"],
+        ] {
+            let e = parse(&argv(&args)).unwrap_err().to_string();
+            assert!(e.contains("mutually exclusive"), "{e}");
+        }
+    }
+
+    /// A lossy secure-link stream and a secure-link fleet both dispatch
+    /// end-to-end through the real CLI path — session plan built,
+    /// retransmissions billed, session lines rendered.
+    #[test]
+    fn secure_link_dispatches_end_to_end() {
+        let cmd = parse(&argv(&[
+            "stream", "secure_link", "--frames", "16", "--loss", "0.3:7",
+            "--session-recovery", "resume", "--crypto-backend", "sw",
+        ]))
+        .unwrap();
+        assert!(dispatch(&cmd).is_ok(), "lossy secure-link stream must simulate cleanly");
+        let cmd = parse(&argv(&[
+            "fleet", "--chips", "8", "--frames", "2", "--sample", "1", "--loss", "0.3:7",
+        ]))
+        .unwrap();
+        assert!(dispatch(&cmd).is_ok(), "secure-link fleet must simulate cleanly");
+    }
+
+    /// `sessionsweep` parses its grammar, rejects garbage, and a small
+    /// sweep dispatches end-to-end.
+    #[test]
+    fn parses_and_dispatches_sessionsweep() {
+        assert_eq!(
+            parse(&argv(&["sessionsweep"])).unwrap(),
+            Command::SessionSweep { frames: 256, json: false }
+        );
+        assert_eq!(
+            parse(&argv(&["sessionsweep", "--frames", "8", "--json"])).unwrap(),
+            Command::SessionSweep { frames: 8, json: true }
+        );
+        assert!(parse(&argv(&["sessionsweep", "--frames", "0"])).is_err());
+        assert!(parse(&argv(&["sessionsweep", "--bogus"])).is_err());
+        let cmd = parse(&argv(&["sessionsweep", "--frames", "4"])).unwrap();
+        assert!(dispatch(&cmd).is_ok(), "small session sweep must simulate cleanly");
     }
 
     #[test]

@@ -51,8 +51,6 @@ pub mod surveillance;
 use crate::energy::{Category, EnergyLedger};
 use crate::extmem::Device;
 use crate::hwce::golden::WeightPrec;
-use crate::hwcrypt;
-use crate::kernels_sw::crypto_cost;
 use crate::soc::opmodes::{OperatingMode, OperatingPoint};
 use crate::soc::pm::PolicyKind;
 use crate::soc::power::Component;
@@ -70,7 +68,7 @@ pub const TILE_BYTES: usize = TCDM_BYTES / 2;
 /// Cycles a core spends programming an accelerator job (register writes +
 /// trigger; the core then clock-gates on the event unit while the engine
 /// runs). Same order as the HWCRYPT's measured
-/// [`hwcrypt::JOB_CONFIG_CYCLES`].
+/// [`crate::hwcrypt::JOB_CONFIG_CYCLES`].
 pub const ACCEL_CTRL_CYCLES: f64 = 32.0;
 
 /// Granularity at which a use case's layers are emitted.
@@ -406,6 +404,74 @@ pub fn stream_graph_faulted_pm(
     policy: Option<PolicyKind>,
     plan: Option<&crate::fault::FaultPlan>,
 ) -> StreamResult {
+    stream_graph_planned_pm(
+        label,
+        graph,
+        frames,
+        window,
+        eq_ops_per_frame,
+        release,
+        policy,
+        plan.map(|p| p.variant_refs()),
+        |res| {
+            if let Some(p) = plan {
+                crate::fault::apply_stats(res, &p.stats, 1.0);
+            }
+        },
+    )
+}
+
+/// [`stream_graph_traffic_pm`] under a secure-link session plan
+/// ([`crate::session::SessionPlan`]): handshake, retransmission and
+/// outage frames execute their variants through the scheduler's
+/// per-frame variant path, and the plan's session counters attach to
+/// the packaged result. `None` routes through the original entry
+/// point, bitwise.
+#[allow(clippy::too_many_arguments)]
+pub fn stream_graph_session_pm(
+    label: &str,
+    graph: &JobGraph,
+    frames: usize,
+    window: usize,
+    eq_ops_per_frame: u64,
+    release: &[f64],
+    policy: Option<PolicyKind>,
+    plan: Option<&crate::session::SessionPlan>,
+) -> StreamResult {
+    stream_graph_planned_pm(
+        label,
+        graph,
+        frames,
+        window,
+        eq_ops_per_frame,
+        release,
+        policy,
+        plan.map(|p| p.variant_refs()),
+        |res| {
+            if let Some(p) = plan {
+                crate::session::apply_stats(res, &p.stats, 1.0);
+            }
+        },
+    )
+}
+
+/// The shared planned-stream core: run with per-frame variants when a
+/// plan supplies them (the [`StreamScheduler`]'s PR 5/PR 9 path —
+/// fast-forward suspends around variant frames and re-engages on the
+/// steady phase), let `attach` pin the plan's counters onto the raw
+/// result, then package the [`StreamResult`].
+#[allow(clippy::too_many_arguments)]
+fn stream_graph_planned_pm(
+    label: &str,
+    graph: &JobGraph,
+    frames: usize,
+    window: usize,
+    eq_ops_per_frame: u64,
+    release: &[f64],
+    policy: Option<PolicyKind>,
+    variants: Option<Vec<(usize, &JobGraph)>>,
+    attach: impl FnOnce(&mut crate::soc::sched::SchedResult),
+) -> StreamResult {
     assert!(frames >= 1, "streaming needs at least one frame");
     // A window wider than the stream clamps to it: the rolling window
     // could never fill the extra slots, and the report should say what
@@ -413,7 +479,7 @@ pub fn stream_graph_faulted_pm(
     let window = window.min(frames);
     let single = Scheduler::run(graph);
     let analytic = graph.analytic();
-    let mut res = match plan {
+    let mut res = match variants {
         None => StreamScheduler::run_compiled_traffic_pm(
             &crate::soc::sched::CompiledFrame::compile(graph),
             frames,
@@ -421,18 +487,11 @@ pub fn stream_graph_faulted_pm(
             release,
             policy,
         ),
-        Some(p) => StreamScheduler::run_with_variants_traffic_pm(
-            graph,
-            frames,
-            window,
-            &p.variant_refs(),
-            release,
-            policy,
-        ),
+        Some(v) => {
+            StreamScheduler::run_with_variants_traffic_pm(graph, frames, window, &v, release, policy)
+        }
     };
-    if let Some(p) = plan {
-        crate::fault::apply_stats(&mut res, &p.stats, 1.0);
-    }
+    attach(&mut res);
     let energy_mj = res.ledger.total_mj();
     StreamResult {
         label: label.to_string(),
@@ -670,6 +729,11 @@ pub struct GraphBuilder {
     /// The operating mode the workload keeps the cluster at for its
     /// convolution and epilogue phases — see [`GraphBuilder::set_cluster_point`].
     cluster_point: OperatingMode,
+    /// Which crypto cost model prices the `xts`/`sponge_ae` phases —
+    /// defaults to the configuration's native backend (HWCRYPT when the
+    /// rung has it, software otherwise), overridden for the CryptoSRAM-
+    /// style backend ablation ([`crate::session::BackendKind`]).
+    backend: crate::session::BackendKind,
 }
 
 impl GraphBuilder {
@@ -679,7 +743,20 @@ impl GraphBuilder {
         // HWCRYPT traffic raise it to the all-capable CRY-CNN-SW point
         // for co-residency.
         let cluster_point = cfg.conv_op().mode;
-        GraphBuilder { cfg, graph: JobGraph::new(), emission_mode: None, cluster_point }
+        let backend = crate::session::BackendKind::native(&cfg);
+        GraphBuilder { cfg, graph: JobGraph::new(), emission_mode: None, cluster_point, backend }
+    }
+
+    /// Override the crypto cost model for every subsequent `xts` and
+    /// `sponge_ae` phase. The default ([`crate::session::BackendKind::native`])
+    /// reproduces the configuration's own arms bitwise.
+    pub fn set_backend(&mut self, backend: crate::session::BackendKind) {
+        self.backend = backend;
+    }
+
+    /// The active crypto backend.
+    pub fn backend(&self) -> crate::session::BackendKind {
+        self.backend
     }
 
     /// Pin the cluster at `mode` for convolution and epilogue phases. A
@@ -835,86 +912,69 @@ impl GraphBuilder {
         }
     }
 
-    /// An AES-128-XTS phase over `bytes` (en- or decryption). The HWCRYPT
-    /// path needs the all-capable CRY-CNN-SW point and is programmed from
-    /// the crypto controller core.
+    /// An AES-128-XTS phase over `bytes` (en- or decryption), priced by
+    /// the active [`crate::session::CryptoBackend`] — the HWCRYPT path
+    /// needs the all-capable CRY-CNN-SW point and is programmed from the
+    /// crypto controller core; the software and in-SRAM models run on
+    /// the cores.
     pub fn xts(&mut self, bytes: usize, deps: &[JobId]) -> JobId {
-        if self.cfg.hwcrypt {
-            let op = self.cfg.crypto_op(); // the AES datapath needs CRY-CNN-SW
-            let cycles =
-                hwcrypt::CipherOp::AesXts.cycles(bytes) as f64 + hwcrypt::JOB_CONFIG_CYCLES as f64;
-            let ctrl = self.accel_ctrl(self.crypto_ctrl_core(), op, deps);
-            self.push(
-                "xts",
-                vec![Engine::HwcryptAes],
-                op,
-                cycles / op.freq_hz(),
-                &[ctrl],
-                vec![
-                    (Category::Crypto, Component::Core, 1.0), // controller core
-                    (Category::Crypto, Component::ClusterInfra, 1.0),
-                    (Category::Crypto, Component::HwcryptAes, 1.0),
-                ],
-            )
-        } else {
-            let op = self.cfg.sw_op();
-            let cycles = crypto_cost::sw_xts_cpb(self.cfg.n_cores) * bytes as f64;
-            let engines = self.core_set(self.cfg.n_cores);
-            self.push(
-                "xts",
-                engines,
-                op,
-                cycles / op.freq_hz(),
-                deps,
-                vec![
-                    (Category::Crypto, Component::Core, self.cfg.n_cores as f64),
-                    (Category::Crypto, Component::ClusterInfra, 1.0),
-                ],
-            )
+        let cost = self.backend.model().xts(&self.cfg, self.cluster_point, bytes);
+        self.emit_crypto("xts", cost, deps)
+    }
+
+    /// A sponge authenticated-encryption phase (KEC-CNN-SW capable; the
+    /// HWCRYPT backend hosts it at the cluster point when that point
+    /// covers the KECCAK datapath), priced by the active backend.
+    pub fn sponge_ae(&mut self, bytes: usize, deps: &[JobId]) -> JobId {
+        let cost = self.backend.model().sponge_ae(&self.cfg, self.cluster_point, bytes);
+        self.emit_crypto("sponge-ae", cost, deps)
+    }
+
+    /// Lower one priced crypto phase: accelerator-backed costs get a
+    /// control stub from the crypto controller core and the engine job;
+    /// core-backed costs occupy their core set directly.
+    fn emit_crypto(&mut self, label: &'static str, cost: crate::session::CryptoCost, deps: &[JobId]) -> JobId {
+        let op = cost.op(&self.cfg);
+        match cost.accel {
+            Some(engine) => {
+                let ctrl = self.accel_ctrl(self.crypto_ctrl_core(), op, deps);
+                self.push(label, vec![engine], op, cost.cycles / op.freq_hz(), &[ctrl], cost.charges)
+            }
+            None => {
+                let engines = self.core_set(cost.cores);
+                self.push(label, engines, op, cost.cycles / op.freq_hz(), deps, cost.charges)
+            }
         }
     }
 
-    /// A sponge authenticated-encryption phase (KEC-CNN-SW capable; hosted
-    /// at the cluster point when that point covers the KECCAK datapath).
-    pub fn sponge_ae(&mut self, bytes: usize, deps: &[JobId]) -> JobId {
-        if self.cfg.hwcrypt {
-            let mode = if self.cluster_point.keccak_available() {
-                self.cluster_point
-            } else {
-                OperatingMode::KecCnnSw
-            };
-            let op = OperatingPoint::new(mode, self.cfg.vdd);
-            let cycles = hwcrypt::CipherOp::SpongeAe(crate::crypto::sponge::SpongeConfig::MAX_RATE)
-                .cycles(bytes) as f64;
-            let ctrl = self.accel_ctrl(self.crypto_ctrl_core(), op, deps);
-            self.push(
-                "sponge-ae",
-                vec![Engine::HwcryptKec],
-                op,
-                cycles / op.freq_hz(),
-                &[ctrl],
-                vec![
-                    (Category::Crypto, Component::Core, 1.0),
-                    (Category::Crypto, Component::ClusterInfra, 1.0),
-                    (Category::Crypto, Component::HwcryptKec, 1.0),
-                ],
-            )
-        } else {
-            let op = self.cfg.sw_op();
-            let cycles = crypto_cost::SW_KECCAK_CPB_1CORE * bytes as f64;
-            let engines = self.core_set(1);
-            self.push(
-                "sponge-ae",
-                engines,
-                op,
-                cycles / op.freq_hz(),
-                deps,
-                vec![
-                    (Category::Crypto, Component::Core, 1.0),
-                    (Category::Crypto, Component::ClusterInfra, 1.0),
-                ],
-            )
-        }
+    /// The secure-link handshake placeholders: a cookie-exchange job and
+    /// a flight job on `Core(0)` at the cluster point, both zero-duration
+    /// (zero energy) in the steady template. A [`crate::session::SessionPlan`]
+    /// inflates them on handshake frames; record jobs that must wait for
+    /// session establishment depend on the returned flight id.
+    pub fn session_handshake(&mut self) -> (JobId, JobId) {
+        let op = OperatingPoint::new(self.cluster_point, self.cfg.vdd);
+        let charges = vec![
+            (Category::OtherSw, Component::Core, 1.0),
+            (Category::OtherSw, Component::ClusterInfra, 1.0),
+        ];
+        let cookie = self.push(
+            crate::session::HS_COOKIE_LABEL,
+            vec![Engine::Core(0)],
+            op,
+            0.0,
+            &[],
+            charges.clone(),
+        );
+        let flight = self.push(
+            crate::session::HS_FLIGHT_LABEL,
+            vec![Engine::Core(0)],
+            op,
+            0.0,
+            &[cookie],
+            charges,
+        );
+        (cookie, flight)
     }
 
     /// A software phase of `cycles_1core` single-core cycles with a

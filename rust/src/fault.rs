@@ -36,10 +36,12 @@
 //! ## Recovery policies
 //!
 //! * [`Recovery::Retry`] — re-execute the faulted work, up to `max`
-//!   attempts with `backoff_s` of dead time per attempt; each retry may
-//!   fail again (drawn from the same per-frame stream), and a frame
-//!   that exhausts its retries is dropped *after* paying for every
-//!   attempt.
+//!   attempts; the wait before each retry starts at `backoff_s` and
+//!   doubles per prior attempt, saturating at [`BACKOFF_CAP_FACTOR`]×
+//!   (RFC 6347-style timers — overflow-free even at the [`MAX_RETRIES`]
+//!   budget). Each retry may fail again (drawn from the same per-frame
+//!   stream), and a frame that exhausts its retries is dropped *after*
+//!   paying for every attempt.
 //! * [`Recovery::Degrade`] — skip the frame, count it, keep streaming
 //!   (the right answer when freshness beats completeness).
 //! * [`Recovery::Reset`] — watchdog flush + restart: the frame
@@ -66,6 +68,31 @@ const FAULT_SALT: u64 = 0xFA01_7D0C_ED5E_ED11;
 /// Hard cap on retry attempts — a watchdog bound, and it keeps the
 /// per-frame draw count O(1).
 pub const MAX_RETRIES: u32 = 64;
+
+/// Saturation ceiling of the doubling backoff ladder: the wait before a
+/// retry doubles per prior attempt (RFC 6347-style timers) but never
+/// exceeds `64×` the initial backoff. The factor is computed in `f64`
+/// from a capped shift, so a retry budget as large as [`MAX_RETRIES`]
+/// can never overflow the `1 << k` arithmetic (`1u64 << 64` would).
+pub const BACKOFF_CAP_FACTOR: f64 = 64.0;
+
+/// Backoff multiplier before the `step`-th retry (0-based): `2^step`,
+/// saturating at [`BACKOFF_CAP_FACTOR`].
+pub fn backoff_factor(step: u32) -> f64 {
+    if step >= 6 {
+        BACKOFF_CAP_FACTOR
+    } else {
+        (1u64 << step) as f64
+    }
+}
+
+/// Total dead time spent waiting across `execs` executions of a frame
+/// (the first execution waits nothing; retry `k` waits
+/// `backoff_s × backoff_factor(k-1)`). Saturating and overflow-free for
+/// any `execs ≤ MAX_RETRIES + 1`.
+pub fn backoff_dead_s(backoff_s: f64, execs: u32) -> f64 {
+    (1..execs).map(|k| backoff_s * backoff_factor(k - 1)).sum()
+}
 
 /// Which fault struck a frame.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -291,9 +318,10 @@ fn parse_rate(s: &str) -> Result<f64> {
 /// How the endpoint answers a fault.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Recovery {
-    /// Re-execute the faulted work, at most `max` attempts, `backoff_s`
-    /// of dead time before each; exhausting the budget drops the frame
-    /// (after paying for every attempt).
+    /// Re-execute the faulted work, at most `max` attempts; the wait
+    /// before each retry starts at `backoff_s` and doubles per prior
+    /// attempt, saturating at [`BACKOFF_CAP_FACTOR`]×. Exhausting the
+    /// budget drops the frame (after paying for every attempt).
     Retry { max: u32, backoff_s: f64 },
     /// Skip the faulted frame, count it, keep streaming.
     Degrade,
@@ -464,7 +492,7 @@ impl FaultPlan {
                     if !ok {
                         plan.stats.frames_dropped += 1;
                     }
-                    rework_variant(frame, execs as f64, (execs - 1) as f64 * backoff_s, false)
+                    rework_variant(frame, execs as f64, backoff_dead_s(backoff_s, execs), false)
                 }
                 (FrameFault::Link, Recovery::Retry { max, backoff_s }) => {
                     let (execs, ok) = retry_attempts(&mut rng, model.link_rate, max);
@@ -472,7 +500,7 @@ impl FaultPlan {
                     if !ok {
                         plan.stats.frames_dropped += 1;
                     }
-                    cry_rework_variant(frame, execs as f64, (execs - 1) as f64 * backoff_s)
+                    cry_rework_variant(frame, execs as f64, backoff_dead_s(backoff_s, execs))
                 }
                 (FrameFault::Transient | FrameFault::Link, Recovery::Degrade) => {
                     plan.stats.frames_dropped += 1;
@@ -822,5 +850,39 @@ mod tests {
         assert_eq!(r.recovery_energy_mj, 0.5);
         assert!((r.ledger.total_mj() - before - 0.125).abs() < 1e-12);
         assert!((stats.availability(4) - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn backoff_doubles_then_saturates_without_overflow() {
+        // doubling: 1, 2, 4, 8, 16, 32 then pinned at the cap
+        for (step, want) in [(0, 1.0), (1, 2.0), (5, 32.0), (6, 64.0), (7, 64.0), (63, 64.0)] {
+            assert_eq!(backoff_factor(step), want, "step {step}");
+        }
+        assert_eq!(backoff_factor(u32::MAX), BACKOFF_CAP_FACTOR);
+        // execs = 10 → nine waits: 1+2+4+8+16+32+64+64+64 = 255
+        let b = 0.05;
+        assert!((backoff_dead_s(b, 10) - 255.0 * b).abs() < 1e-12);
+        // one past the retry budget: finite, monotone, no shift overflow
+        let budget = backoff_dead_s(b, MAX_RETRIES + 1);
+        assert!(budget.is_finite());
+        assert!(budget > backoff_dead_s(b, MAX_RETRIES));
+        // zero or one execution waits for nothing
+        assert_eq!(backoff_dead_s(b, 0), 0.0);
+        assert_eq!(backoff_dead_s(b, 1), 0.0);
+    }
+
+    #[test]
+    fn retry_exhaustion_is_counted_as_a_drop() {
+        let g = graph();
+        // near-certain transients against a one-retry budget: most faulted
+        // frames exhaust and must land in the availability accounting
+        let m = model(0.95);
+        let plan = FaultPlan::build(&m, Recovery::Retry { max: 1, backoff_s: 0.01 }, &g, 0, 512, 8);
+        assert!(plan.stats.faulted_frames > 0);
+        assert!(plan.stats.frames_dropped > 0, "exhausted retries must count as drops");
+        assert!(plan.stats.frames_dropped <= plan.stats.faulted_frames);
+        assert!(plan.stats.availability(512) < 1.0);
+        let kept = 512 - plan.stats.frames_dropped;
+        assert!((plan.stats.availability(512) - kept as f64 / 512.0).abs() < 1e-12);
     }
 }

@@ -122,6 +122,7 @@ pub mod json;
 pub mod kernels_sw;
 pub mod report;
 pub mod runtime;
+pub mod session;
 pub mod soc;
 pub mod system;
 pub mod traffic;

@@ -1,0 +1,1123 @@
+//! Secure-link sessions over a deterministic lossy channel.
+//!
+//! The paper encrypts everything that crosses the analytics boundary,
+//! but every §IV workload models only the steady record phase — as if
+//! the radio never dropped a datagram. A deployed endpoint speaks a
+//! DTLS-style protocol: a cookie exchange and ECC-heavy handshake
+//! flights on the SW cores (the reconfigurable-DTLS-engine op
+//! breakdown: the handshake is public-key-bound, the record phase is
+//! AES-bound with opposite engine affinity), then AEAD record traffic
+//! on HWCRYPT. This module models that session layer over a *lossy*
+//! channel with RFC 6347-style retransmission timers — the wait doubles
+//! per retransmission and saturates via
+//! [`crate::fault::backoff_factor`] — and a [`SessionRecovery`] policy
+//! for what happens when the link goes down mid-stream:
+//!
+//! * [`SessionRecovery::FullHandshake`] — renegotiate from the cookie
+//!   exchange up (4 flights, ECC both ways).
+//! * [`SessionRecovery::Resume`] — abbreviated resumption handshake
+//!   (one flight, no ECC): the session ticket survives the outage.
+//! * [`SessionRecovery::Degrade`] — drop records while the link is
+//!   down instead of stalling the pipeline; freshness beats
+//!   completeness for near-sensor analytics.
+//!
+//! ## Determinism
+//!
+//! Loss is drawn per flight from the salted xorshift64* discipline of
+//! [`crate::fault`]: frame `f`'s record deliveries come from a stream
+//! seeded by `(seed ^ SESSION_SALT, f)` and its handshake flights from
+//! `(seed ^ HS_SALT, f)`, so the retransmission/resumption schedule
+//! depends only on `(model, f)` — bitwise identical across runs, shard
+//! splits and thread counts, with O(1) lookback (a shard starting at
+//! `s` decides "was the link down?" from frame `s-1`'s draw alone).
+//!
+//! ## Integration: handshakes are per-frame variants
+//!
+//! The `secure_link` template carries two zero-duration placeholder
+//! jobs ([`HS_COOKIE_LABEL`], [`HS_FLIGHT_LABEL`]) on the SW cores; a
+//! handshake frame is a template *variant* (PR 5/PR 9 machinery in
+//! [`crate::soc::sched::StreamScheduler`]) whose placeholders inflate
+//! to the flight compute, whose crypto-charged record jobs scale by
+//! the retransmission count (honest re-billing, the
+//! [`crate::fault`] link-loss convention), and whose root jobs stretch
+//! by the backoff dead time without billing active energy. Steady
+//! delivered frames stay the unmodified template, so fast-forward
+//! suspends exactly around handshake/retransmission frames and
+//! re-engages on the steady record phase.
+//!
+//! ## Pluggable crypto backends
+//!
+//! The record-phase cost model sits behind [`CryptoBackend`]
+//! (CryptoSRAM's motivation): the HWCRYPT engines, software AES/KECCAK
+//! via [`crate::kernels_sw::crypto_cost`], or an in-SRAM compute model.
+//! [`crate::coordinator::GraphBuilder`] routes every `xts`/`sponge_ae`
+//! phase through the selected backend, so one ablation sweeps backends
+//! across `secure_link` *and* the existing §IV workloads.
+
+use crate::coordinator::ExecConfig;
+use crate::energy::Category;
+use crate::fault::backoff_factor;
+use crate::hwcrypt;
+use crate::kernels_sw::crypto_cost;
+use crate::soc::opmodes::{OperatingMode, OperatingPoint};
+use crate::soc::power::Component;
+use crate::soc::sched::{Engine, JobGraph, SchedResult};
+use crate::traffic::{mix_seed, Xorshift64Star};
+use anyhow::{anyhow, bail, Result};
+
+/// Salt folded into the session seed for the per-frame *record* loss
+/// stream — independent of traffic phase, fault draws and the handshake
+/// stream even under equal user-facing seeds.
+const SESSION_SALT: u64 = 0x5E55_10D0_CADE_0D1E;
+
+/// Salt of the per-frame *handshake flight* loss stream.
+const HS_SALT: u64 = 0x4A5D_54A8_F119_075E;
+
+/// Maximum retransmissions of one flight or record before the sender
+/// gives up (RFC 6347 suggests bounding the timer ladder; 7 retries
+/// with doubling backoff spans the usual 1 s → 64 s window scaled to
+/// the sensor cadence).
+pub const MAX_RETX: u32 = 7;
+
+/// Initial retransmission timer (seconds). Doubles per retransmission,
+/// saturating at [`crate::fault::BACKOFF_CAP_FACTOR`]× — the same
+/// capped ladder the fault layer's retry policy uses.
+pub const RETX_INIT_S: f64 = 0.05;
+
+/// SW cycles of one cookie-exchange flight (HelloVerify round: parse,
+/// stateless cookie MAC, re-serialize — cheap by design).
+pub const COOKIE_CYCLES: f64 = 40_000.0;
+
+/// SW cycles of one ECC handshake flight (P-256 scalar multiplications
+/// dominate — the DTLS-engine breakdown puts the asymmetric flights
+/// orders of magnitude above the record phase).
+pub const ECC_FLIGHT_CYCLES: f64 = 2_600_000.0;
+
+/// SW cycles of the abbreviated resumption flight (PSK-style: key
+/// derivation and finished MACs, no public-key work).
+pub const RESUME_FLIGHT_CYCLES: f64 = 120_000.0;
+
+/// Payload bytes of one AEAD record (one sensor readout batch).
+pub const RECORD_BYTES: usize = 2048;
+
+/// Template label of the cookie-exchange placeholder job.
+pub const HS_COOKIE_LABEL: &str = "hs-cookie";
+
+/// Template label of the handshake-flight placeholder job.
+pub const HS_FLIGHT_LABEL: &str = "hs-flight";
+
+/// A seeded, per-frame-deterministic lossy channel. `loss_rate` is the
+/// per-transmission loss probability; every flight and record draws
+/// its delivery attempts from a per-frame stream, so the schedule is
+/// invariant across runs, shard splits and thread counts.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SessionModel {
+    /// P(loss) per transmission attempt.
+    pub loss_rate: f64,
+    /// xorshift64* seed of the channel streams.
+    pub seed: u64,
+}
+
+/// One transmission's outcome: how many sends it took, whether it ever
+/// arrived, and the retransmission-timer dead time paid waiting.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Delivery {
+    /// Transmission attempts performed (1 = delivered first try).
+    pub execs: u32,
+    /// Whether any attempt arrived before the budget ran out.
+    pub delivered: bool,
+    /// Total timer dead time across the attempts (seconds).
+    pub dead_s: f64,
+}
+
+/// Run one transmission against the channel: attempt, wait the doubling
+/// backoff, retransmit — up to [`MAX_RETX`] retransmissions. `rng` is
+/// an already-positioned per-frame stream; `next_unit` is in `(0, 1]`,
+/// so a zero loss rate delivers every attempt first try with no draws
+/// wasted.
+pub fn deliver(rng: &mut Xorshift64Star, loss_rate: f64) -> Delivery {
+    let mut dead_s = 0.0;
+    for attempt in 0..=MAX_RETX {
+        if rng.next_unit() > loss_rate {
+            return Delivery { execs: attempt + 1, delivered: true, dead_s };
+        }
+        if attempt < MAX_RETX {
+            dead_s += RETX_INIT_S * backoff_factor(attempt);
+        }
+    }
+    Delivery { execs: MAX_RETX + 1, delivered: false, dead_s }
+}
+
+impl SessionModel {
+    /// The lossless channel (`--loss 0`): every transmission delivers
+    /// first try. The stream still performs its frame-0 handshake.
+    pub fn lossless() -> SessionModel {
+        SessionModel { loss_rate: 0.0, seed: 1 }
+    }
+
+    /// Validate: finite, in `[0, 1)` (a channel that loses *every*
+    /// transmission never completes a handshake — a spec error).
+    pub fn validate(&self) -> Result<()> {
+        if !(self.loss_rate.is_finite() && (0.0..1.0).contains(&self.loss_rate)) {
+            bail!("channel loss rate must be in [0, 1), got {}", self.loss_rate);
+        }
+        Ok(())
+    }
+
+    /// Canonical class-key fragment (bit-exact rate, seed).
+    pub fn key(&self) -> String {
+        format!("ses:{:016x}:{:016x}", self.loss_rate.to_bits(), self.seed)
+    }
+
+    /// Human-readable description for reports.
+    pub fn describe(&self) -> String {
+        format!("loss {} (seed {})", self.loss_rate, self.seed)
+    }
+
+    /// Parse a CLI spec: `RATE[:SEED]` (seed defaults to 1).
+    pub fn parse(s: &str) -> Result<SessionModel> {
+        let parts: Vec<&str> = s.split(':').collect();
+        if parts.is_empty() || parts.len() > 2 {
+            bail!("expected RATE[:SEED], got {s:?}");
+        }
+        let loss_rate = parts[0]
+            .parse::<f64>()
+            .map_err(|_| anyhow!("bad channel loss rate '{}' (per-transmission probability)", parts[0]))?;
+        let seed = match parts.get(1) {
+            Some(p) => p.parse().map_err(|_| anyhow!("bad channel seed {p:?}"))?,
+            None => 1,
+        };
+        let m = SessionModel { loss_rate, seed };
+        m.validate()?;
+        Ok(m)
+    }
+
+    /// The record-delivery draw stream for global frame `frame`.
+    fn record_rng(&self, frame: u64) -> Xorshift64Star {
+        Xorshift64Star::new(mix_seed(self.seed ^ SESSION_SALT, frame))
+    }
+
+    /// The handshake-flight draw stream for global frame `frame`.
+    fn hs_rng(&self, frame: u64) -> Xorshift64Star {
+        Xorshift64Star::new(mix_seed(self.seed ^ HS_SALT, frame))
+    }
+
+    /// Frame `frame`'s record transmission outcome — depends only on
+    /// `(model, frame)`, never on how the stream is sharded.
+    pub fn record_delivery(&self, frame: usize) -> Delivery {
+        deliver(&mut self.record_rng(frame as u64), self.loss_rate)
+    }
+
+    /// Whether the link is down *entering* global frame `frame`: the
+    /// previous frame's record exhausted its retransmission budget.
+    /// O(1) — a shard starting anywhere answers this from one draw.
+    pub fn link_down_at(&self, frame: usize) -> bool {
+        frame > 0 && !self.record_delivery(frame - 1).delivered
+    }
+}
+
+/// How a stream re-establishes its session after a link outage.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SessionRecovery {
+    /// Renegotiate from scratch: cookie exchange + both ECC flights.
+    FullHandshake,
+    /// Abbreviated resumption handshake (session ticket): one cheap
+    /// flight, no public-key work.
+    Resume,
+    /// Graceful degradation: drop records while the link is down and
+    /// keep the pipeline streaming; re-enter on the next delivery.
+    Degrade,
+}
+
+impl Default for SessionRecovery {
+    /// The policy assumed when `--loss` is given without
+    /// `--session-recovery` — resumption is the DTLS-native answer.
+    fn default() -> Self {
+        SessionRecovery::Resume
+    }
+}
+
+impl SessionRecovery {
+    /// Canonical class-key fragment.
+    pub fn key(self) -> &'static str {
+        match self {
+            SessionRecovery::FullHandshake => "full",
+            SessionRecovery::Resume => "resume",
+            SessionRecovery::Degrade => "degrade",
+        }
+    }
+
+    pub fn describe(self) -> &'static str {
+        match self {
+            SessionRecovery::FullHandshake => "full handshake",
+            SessionRecovery::Resume => "resumption",
+            SessionRecovery::Degrade => "degrade (drop while down)",
+        }
+    }
+
+    /// Parse a CLI spec: `full`, `resume` or `degrade`.
+    pub fn parse(s: &str) -> Result<SessionRecovery> {
+        match s {
+            "full" => Ok(SessionRecovery::FullHandshake),
+            "resume" => Ok(SessionRecovery::Resume),
+            "degrade" => Ok(SessionRecovery::Degrade),
+            other => bail!("unknown session recovery '{other}' (expected full, resume or degrade)"),
+        }
+    }
+
+    pub fn all() -> [SessionRecovery; 3] {
+        [SessionRecovery::FullHandshake, SessionRecovery::Resume, SessionRecovery::Degrade]
+    }
+}
+
+/// Session counters of one stream, computed in closed form over the
+/// channel draws ([`SessionPlan::build`]) and attached to the finished
+/// [`SchedResult`] by [`apply_stats`]. Counters are per-stream
+/// (per-chip in a fleet); energies are in the stream's nominal time
+/// base and scale with a member chip's drift factor.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct SessionStats {
+    /// Full handshakes performed (the frame-0 negotiation plus every
+    /// outage answered under [`SessionRecovery::FullHandshake`]).
+    pub full_handshakes: u64,
+    /// Abbreviated resumption handshakes performed.
+    pub resumptions: u64,
+    /// Retransmissions: flight and record sends beyond each first
+    /// attempt.
+    pub retransmissions: u64,
+    /// Records that never reached the collector (retransmission budget
+    /// exhausted, handshake failures, degraded outage frames) — the
+    /// numerator of unavailability and the goodput deficit.
+    pub records_dropped: u64,
+    /// Active energy of the handshake side (cookie + flight jobs), mJ.
+    pub handshake_mj: f64,
+    /// Active energy of the record side (everything else), mJ.
+    pub record_mj: f64,
+    /// Extra active energy versus the loss-free stream (re-sent flights
+    /// and records), mJ — the session's recovery overhead.
+    pub overhead_mj: f64,
+    /// Total retransmission-timer dead time paid (seconds).
+    pub backoff_dead_s: f64,
+}
+
+impl SessionStats {
+    /// Fraction of records that reached the collector.
+    pub fn availability(&self, frames: usize) -> f64 {
+        if frames == 0 {
+            return 1.0;
+        }
+        (frames as f64 - self.records_dropped as f64) / frames as f64
+    }
+
+    /// Delivered records per second of stream time — the goodput the
+    /// collector observes (fps × availability).
+    pub fn goodput_fps(&self, frames: usize, time_s: f64) -> f64 {
+        if time_s <= 0.0 {
+            return 0.0;
+        }
+        (frames as f64 - self.records_dropped as f64) / time_s
+    }
+}
+
+/// Attach a plan's counters to a finished result. The mapping reuses
+/// the fault-layer columns — dropped records are dropped frames
+/// (availability), retransmissions are retries, and the re-sent energy
+/// is recovery energy — with every energy scaled by the chip's
+/// time-base factor. The handshake/record split stays in
+/// [`SessionStats`] for the session sections of the reports.
+pub fn apply_stats(r: &mut SchedResult, stats: &SessionStats, scale: f64) {
+    r.frames_dropped += stats.records_dropped;
+    r.fault_retries += stats.retransmissions;
+    r.recovery_energy_mj += stats.overhead_mj * scale;
+}
+
+/// Whether `frame` is a `secure_link` template: carries both handshake
+/// placeholder jobs a [`SessionPlan`] inflates.
+pub fn has_session_jobs(frame: &JobGraph) -> bool {
+    frame.jobs.iter().any(|j| j.label == HS_COOKIE_LABEL)
+        && frame.jobs.iter().any(|j| j.label == HS_FLIGHT_LABEL)
+}
+
+/// What a frame is, given the channel and the recovery policy. Pure in
+/// `(model, recovery, global frame)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum FrameKind {
+    /// (Re)negotiate the session before sending the record.
+    Handshake { resume: bool },
+    /// Link down under [`SessionRecovery::Degrade`]: drop the record,
+    /// keep streaming.
+    Skip,
+    /// Steady record traffic on the established session.
+    Steady,
+}
+
+fn frame_kind(model: &SessionModel, recovery: SessionRecovery, frame: usize) -> FrameKind {
+    if frame == 0 {
+        return FrameKind::Handshake { resume: false };
+    }
+    if model.link_down_at(frame) {
+        return match recovery {
+            SessionRecovery::FullHandshake => FrameKind::Handshake { resume: false },
+            SessionRecovery::Resume => FrameKind::Handshake { resume: true },
+            SessionRecovery::Degrade => FrameKind::Skip,
+        };
+    }
+    FrameKind::Steady
+}
+
+/// A secure-link stream's compiled session plan: one variant
+/// [`JobGraph`] per handshake/retransmission/outage frame (local
+/// indices, ascending) and the closed-form session counters. Steady
+/// delivered frames stay the unmodified template — the fast-forward
+/// machinery skips them wholesale.
+#[derive(Debug, Clone)]
+pub struct SessionPlan {
+    pub variants: Vec<(usize, JobGraph)>,
+    pub stats: SessionStats,
+}
+
+impl SessionPlan {
+    /// Build the plan for global frames `[start, start + frames)` of a
+    /// stream of `frame`-template frames. Pure over the arguments, so
+    /// shards and threads agree by construction; the union of shard
+    /// plans over a partition of the global range equals the unsharded
+    /// plan, re-indexed.
+    pub fn build(
+        model: &SessionModel,
+        recovery: SessionRecovery,
+        frame: &JobGraph,
+        start: usize,
+        frames: usize,
+    ) -> Result<SessionPlan> {
+        model.validate()?;
+        if !has_session_jobs(frame) {
+            bail!(
+                "secure-link channel on a template without handshake jobs \
+                 ({HS_COOKIE_LABEL}/{HS_FLIGHT_LABEL}) — only session workloads take --loss"
+            );
+        }
+        let base_mj = frame.active_mj();
+        let mut plan = SessionPlan { variants: Vec::new(), stats: SessionStats::default() };
+        for f in 0..frames {
+            let g = start + f;
+            // Drawn unconditionally every frame: the outage chain and
+            // the shard lookback both key off this one record draw.
+            let record = model.record_delivery(g);
+            let variant = match frame_kind(model, recovery, g) {
+                FrameKind::Steady => {
+                    if !record.delivered {
+                        plan.stats.records_dropped += 1;
+                    }
+                    plan.stats.retransmissions += (record.execs - 1) as u64;
+                    plan.stats.backoff_dead_s += record.dead_s;
+                    if record.execs == 1 {
+                        // The unmodified template: no variant, and the
+                        // fast-forward machinery stays engaged.
+                        plan.stats.record_mj += base_mj;
+                        continue;
+                    }
+                    retx_variant(frame, record.execs as f64, record.dead_s)
+                }
+                FrameKind::Skip => {
+                    plan.stats.records_dropped += 1;
+                    skip_variant(frame)
+                }
+                FrameKind::Handshake { resume } => {
+                    if resume {
+                        plan.stats.resumptions += 1;
+                    } else {
+                        plan.stats.full_handshakes += 1;
+                    }
+                    let hs = run_handshake(model, resume, g, &mut plan.stats);
+                    let (rec_execs, rec_dead_s) = if hs.completed {
+                        // The record rides the fresh session.
+                        plan.stats.retransmissions += (record.execs - 1) as u64;
+                        plan.stats.backoff_dead_s += record.dead_s;
+                        if !record.delivered {
+                            plan.stats.records_dropped += 1;
+                        }
+                        (record.execs as f64, record.dead_s)
+                    } else {
+                        // The handshake itself timed out: the record is
+                        // encrypted once but never sent.
+                        plan.stats.records_dropped += 1;
+                        (1.0, 0.0)
+                    };
+                    handshake_variant(
+                        frame,
+                        hs.cookie_cycles,
+                        hs.flight_cycles,
+                        rec_execs,
+                        hs.dead_s + rec_dead_s,
+                    )
+                }
+            };
+            let (hs_mj, rec_mj) = split_mj(&variant);
+            plan.stats.handshake_mj += hs_mj;
+            plan.stats.record_mj += rec_mj;
+            plan.stats.overhead_mj += (variant.active_mj() - base_mj).max(0.0);
+            plan.variants.push((f, variant));
+        }
+        Ok(plan)
+    }
+
+    /// The variants as the borrow slice the scheduler entry points take.
+    pub fn variant_refs(&self) -> Vec<(usize, &JobGraph)> {
+        self.variants.iter().map(|(f, g)| (*f, g)).collect()
+    }
+}
+
+/// One handshake's aggregate outcome over its flights.
+struct HandshakeRun {
+    cookie_cycles: f64,
+    flight_cycles: f64,
+    dead_s: f64,
+    completed: bool,
+}
+
+/// Fly the handshake flights against the channel, charging every send
+/// (a retransmitted flight re-executes its compute — the fault layer's
+/// honest-re-billing convention) and aborting on the first flight that
+/// exhausts its budget.
+fn run_handshake(
+    model: &SessionModel,
+    resume: bool,
+    frame: usize,
+    stats: &mut SessionStats,
+) -> HandshakeRun {
+    // (is_cookie, SW cycles) per flight: the full handshake is the
+    // cookie round trip then the two ECC-bound key-exchange flights;
+    // resumption is one cheap flight.
+    let flights: &[(bool, f64)] = if resume {
+        &[(false, RESUME_FLIGHT_CYCLES)]
+    } else {
+        &[
+            (true, COOKIE_CYCLES),
+            (true, COOKIE_CYCLES),
+            (false, ECC_FLIGHT_CYCLES),
+            (false, ECC_FLIGHT_CYCLES),
+        ]
+    };
+    let mut run =
+        HandshakeRun { cookie_cycles: 0.0, flight_cycles: 0.0, dead_s: 0.0, completed: true };
+    let mut rng = model.hs_rng(frame as u64);
+    for &(is_cookie, cycles) in flights {
+        let d = deliver(&mut rng, model.loss_rate);
+        stats.retransmissions += (d.execs - 1) as u64;
+        stats.backoff_dead_s += d.dead_s;
+        run.dead_s += d.dead_s;
+        let sent = cycles * d.execs as f64;
+        if is_cookie {
+            run.cookie_cycles += sent;
+        } else {
+            run.flight_cycles += sent;
+        }
+        if !d.delivered {
+            run.completed = false;
+            break;
+        }
+    }
+    run
+}
+
+/// Active energy of a variant, split into (handshake jobs, the rest).
+fn split_mj(v: &JobGraph) -> (f64, f64) {
+    let mut hs = 0.0;
+    let mut rec = 0.0;
+    for job in &v.jobs {
+        let e = JobGraph::job_active_mj(job);
+        if job.label == HS_COOKIE_LABEL || job.label == HS_FLIGHT_LABEL {
+            hs += e;
+        } else {
+            rec += e;
+        }
+    }
+    (hs, rec)
+}
+
+/// The degraded frame: zero service time, zero active energy — it
+/// flows through the window without scheduling work, so the pipeline
+/// never stalls on a dead link.
+fn skip_variant(frame: &JobGraph) -> JobGraph {
+    let mut v = frame.clone();
+    for job in &mut v.jobs {
+        job.duration_s = 0.0;
+        for c in &mut job.charges {
+            c.2 = 0.0;
+        }
+    }
+    v
+}
+
+/// Scale the record-side crypto jobs by the retransmission count and
+/// stretch the roots by the timer dead time. Crypto jobs are selected
+/// by their energy category (not engine), so the scaling is backend-
+/// independent: HWCRYPT, SW-core and in-SRAM records all re-bill their
+/// sends. Dead time bills no active energy — the chip idles out the
+/// timers and only makespan-proportional leakage grows.
+fn retx_variant(frame: &JobGraph, execs: f64, dead_s: f64) -> JobGraph {
+    let mut v = frame.clone();
+    for job in &mut v.jobs {
+        if execs != 1.0 && job.charges.iter().any(|c| c.0 == Category::Crypto) {
+            job.duration_s *= execs;
+        }
+    }
+    stretch_roots(&mut v, dead_s);
+    v
+}
+
+/// The handshake frame: the placeholder jobs inflate to the flight
+/// compute (SW cycles at each job's own operating point), the record's
+/// crypto jobs scale by its sends, and the roots stretch by the total
+/// dead time. Label-preserving — durations and charge multiplicities
+/// are the only edits, so the variant stays `structurally_eq` to the
+/// template.
+fn handshake_variant(
+    frame: &JobGraph,
+    cookie_cycles: f64,
+    flight_cycles: f64,
+    rec_execs: f64,
+    dead_s: f64,
+) -> JobGraph {
+    let mut v = frame.clone();
+    for job in &mut v.jobs {
+        if job.label == HS_COOKIE_LABEL {
+            job.duration_s = cookie_cycles / job.op.freq_hz();
+        } else if job.label == HS_FLIGHT_LABEL {
+            job.duration_s = flight_cycles / job.op.freq_hz();
+        } else if rec_execs != 1.0 && job.charges.iter().any(|c| c.0 == Category::Crypto) {
+            job.duration_s *= rec_execs;
+        }
+    }
+    stretch_roots(&mut v, dead_s);
+    v
+}
+
+/// Stretch root jobs by `dead_s` with their charge multiplicities
+/// compensated so the dead interval bills no active energy (the
+/// fault layer's convention).
+fn stretch_roots(v: &mut JobGraph, dead_s: f64) {
+    if dead_s <= 0.0 {
+        return;
+    }
+    for job in &mut v.jobs {
+        if job.deps.is_empty() {
+            let work = job.duration_s;
+            job.duration_s = work + dead_s;
+            let ratio = if work + dead_s > 0.0 { work / (work + dead_s) } else { 0.0 };
+            for c in &mut job.charges {
+                c.2 *= ratio;
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Pluggable crypto cost models (CryptoSRAM-style ablation axis).
+// ---------------------------------------------------------------------------
+
+/// In-SRAM AES-XTS cycles per byte: wide in-memory XOR/SBOX operations
+/// amortize the datapath over an SRAM row (CryptoSRAM-class designs
+/// report 20–30× over scalar software; modeled, not measured).
+pub const IN_SRAM_XTS_CPB: f64 = 6.0;
+
+/// In-SRAM sponge-AE cycles per byte (KECCAK permutes map less cleanly
+/// onto in-memory bitlines than AES rounds).
+pub const IN_SRAM_AE_CPB: f64 = 9.0;
+
+/// Which crypto cost model prices the record phases.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BackendKind {
+    /// The HWCRYPT engines (AES + KECCAK datapaths) — the paper's SoC.
+    Hwcrypt,
+    /// Software kernels on the OR10N cores
+    /// ([`crate::kernels_sw::crypto_cost`]).
+    Software,
+    /// In-SRAM compute model à la CryptoSRAM.
+    InSram,
+}
+
+impl BackendKind {
+    /// The backend a configuration natively implies — what every run
+    /// uses unless `--crypto-backend` overrides it. Matching the native
+    /// backend is bitwise identical to the pre-backend builder.
+    pub fn native(cfg: &ExecConfig) -> BackendKind {
+        if cfg.hwcrypt {
+            BackendKind::Hwcrypt
+        } else {
+            BackendKind::Software
+        }
+    }
+
+    /// CLI name, report label and class-key fragment.
+    pub fn name(self) -> &'static str {
+        match self {
+            BackendKind::Hwcrypt => "hwcrypt",
+            BackendKind::Software => "sw",
+            BackendKind::InSram => "insram",
+        }
+    }
+
+    /// Parse a CLI spec: `hwcrypt`, `sw` or `insram`.
+    pub fn parse(s: &str) -> Result<BackendKind> {
+        match s {
+            "hwcrypt" => Ok(BackendKind::Hwcrypt),
+            "sw" => Ok(BackendKind::Software),
+            "insram" => Ok(BackendKind::InSram),
+            other => bail!("unknown crypto backend '{other}' (expected hwcrypt, sw or insram)"),
+        }
+    }
+
+    pub fn all() -> [BackendKind; 3] {
+        [BackendKind::Hwcrypt, BackendKind::Software, BackendKind::InSram]
+    }
+
+    /// The backend's cost model.
+    pub fn model(self) -> &'static dyn CryptoBackend {
+        match self {
+            BackendKind::Hwcrypt => &HwcryptBackend,
+            BackendKind::Software => &SoftwareBackend,
+            BackendKind::InSram => &InSramBackend,
+        }
+    }
+}
+
+/// One crypto phase, priced: cycles at `mode`, on an accelerator (with
+/// its control stub) or on `cores` SW cores, with the energy rows the
+/// phase charges.
+pub struct CryptoCost {
+    pub cycles: f64,
+    pub mode: OperatingMode,
+    /// `Some(engine)` runs on that accelerator behind a control stub;
+    /// `None` runs on the first `cores` cluster cores.
+    pub accel: Option<Engine>,
+    pub cores: usize,
+    pub charges: Vec<(Category, Component, f64)>,
+}
+
+impl CryptoCost {
+    /// Operating point of the phase at the configuration's rail.
+    pub fn op(&self, cfg: &ExecConfig) -> OperatingPoint {
+        OperatingPoint::new(self.mode, cfg.vdd)
+    }
+}
+
+/// A crypto cost model: prices the builder's `xts` and `sponge_ae`
+/// phases. `cluster_point` is the workload's pinned cluster mode — the
+/// HWCRYPT backend hosts KECCAK there when the point covers it, the
+/// convention the pre-backend builder used.
+pub trait CryptoBackend {
+    fn xts(&self, cfg: &ExecConfig, cluster_point: OperatingMode, bytes: usize) -> CryptoCost;
+    fn sponge_ae(&self, cfg: &ExecConfig, cluster_point: OperatingMode, bytes: usize) -> CryptoCost;
+}
+
+/// The HWCRYPT engines: AES-XTS on the AES datapath at the all-capable
+/// CRY-CNN-SW point, sponge AE on the KECCAK datapath.
+pub struct HwcryptBackend;
+
+impl CryptoBackend for HwcryptBackend {
+    fn xts(&self, _cfg: &ExecConfig, _cluster_point: OperatingMode, bytes: usize) -> CryptoCost {
+        CryptoCost {
+            cycles: hwcrypt::CipherOp::AesXts.cycles(bytes) as f64
+                + hwcrypt::JOB_CONFIG_CYCLES as f64,
+            mode: OperatingMode::CryCnnSw,
+            accel: Some(Engine::HwcryptAes),
+            cores: 1,
+            charges: vec![
+                (Category::Crypto, Component::Core, 1.0), // controller core
+                (Category::Crypto, Component::ClusterInfra, 1.0),
+                (Category::Crypto, Component::HwcryptAes, 1.0),
+            ],
+        }
+    }
+
+    fn sponge_ae(&self, _cfg: &ExecConfig, cluster_point: OperatingMode, bytes: usize) -> CryptoCost {
+        let mode = if cluster_point.keccak_available() {
+            cluster_point
+        } else {
+            OperatingMode::KecCnnSw
+        };
+        CryptoCost {
+            cycles: hwcrypt::CipherOp::SpongeAe(crate::crypto::sponge::SpongeConfig::MAX_RATE)
+                .cycles(bytes) as f64,
+            mode,
+            accel: Some(Engine::HwcryptKec),
+            cores: 1,
+            charges: vec![
+                (Category::Crypto, Component::Core, 1.0),
+                (Category::Crypto, Component::ClusterInfra, 1.0),
+                (Category::Crypto, Component::HwcryptKec, 1.0),
+            ],
+        }
+    }
+}
+
+/// Software crypto on the OR10N cores: the §III-calibrated
+/// cycles-per-byte models, XTS Amdahl-split over the configured cores,
+/// KECCAK single-core.
+pub struct SoftwareBackend;
+
+impl CryptoBackend for SoftwareBackend {
+    fn xts(&self, cfg: &ExecConfig, _cluster_point: OperatingMode, bytes: usize) -> CryptoCost {
+        CryptoCost {
+            cycles: crypto_cost::sw_xts_cpb(cfg.n_cores) * bytes as f64,
+            mode: OperatingMode::Sw,
+            accel: None,
+            cores: cfg.n_cores,
+            charges: vec![
+                (Category::Crypto, Component::Core, cfg.n_cores as f64),
+                (Category::Crypto, Component::ClusterInfra, 1.0),
+            ],
+        }
+    }
+
+    fn sponge_ae(&self, _cfg: &ExecConfig, _cluster_point: OperatingMode, bytes: usize) -> CryptoCost {
+        CryptoCost {
+            cycles: crypto_cost::SW_KECCAK_CPB_1CORE * bytes as f64,
+            mode: OperatingMode::Sw,
+            accel: None,
+            cores: 1,
+            charges: vec![
+                (Category::Crypto, Component::Core, 1.0),
+                (Category::Crypto, Component::ClusterInfra, 1.0),
+            ],
+        }
+    }
+}
+
+/// In-SRAM compute model: one core issues wide in-memory operations;
+/// the work stays in the SRAM macros, so only the issuing core and the
+/// cluster infrastructure charge.
+pub struct InSramBackend;
+
+impl CryptoBackend for InSramBackend {
+    fn xts(&self, _cfg: &ExecConfig, _cluster_point: OperatingMode, bytes: usize) -> CryptoCost {
+        CryptoCost {
+            cycles: IN_SRAM_XTS_CPB * bytes as f64,
+            mode: OperatingMode::Sw,
+            accel: None,
+            cores: 1,
+            charges: vec![
+                (Category::Crypto, Component::Core, 1.0),
+                (Category::Crypto, Component::ClusterInfra, 1.0),
+            ],
+        }
+    }
+
+    fn sponge_ae(&self, _cfg: &ExecConfig, _cluster_point: OperatingMode, bytes: usize) -> CryptoCost {
+        CryptoCost {
+            cycles: IN_SRAM_AE_CPB * bytes as f64,
+            mode: OperatingMode::Sw,
+            accel: None,
+            cores: 1,
+            charges: vec![
+                (Category::Crypto, Component::Core, 1.0),
+                (Category::Crypto, Component::ClusterInfra, 1.0),
+            ],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::soc::sched::Job;
+
+    /// A minimal secure-link template: the two zero-duration handshake
+    /// placeholders, a sensor root and a crypto record tail.
+    fn template() -> JobGraph {
+        let sw = OperatingPoint::new(OperatingMode::Sw, 0.8);
+        let kec = OperatingPoint::new(OperatingMode::KecCnnSw, 0.8);
+        let mut g = JobGraph::new();
+        let cookie = g.push(Job {
+            label: HS_COOKIE_LABEL,
+            engines: vec![Engine::Core(0)],
+            op: sw,
+            duration_s: 0.0,
+            deps: vec![],
+            charges: vec![
+                (Category::OtherSw, Component::Core, 1.0),
+                (Category::OtherSw, Component::ClusterInfra, 1.0),
+            ],
+        });
+        let flight = g.push(Job {
+            label: HS_FLIGHT_LABEL,
+            engines: vec![Engine::Core(0)],
+            op: sw,
+            duration_s: 0.0,
+            deps: vec![cookie],
+            charges: vec![
+                (Category::OtherSw, Component::Core, 1.0),
+                (Category::OtherSw, Component::ClusterInfra, 1.0),
+            ],
+        });
+        let adc = g.push(Job {
+            label: "adc",
+            engines: vec![Engine::Core(0)],
+            op: sw,
+            duration_s: 0.001,
+            deps: vec![],
+            charges: vec![(Category::OtherSw, Component::Core, 1.0)],
+        });
+        g.push(Job {
+            label: "sponge-ae",
+            engines: vec![Engine::HwcryptKec],
+            op: kec,
+            duration_s: 0.002,
+            deps: vec![flight, adc],
+            charges: vec![
+                (Category::Crypto, Component::Core, 1.0),
+                (Category::Crypto, Component::ClusterInfra, 1.0),
+                (Category::Crypto, Component::HwcryptKec, 1.0),
+            ],
+        });
+        g
+    }
+
+    fn lossy(rate: f64) -> SessionModel {
+        SessionModel { loss_rate: rate, seed: 5 }
+    }
+
+    #[test]
+    fn parse_round_trips_and_rejects() {
+        let m = SessionModel::parse("0.2:9").unwrap();
+        assert_eq!(m, SessionModel { loss_rate: 0.2, seed: 9 });
+        assert_eq!(SessionModel::parse("0.1").unwrap().seed, 1);
+        assert!(SessionModel::parse("1.0").is_err(), "certain loss never completes");
+        assert!(SessionModel::parse("-0.1").is_err());
+        assert!(SessionModel::parse("x").is_err());
+        assert!(SessionModel::parse("0.1:y").is_err());
+        assert!(SessionModel::parse("0.1:2:3").is_err());
+        for r in SessionRecovery::all() {
+            assert_eq!(SessionRecovery::parse(r.key()).unwrap(), r);
+        }
+        assert!(SessionRecovery::parse("retry").is_err());
+        for b in BackendKind::all() {
+            assert_eq!(BackendKind::parse(b.name()).unwrap(), b);
+        }
+        assert!(BackendKind::parse("fpga").is_err());
+        // distinct models map to distinct class-key fragments
+        assert_ne!(lossy(0.1).key(), lossy(0.2).key());
+        assert_ne!(lossy(0.1).key(), SessionModel { loss_rate: 0.1, seed: 6 }.key());
+    }
+
+    #[test]
+    fn delivery_is_deterministic_and_bounded() {
+        let m = lossy(0.4);
+        for f in 0..256 {
+            let a = m.record_delivery(f);
+            let b = m.record_delivery(f);
+            assert_eq!(a, b, "frame {f} must replay bitwise");
+            assert!(a.execs >= 1 && a.execs <= MAX_RETX + 1);
+            if a.execs <= MAX_RETX {
+                assert!(a.delivered, "giving up takes the whole budget");
+            }
+        }
+        // a lossless channel delivers everything first try, no waiting
+        let l = SessionModel::lossless();
+        for f in 0..64 {
+            assert_eq!(l.record_delivery(f), Delivery { execs: 1, delivered: true, dead_s: 0.0 });
+            assert!(!l.link_down_at(f));
+        }
+    }
+
+    #[test]
+    fn retx_timers_double_and_saturate() {
+        // force total loss through the free function: all MAX_RETX+1
+        // sends fail, and the dead time is the full saturating ladder
+        let mut rng = Xorshift64Star::new(42);
+        let d = deliver(&mut rng, 1.0);
+        assert_eq!(d.execs, MAX_RETX + 1);
+        assert!(!d.delivered);
+        // 0.05 × (1+2+4+8+16+32+64) = 0.05 × 127
+        assert!((d.dead_s - RETX_INIT_S * 127.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn frame_zero_is_always_a_full_handshake() {
+        let m = lossy(0.0);
+        let plan = SessionPlan::build(&m, SessionRecovery::Resume, &template(), 0, 64).unwrap();
+        assert_eq!(plan.stats.full_handshakes, 1);
+        assert_eq!(plan.stats.resumptions, 0);
+        assert_eq!(plan.stats.retransmissions, 0);
+        assert_eq!(plan.stats.records_dropped, 0);
+        assert_eq!(plan.variants.len(), 1, "lossless: only the frame-0 handshake varies");
+        assert_eq!(plan.variants[0].0, 0);
+        assert!(plan.stats.handshake_mj > 0.0);
+        assert!((plan.stats.availability(64) - 1.0).abs() < 1e-12);
+        // the handshake placeholders inflated: cookie + ECC flights
+        let v = &plan.variants[0].1;
+        assert!(v.jobs[0].duration_s > 0.0 && v.jobs[1].duration_s > 0.0);
+        assert!(v.jobs[1].duration_s > v.jobs[0].duration_s, "ECC flights dwarf the cookie");
+        // ... and a shard that starts past frame 0 never handshakes
+        let tail = SessionPlan::build(&m, SessionRecovery::Resume, &template(), 1, 63).unwrap();
+        assert!(tail.variants.is_empty());
+        assert_eq!(tail.stats.full_handshakes, 0);
+    }
+
+    #[test]
+    fn plans_union_over_shards() {
+        let g = template();
+        for rec in SessionRecovery::all() {
+            let m = lossy(0.3);
+            let whole = SessionPlan::build(&m, rec, &g, 0, 512).unwrap();
+            let a = SessionPlan::build(&m, rec, &g, 0, 200).unwrap();
+            let b = SessionPlan::build(&m, rec, &g, 200, 312).unwrap();
+            assert_eq!(
+                whole.stats.retransmissions,
+                a.stats.retransmissions + b.stats.retransmissions,
+                "{rec:?}"
+            );
+            assert_eq!(
+                whole.stats.records_dropped,
+                a.stats.records_dropped + b.stats.records_dropped
+            );
+            assert_eq!(whole.stats.full_handshakes, a.stats.full_handshakes + b.stats.full_handshakes);
+            assert_eq!(whole.stats.resumptions, a.stats.resumptions + b.stats.resumptions);
+            assert!(
+                (whole.stats.handshake_mj - a.stats.handshake_mj - b.stats.handshake_mj).abs()
+                    < 1e-9
+            );
+            let mut frames: Vec<usize> = a.variants.iter().map(|(f, _)| *f).collect();
+            frames.extend(b.variants.iter().map(|(f, _)| f + 200));
+            assert_eq!(frames, whole.variants.iter().map(|(f, _)| *f).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn recovery_policies_shape_the_outage() {
+        let g = template();
+        let m = lossy(0.45);
+        let full = SessionPlan::build(&m, SessionRecovery::FullHandshake, &g, 0, 512).unwrap();
+        let resume = SessionPlan::build(&m, SessionRecovery::Resume, &g, 0, 512).unwrap();
+        let degrade = SessionPlan::build(&m, SessionRecovery::Degrade, &g, 0, 512).unwrap();
+        // outages exist at this rate, and each policy answers them its way
+        assert!(full.stats.full_handshakes > 1);
+        assert!(resume.stats.resumptions > 0);
+        assert_eq!(resume.stats.full_handshakes, 1, "only frame 0 negotiates from scratch");
+        assert_eq!(degrade.stats.full_handshakes, 1);
+        assert_eq!(degrade.stats.resumptions, 0);
+        // resumption replays a far cheaper handshake
+        assert!(resume.stats.handshake_mj < full.stats.handshake_mj);
+        // degrade drops every outage frame and pays nothing to recover
+        assert!(degrade.stats.records_dropped > resume.stats.records_dropped);
+        assert!(degrade.stats.handshake_mj < resume.stats.handshake_mj);
+        // degraded outage frames are true skips: zero duration, no stall
+        let skip = degrade
+            .variants
+            .iter()
+            .find(|(f, _)| m.link_down_at(*f))
+            .map(|(_, v)| v)
+            .expect("an outage frame exists");
+        assert!(skip.jobs.iter().all(|j| j.duration_s == 0.0));
+        assert_eq!(skip.active_mj(), 0.0);
+        // retransmissions happened and were billed as overhead
+        assert!(resume.stats.retransmissions > 0);
+        assert!(resume.stats.overhead_mj > 0.0);
+        assert!(resume.stats.backoff_dead_s > 0.0);
+        assert!(resume.stats.availability(512) < 1.0);
+    }
+
+    #[test]
+    fn variants_preserve_structure_and_bill_dead_time_free() {
+        let g = template();
+        let m = lossy(0.4);
+        let plan = SessionPlan::build(&m, SessionRecovery::Resume, &g, 0, 512).unwrap();
+        assert!(plan.variants.windows(2).all(|w| w[0].0 < w[1].0));
+        for (f, v) in &plan.variants {
+            // the scheduler's check_variants demands identical structure:
+            // labels, engines and dependency edges never change
+            assert_eq!(v.jobs.len(), g.jobs.len(), "variant at {f}");
+            for (a, b) in v.jobs.iter().zip(&g.jobs) {
+                assert_eq!(a.label, b.label);
+                assert_eq!(a.engines, b.engines);
+                assert_eq!(a.deps, b.deps);
+            }
+        }
+        // a pure-retransmission steady frame: crypto tail scaled, sw row
+        // untouched, roots stretched with their charges compensated
+        let (f, v) = plan
+            .variants
+            .iter()
+            .find(|(f, _)| {
+                *f > 0 && !m.link_down_at(*f) && m.record_delivery(*f).execs > 1
+            })
+            .expect("a retransmitted steady frame exists");
+        let d = m.record_delivery(*f);
+        assert!((v.jobs[3].duration_s - g.jobs[3].duration_s * d.execs as f64).abs() < 1e-12);
+        assert_eq!(v.jobs[1].duration_s, 0.0, "hs placeholder stays empty on steady frames");
+        let root = &v.jobs[2];
+        assert!((root.duration_s - (g.jobs[2].duration_s + d.dead_s)).abs() < 1e-12);
+        assert!(root.charges[0].2 < 1.0, "dead time must not bill active energy");
+        assert!(
+            (JobGraph::job_active_mj(root) - JobGraph::job_active_mj(&g.jobs[2])).abs() < 1e-12
+        );
+    }
+
+    #[test]
+    fn non_session_templates_are_rejected() {
+        let mut g = template();
+        g.jobs.retain(|j| j.label != HS_FLIGHT_LABEL);
+        for j in &mut g.jobs {
+            j.deps.clear();
+        }
+        let err = SessionPlan::build(&lossy(0.1), SessionRecovery::Resume, &g, 0, 8);
+        assert!(err.is_err());
+        assert!(!has_session_jobs(&g));
+        assert!(has_session_jobs(&template()));
+    }
+
+    #[test]
+    fn apply_stats_maps_onto_the_reliability_columns() {
+        let g = template();
+        let mut r = crate::soc::sched::Scheduler::run(&g);
+        let stats = SessionStats {
+            full_handshakes: 1,
+            resumptions: 2,
+            retransmissions: 7,
+            records_dropped: 3,
+            handshake_mj: 0.25,
+            record_mj: 1.0,
+            overhead_mj: 0.5,
+            backoff_dead_s: 0.4,
+        };
+        apply_stats(&mut r, &stats, 2.0);
+        assert_eq!(r.frames_dropped, 3);
+        assert_eq!(r.fault_retries, 7);
+        assert!((r.recovery_energy_mj - 1.0).abs() < 1e-12);
+        assert!((stats.availability(12) - 0.75).abs() < 1e-12);
+        assert!((stats.goodput_fps(12, 3.0) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn backends_price_the_record_phases() {
+        let cfg = ExecConfig::sw_1core();
+        let hw = BackendKind::Hwcrypt.model();
+        let sw = BackendKind::Software.model();
+        let sram = BackendKind::InSram.model();
+        let bytes = RECORD_BYTES;
+        // HWCRYPT runs on its engines at the capable points whatever
+        // the rung says — that's what makes the ablation a sweep
+        let x = hw.xts(&cfg, OperatingMode::Sw, bytes);
+        assert_eq!(x.accel, Some(Engine::HwcryptAes));
+        assert_eq!(x.mode, OperatingMode::CryCnnSw);
+        let s = hw.sponge_ae(&cfg, OperatingMode::Sw, bytes);
+        assert_eq!(s.accel, Some(Engine::HwcryptKec));
+        assert_eq!(s.mode, OperatingMode::KecCnnSw);
+        // ... and hosts the sponge at a keccak-capable cluster point
+        assert_eq!(hw.sponge_ae(&cfg, OperatingMode::CryCnnSw, bytes).mode, OperatingMode::CryCnnSw);
+        // software prices by the §III cycles-per-byte anchors
+        let xs = sw.xts(&cfg, OperatingMode::Sw, bytes);
+        assert!(xs.accel.is_none());
+        assert!((xs.cycles - crypto_cost::sw_xts_cpb(1) * bytes as f64).abs() < 1e-9);
+        // in-SRAM sits far under software and needs no accelerator
+        let xi = sram.xts(&cfg, OperatingMode::Sw, bytes);
+        assert!(xi.accel.is_none() && xi.cycles < xs.cycles / 10.0);
+        assert!(sram.sponge_ae(&cfg, OperatingMode::Sw, bytes).cycles < s.cycles * 100.0);
+        // native backend mirrors the configuration's hwcrypt bit
+        assert_eq!(BackendKind::native(&cfg), BackendKind::Software);
+        let mut hwcfg = cfg;
+        hwcfg.hwcrypt = true;
+        assert_eq!(BackendKind::native(&hwcfg), BackendKind::Hwcrypt);
+    }
+}

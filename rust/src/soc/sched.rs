@@ -416,8 +416,10 @@ impl JobGraph {
     /// [`JobGraph::charge_active_into`] feeds the [`EnergyLedger`], without
     /// the makespan-proportional leakage/standby terms. Cluster dynamic
     /// power is frequency-linear, so this is also exactly the energy of a
-    /// co-resident (rescaled) execution of the job.
-    fn job_active_mj(job: &Job) -> f64 {
+    /// co-resident (rescaled) execution of the job. `pub(crate)` so the
+    /// session layer can split a variant's energy into handshake vs
+    /// record portions by job label ([`crate::session`]).
+    pub(crate) fn job_active_mj(job: &Job) -> f64 {
         job.charges
             .iter()
             .map(|&(_, comp, mult)| PowerModel::active_mw(comp, job.op) * job.duration_s * mult)

@@ -26,20 +26,21 @@
 //! makespan is the slowest shard's, and throughput scales near-linearly.
 
 use crate::coordinator::{
-    share, stream_graph_faulted_pm, ExecConfig, ModeOverrides, Rung, StreamResult, Tiling,
-    UseCaseResult,
+    share, stream_graph_faulted_pm, stream_graph_session_pm, ExecConfig, ModeOverrides, Rung,
+    StreamResult, Tiling, UseCaseResult,
 };
 use crate::energy::{Category, EnergyLedger};
 use crate::fault::{FaultModel, FaultPlan, Recovery};
 use crate::hwce::golden::WeightPrec;
 use crate::json::Json;
+use crate::session::{BackendKind, SessionModel, SessionPlan, SessionRecovery, SessionStats};
 use crate::soc::pm::{self, PolicyKind};
 use crate::soc::sched::{
     exact_pow2, CompiledFrame, Engine, JobGraph, SchedResult, Scheduler, StreamScheduler,
     N_ENGINES,
 };
 use crate::traffic::{Perturb, Traffic};
-use crate::workload::{frame_graph, Registry, Workload};
+use crate::workload::{frame_graph, frame_graph_with, Registry, Workload};
 use anyhow::{anyhow, bail, Result};
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
@@ -108,6 +109,19 @@ pub struct RunSpec {
     /// Recovery policy answering injected faults (3-attempt retry by
     /// default; ignored when `faults` is `None`).
     pub recovery: Recovery,
+    /// Deterministic lossy secure-link channel ([`crate::session`]).
+    /// `None` (the default) never touches the session machinery; session
+    /// workloads then stream pure record frames with their handshake
+    /// placeholders at zero cost. Mutually exclusive with `faults`.
+    pub loss: Option<SessionModel>,
+    /// How the secure link re-establishes its session after an outage
+    /// (resumption by default; ignored when `loss` is `None`).
+    pub session_recovery: SessionRecovery,
+    /// Crypto cost backend for the workload's cipher phases
+    /// ([`crate::session::CryptoBackend`]). `None` follows the rung's
+    /// native configuration (HWCRYPT when the engine is enabled, SW
+    /// otherwise) — bitwise the historical emission.
+    pub crypto_backend: Option<BackendKind>,
 }
 
 impl RunSpec {
@@ -123,6 +137,9 @@ impl RunSpec {
             policy: None,
             faults: None,
             recovery: Recovery::default(),
+            loss: None,
+            session_recovery: SessionRecovery::default(),
+            crypto_backend: None,
         }
     }
 
@@ -168,6 +185,21 @@ impl RunSpec {
 
     pub fn recovery(mut self, recovery: Recovery) -> Self {
         self.recovery = recovery;
+        self
+    }
+
+    pub fn loss(mut self, loss: Option<SessionModel>) -> Self {
+        self.loss = loss;
+        self
+    }
+
+    pub fn session_recovery(mut self, session_recovery: SessionRecovery) -> Self {
+        self.session_recovery = session_recovery;
+        self
+    }
+
+    pub fn crypto_backend(mut self, crypto_backend: Option<BackendKind>) -> Self {
+        self.crypto_backend = crypto_backend;
         self
     }
 }
@@ -351,6 +383,105 @@ impl ShardedStream {
             })
             .collect()
     }
+
+    /// [`ShardedStream::run_traffic_pm`] under a secure-link channel:
+    /// each shard builds its [`SessionPlan`] over its *global* frame
+    /// range (offset by the preceding shards' shares), so the union of
+    /// shard plans equals the unsharded plan whatever S is — handshakes,
+    /// retransmissions and outage skips land on the same global frames.
+    /// Release times stay per-chip local as always. `session: None` is
+    /// bitwise identical to [`ShardedStream::run_traffic_pm`].
+    pub fn run_session(
+        graph: &JobGraph,
+        frames: usize,
+        window: usize,
+        shards: usize,
+        traffic: &Traffic,
+        policy: Option<PolicyKind>,
+        session: Option<(&SessionModel, SessionRecovery)>,
+    ) -> Result<Vec<(SchedResult, ShardStat)>> {
+        assert!(frames >= 1, "sharded streaming needs at least one frame");
+        assert!(window >= 1, "sharded streaming needs at least one in-flight frame of window");
+        assert!(shards >= 1, "sharded streaming needs at least one chip");
+        traffic.validate().expect("invalid traffic model");
+        let shards = shards.min(frames);
+        let template = CompiledFrame::compile(graph);
+        let analytic_s = graph.analytic().makespan_s;
+        let bound_s = graph.serialized_bound();
+        let shares: Vec<usize> = (0..shards).map(|s| share(frames, shards, s)).collect();
+        let releases: Vec<Vec<f64>> = shares.iter().map(|&f| traffic.release_times(f)).collect();
+        // Per-shard session plans over the shard's global frame range:
+        // pure in (model, recovery, range), so the same spec answers the
+        // same outages however it is sharded or threaded.
+        let mut offset = 0usize;
+        let mut plans: Vec<Option<SessionPlan>> = Vec::with_capacity(shards);
+        for &f in &shares {
+            let start = offset;
+            offset += f;
+            plans.push(match session {
+                None => None,
+                Some((m, rec)) => Some(SessionPlan::build(m, rec, graph, start, f)?),
+            });
+        }
+        let results: Vec<(SchedResult, f64)> = std::thread::scope(|scope| {
+            let template = &template;
+            let handles: Vec<_> = shares
+                .iter()
+                .zip(&releases)
+                .zip(&plans)
+                .map(|((&f, rel), plan)| {
+                    scope.spawn(move || {
+                        let t0 = Instant::now();
+                        let mut r = match plan {
+                            None => StreamScheduler::run_compiled_traffic_pm(
+                                template,
+                                f,
+                                window.min(f),
+                                rel,
+                                policy,
+                            ),
+                            Some(p) => StreamScheduler::run_with_variants_traffic_pm(
+                                graph,
+                                f,
+                                window.min(f),
+                                &p.variant_refs(),
+                                rel,
+                                policy,
+                            ),
+                        };
+                        if let Some(p) = plan {
+                            crate::session::apply_stats(&mut r, &p.stats, 1.0);
+                        }
+                        (r, t0.elapsed().as_secs_f64())
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("shard worker panicked"))
+                .collect()
+        });
+        Ok(results
+            .into_iter()
+            .enumerate()
+            .map(|(i, (r, wall_s))| {
+                let last_rel = releases[i].last().copied().unwrap_or(0.0);
+                let stat = ShardStat {
+                    shard: i,
+                    frames: shares[i],
+                    time_s: r.makespan_s,
+                    energy_mj: r.ledger.total_mj(),
+                    mode_switches: r.mode_switches,
+                    peak_resident_jobs: r.peak_resident_jobs,
+                    fast_forwarded_frames: r.fast_forwarded_frames,
+                    wall_s,
+                    analytic_est_s: analytic_s * shares[i] as f64,
+                    serialized_bound_s: last_rel + bound_s * shares[i] as f64,
+                };
+                (r, stat)
+            })
+            .collect())
+    }
 }
 
 /// Merge per-shard scheduler results into one [`StreamResult`] via the
@@ -455,6 +586,19 @@ pub struct FleetSpec {
     /// Recovery policy answering injected faults (ignored when `faults`
     /// is `None`).
     pub recovery: Recovery,
+    /// Deterministic lossy secure-link channel applied fleet-wide
+    /// ([`crate::session`]): every chip of a class draws the same
+    /// per-frame delivery table. Joins the class dedup key; requires
+    /// every group workload to be a session workload. Mutually exclusive
+    /// with `faults`.
+    pub loss: Option<SessionModel>,
+    /// Session re-establishment policy after outages (ignored when
+    /// `loss` is `None`).
+    pub session_recovery: SessionRecovery,
+    /// Crypto cost backend override for every chip's cipher phases
+    /// (`None` follows each rung's native configuration). Joins the
+    /// class dedup key.
+    pub crypto_backend: Option<BackendKind>,
     /// Test-only: flip the low mantissa bit of every sampled parity
     /// run's makespan, forcing the structured parity-mismatch error so
     /// its reporting path can be exercised end to end.
@@ -474,6 +618,9 @@ impl FleetSpec {
             seed: 0xF1EE7,
             faults: None,
             recovery: Recovery::default(),
+            loss: None,
+            session_recovery: SessionRecovery::default(),
+            crypto_backend: None,
             corrupt_parity: false,
         }
     }
@@ -515,6 +662,21 @@ impl FleetSpec {
 
     pub fn recovery(mut self, recovery: Recovery) -> Self {
         self.recovery = recovery;
+        self
+    }
+
+    pub fn loss(mut self, loss: Option<SessionModel>) -> Self {
+        self.loss = loss;
+        self
+    }
+
+    pub fn session_recovery(mut self, session_recovery: SessionRecovery) -> Self {
+        self.session_recovery = session_recovery;
+        self
+    }
+
+    pub fn crypto_backend(mut self, crypto_backend: Option<BackendKind>) -> Self {
+        self.crypto_backend = crypto_backend;
         self
     }
 
@@ -576,6 +738,39 @@ impl FleetSpec {
         groups.retain(|g| g.chips > 0);
         FleetSpec::new(groups)
     }
+
+    /// The secure-link fleet `fulmine fleet --loss` runs: `chips`
+    /// endpoints spread near-evenly over the `secure_link` workload's
+    /// rungs (worst, best) × the four traffic models, mirroring
+    /// [`FleetSpec::mixed`] but session-only — every class can carry the
+    /// channel plan, where `mixed`'s non-session workloads could not.
+    pub fn secure_link(chips: usize, frames: usize) -> FleetSpec {
+        assert!(chips >= 1, "a fleet needs at least one chip");
+        assert!(frames >= 1, "fleet chips need at least one frame");
+        let registry = Registry::builtin();
+        let w = registry.resolve("secure_link").expect("secure_link is built in");
+        let rate = w.native_rate_hz();
+        let mut templates: Vec<RunSpec> = Vec::new();
+        for rung in [RungSel::Best, RungSel::Index(0)] {
+            for t in [
+                Traffic::BackToBack,
+                Traffic::Periodic { rate_hz: rate },
+                Traffic::Bursty { burst: 4, rate_hz: rate / 4.0 },
+                Traffic::Poisson { rate_hz: rate, seed: 1 },
+            ] {
+                templates
+                    .push(RunSpec::new(w.name()).frames(frames).rung(rung.clone()).traffic(t));
+            }
+        }
+        let n = templates.len();
+        let mut groups: Vec<FleetGroup> = templates
+            .into_iter()
+            .enumerate()
+            .map(|(i, spec)| FleetGroup { spec, chips: share(chips, n, i) })
+            .collect();
+        groups.retain(|g| g.chips > 0);
+        FleetSpec::new(groups)
+    }
 }
 
 /// Aggregate statistics of one simulated chip class. Per-chip values are
@@ -615,6 +810,9 @@ pub struct ClassStat {
     /// Fraction of this class's frames whose output survived faults
     /// (1.0 for a fault-free fleet).
     pub availability: f64,
+    /// Delivered frames per second of one chip's stream (= fps ×
+    /// availability; equal to `fps` for a loss-free, fault-free class).
+    pub goodput_fps: f64,
     /// Per-chip frames dropped to faults.
     pub frames_dropped: u64,
     /// Per-chip retry executions beyond first attempts.
@@ -690,6 +888,26 @@ pub struct FleetReport {
     pub faults: String,
     /// Recovery policy answering faults (`"none"` when fault-free).
     pub recovery: String,
+    /// Secure-link channel the fleet ran under (`"none"` when no
+    /// channel was modeled).
+    pub channel: String,
+    /// Session re-establishment policy (`"none"` without a channel).
+    pub session_recovery: String,
+    /// Crypto cost backend (`"native"` when each rung follows its own
+    /// configuration).
+    pub crypto_backend: String,
+    /// Fleet-total full handshakes over a secure link (0 without one).
+    pub full_handshakes: u64,
+    /// Fleet-total abbreviated resumption handshakes.
+    pub resumptions: u64,
+    /// Fleet-total flight/record retransmissions.
+    pub retransmissions: u64,
+    /// Fleet-total records dropped by the channel.
+    pub records_dropped: u64,
+    /// Fleet-total handshake-side active energy (J).
+    pub handshake_j: f64,
+    /// Fleet-total record-side active energy (J).
+    pub record_j: f64,
     /// Fleet-total frames dropped to faults.
     pub frames_dropped: u64,
     /// Fleet-total retry executions.
@@ -712,6 +930,9 @@ pub struct FleetReport {
     /// Per-chip fault-recovery energy overhead (mJ, weighted
     /// percentiles).
     pub recovery_mj_per_chip: Pct,
+    /// Per-chip delivered-record throughput (weighted percentiles;
+    /// equal to raw fps for a loss-free, fault-free fleet).
+    pub goodput_fps: Pct,
     /// Host wall-clock of the whole fleet run (s).
     pub wall_s: f64,
     pub chips_per_s: f64,
@@ -937,6 +1158,15 @@ struct ClassOutcome {
     /// Per-member availability and recovery-energy percentile inputs.
     a_vals: Vec<(f64, usize)>,
     r_vals: Vec<(f64, usize)>,
+    /// Per-member goodput (delivered records / makespan) percentile
+    /// inputs.
+    g_vals: Vec<(f64, usize)>,
+    /// Per-chip session counters of a secure-link class (`None` without
+    /// a channel).
+    session: Option<SessionStats>,
+    /// Σ member α × population — the exact scale of the class's session
+    /// energies across its drifted members.
+    session_alpha_pop: f64,
     members: usize,
     live_fallbacks: usize,
     wall_s: f64,
@@ -967,14 +1197,28 @@ impl Fleet {
             m.validate()?;
             fleet.recovery.validate()?;
         }
+        if let Some(m) = &fleet.loss {
+            if fleet.faults.is_some() {
+                bail!("--loss and --faults are mutually exclusive (one failure model per run)");
+            }
+            m.validate()?;
+        }
         let hetero = fleet.drift_pct > 0.0 || fleet.phase_jitter_s > 0.0;
         let t_fleet = Instant::now();
         // The fault model and recovery policy join the dedup key: chips
         // under different fault regimes must never merge into one class.
+        // The secure-link channel, session recovery and crypto backend
+        // join it the same way.
         let fault_frag = match &fleet.faults {
             None => "flt:none".to_string(),
             Some(m) => format!("{}|r:{}", m.key(), fleet.recovery.key()),
         };
+        let ses_frag = match &fleet.loss {
+            None => "ses:none".to_string(),
+            Some(m) => format!("{}|sr:{}", m.key(), fleet.session_recovery.key()),
+        };
+        let backend_frag =
+            format!("cb:{}", fleet.crypto_backend.map_or("native", |b| b.name()));
 
         // Family dedup: resolve each group and merge identical classes,
         // then split each family's population into parametric members by
@@ -1004,7 +1248,7 @@ impl Fleet {
             // The fleet-wide policy is part of the key: a future mixed-
             // policy fleet must not merge chips across policies.
             let key = format!(
-                "{}|{:?}|f{}|w{}|{}|p:{}|{}",
+                "{}|{:?}|f{}|w{}|{}|p:{}|{}|{}|{}",
                 w.name(),
                 rung.cfg,
                 g.spec.frames,
@@ -1012,11 +1256,20 @@ impl Fleet {
                 g.spec.traffic.key(),
                 fleet.policy.map_or("none", |p| p.name()),
                 fault_frag,
+                ses_frag,
+                backend_frag,
             );
             let ci = match index.get(&key) {
                 Some(&ci) => ci,
                 None => {
-                    let graph = frame_graph(w, rung.cfg)?;
+                    let graph = frame_graph_with(w, rung.cfg, fleet.crypto_backend)?;
+                    if fleet.loss.is_some() && !crate::session::has_session_jobs(&graph) {
+                        bail!(
+                            "--loss requires session workloads; '{}' emits no handshake jobs \
+                             (a secure-link fleet wants [`FleetSpec::secure_link`])",
+                            w.name()
+                        );
+                    }
                     let release = g.spec.traffic.release_times(g.spec.frames);
                     index.insert(key.clone(), classes.len());
                     classes.push(FleetClass {
@@ -1083,23 +1336,31 @@ impl Fleet {
                     let plan = fleet.faults.as_ref().map(|m| {
                         FaultPlan::build(m, fleet.recovery, &c.graph, 0, c.frames, c.window)
                     });
+                    // A lossy-channel class compiles its session plan the
+                    // same way (mutually exclusive with faults; session
+                    // templates were validated at class construction).
+                    let splan = fleet.loss.as_ref().map(|m| {
+                        SessionPlan::build(m, fleet.session_recovery, &c.graph, 0, c.frames)
+                            .expect("session templates validated at class construction")
+                    });
                     let cvars: Vec<(usize, CompiledFrame)> = plan
                         .as_ref()
-                        .map(|p| {
-                            p.variants
-                                .iter()
-                                .map(|(f, g)| (*f, CompiledFrame::compile(g)))
-                                .collect()
+                        .map(|p| p.variants.as_slice())
+                        .or_else(|| splan.as_ref().map(|p| p.variants.as_slice()))
+                        .map(|vs| {
+                            vs.iter().map(|(f, g)| (*f, CompiledFrame::compile(g))).collect()
                         })
                         .unwrap_or_default();
+                    let planned = plan.is_some() || splan.is_some();
                     let t0 = Instant::now();
-                    let rep = match &plan {
-                        None => StreamScheduler::run_param_rep(
-                            &cf, c.frames, c.window, &c.release, fleet.policy,
-                        ),
-                        Some(_) => StreamScheduler::run_param_rep_variants(
+                    let rep = if planned {
+                        StreamScheduler::run_param_rep_variants(
                             &cf, &cvars, c.frames, c.window, &c.release, fleet.policy,
-                        ),
+                        )
+                    } else {
+                        StreamScheduler::run_param_rep(
+                            &cf, c.frames, c.window, &c.release, fleet.policy,
+                        )
                     };
                     let wall_s = t0.elapsed().as_secs_f64();
                     // The fault counters attach *after* every derivation
@@ -1112,6 +1373,9 @@ impl Fleet {
                     if let Some(pl) = &plan {
                         crate::fault::apply_stats(&mut rep_res, &pl.stats, 1.0);
                     }
+                    if let Some(pl) = &splan {
+                        crate::session::apply_stats(&mut rep_res, &pl.stats, 1.0);
+                    }
                     // A member's live reference: the α-rescaled template
                     // (and α-rescaled fault variants) with the
                     // (φ-shifted, α-scaled) release table — fast-forward
@@ -1122,7 +1386,7 @@ impl Fleet {
                         let mut rel = c.release.clone();
                         p.apply(&mut rel);
                         let scaled = cf.rescaled(p.alpha);
-                        let mut r = if let Some(pl) = &plan {
+                        let mut r = if planned {
                             let svars: Vec<(usize, CompiledFrame)> = cvars
                                 .iter()
                                 .map(|(f, v)| (*f, v.rescaled(p.alpha)))
@@ -1142,6 +1406,9 @@ impl Fleet {
                         if let Some(pl) = &plan {
                             crate::fault::apply_stats(&mut r, &pl.stats, p.alpha);
                         }
+                        if let Some(pl) = &splan {
+                            crate::session::apply_stats(&mut r, &pl.stats, p.alpha);
+                        }
                         r
                     };
                     // Sampled live-vs-derived parity targets: random
@@ -1156,7 +1423,9 @@ impl Fleet {
                     let mut merged = crate::report::Merged::empty();
                     let (mut e_vals, mut l_vals, mut u_vals, mut b_vals) =
                         (Vec::new(), Vec::new(), Vec::new(), Vec::new());
-                    let (mut a_vals, mut r_vals) = (Vec::new(), Vec::new());
+                    let (mut a_vals, mut r_vals, mut g_vals) =
+                        (Vec::new(), Vec::new(), Vec::new());
+                    let mut session_alpha_pop = 0.0f64;
                     let mut live_fallbacks = 0usize;
                     let mut parity_runs = 0usize;
                     let mut parity_fail: Option<(&'static str, u64, u64)> = None;
@@ -1180,6 +1449,9 @@ impl Fleet {
                             if let Some(pl) = &plan {
                                 crate::fault::apply_stats(&mut r, &pl.stats, p.alpha);
                             }
+                            if let Some(pl) = &splan {
+                                crate::session::apply_stats(&mut r, &pl.stats, p.alpha);
+                            }
                             r
                         };
                         for _ in sampled.iter().filter(|&&s| s == bi) {
@@ -1200,7 +1472,7 @@ impl Fleet {
                                 parity_fail = mismatch;
                             }
                         }
-                        if pure_drift && !fallback && !p.is_identity() && plan.is_none() {
+                        if pure_drift && !fallback && !p.is_identity() && !planned {
                             // through the extended report seam
                             // (absorb_scaled ≡ absorb ∘ rescaled,
                             // property-tested bitwise); a faulted class
@@ -1221,6 +1493,16 @@ impl Fleet {
                             *pop,
                         ));
                         r_vals.push((res.recovery_energy_mj, *pop));
+                        g_vals.push((
+                            (c.frames as f64 - res.frames_dropped as f64) / res.makespan_s,
+                            *pop,
+                        ));
+                        if splan.is_some() {
+                            // Session energies scale with the member's
+                            // time base: aggregate the α-weighted
+                            // population so the fleet split stays exact.
+                            session_alpha_pop += p.alpha * *pop as f64;
+                        }
                     }
                     *slots[ci].lock().expect("class slot poisoned") = Some(ClassOutcome {
                         result: rep_res,
@@ -1231,6 +1513,9 @@ impl Fleet {
                         b_vals,
                         a_vals,
                         r_vals,
+                        g_vals,
+                        session: splan.as_ref().map(|p| p.stats),
+                        session_alpha_pop,
                         members: c.members.len(),
                         live_fallbacks,
                         wall_s,
@@ -1258,7 +1543,10 @@ impl Fleet {
         let mut total_frames = 0u64;
         let (mut e_vals, mut l_vals, mut u_vals, mut b_vals) =
             (Vec::new(), Vec::new(), Vec::new(), Vec::new());
-        let (mut a_vals, mut r_vals) = (Vec::new(), Vec::new());
+        let (mut a_vals, mut r_vals, mut g_vals) = (Vec::new(), Vec::new(), Vec::new());
+        let (mut full_handshakes, mut resumptions) = (0u64, 0u64);
+        let (mut retransmissions, mut records_dropped) = (0u64, 0u64);
+        let (mut handshake_j, mut record_j) = (0.0f64, 0.0f64);
         let mut first_fail: Option<(String, &'static str, u64, u64)> = None;
         let policy_name = fleet.policy.map_or("none", |p| p.name()).to_string();
         for (c, o) in classes.iter().zip(outcomes) {
@@ -1283,6 +1571,17 @@ impl Fleet {
             b_vals.extend(o.b_vals);
             a_vals.extend(o.a_vals);
             r_vals.extend(o.r_vals);
+            g_vals.extend(o.g_vals);
+            if let Some(ss) = &o.session {
+                // Counters are per chip and exact under drift; energies
+                // scale with each member's time base (Σ α × population).
+                full_handshakes += ss.full_handshakes * c.chips as u64;
+                resumptions += ss.resumptions * c.chips as u64;
+                retransmissions += ss.retransmissions * c.chips as u64;
+                records_dropped += ss.records_dropped * c.chips as u64;
+                handshake_j += ss.handshake_mj * o.session_alpha_pop / 1e3;
+                record_j += ss.record_mj * o.session_alpha_pop / 1e3;
+            }
             stats.push(ClassStat {
                 key: c.key.clone(),
                 workload: c.workload.clone(),
@@ -1301,6 +1600,8 @@ impl Fleet {
                 battery_days: battery,
                 availability: (c.frames as f64 - o.result.frames_dropped as f64)
                     / c.frames as f64,
+                goodput_fps: (c.frames as f64 - o.result.frames_dropped as f64)
+                    / o.result.makespan_s,
                 frames_dropped: o.result.frames_dropped,
                 fault_retries: o.result.fault_retries,
                 chip_resets: o.result.chip_resets,
@@ -1344,6 +1645,23 @@ impl Fleet {
                 .faults
                 .as_ref()
                 .map_or_else(|| "none".to_string(), |_| fleet.recovery.describe()),
+            channel: fleet
+                .loss
+                .as_ref()
+                .map_or_else(|| "none".to_string(), |m| m.describe()),
+            session_recovery: fleet
+                .loss
+                .as_ref()
+                .map_or_else(|| "none".to_string(), |_| {
+                    fleet.session_recovery.describe().to_string()
+                }),
+            crypto_backend: fleet.crypto_backend.map_or("native", |b| b.name()).to_string(),
+            full_handshakes,
+            resumptions,
+            retransmissions,
+            records_dropped,
+            handshake_j,
+            record_j,
             frames_dropped: merged.frames_dropped,
             fault_retries: merged.fault_retries,
             chip_resets: merged.chip_resets,
@@ -1355,6 +1673,7 @@ impl Fleet {
             battery_days: pct(&mut b_vals, total_chips),
             availability: pct(&mut a_vals, total_chips),
             recovery_mj_per_chip: pct(&mut r_vals, total_chips),
+            goodput_fps: pct(&mut g_vals, total_chips),
             wall_s,
             chips_per_s: total_chips as f64 / wall_s,
             naive_est_wall_s,
@@ -1417,6 +1736,26 @@ impl FleetReport {
             )
             .unwrap();
         }
+        if self.channel != "none" {
+            writeln!(
+                s,
+                "secure link: {} | session recovery: {} | crypto backend: {}",
+                self.channel, self.session_recovery, self.crypto_backend
+            )
+            .unwrap();
+            writeln!(
+                s,
+                "sessions: {} full + {} resumed | {} retransmissions | {} records dropped \
+                 | handshake {:.3} J vs record {:.3} J",
+                self.full_handshakes,
+                self.resumptions,
+                self.retransmissions,
+                self.records_dropped,
+                self.handshake_j,
+                self.record_j
+            )
+            .unwrap();
+        }
         writeln!(
             s,
             "host: {:.3} s wall ({:.3e} chips/s) | naive per-chip est {:.1} s | dedup speedup {:.0}x",
@@ -1432,9 +1771,10 @@ impl FleetReport {
         ] {
             writeln!(s, "{name:<14} {:>9.4} {:>9.4} {:>9.4}", p.p50, p.p95, p.p99).unwrap();
         }
-        if self.faults != "none" {
+        if self.faults != "none" || self.channel != "none" {
             for (name, p) in [
                 ("availability", self.availability),
+                ("goodput [fps]", self.goodput_fps),
                 ("recovery [mJ]", self.recovery_mj_per_chip),
             ] {
                 writeln!(s, "{name:<14} {:>9.4} {:>9.4} {:>9.4}", p.p50, p.p95, p.p99).unwrap();
@@ -1494,6 +1834,15 @@ impl FleetReport {
             ("policy", Json::string(&self.policy)),
             ("faults", Json::string(&self.faults)),
             ("recovery", Json::string(&self.recovery)),
+            ("channel", Json::string(&self.channel)),
+            ("session_recovery", Json::string(&self.session_recovery)),
+            ("crypto_backend", Json::string(&self.crypto_backend)),
+            ("full_handshakes", Json::num(self.full_handshakes as f64)),
+            ("resumptions", Json::num(self.resumptions as f64)),
+            ("retransmissions", Json::num(self.retransmissions as f64)),
+            ("records_dropped", Json::num(self.records_dropped as f64)),
+            ("handshake_j", Json::num(self.handshake_j)),
+            ("record_j", Json::num(self.record_j)),
             ("frames_dropped", Json::num(self.frames_dropped as f64)),
             ("fault_retries", Json::num(self.fault_retries as f64)),
             ("chip_resets", Json::num(self.chip_resets as f64)),
@@ -1505,6 +1854,7 @@ impl FleetReport {
             ("battery_days", pct_json(&self.battery_days)),
             ("availability", pct_json(&self.availability)),
             ("recovery_mj_per_chip", pct_json(&self.recovery_mj_per_chip)),
+            ("goodput_fps", pct_json(&self.goodput_fps)),
             (
                 "classes",
                 Json::Arr(
@@ -1528,6 +1878,7 @@ impl FleetReport {
                                 ("epd_mj_per_day", Json::num(c.epd_mj_per_day)),
                                 ("battery_days", Json::num(c.battery_days)),
                                 ("availability", Json::num(c.availability)),
+                                ("goodput_fps", Json::num(c.goodput_fps)),
                                 ("frames_dropped", Json::num(c.frames_dropped as f64)),
                                 ("fault_retries", Json::num(c.fault_retries as f64)),
                                 ("chip_resets", Json::num(c.chip_resets as f64)),
@@ -1603,6 +1954,17 @@ pub struct RunReport {
     pub faults: String,
     /// Recovery policy in force (`"none"` when no faults were injected).
     pub recovery: String,
+    /// Secure-link channel the stream ran over (`"none"` when no
+    /// channel was modeled).
+    pub channel: String,
+    /// Session re-establishment policy (`"none"` without a channel).
+    pub session_recovery: String,
+    /// Crypto cost backend of the cipher phases (`"native"` when the
+    /// rung's own configuration decided).
+    pub crypto_backend: String,
+    /// Session counters of a secure-link run (`None` without a
+    /// channel). Sharded runs carry the union over all shards.
+    pub session: Option<SessionStats>,
     pub result: StreamResult,
     pub tenants: Vec<TenantRow>,
     /// Per-chip statistics of a sharded run (empty for a single SoC —
@@ -1674,6 +2036,37 @@ impl RunReport {
                 r.chip_resets,
                 r.state_loss_frames,
                 r.recovery_energy_mj
+            )
+            .unwrap();
+        }
+        if let Some(ss) = &self.session {
+            writeln!(
+                s,
+                "secure link: {} | session recovery {} | crypto backend {}",
+                self.channel, self.session_recovery, self.crypto_backend
+            )
+            .unwrap();
+            writeln!(
+                s,
+                "sessions: {} full + {} resumed | {} retransmissions | {} records dropped \
+                 | backoff dead {:>8.4} s",
+                ss.full_handshakes,
+                ss.resumptions,
+                ss.retransmissions,
+                ss.records_dropped,
+                ss.backoff_dead_s
+            )
+            .unwrap();
+            writeln!(
+                s,
+                "link: availability {:.4} | goodput {:.3} records/s (of {:.3} fps) \
+                 | handshake {:>8.4} mJ vs record {:>8.4} mJ | overhead {:>8.4} mJ",
+                ss.availability(frames),
+                ss.goodput_fps(frames, r.time_s),
+                r.fps,
+                ss.handshake_mj,
+                ss.record_mj,
+                ss.overhead_mj
             )
             .unwrap();
         }
@@ -1781,6 +2174,29 @@ impl RunReport {
             ("wake_transitions", Json::num(r.wake_transitions as f64)),
             ("faults", Json::string(&self.faults)),
             ("recovery", Json::string(&self.recovery)),
+            ("channel", Json::string(&self.channel)),
+            ("session_recovery", Json::string(&self.session_recovery)),
+            ("crypto_backend", Json::string(&self.crypto_backend)),
+            (
+                "session",
+                self.session.as_ref().map_or(Json::Null, |ss| {
+                    Json::obj(vec![
+                        ("full_handshakes", Json::num(ss.full_handshakes as f64)),
+                        ("resumptions", Json::num(ss.resumptions as f64)),
+                        ("retransmissions", Json::num(ss.retransmissions as f64)),
+                        ("records_dropped", Json::num(ss.records_dropped as f64)),
+                        ("handshake_mj", Json::num(ss.handshake_mj)),
+                        ("record_mj", Json::num(ss.record_mj)),
+                        ("overhead_mj", Json::num(ss.overhead_mj)),
+                        ("backoff_dead_s", Json::num(ss.backoff_dead_s)),
+                        ("availability", Json::num(ss.availability(self.frames))),
+                        (
+                            "goodput_fps",
+                            Json::num(ss.goodput_fps(self.frames, r.time_s)),
+                        ),
+                    ])
+                }),
+            ),
             ("availability", Json::num(r.availability())),
             ("frames_dropped", Json::num(r.frames_dropped as f64)),
             ("fault_retries", Json::num(r.fault_retries as f64)),
@@ -2042,6 +2458,115 @@ impl FaultSweepReport {
     }
 }
 
+/// One grid point of the `fulmine sessionsweep` secure-link ablation.
+#[derive(Debug, Clone)]
+pub struct SessionSweepRow {
+    pub backend: String,
+    pub channel: String,
+    pub recovery: String,
+    pub availability: f64,
+    /// Delivered records per second of stream time.
+    pub goodput_fps: f64,
+    pub retransmissions: u64,
+    pub resumptions: u64,
+    pub full_handshakes: u64,
+    pub records_dropped: u64,
+    pub handshake_mj: f64,
+    pub record_mj: f64,
+    pub energy_mj: f64,
+    pub time_s: f64,
+}
+
+/// The crypto-backend × loss-rate × recovery-policy ablation of the
+/// `secure_link` stream: every point shares one channel seed, so within
+/// a loss rate the *same frames* suffer outages under every backend and
+/// policy and the rows differ only in how the session answers.
+#[derive(Debug, Clone)]
+pub struct SessionSweepReport {
+    pub workload: String,
+    pub frames: usize,
+    pub rows: Vec<SessionSweepRow>,
+}
+
+impl SessionSweepReport {
+    pub fn render_text(&self) -> String {
+        let mut s = String::new();
+        writeln!(
+            s,
+            "== sessionsweep: {} over {} frames (backend x loss x recovery grid, shared channel seed) ==",
+            self.workload, self.frames
+        )
+        .unwrap();
+        writeln!(
+            s,
+            "{:<8} {:<22} {:<24} {:>7} {:>9} {:>6} {:>6} {:>6} {:>9} {:>9} {:>10}",
+            "backend",
+            "channel",
+            "recovery",
+            "avail",
+            "goodput",
+            "retx",
+            "resume",
+            "drop",
+            "hs [mJ]",
+            "rec [mJ]",
+            "E [mJ]"
+        )
+        .unwrap();
+        for r in &self.rows {
+            writeln!(
+                s,
+                "{:<8} {:<22} {:<24} {:>7.4} {:>9.3} {:>6} {:>6} {:>6} {:>9.4} {:>9.4} {:>10.3}",
+                r.backend,
+                r.channel,
+                r.recovery,
+                r.availability,
+                r.goodput_fps,
+                r.retransmissions,
+                r.resumptions,
+                r.records_dropped,
+                r.handshake_mj,
+                r.record_mj,
+                r.energy_mj
+            )
+            .unwrap();
+        }
+        s
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("workload", Json::string(&self.workload)),
+            ("frames", Json::num(self.frames as f64)),
+            (
+                "rows",
+                Json::Arr(
+                    self.rows
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("backend", Json::string(&r.backend)),
+                                ("channel", Json::string(&r.channel)),
+                                ("recovery", Json::string(&r.recovery)),
+                                ("availability", Json::num(r.availability)),
+                                ("goodput_fps", Json::num(r.goodput_fps)),
+                                ("retransmissions", Json::num(r.retransmissions as f64)),
+                                ("resumptions", Json::num(r.resumptions as f64)),
+                                ("full_handshakes", Json::num(r.full_handshakes as f64)),
+                                ("records_dropped", Json::num(r.records_dropped as f64)),
+                                ("handshake_mj", Json::num(r.handshake_mj)),
+                                ("record_mj", Json::num(r.record_mj)),
+                                ("energy_mj", Json::num(r.energy_mj)),
+                                ("time_s", Json::num(r.time_s)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
 /// The façade over one simulated Fulmine SoC: a workload [`Registry`] plus
 /// the scheduling/attribution machinery to execute a [`RunSpec`].
 pub struct SocSystem {
@@ -2092,7 +2617,7 @@ impl SocSystem {
     /// 10/11/12-style result (the spec's `frames` is ignored here).
     pub fn run_frame(&self, spec: &RunSpec) -> Result<UseCaseResult> {
         let (w, rung) = self.resolve(spec)?;
-        let g = frame_graph(w, rung.cfg)?;
+        let g = frame_graph_with(w, rung.cfg, spec.crypto_backend)?;
         let res = Scheduler::run(&g);
         Ok(UseCaseResult::from_ledger(w.name(), res.ledger, w.eq_ops()))
     }
@@ -2114,29 +2639,52 @@ impl SocSystem {
             m.validate()?;
             spec.recovery.validate()?;
         }
-        let g = frame_graph(w, rung.cfg)?;
+        if let Some(m) = &spec.loss {
+            if spec.faults.is_some() {
+                bail!("--loss and --faults are mutually exclusive (one failure model per run)");
+            }
+            m.validate()?;
+        }
+        let g = frame_graph_with(w, rung.cfg, spec.crypto_backend)?;
         let window = spec.window.unwrap_or(crate::soc::sched::DEFAULT_STREAM_WINDOW);
+        // The global session plan: one closed-form pass over the channel
+        // draws. Sharded runs rebuild the same plan per shard range (pure,
+        // so the union equals this one) — the report carries the global
+        // counters either way.
+        let session = spec
+            .loss
+            .as_ref()
+            .map(|m| SessionPlan::build(m, spec.session_recovery, &g, 0, spec.frames))
+            .transpose()?;
         let (result, shards) = if spec.shards > 1 {
-            let parts = ShardedStream::run_faulted(
-                &g,
-                spec.frames,
-                window,
-                spec.shards,
-                &spec.traffic,
-                spec.policy,
-                spec.faults.as_ref().map(|m| (m, spec.recovery)),
-            );
+            let parts = match &spec.loss {
+                None => ShardedStream::run_faulted(
+                    &g,
+                    spec.frames,
+                    window,
+                    spec.shards,
+                    &spec.traffic,
+                    spec.policy,
+                    spec.faults.as_ref().map(|m| (m, spec.recovery)),
+                ),
+                Some(m) => ShardedStream::run_session(
+                    &g,
+                    spec.frames,
+                    window,
+                    spec.shards,
+                    &spec.traffic,
+                    spec.policy,
+                    Some((m, spec.session_recovery)),
+                )?,
+            };
             let result = merge_sharded(
                 w.name(), &g, spec.frames, window, w.eq_ops(), &parts, spec.policy,
             );
             (result, parts.into_iter().map(|(_, st)| st).collect())
         } else {
             let release = spec.traffic.release_times(spec.frames);
-            let plan = spec.faults.as_ref().map(|m| {
-                FaultPlan::build(m, spec.recovery, &g, 0, spec.frames, window.min(spec.frames))
-            });
-            (
-                stream_graph_faulted_pm(
+            let result = match &session {
+                Some(plan) => stream_graph_session_pm(
                     w.name(),
                     &g,
                     spec.frames,
@@ -2144,10 +2692,27 @@ impl SocSystem {
                     w.eq_ops(),
                     &release,
                     spec.policy,
-                    plan.as_ref(),
+                    Some(plan),
                 ),
-                Vec::new(),
-            )
+                None => {
+                    let plan = spec.faults.as_ref().map(|m| {
+                        FaultPlan::build(
+                            m, spec.recovery, &g, 0, spec.frames, window.min(spec.frames),
+                        )
+                    });
+                    stream_graph_faulted_pm(
+                        w.name(),
+                        &g,
+                        spec.frames,
+                        window,
+                        w.eq_ops(),
+                        &release,
+                        spec.policy,
+                        plan.as_ref(),
+                    )
+                }
+            };
+            (result, Vec::new())
         };
         let frames = spec.frames as f64;
 
@@ -2219,6 +2784,16 @@ impl SocSystem {
                 .faults
                 .as_ref()
                 .map_or_else(|| "none".to_string(), |_| spec.recovery.describe()),
+            channel: spec
+                .loss
+                .as_ref()
+                .map_or_else(|| "none".to_string(), |m| m.describe()),
+            session_recovery: spec.loss.as_ref().map_or_else(
+                || "none".to_string(),
+                |_| spec.session_recovery.describe().to_string(),
+            ),
+            crypto_backend: spec.crypto_backend.map_or("native", |b| b.name()).to_string(),
+            session: session.map(|p| p.stats),
             result,
             tenants,
             shards,
@@ -2318,6 +2893,62 @@ impl SocSystem {
             });
         }
         Ok(FaultSweepReport { workload: workload.to_string(), frames, rows })
+    }
+
+    /// The `fulmine sessionsweep` grid: stream `frames` frames of the
+    /// `secure_link` workload once per crypto backend × channel point —
+    /// a lossless baseline plus two loss rates × three recovery policies
+    /// per backend, all sharing one channel seed so the same frames
+    /// suffer the same outages across the grid.
+    pub fn session_sweep(&self, frames: usize) -> Result<SessionSweepReport> {
+        const SEED: u64 = 11;
+        // 0.2 is the retransmission regime (every loss recovered within
+        // the timer budget); 0.6 is the outage regime (frames exhaust
+        // the 8-send budget, so the recovery policies actually diverge).
+        let rates = [0.2f64, 0.6];
+        let mut rows = Vec::new();
+        for backend in BackendKind::all() {
+            let mut points = vec![(SessionModel { loss_rate: 0.0, seed: SEED }, None)];
+            for &rate in &rates {
+                for rec in SessionRecovery::all() {
+                    points.push((SessionModel { loss_rate: rate, seed: SEED }, Some(rec)));
+                }
+            }
+            for (model, rec) in points {
+                let recovery = rec.unwrap_or_default();
+                let spec = RunSpec::new("secure_link")
+                    .frames(frames)
+                    .loss(Some(model.clone()))
+                    .session_recovery(recovery)
+                    .crypto_backend(Some(backend));
+                let run = self.run(&spec)?;
+                let ss = run.session.expect("secure_link with --loss carries session stats");
+                rows.push(SessionSweepRow {
+                    backend: backend.name().to_string(),
+                    channel: model.describe(),
+                    recovery: if rec.is_none() {
+                        "—".to_string()
+                    } else {
+                        recovery.describe().to_string()
+                    },
+                    availability: ss.availability(frames),
+                    goodput_fps: ss.goodput_fps(frames, run.result.time_s),
+                    retransmissions: ss.retransmissions,
+                    resumptions: ss.resumptions,
+                    full_handshakes: ss.full_handshakes,
+                    records_dropped: ss.records_dropped,
+                    handshake_mj: ss.handshake_mj,
+                    record_mj: ss.record_mj,
+                    energy_mj: run.result.energy_mj,
+                    time_s: run.result.time_s,
+                });
+            }
+        }
+        Ok(SessionSweepReport {
+            workload: "secure_link".to_string(),
+            frames,
+            rows,
+        })
     }
 }
 
@@ -2926,5 +3557,193 @@ mod tests {
         assert_eq!(report.parity_failures, 0, "fallback members are exact");
         assert_eq!(report.chips, 6);
         assert!(report.live_chips > 3, "fallbacks count as live work");
+    }
+
+    fn lossy(rate: f64) -> SessionModel {
+        SessionModel { loss_rate: rate, seed: 7 }
+    }
+
+    /// Tentpole (secure link): channel faults and chip faults are
+    /// distinct failure models — one per run, on stream and fleet alike
+    /// — and a channel on a workload without handshake jobs is a spec
+    /// error, not a silent no-op.
+    #[test]
+    fn loss_validation_and_exclusivity() {
+        let sys = SocSystem::new();
+        let faults = FaultModel {
+            drop_rate: 0.1,
+            transient_rate: 0.0,
+            brownout_rate: 0.0,
+            link_rate: 0.0,
+            seed: 1,
+        };
+        let e = sys
+            .run(
+                &RunSpec::new("secure_link")
+                    .frames(4)
+                    .loss(Some(lossy(0.1)))
+                    .faults(Some(faults.clone())),
+            )
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("mutually exclusive"), "{e}");
+        let e = sys
+            .fleet(
+                &FleetSpec::secure_link(8, 4)
+                    .loss(Some(lossy(0.1)))
+                    .faults(Some(faults)),
+            )
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("mutually exclusive"), "{e}");
+        let e = sys
+            .run(&RunSpec::new("seizure").frames(2).loss(Some(SessionModel::lossless())))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("handshake"), "{e}");
+        let e = sys
+            .fleet(
+                &FleetSpec::new(vec![FleetGroup {
+                    spec: RunSpec::new("seizure").frames(2),
+                    chips: 2,
+                }])
+                .loss(Some(SessionModel::lossless())),
+            )
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("handshake"), "{e}");
+    }
+
+    /// Tentpole (secure link): the retransmission/resumption schedule is
+    /// pure in (model, recovery, global frame), so sharding the stream
+    /// preserves every session counter exactly and the re-sent energy to
+    /// float reordering.
+    #[test]
+    fn secure_link_counters_are_shard_invariant() {
+        let sys = SocSystem::new();
+        let spec = RunSpec::new("secure_link").frames(64).loss(Some(lossy(0.35)));
+        let base = sys.run(&spec).unwrap();
+        let ss = base.session.expect("lossy run carries session stats");
+        assert!(ss.retransmissions > 0, "35% loss over 64 frames must retransmit");
+        assert!(base.result.fault_retries == ss.retransmissions);
+        assert!(base.result.frames_dropped == ss.records_dropped);
+        for shards in [2usize, 4] {
+            let sharded = sys.run(&spec.clone().shards(shards)).unwrap();
+            assert_eq!(
+                sharded.result.frames_dropped, base.result.frames_dropped,
+                "{shards}-way sharding must not move drops"
+            );
+            assert_eq!(
+                sharded.result.fault_retries, base.result.fault_retries,
+                "{shards}-way sharding must not move retransmissions"
+            );
+            assert!(
+                (sharded.result.recovery_energy_mj - base.result.recovery_energy_mj).abs()
+                    <= 1e-9 * (1.0 + base.result.recovery_energy_mj),
+                "re-sent energy union: {} vs {}",
+                sharded.result.recovery_energy_mj,
+                base.result.recovery_energy_mj
+            );
+            assert_eq!(sharded.session, base.session, "global counters are shard-blind");
+        }
+        let text = base.render_text();
+        assert!(text.contains("secure link:"), "{text}");
+        assert!(text.contains("goodput"), "{text}");
+        let json = base.to_json().render();
+        for key in ["\"session\"", "\"retransmissions\"", "\"goodput_fps\"", "\"channel\""] {
+            assert!(json.contains(key), "missing {key}");
+        }
+    }
+
+    /// Tentpole (secure-link fleet): the channel, session recovery and
+    /// crypto backend join the class dedup key, and the fleet report
+    /// carries the handshake/record split plus goodput percentiles.
+    #[test]
+    fn secure_link_fleet_keys_and_session_columns() {
+        let sys = SocSystem::new();
+        let spec = FleetSpec::secure_link(40, 6)
+            .loss(Some(lossy(0.3)))
+            .session_recovery(SessionRecovery::Resume)
+            .crypto_backend(Some(BackendKind::Hwcrypt))
+            .sample_k(2);
+        let report = sys.fleet(&spec).unwrap();
+        assert_eq!(report.chips, 40);
+        assert_eq!(report.parity_failures, 0);
+        for c in &report.classes {
+            assert!(c.key.contains("ses:"), "{}", c.key);
+            assert!(c.key.contains("sr:resume"), "{}", c.key);
+            assert!(c.key.contains("cb:hwcrypt"), "{}", c.key);
+            assert!(c.goodput_fps <= c.fps + 1e-12, "goodput never exceeds raw fps");
+        }
+        // every chip performs its frame-0 negotiation; under resumption
+        // the outage handshakes are all abbreviated
+        assert_eq!(report.full_handshakes, 40);
+        assert!(report.retransmissions > 0, "30% loss must retransmit somewhere");
+        assert!(report.handshake_j > 0.0 && report.record_j > 0.0);
+        assert!(report.availability.p50 <= 1.0);
+        let text = report.render_text();
+        assert!(text.contains("secure link:"), "{text}");
+        assert!(text.contains("goodput [fps]"), "{text}");
+        let json = report.to_json().render();
+        for key in ["\"channel\"", "\"resumptions\"", "\"handshake_j\"", "\"goodput_fps\""] {
+            assert!(json.contains(key), "missing {key}");
+        }
+        // a session-free fleet stays on the historical columns
+        let clean = sys.fleet(&FleetSpec::secure_link(8, 2).sample_k(1)).unwrap();
+        assert_eq!(clean.channel, "none");
+        assert_eq!(clean.retransmissions, 0);
+        assert!(!clean.render_text().contains("secure link:"));
+    }
+
+    /// Satellite (ablation): the sessionsweep grid covers backend ×
+    /// loss × recovery with a lossless baseline per backend, and the
+    /// baseline rows deliver everything.
+    #[test]
+    fn session_sweep_grid_shape_and_baselines() {
+        let sys = SocSystem::new();
+        let report = sys.session_sweep(16).unwrap();
+        assert_eq!(report.rows.len(), 3 * (1 + 2 * 3), "3 backends x (baseline + 2x3)");
+        for row in report.rows.iter().filter(|r| r.recovery == "—") {
+            assert_eq!(row.availability, 1.0, "lossless baseline delivers everything");
+            assert_eq!(row.retransmissions, 0);
+            assert_eq!(row.full_handshakes, 1, "exactly the frame-0 negotiation");
+            assert_eq!(row.records_dropped, 0);
+        }
+        for row in &report.rows {
+            assert!(row.goodput_fps > 0.0);
+            assert!(row.energy_mj > 0.0);
+        }
+        // seed 11 over frames 0..16: 7 retransmissions at loss 0.2, 35 at
+        // 0.6 — the lossy rows really exercise the timers
+        for row in report.rows.iter().filter(|r| r.recovery != "—") {
+            assert!(row.retransmissions > 0, "{}/{}", row.backend, row.channel);
+        }
+        // the channel is shared across the grid: within one (loss,
+        // recovery) point every backend sees the same outages, so the
+        // counters are backend-invariant and only the energies move
+        let reference: Vec<_> = report.rows[..7]
+            .iter()
+            .map(|r| (r.retransmissions, r.resumptions, r.records_dropped))
+            .collect();
+        for backend_rows in report.rows.chunks(7).skip(1) {
+            for (r, want) in backend_rows.iter().zip(&reference) {
+                assert_eq!(
+                    (r.retransmissions, r.resumptions, r.records_dropped),
+                    *want,
+                    "{}/{}: counters must not depend on the backend",
+                    r.backend,
+                    r.channel
+                );
+            }
+        }
+        let text = report.render_text();
+        assert!(text.contains("sessionsweep"), "{text}");
+        for b in ["hwcrypt", "sw", "insram"] {
+            assert!(text.contains(b), "backend {b} missing from {text}");
+        }
+        let json = report.to_json().render();
+        for key in ["\"backend\"", "\"goodput_fps\"", "\"handshake_mj\""] {
+            assert!(json.contains(key), "missing {key}");
+        }
     }
 }

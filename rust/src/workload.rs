@@ -67,9 +67,71 @@ pub trait Workload {
 
 /// Build one frame of `w` at `cfg` as a standalone job graph.
 pub fn frame_graph(w: &dyn Workload, cfg: ExecConfig) -> Result<JobGraph> {
+    frame_graph_with(w, cfg, None)
+}
+
+/// [`frame_graph`] with an explicit crypto backend override — the
+/// CryptoSRAM-style ablation axis. `None` keeps the configuration's
+/// native backend, bitwise.
+pub fn frame_graph_with(
+    w: &dyn Workload,
+    cfg: ExecConfig,
+    backend: Option<crate::session::BackendKind>,
+) -> Result<JobGraph> {
     let mut b = GraphBuilder::new(cfg);
+    if let Some(kind) = backend {
+        b.set_backend(kind);
+    }
     w.emit(&mut b)?;
     Ok(b.build())
+}
+
+/// The secure-link session workload: one AEAD record per frame on an
+/// established DTLS-style session. The steady template is the record
+/// pipeline (sensor readout → framing on the cores → sponge AE on the
+/// crypto backend) plus two zero-duration handshake placeholder jobs;
+/// under a lossy channel ([`crate::session::SessionModel`]) a
+/// [`crate::session::SessionPlan`] inflates the placeholders on
+/// handshake frames and re-bills retransmitted records.
+pub struct SecureLink;
+
+/// SW cycles to frame/serialize one record before encryption (header,
+/// sequence numbers, padding — ~12 cycles/byte over the record).
+const RECORD_PACK_CYCLES: f64 = 12.0 * crate::session::RECORD_BYTES as f64;
+
+impl Workload for SecureLink {
+    fn name(&self) -> &'static str {
+        "secure_link"
+    }
+    fn describe(&self) -> &'static str {
+        "DTLS-style secure session: SW handshake flights + AEAD record stream over a lossy channel"
+    }
+    fn emit(&self, b: &mut GraphBuilder) -> Result<()> {
+        // A bare radio endpoint: records stream off the sensor, no
+        // external flash/FRAM in the loop.
+        b.set_ext_mem_present(false);
+        let (_cookie, flight) = b.session_handshake();
+        let adc = b.adc(crate::session::RECORD_BYTES, &[]);
+        let pack = b.sw(RECORD_PACK_CYCLES, 0.8, &[adc]);
+        // The record rides the session: it depends on the (normally
+        // zero-duration) flight placeholder, so handshake frames
+        // serialize handshake-then-record.
+        b.sponge_ae(crate::session::RECORD_BYTES, &[pack, flight]);
+        Ok(())
+    }
+    fn eq_ops(&self) -> u64 {
+        // Framing + AEAD of one 2 kB record in OpenRISC-equivalent ops.
+        60_000
+    }
+    fn rungs(&self) -> Vec<Rung> {
+        // No convolutions: the HWCE rungs collapse onto +HWCRYPT.
+        ExecConfig::ladder().into_iter().filter(|r| r.cfg.hwce.is_none()).collect()
+    }
+    fn native_rate_hz(&self) -> f64 {
+        // One record batch every 100 ms — radio cadence, not sensor
+        // cadence.
+        10.0
+    }
 }
 
 /// §IV-A: secure autonomous aerial surveillance (Fig. 10).
@@ -247,6 +309,7 @@ impl Registry {
             "multi-tenant stream: one surveillance + facedet + seizure frame per round on one SoC",
             vec![Box::new(Surveillance), Box::new(FaceDetection), Box::new(SeizureDetection)],
         )));
+        r.register(Box::new(SecureLink));
         r
     }
 
@@ -301,7 +364,7 @@ mod tests {
     #[test]
     fn builtin_registry_resolves_paper_usecases() {
         let r = Registry::builtin();
-        assert_eq!(r.names(), vec!["surveillance", "facedet", "seizure", "mixed"]);
+        assert_eq!(r.names(), vec!["surveillance", "facedet", "seizure", "mixed", "secure_link"]);
         for name in r.names() {
             let w = r.resolve(name).unwrap();
             assert!(!w.describe().is_empty());
@@ -366,6 +429,44 @@ mod tests {
         // the schedule completes (no deadlock across tenant mode demands)
         let res = Scheduler::run(&g);
         assert!(res.makespan_s > 0.0);
+    }
+
+    #[test]
+    fn secure_link_template_and_backend_ablation() {
+        let w = SecureLink;
+        let rungs = w.rungs();
+        assert_eq!(rungs.len(), 3, "HWCE rungs collapse for a conv-free workload");
+        for rung in &rungs {
+            let g = frame_graph(&w, rung.cfg).unwrap();
+            assert!(crate::session::has_session_jobs(&g), "{}", rung.label);
+            assert!(!g.ext_mem_present, "{}: a bare radio endpoint", rung.label);
+            // placeholders are free in the steady template
+            for j in g.jobs.iter().filter(|j| j.label.starts_with("hs-")) {
+                assert_eq!(j.duration_s, 0.0, "{}", rung.label);
+            }
+            let res = Scheduler::run(&g);
+            assert!(res.makespan_s > 0.0, "{}", rung.label);
+        }
+        // the native backend override reproduces the default bitwise
+        let cfg = ExecConfig::with_hwcrypt();
+        let native = Scheduler::run(&frame_graph(&w, cfg).unwrap());
+        let forced = Scheduler::run(
+            &frame_graph_with(&w, cfg, Some(crate::session::BackendKind::Hwcrypt)).unwrap(),
+        );
+        assert_eq!(native.makespan_s.to_bits(), forced.makespan_s.to_bits());
+        assert_eq!(
+            native.ledger.total_mj().to_bits(),
+            forced.ledger.total_mj().to_bits()
+        );
+        // every backend builds and schedules on every rung — the sweep
+        // the session ablation iterates
+        for rung in &rungs {
+            for kind in crate::session::BackendKind::all() {
+                let g = frame_graph_with(&w, rung.cfg, Some(kind)).unwrap();
+                let r = Scheduler::run(&g);
+                assert!(r.makespan_s > 0.0, "{} × {}", rung.label, kind.name());
+            }
+        }
     }
 
     #[test]

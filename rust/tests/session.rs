@@ -1,0 +1,241 @@
+//! Secure-link session properties across the façade (ISSUE 10): a
+//! loss-free channel (`--loss 0`) replays bitwise on the live,
+//! fast-forwarded and sharded paths; under a seeded lossy channel the
+//! retransmission/resumption schedule is deterministic across runs and
+//! shard splits; fast-forward suspends around handshake and
+//! retransmission frames yet re-engages on the steady record phase,
+//! bitwise equal to live dispatch; and the three recovery policies
+//! diverge exactly as designed once outages fire.
+//!
+//! Counts asserted exactly below were pre-computed from the seeded
+//! channel tables (each draw depends only on `(model, frame)`), so they
+//! are properties of the chosen seeds, not of luck.
+
+use fulmine::coordinator::StreamResult;
+use fulmine::energy::Category;
+use fulmine::json::Json;
+use fulmine::session::{SessionModel, SessionPlan, SessionRecovery};
+use fulmine::soc::sched::{SchedResult, StreamScheduler};
+use fulmine::system::{RunSpec, SocSystem};
+use fulmine::traffic::Traffic;
+use fulmine::workload::{frame_graph, Registry};
+
+fn lossy(loss_rate: f64) -> SessionModel {
+    SessionModel { loss_rate, seed: 7 }
+}
+
+fn assert_stream_bitwise_eq(a: &StreamResult, b: &StreamResult, ctx: &str) {
+    for (field, x, y) in [
+        ("time_s", a.time_s, b.time_s),
+        ("fps", a.fps, b.fps),
+        ("energy_mj", a.energy_mj, b.energy_mj),
+        ("pj_per_op", a.pj_per_op, b.pj_per_op),
+        ("overlap_s", a.overlap_s, b.overlap_s),
+        ("recovery_energy_mj", a.recovery_energy_mj, b.recovery_energy_mj),
+    ] {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: {field} {x} vs {y}");
+    }
+    assert_eq!(a.total_jobs, b.total_jobs, "{ctx}");
+    assert_eq!(a.fast_forwarded_frames, b.fast_forwarded_frames, "{ctx}");
+    assert_eq!(a.frames_dropped, b.frames_dropped, "{ctx}");
+    assert_eq!(a.fault_retries, b.fault_retries, "{ctx}");
+    for c in Category::all() {
+        assert_eq!(
+            a.ledger.energy_mj(c).to_bits(),
+            b.ledger.energy_mj(c).to_bits(),
+            "{ctx}: ledger {c:?}"
+        );
+    }
+}
+
+fn assert_sched_bitwise_eq(a: &SchedResult, b: &SchedResult, ctx: &str) {
+    assert_eq!(a.makespan_s.to_bits(), b.makespan_s.to_bits(), "{ctx}: makespan");
+    assert_eq!(a.overlap_s.to_bits(), b.overlap_s.to_bits(), "{ctx}: overlap");
+    assert_eq!(a.n_jobs, b.n_jobs, "{ctx}: n_jobs");
+    assert_eq!(a.mode_switches, b.mode_switches, "{ctx}: mode_switches");
+    for (i, (x, y)) in a.busy_s.iter().zip(&b.busy_s).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: busy_s[{i}]");
+    }
+    for c in Category::all() {
+        assert_eq!(
+            a.ledger.energy_mj(c).to_bits(),
+            b.ledger.energy_mj(c).to_bits(),
+            "{ctx}: ledger {c:?}"
+        );
+    }
+}
+
+/// Acceptance (loss-free identity): `--loss 0` routes through the whole
+/// session machinery — frame-0 handshake variant, plan stats, report
+/// plumbing — yet delivers every record first try, and the live,
+/// fast-forwarded and sharded paths each replay the identical spec
+/// bitwise with identical session counters.
+#[test]
+fn lossless_channel_replays_bitwise_on_live_ff_and_sharded_paths() {
+    let sys = SocSystem::new();
+    let frames = 64usize;
+    let spec = |window: usize, shards: usize| {
+        let mut s = RunSpec::new("secure_link")
+            .frames(frames)
+            .shards(shards)
+            .loss(Some(SessionModel::lossless()));
+        if window > 0 {
+            s = s.window(window);
+        }
+        s
+    };
+    let mut sessions = Vec::new();
+    for (window, shards, label) in [(frames, 1, "live"), (4, 1, "fast-forwarded"), (0, 2, "sharded")]
+    {
+        let a = sys.run(&spec(window, shards)).unwrap();
+        let b = sys.run(&spec(window, shards)).unwrap();
+        assert_stream_bitwise_eq(&a.result, &b.result, label);
+        let ss = a.session.expect("a channel was configured");
+        assert_eq!(ss.full_handshakes, 1, "{label}: exactly the frame-0 negotiation");
+        assert_eq!(ss.resumptions, 0, "{label}");
+        assert_eq!(ss.retransmissions, 0, "{label}: a perfect channel never re-sends");
+        assert_eq!(ss.records_dropped, 0, "{label}");
+        assert_eq!(a.result.frames_dropped, 0, "{label}");
+        assert_eq!(a.result.availability(), 1.0, "{label}");
+        sessions.push(ss);
+    }
+    // the session stats come from the one global plan: path-invariant
+    assert_eq!(sessions[0], sessions[1], "live vs fast-forwarded session stats");
+    assert_eq!(sessions[0], sessions[2], "live vs sharded session stats");
+    // the small window really exercised the replay machinery: the
+    // handshake variant at frame 0 must not wedge fast-forward
+    let ff = sys.run(&spec(4, 1)).unwrap();
+    assert!(
+        ff.result.fast_forwarded_frames > 0,
+        "a 64-frame loss-free stream at window 4 must reach steady state"
+    );
+}
+
+/// Satellite (ff suspend/re-engage): on a gap-dominated lossy stream the
+/// fast-forward path suspends on every handshake/retransmission frame,
+/// re-engages on the steady record phase between them, and stays bitwise
+/// equal to live dispatch — per recovery policy.
+#[test]
+fn lossy_stream_fast_forward_reengages_bitwise_with_live() {
+    let reg = Registry::builtin();
+    let w = reg.resolve("secure_link").unwrap();
+    let rung = w.rungs().into_iter().last().expect("secure_link has rungs");
+    let g = frame_graph(w, rung.cfg).unwrap();
+    let frames = 256usize;
+    let rel = Traffic::Periodic { rate_hz: 2.0 }.release_times(frames);
+    let model = lossy(0.1);
+    for recovery in SessionRecovery::all() {
+        // seed 7, loss 0.1 over frames 0..256: 20 variant frames
+        // (handshake + retransmissions), 19 retransmissions, no outages
+        let plan = SessionPlan::build(&model, recovery, &g, 0, frames).unwrap();
+        assert_eq!(plan.variants.len(), 20, "{recovery:?}");
+        assert_eq!(plan.stats.retransmissions, 19, "{recovery:?}");
+        assert_eq!(plan.stats.records_dropped, 0, "{recovery:?}");
+        let vats = plan.variant_refs();
+        let live =
+            StreamScheduler::run_with_variants_traffic_live_pm(&g, frames, 8, &vats, &rel, None);
+        let ff = StreamScheduler::run_with_variants_traffic_pm(&g, frames, 8, &vats, &rel, None);
+        assert_sched_bitwise_eq(&ff, &live, &format!("{recovery:?}"));
+        assert!(
+            ff.fast_forwarded_frames > 0,
+            "{recovery:?}: replay must re-engage on the steady record phase"
+        );
+        assert!(
+            ff.fast_forwarded_frames <= frames - plan.variants.len(),
+            "{recovery:?}: variant frames can never be replayed"
+        );
+    }
+}
+
+/// Under a seeded lossy channel the whole report — retransmission and
+/// resumption schedule included — is deterministic across repeated runs
+/// and shard splits, and the session counters are exactly
+/// shard-invariant.
+#[test]
+fn seeded_lossy_runs_are_deterministic_across_runs_and_shards() {
+    let sys = SocSystem::new();
+    let base = sys
+        .run(&RunSpec::new("secure_link").frames(128).loss(Some(lossy(0.6))))
+        .unwrap();
+    let base_ss = base.session.expect("a channel was configured");
+    assert!(base_ss.retransmissions > 0);
+    for shards in [1usize, 2, 4] {
+        let spec = || {
+            RunSpec::new("secure_link")
+                .frames(128)
+                .shards(shards)
+                .loss(Some(lossy(0.6)))
+        };
+        let a = sys.run(&spec()).unwrap();
+        let b = sys.run(&spec()).unwrap();
+        assert_stream_bitwise_eq(&a.result, &b.result, &format!("shards {shards}"));
+        assert_eq!(
+            a.to_json().render(),
+            b.to_json().render(),
+            "shards {shards}: reports must replay bitwise"
+        );
+        let ss = a.session.expect("a channel was configured");
+        assert_eq!(ss, base_ss, "shards {shards}: session schedule is shard-invariant");
+        assert_eq!(a.result.frames_dropped, base.result.frames_dropped, "shards {shards}");
+        assert_eq!(a.result.fault_retries, base.result.fault_retries, "shards {shards}");
+    }
+}
+
+/// Acceptance (recovery-policy divergence): at loss 0.6 (seed 7) over
+/// 256 frames, outages fire and the policies answer as designed — full
+/// renegotiates (5 full handshakes), resume replays abbreviated
+/// handshakes (4 resumptions), degrade drops records while the link is
+/// down (8 drops, no recovery handshakes) instead of stalling.
+#[test]
+fn outage_recovery_policies_diverge_as_designed() {
+    let sys = SocSystem::new();
+    let run = |recovery: SessionRecovery| {
+        sys.run(
+            &RunSpec::new("secure_link")
+                .frames(256)
+                .loss(Some(lossy(0.6)))
+                .session_recovery(recovery),
+        )
+        .unwrap()
+    };
+    let full = run(SessionRecovery::FullHandshake);
+    let resume = run(SessionRecovery::Resume);
+    let degrade = run(SessionRecovery::Degrade);
+    let (fs, rs, ds) = (
+        full.session.unwrap(),
+        resume.session.unwrap(),
+        degrade.session.unwrap(),
+    );
+    // seed 7, loss 0.6, frames 0..256: 4 outages
+    assert_eq!((fs.full_handshakes, fs.resumptions, fs.records_dropped), (5, 0, 4));
+    assert_eq!((rs.full_handshakes, rs.resumptions, rs.records_dropped), (1, 4, 4));
+    assert_eq!((ds.full_handshakes, ds.resumptions, ds.records_dropped), (1, 0, 8));
+    assert_eq!(fs.retransmissions, 404);
+    assert_eq!(rs.retransmissions, 379);
+    assert_eq!(ds.retransmissions, 370);
+    // availability is the records that made it
+    assert_eq!(resume.result.availability(), (256.0 - 4.0) / 256.0);
+    assert!(degrade.result.availability() < resume.result.availability());
+    // renegotiating from scratch pays the ECC flights resume skips
+    assert!(
+        fs.handshake_mj > rs.handshake_mj,
+        "full {} vs resume {}",
+        fs.handshake_mj,
+        rs.handshake_mj
+    );
+    // everyone pays retransmission overhead energy
+    for (label, r) in [("full", &full), ("resume", &resume), ("degrade", &degrade)] {
+        assert!(r.result.recovery_energy_mj > 0.0, "{label}");
+        assert!(r.result.availability() < 1.0, "{label}");
+    }
+    // the session block surfaces in both renderings
+    let text = resume.render_text();
+    assert!(text.contains("secure link:"), "{text}");
+    assert!(text.contains("resumption"), "{text}");
+    let json = Json::parse(&resume.to_json().render()).unwrap();
+    let sess = json.get("session").expect("session object in JSON");
+    let retx = sess.get("retransmissions").and_then(Json::as_f64).unwrap();
+    assert_eq!(retx as u64, rs.retransmissions);
+    let goodput = sess.get("goodput_fps").and_then(Json::as_f64).unwrap();
+    assert!(goodput > 0.0);
+}
